@@ -1,0 +1,55 @@
+//! Quickstart: distribute a Gaussian mixture over a random graph, build
+//! the paper's distributed coreset, cluster it, and compare against
+//! clustering the full data directly.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::{approx_solution, cost_of, Objective};
+use distclus::coreset::DistributedConfig;
+use distclus::partition::Scheme;
+use distclus::points::WeightedSet;
+use distclus::protocol::cluster_on_graph;
+use distclus::rng::Pcg64;
+use distclus::topology::generators;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Pcg64::seed_from(7);
+
+    // 20k points in R^10 around 5 Gaussian centers, spread over 10 sites
+    // connected by an Erdos-Renyi graph, imbalanced (weighted) partition.
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 20_000, 10, 5);
+    let graph = generators::erdos_renyi_connected(&mut rng, 10, 0.3);
+    let locals: Vec<WeightedSet> = Scheme::Weighted
+        .partition_on(&data, &graph, &mut rng)
+        .into_iter()
+        .map(WeightedSet::unit)
+        .collect();
+    let global = WeightedSet::unit(data);
+
+    // The paper's Algorithm 1 + 2 over the graph.
+    let backend = RustBackend;
+    let cfg = DistributedConfig {
+        t: 1_000,
+        k: 5,
+        ..Default::default()
+    };
+    let run = cluster_on_graph(&graph, &locals, &cfg, &backend, &mut rng)?;
+
+    // Quality vs clustering everything centrally.
+    let direct = approx_solution(&global, 5, Objective::KMeans, &backend, &mut rng, 40);
+    let run_cost = cost_of(&global, &run.centers, Objective::KMeans);
+
+    println!("sites            : {} (m = {} edges)", graph.n(), graph.m());
+    println!("coreset size     : {} points", run.coreset.size());
+    println!("communication    : {} points", run.comm_points);
+    println!("network rounds   : {}", run.rounds);
+    println!("cost (coreset)   : {:.1}", run_cost);
+    println!("cost (direct)    : {:.1}", direct.cost);
+    println!("cost ratio       : {:.4}", run_cost / direct.cost);
+    assert!(run_cost / direct.cost < 1.25, "coreset solution degraded");
+    println!("quickstart OK");
+    Ok(())
+}

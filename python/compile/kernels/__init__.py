@@ -1,0 +1,3 @@
+"""L1 Pallas kernels for the distributed-clustering compute hot path."""
+
+from . import distance, ref  # noqa: F401

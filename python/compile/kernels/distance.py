@@ -1,0 +1,167 @@
+"""Layer-1 Pallas kernels: pairwise-distance assignment/cost and weighted
+Lloyd accumulation.
+
+These are the compute hot spots of the whole stack: every local
+constant-approximation, every coreset sensitivity computation and every
+weighted-Lloyd iteration over the coreset reduces to (a) nearest-center
+assignment with per-point weighted cost and (b) weighted center
+accumulation.
+
+TPU shaping (see DESIGN.md §6): the distance matrix is computed through the
+MXU as ``||p||^2 - 2 p @ c^T + ||c||^2`` — a [N_blk, D] x [D, K] matmul —
+instead of a broadcast-subtract (which would be VPU-bound and need
+N_blk*K*D VMEM). Points stream through VMEM in N-blocks via BlockSpec;
+the center tile [K, D] is small and resident. Center accumulation is also
+MXU-shaped: ``onehot(assign)^T @ (w * p)``.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+the Rust runtime's CPU client compiles natively.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the point dimension. 256 keeps the VMEM footprint of a
+# (256, 128) f32 point tile + (64, 128) center tile + (256, 64) distance
+# tile under 0.3 MiB — far below the ~16 MiB VMEM budget, leaving room for
+# double buffering of the streamed point blocks (DESIGN.md §8).
+N_BLOCK = 256
+
+# Sentinel coordinate for padded center rows. Chosen so that
+# ||c_pad||^2 ~ D * 1e34 stays finite in f32 (< 3.4e38 for D <= 128) while
+# dominating any real squared distance, so padded centers never win the
+# argmin and never produce inf - inf = NaN.
+PAD_CENTER = 1e17
+
+
+def _dist2(p, c):
+    """Squared Euclidean distance matrix via the MXU-friendly expansion.
+
+    p: [N, D], c: [K, D] -> [N, K]; clamped at 0 against rounding.
+    """
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)  # [N, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # [1, K]
+    # The matmul is the MXU op; keep f32 accumulation explicit.
+    cross = jnp.dot(p, c.T, preferred_element_type=jnp.float32)
+    return jnp.maximum(p2 - 2.0 * cross + c2, 0.0)
+
+
+def _assign_cost_kernel(p_ref, w_ref, c_ref, assign_ref, kcost_ref, mcost_ref):
+    """Per-block nearest-center assignment and weighted per-point costs.
+
+    Outputs per point: argmin center index, weighted k-means cost
+    contribution (w * d^2) and weighted k-median contribution (w * d).
+    """
+    p = p_ref[...]
+    w = w_ref[...]
+    c = c_ref[...]
+    d2 = _dist2(p, c)
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind2 = jnp.min(d2, axis=1)
+    kcost_ref[...] = w * mind2
+    mcost_ref[...] = w * jnp.sqrt(mind2)
+
+
+def _lloyd_kernel(p_ref, w_ref, c_ref, sums_ref, cnts_ref, cost_ref):
+    """Per-block weighted Lloyd accumulation.
+
+    Emits the block's weighted coordinate sums per center, weighted counts
+    per center, and the block's weighted k-means cost. The caller reduces
+    over blocks and divides sums by counts.
+    """
+    p = p_ref[...]
+    w = w_ref[...]
+    c = c_ref[...]
+    k = c.shape[0]
+    d2 = _dist2(p, c)
+    assign = jnp.argmin(d2, axis=1)
+    mind2 = jnp.min(d2, axis=1)
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # [N, K]
+    wp = p * w[:, None]
+    # MXU-shaped accumulation: [K, N] x [N, D] and [K, N] x [N].
+    sums_ref[...] = jnp.dot(onehot.T, wp, preferred_element_type=jnp.float32)[
+        None
+    ]
+    cnts_ref[...] = jnp.dot(onehot.T, w, preferred_element_type=jnp.float32)[
+        None
+    ]
+    cost_ref[...] = jnp.sum(w * mind2).reshape(1)
+
+
+def _grid(n):
+    if n % N_BLOCK != 0:
+        raise ValueError(f"n={n} must be a multiple of N_BLOCK={N_BLOCK}")
+    return n // N_BLOCK
+
+
+def assign_cost(points, weights, centers, *, block=None):
+    """Pallas-tiled assignment + per-point weighted costs.
+
+    points: [N, D] f32, weights: [N] f32, centers: [K, D] f32.
+    Returns (assign [N] i32, kmeans_cost [N] f32, kmedian_cost [N] f32).
+    N must be a multiple of the block size.
+    """
+    n, d = points.shape
+    k = centers.shape[0]
+    nb = block or min(N_BLOCK, n)
+    g = n // nb
+    if g * nb != n:
+        raise ValueError(f"n={n} must be a multiple of block={nb}")
+    return pl.pallas_call(
+        _assign_cost_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((nb, d), lambda i: (i, 0)),
+            pl.BlockSpec((nb,), lambda i: (i,)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb,), lambda i: (i,)),
+            pl.BlockSpec((nb,), lambda i: (i,)),
+            pl.BlockSpec((nb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, weights, centers)
+
+
+def lloyd_accumulate(points, weights, centers, *, block=None):
+    """Pallas-tiled weighted Lloyd accumulation.
+
+    Returns per-block partials (sums [G, K, D], counts [G, K], cost [G]);
+    reduce over axis 0 to get the step totals.
+    """
+    n, d = points.shape
+    k = centers.shape[0]
+    nb = block or min(N_BLOCK, n)
+    g = n // nb
+    if g * nb != n:
+        raise ValueError(f"n={n} must be a multiple of block={nb}")
+    return pl.pallas_call(
+        _lloyd_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((nb, d), lambda i: (i, 0)),
+            pl.BlockSpec((nb,), lambda i: (i,)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((g, k), jnp.float32),
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, weights, centers)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the Pallas kernels (the CORE correctness signal).
+
+Every kernel output is checked against these reference implementations by
+``python/tests`` (hypothesis sweeps over shapes) before artifacts are
+trusted; the Rust test-suite cross-checks its own pure-Rust backend against
+the compiled artifacts, closing the loop.
+"""
+
+import jax.numpy as jnp
+
+
+def dist2(points, centers):
+    """Exact [N, K] squared Euclidean distances (broadcast form)."""
+    diff = points[:, None, :] - centers[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign_cost(points, weights, centers):
+    """Reference for kernels.distance.assign_cost."""
+    d2 = dist2(points, centers)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind2 = jnp.min(d2, axis=1)
+    return assign, weights * mind2, weights * jnp.sqrt(mind2)
+
+
+def lloyd_step(points, weights, centers):
+    """Reference for one weighted Lloyd accumulation (already reduced).
+
+    Returns (sums [K, D], counts [K], cost scalar).
+    """
+    d2 = dist2(points, centers)
+    assign = jnp.argmin(d2, axis=1)
+    mind2 = jnp.min(d2, axis=1)
+    k = centers.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    wp = points * weights[:, None]
+    sums = onehot.T @ wp
+    counts = onehot.T @ weights
+    cost = jnp.sum(weights * mind2)
+    return sums, counts, cost
+
+
+def kmeans_cost(points, weights, centers):
+    """Weighted k-means cost of a center set."""
+    return jnp.sum(weights * jnp.min(dist2(points, centers), axis=1))
+
+
+def kmedian_cost(points, weights, centers):
+    """Weighted k-median cost of a center set."""
+    return jnp.sum(weights * jnp.sqrt(jnp.min(dist2(points, centers), axis=1)))

@@ -1,0 +1,72 @@
+"""Layer-2 JAX compute graph: the functions the Rust coordinator executes.
+
+Each function here is a thin, fusion-friendly composition around the L1
+Pallas kernels in :mod:`compile.kernels.distance`. ``aot.py`` lowers these
+at a fixed family of shapes to HLO text; the Rust runtime pads its inputs
+to the artifact shape (zero-padded D, sentinel-padded K, zero-weighted N —
+all distance/cost neutral, see DESIGN.md §7) and unpads the outputs.
+
+The L2 layer deliberately keeps reductions over Pallas grid partials here
+(one ``sum`` over the block axis) so that XLA fuses them with the kernel
+loop and the artifact exposes exactly the reduced quantities Rust needs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distance
+
+
+def assign_cost(points, weights, centers):
+    """Nearest-center assignment + per-point weighted costs.
+
+    points [N, D] f32, weights [N] f32, centers [K, D] f32 ->
+    (assign [N] i32, kmeans_cost [N] f32, kmedian_cost [N] f32).
+
+    Per-point (not pre-reduced) costs are exposed because the coreset
+    sampler in Rust needs individual sensitivities m_p = 2 cost(p, B_i).
+    """
+    return distance.assign_cost(points, weights, centers)
+
+
+def lloyd_step(points, weights, centers):
+    """One weighted Lloyd accumulation, reduced over grid blocks.
+
+    Returns (sums [K, D], counts [K], cost []). The caller combines chunk
+    partials (sums/counts add; cost adds) and divides to move centers —
+    division stays in Rust so empty-cluster repair policy lives in one
+    place.
+    """
+    sums_g, cnts_g, cost_g = distance.lloyd_accumulate(points, weights, centers)
+    return (
+        jnp.sum(sums_g, axis=0),
+        jnp.sum(cnts_g, axis=0),
+        jnp.sum(cost_g),
+    )
+
+
+def total_cost(points, weights, centers):
+    """Reduced weighted costs: (kmeans [], kmedian []).
+
+    Used by the evaluator when only the scalar objective is needed.
+    """
+    _, kc, mc = distance.assign_cost(points, weights, centers)
+    return jnp.sum(kc), jnp.sum(mc)
+
+
+#: AOT entry points: name -> (callable, output arity). aot.py lowers each
+#: entry at every (N, D, K) config in its CONFIGS table.
+ENTRY_POINTS = {
+    "assign_cost": assign_cost,
+    "lloyd_step": lloyd_step,
+    "total_cost": total_cost,
+}
+
+
+def example_args(n, d, k):
+    """ShapeDtypeStructs for lowering at shape (n, d, k)."""
+    return (
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((k, d), jnp.float32),
+    )

@@ -1,0 +1,232 @@
+"""Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes (N up to several blocks, D, K), value ranges
+(including zeros, duplicates, zero weights) and the padding semantics the
+Rust runtime relies on (zero-padded D, sentinel-padded K, zero-weight N).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_instance(rng, n, d, k, scale=10.0):
+    points = rng.standard_normal((n, d)).astype(np.float32) * scale
+    weights = np.abs(rng.standard_normal(n)).astype(np.float32)
+    centers = rng.standard_normal((k, d)).astype(np.float32) * scale
+    return jnp.array(points), jnp.array(weights), jnp.array(centers)
+
+
+def d2_tol(points, weights, centers):
+    """f32 error envelope of the ||p||^2 - 2 p.c + ||c||^2 expansion.
+
+    The kernel's MXU form loses ~eps * max(|d2|) absolute accuracy to
+    cancellation relative to the broadcast-subtract oracle; scale the
+    comparison tolerance accordingly.
+    """
+    s2 = float(max(1.0, jnp.max(ref.dist2(points, centers))))
+    wmax = float(max(1.0, jnp.max(weights)))
+    atol_d2 = 3e-5 * s2
+    return atol_d2, wmax * atol_d2, wmax * (atol_d2**0.5)
+
+
+def check_assign_cost(points, weights, centers, block=None):
+    a, kc, mc = distance.assign_cost(points, weights, centers, block=block)
+    ra, rkc, rmc = ref.assign_cost(points, weights, centers)
+    atol_d2, atol_kc, atol_mc = d2_tol(points, weights, centers)
+    # Ties in argmin can legitimately differ; require equal *distance*.
+    d2 = ref.dist2(points, centers)
+    got = d2[jnp.arange(points.shape[0]), a]
+    want = jnp.min(d2, axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=atol_d2)
+    np.testing.assert_allclose(kc, rkc, rtol=1e-3, atol=atol_kc)
+    np.testing.assert_allclose(mc, rmc, rtol=1e-3, atol=atol_mc)
+    return a, ra
+
+
+class TestAssignCost:
+    def test_basic(self):
+        rng = np.random.default_rng(0)
+        p, w, c = rand_instance(rng, 256, 8, 4)
+        a, ra = check_assign_cost(p, w, c)
+        assert (np.asarray(a) == np.asarray(ra)).mean() > 0.99
+
+    def test_multiblock_grid(self):
+        rng = np.random.default_rng(1)
+        p, w, c = rand_instance(rng, 1024, 16, 8)
+        check_assign_cost(p, w, c, block=256)
+
+    def test_single_center(self):
+        rng = np.random.default_rng(2)
+        p, w, c = rand_instance(rng, 64, 3, 1)
+        a, _ = check_assign_cost(p, w, c)
+        assert np.all(np.asarray(a) == 0)
+
+    def test_points_on_centers(self):
+        # Zero-distance: cost must be exactly ~0, no negative sqrt issues.
+        rng = np.random.default_rng(3)
+        c = rng.standard_normal((5, 7)).astype(np.float32)
+        p = jnp.array(np.repeat(c, 4, axis=0))
+        w = jnp.ones(20, jnp.float32)
+        a, kc, mc = distance.assign_cost(p, w, jnp.array(c), block=20)
+        np.testing.assert_allclose(kc, np.zeros(20), atol=1e-4)
+        np.testing.assert_allclose(mc, np.zeros(20), atol=1e-2)
+
+    def test_zero_weights_zero_cost(self):
+        rng = np.random.default_rng(4)
+        p, _, c = rand_instance(rng, 128, 4, 3)
+        w = jnp.zeros(128, jnp.float32)
+        _, kc, mc = distance.assign_cost(p, w, c)
+        assert float(jnp.sum(kc)) == 0.0
+        assert float(jnp.sum(mc)) == 0.0
+
+    def test_rejects_non_multiple_block(self):
+        rng = np.random.default_rng(5)
+        p, w, c = rand_instance(rng, 100, 4, 3)
+        with pytest.raises(ValueError):
+            distance.assign_cost(p, w, c, block=64)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        block=st.sampled_from([32, 64, 128]),
+        d=st.integers(1, 24),
+        k=st.integers(1, 17),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([1e-3, 1.0, 100.0]),
+    )
+    def test_hypothesis_sweep(self, n_blocks, block, d, k, seed, scale):
+        rng = np.random.default_rng(seed)
+        p, w, c = rand_instance(rng, n_blocks * block, d, k, scale)
+        check_assign_cost(p, w, c, block=block)
+
+
+class TestLloydAccumulate:
+    def check(self, points, weights, centers, block=None):
+        sums_g, cnts_g, cost_g = distance.lloyd_accumulate(
+            points, weights, centers, block=block
+        )
+        sums = jnp.sum(sums_g, axis=0)
+        cnts = jnp.sum(cnts_g, axis=0)
+        cost = jnp.sum(cost_g)
+        _, atol_kc, _ = d2_tol(points, weights, centers)
+        n, k = points.shape[0], centers.shape[0]
+        # Accumulation is checked against the *kernel's own* assignment
+        # (identical argmin computation) so near-tie tie-breaks — already
+        # validated as distance-optimal by TestAssignCost — cannot shift
+        # whole points between clusters and fail the comparison.
+        a, _, _ = distance.assign_cost(points, weights, centers, block=block)
+        onehot = (
+            np.asarray(a)[:, None] == np.arange(k)[None, :]
+        ).astype(np.float64)
+        wp = np.asarray(points, np.float64) * np.asarray(weights)[:, None]
+        np.testing.assert_allclose(sums, onehot.T @ wp, rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(
+            cnts, onehot.T @ np.asarray(weights, np.float64), rtol=1e-4,
+            atol=1e-3,
+        )
+        _, _, rcost = ref.lloyd_step(points, weights, centers)
+        np.testing.assert_allclose(cost, rcost, rtol=1e-3, atol=n * atol_kc)
+
+    def test_basic(self):
+        rng = np.random.default_rng(10)
+        self.check(*rand_instance(rng, 256, 8, 4))
+
+    def test_multiblock(self):
+        rng = np.random.default_rng(11)
+        self.check(*rand_instance(rng, 1024, 16, 8), block=256)
+
+    def test_counts_sum_to_total_weight(self):
+        rng = np.random.default_rng(12)
+        p, w, c = rand_instance(rng, 512, 8, 4)
+        _, cnts_g, _ = distance.lloyd_accumulate(p, w, c, block=128)
+        np.testing.assert_allclose(
+            float(jnp.sum(cnts_g)), float(jnp.sum(w)), rtol=1e-4
+        )
+
+    def test_mean_recovers_centroid_single_cluster(self):
+        rng = np.random.default_rng(13)
+        p = jnp.array(rng.standard_normal((128, 5)).astype(np.float32))
+        w = jnp.ones(128, jnp.float32)
+        c = jnp.zeros((1, 5), jnp.float32)
+        sums_g, cnts_g, _ = distance.lloyd_accumulate(p, w, c)
+        mean = jnp.sum(sums_g, axis=0)[0] / jnp.sum(cnts_g)
+        np.testing.assert_allclose(mean, jnp.mean(p, axis=0), atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 3),
+        block=st.sampled_from([32, 64]),
+        d=st.integers(1, 16),
+        k=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n_blocks, block, d, k, seed):
+        rng = np.random.default_rng(seed)
+        self.check(*rand_instance(rng, n_blocks * block, d, k), block=block)
+
+
+class TestPaddingSemantics:
+    """The exact padding contract the Rust runtime uses (DESIGN.md §7)."""
+
+    def test_d_zero_pad_neutral(self):
+        rng = np.random.default_rng(20)
+        p, w, c = rand_instance(rng, 128, 10, 5)
+        pp = jnp.pad(p, ((0, 0), (0, 6)))
+        cp = jnp.pad(c, ((0, 0), (0, 6)))
+        _, kc, mc = distance.assign_cost(p, w, c)
+        _, kcp, mcp = distance.assign_cost(pp, w, cp)
+        np.testing.assert_allclose(kc, kcp, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(mc, mcp, rtol=1e-4, atol=1e-3)
+
+    def test_k_sentinel_pad_never_wins(self):
+        rng = np.random.default_rng(21)
+        p, w, c = rand_instance(rng, 128, 10, 5)
+        cp = jnp.concatenate(
+            [c, jnp.full((11, 10), distance.PAD_CENTER, jnp.float32)]
+        )
+        a, kc, _ = distance.assign_cost(p, w, cp)
+        assert int(jnp.max(a)) < 5
+        _, kc0, _ = distance.assign_cost(p, w, c)
+        np.testing.assert_allclose(kc, kc0, rtol=1e-4, atol=1e-3)
+        assert bool(jnp.all(jnp.isfinite(kc)))
+
+    def test_n_zero_weight_pad_neutral(self):
+        rng = np.random.default_rng(22)
+        p, w, c = rand_instance(rng, 96, 6, 4)
+        pp = jnp.pad(p, ((0, 32), (0, 0)))
+        wp = jnp.pad(w, (0, 32))
+        sums_g, cnts_g, cost_g = distance.lloyd_accumulate(pp, wp, c)
+        rsums, rcnts, rcost = ref.lloyd_step(p, w, c)
+        np.testing.assert_allclose(
+            jnp.sum(sums_g, axis=0), rsums, rtol=1e-4, atol=1e-3
+        )
+        np.testing.assert_allclose(
+            jnp.sum(cnts_g, axis=0), rcnts, rtol=1e-4, atol=1e-3
+        )
+        np.testing.assert_allclose(jnp.sum(cost_g), rcost, rtol=1e-4, atol=1e-2)
+
+    def test_combined_full_padding(self):
+        """Pad all three axes at once, exactly as the Rust executor does."""
+        rng = np.random.default_rng(23)
+        p, w, c = rand_instance(rng, 100, 10, 5)
+        pp = jnp.pad(p, ((0, 156), (0, 6)))
+        wp = jnp.pad(w, (0, 156))
+        cp = jnp.concatenate(
+            [
+                jnp.pad(c, ((0, 0), (0, 6))),
+                jnp.full((11, 16), distance.PAD_CENTER, jnp.float32),
+            ]
+        )
+        a, kc, mc = distance.assign_cost(pp, wp, cp)
+        ra, rkc, rmc = ref.assign_cost(p, w, c)
+        assert int(jnp.max(a[:100])) < 5
+        np.testing.assert_allclose(kc[:100], rkc, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(mc[:100], rmc, rtol=1e-4, atol=1e-3)
+        assert float(jnp.sum(kc[100:])) == 0.0

@@ -1,0 +1,75 @@
+"""L2 model functions: composition of kernels + reductions vs the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_instance(seed, n=256, d=8, k=4):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.array(rng.standard_normal((n, d)).astype(np.float32)),
+        jnp.array(np.abs(rng.standard_normal(n)).astype(np.float32)),
+        jnp.array(rng.standard_normal((k, d)).astype(np.float32)),
+    )
+
+
+class TestModel:
+    def test_assign_cost_matches_ref(self):
+        p, w, c = rand_instance(0)
+        a, kc, mc = model.assign_cost(p, w, c)
+        _, rkc, rmc = ref.assign_cost(p, w, c)
+        np.testing.assert_allclose(kc, rkc, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(mc, rmc, rtol=1e-3, atol=1e-3)
+        assert a.dtype == jnp.int32
+
+    def test_lloyd_step_reduced_shapes(self):
+        p, w, c = rand_instance(1, n=1024, d=16, k=8)
+        sums, cnts, cost = model.lloyd_step(p, w, c)
+        assert sums.shape == (8, 16)
+        assert cnts.shape == (8,)
+        assert cost.shape == ()
+        rsums, rcnts, rcost = ref.lloyd_step(p, w, c)
+        np.testing.assert_allclose(sums, rsums, rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(cnts, rcnts, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(cost, rcost, rtol=1e-3, atol=1e-1)
+
+    def test_total_cost_matches_ref(self):
+        p, w, c = rand_instance(2)
+        kc, mc = model.total_cost(p, w, c)
+        np.testing.assert_allclose(
+            kc, ref.kmeans_cost(p, w, c), rtol=1e-3, atol=1e-2
+        )
+        np.testing.assert_allclose(
+            mc, ref.kmedian_cost(p, w, c), rtol=1e-3, atol=1e-2
+        )
+
+    def test_jit_compatible(self):
+        """Entry points must lower under jit (the AOT precondition)."""
+        p, w, c = rand_instance(3)
+        for name, fn in model.ENTRY_POINTS.items():
+            jitted = jax.jit(fn)
+            out = jitted(p, w, c)
+            assert out is not None, name
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_lloyd_step_cost_equals_total_cost(self, seed):
+        p, w, c = rand_instance(seed)
+        _, _, cost = model.lloyd_step(p, w, c)
+        kc, _ = model.total_cost(p, w, c)
+        np.testing.assert_allclose(cost, kc, rtol=1e-3, atol=1e-2)
+
+
+class TestExampleArgs:
+    def test_shapes(self):
+        sp, sw, sc = model.example_args(1024, 32, 16)
+        assert sp.shape == (1024, 32) and sp.dtype == jnp.float32
+        assert sw.shape == (1024,)
+        assert sc.shape == (16, 32)

@@ -1,0 +1,34 @@
+"""Sanity checks on the L1 structural performance model."""
+
+from compile.perf_estimate import KernelEstimate, table, VMEM_BYTES
+from compile.aot import CONFIGS
+
+
+class TestKernelEstimate:
+    def test_all_configs_fit_vmem(self):
+        for n, d, k in CONFIGS:
+            e = KernelEstimate(n, d, k)
+            assert e.vmem_per_step < 0.05 * VMEM_BYTES, (n, d, k)
+
+    def test_mxu_fraction_grows_with_k(self):
+        small = KernelEstimate(1024, 16, 8)
+        big = KernelEstimate(1024, 96, 64)
+        assert big.mxu_fraction > small.mxu_fraction
+        assert 0.0 < small.mxu_fraction < 1.0
+
+    def test_intensity_grows_with_k(self):
+        assert (
+            KernelEstimate(1024, 32, 64).arithmetic_intensity
+            > KernelEstimate(1024, 32, 8).arithmetic_intensity
+        )
+
+    def test_efficiency_ratio_bounded(self):
+        for n, d, k in CONFIGS:
+            e = KernelEstimate(n, d, k)
+            assert 0.0 < e.efficiency_ratio <= 1.0
+
+    def test_table_renders_all_configs(self):
+        out = table()
+        assert out.count("\n") == len(CONFIGS) + 1
+        for n, d, k in CONFIGS:
+            assert f"({n},{d},{k})" in out

@@ -1,0 +1,159 @@
+//! Coreset-construction bench: wall-clock and communication of the three
+//! constructions (Algorithm 1, COMBINE, Zhang) at matched budgets, plus
+//! the ablation DESIGN.md calls out — Algorithm 1 with the certified
+//! local-search local solver instead of ++/Lloyd (coreset quality should
+//! be insensitive to the local solver choice).
+//!
+//! Run with `cargo bench --bench coreset_construction`.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::local_search::{self, LocalSearchConfig};
+use distclus::clustering::{approx_solution, cost_of, kmeanspp, Objective};
+use distclus::coreset::combine::{self, CombineConfig};
+use distclus::coreset::zhang::{self, ZhangConfig};
+use distclus::coreset::{distributed, DistributedConfig};
+use distclus::metrics::{Stopwatch, Table};
+use distclus::partition::Scheme;
+use distclus::points::WeightedSet;
+use distclus::rng::Pcg64;
+use distclus::topology::{generators, SpanningTree};
+
+fn main() -> anyhow::Result<()> {
+    let backend = RustBackend;
+    let mut rng = Pcg64::seed_from(13);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 40_000, 10, 5);
+    let g = generators::grid(5, 5);
+    let locals: Vec<WeightedSet> = Scheme::Weighted
+        .partition_on(&data, &g, &mut rng)
+        .into_iter()
+        .map(WeightedSet::unit)
+        .collect();
+    let global = WeightedSet::union(locals.iter());
+    let direct = approx_solution(&global, 5, Objective::KMeans, &backend, &mut rng, 40);
+    let tree = SpanningTree::bfs(&g, 0);
+    let t = 1_500usize;
+
+    let mut table = Table::new(&[
+        "construction",
+        "coreset size",
+        "build (s)",
+        "solution cost ratio",
+    ]);
+
+    // Algorithm 1.
+    let sw = Stopwatch::start();
+    let portions = distributed::build_portions(
+        &locals,
+        &DistributedConfig {
+            t,
+            k: 5,
+            ..Default::default()
+        },
+        &backend,
+        &mut rng,
+    );
+    let alg1 = distributed::union(&portions);
+    let t_alg1 = sw.secs();
+
+    // COMBINE.
+    let sw = Stopwatch::start();
+    let cportions = combine::build_portions(
+        &locals,
+        &CombineConfig {
+            t,
+            k: 5,
+            objective: Objective::KMeans,
+        },
+        &backend,
+        &mut rng,
+    );
+    let comb = distributed::union(&cportions);
+    let t_comb = sw.secs();
+
+    // Zhang.
+    let sw = Stopwatch::start();
+    let zres = zhang::build_on_tree(
+        &locals,
+        &tree,
+        &ZhangConfig {
+            t_node: t / g.n(),
+            k: 5,
+            objective: Objective::KMeans,
+        },
+        &backend,
+        &mut rng,
+    );
+    let t_zhang = sw.secs();
+
+    for (name, coreset, secs) in [
+        ("algorithm-1", &alg1, t_alg1),
+        ("combine", &comb, t_comb),
+        ("zhang", &zres.coreset, t_zhang),
+    ] {
+        let sol = approx_solution(&coreset.set, 5, Objective::KMeans, &backend, &mut rng, 40);
+        let ratio = cost_of(&global, &sol.centers, Objective::KMeans) / direct.cost;
+        table.row(vec![
+            name.into(),
+            coreset.size().to_string(),
+            format!("{secs:.2}"),
+            format!("{ratio:.4}"),
+        ]);
+    }
+
+    // Ablation: Algorithm 1 with the certified local-search local solver.
+    let sw = Stopwatch::start();
+    let mut ls_portions = Vec::new();
+    {
+        let cfg = DistributedConfig {
+            t,
+            k: 5,
+            ..Default::default()
+        };
+        let summaries: Vec<distclus::coreset::LocalSummary> = locals
+            .iter()
+            .map(|p| {
+                let seeds = kmeanspp::seed(p, 5, Objective::KMeans, &mut rng);
+                let sol = local_search::run(
+                    p,
+                    seeds,
+                    Objective::KMeans,
+                    &LocalSearchConfig::default(),
+                    &backend,
+                    &mut rng,
+                );
+                let assignment = distclus::clustering::backend::Backend::assign(
+                    &backend,
+                    &p.points,
+                    &p.weights,
+                    &sol.centers,
+                );
+                distclus::coreset::LocalSummary {
+                    solution: sol,
+                    assignment,
+                }
+            })
+            .collect();
+        let costs: Vec<f64> = summaries.iter().map(|s| s.assignment.total(Objective::KMeans)).collect();
+        let total: f64 = costs.iter().sum();
+        let budgets = distclus::coreset::distributed::allocate_budget(t, &costs);
+        for ((p, s), &t_i) in locals.iter().zip(&summaries).zip(&budgets) {
+            ls_portions.push(distclus::coreset::distributed::round2(
+                p, s, &cfg, t_i, total, &mut rng,
+            ));
+        }
+    }
+    let ls_core = distributed::union(&ls_portions);
+    let secs = sw.secs();
+    let sol = approx_solution(&ls_core.set, 5, Objective::KMeans, &backend, &mut rng, 40);
+    let ratio = cost_of(&global, &sol.centers, Objective::KMeans) / direct.cost;
+    table.row(vec![
+        "algorithm-1 (local-search ablation)".into(),
+        ls_core.size().to_string(),
+        format!("{secs:.2}"),
+        format!("{ratio:.4}"),
+    ]);
+
+    println!("# coreset_construction (matched budget t={t}, 5x5 grid, weighted partition)\n");
+    println!("{}", table.render());
+    Ok(())
+}

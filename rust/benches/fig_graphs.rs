@@ -1,0 +1,78 @@
+//! Bench harness for the graph-setting figures (Fig. 2 / 4 / 5):
+//! regenerates the cost-ratio-vs-communication series (ours vs COMBINE)
+//! at bench scale and times one full experiment repetition per cell.
+//!
+//! Run with `cargo bench --bench fig_graphs` (or `make bench`).
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::Objective;
+use distclus::config::{Algorithm, ExperimentSpec, TopologySpec};
+use distclus::coordinator::run_experiment;
+use distclus::metrics::{Summary, Table};
+use distclus::partition::Scheme;
+
+fn main() -> anyhow::Result<()> {
+    let backend = RustBackend;
+    let ds = distclus::data::by_name("synthetic").unwrap();
+    let mut table = Table::new(&[
+        "panel",
+        "algorithm",
+        "t",
+        "comm(points)",
+        "cost ratio",
+        "time/rep (s)",
+    ]);
+    let panels = [
+        (
+            TopologySpec::Random { n: 25, p: 0.3 },
+            Scheme::Uniform,
+            "random/uniform",
+        ),
+        (
+            TopologySpec::Random { n: 25, p: 0.3 },
+            Scheme::Weighted,
+            "random/weighted",
+        ),
+        (
+            TopologySpec::Grid { rows: 5, cols: 5 },
+            Scheme::Weighted,
+            "grid/weighted",
+        ),
+        (
+            TopologySpec::Preferential { n: 25, m_attach: 2 },
+            Scheme::Degree,
+            "pref/degree",
+        ),
+    ];
+    for (topo, part, label) in panels {
+        for alg in [Algorithm::Distributed, Algorithm::Combine] {
+            for t in [300usize, 1_000] {
+                let spec = ExperimentSpec {
+                    dataset: ds.name.into(),
+                    scale: 0.2,
+                    topology: topo,
+                    partition: part,
+                    algorithm: alg,
+                    k: ds.k,
+                    t,
+                    objective: Objective::KMeans,
+                    reps: 3,
+                    seed: 17,
+                };
+                let res = run_experiment(&spec, &backend)?;
+                table.row(vec![
+                    label.into(),
+                    alg.name().into(),
+                    t.to_string(),
+                    format!("{:.0}", res.comm.mean),
+                    format!("{:.4} ± {:.4}", res.ratio.mean, res.ratio.std),
+                    format!("{:.2}", res.secs_per_rep),
+                ]);
+            }
+        }
+    }
+    println!("# fig_graphs (Fig. 2/4/5 series @ bench scale)\n");
+    println!("{}", table.render());
+    let _ = Summary::of(&[1.0]);
+    Ok(())
+}

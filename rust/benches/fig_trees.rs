@@ -1,0 +1,98 @@
+//! Bench harness for the spanning-tree figures (Fig. 3 / 6 / 7):
+//! ours-on-tree vs Zhang-et-al. across tree heights, plus the height
+//! sensitivity the paper highlights (§4.2: error compounds with h).
+//!
+//! Run with `cargo bench --bench fig_trees`.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::{approx_solution, cost_of, Objective};
+use distclus::coreset::zhang::ZhangConfig;
+use distclus::coreset::DistributedConfig;
+use distclus::metrics::Table;
+use distclus::partition::Scheme;
+use distclus::points::WeightedSet;
+use distclus::protocol::{cluster_on_tree, zhang_on_tree};
+use distclus::rng::Pcg64;
+use distclus::topology::{generators, SpanningTree};
+
+fn main() -> anyhow::Result<()> {
+    let backend = RustBackend;
+    let mut rng = Pcg64::seed_from(29);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 25_000, 8, 5);
+    let global = WeightedSet::unit(data.clone());
+    let direct = approx_solution(&global, 5, Objective::KMeans, &backend, &mut rng, 40);
+
+    let mut table = Table::new(&[
+        "topology",
+        "height",
+        "algorithm",
+        "comm(points)",
+        "cost ratio",
+        "time (s)",
+    ]);
+    for (name, graph) in [
+        ("star(25)", generators::star(25)),
+        ("random(25,.3)", {
+            let mut r = Pcg64::seed_from(1);
+            generators::erdos_renyi_connected(&mut r, 25, 0.3)
+        }),
+        ("grid 5x5", generators::grid(5, 5)),
+        ("path(25)", generators::path(25)),
+    ] {
+        let locals: Vec<WeightedSet> = Scheme::Weighted
+            .partition_on(&data, &graph, &mut rng)
+            .into_iter()
+            .map(|p| {
+                if p.n() == 0 {
+                    let mut w = WeightedSet::empty(data.d);
+                    w.push(data.row(0), 1e-12);
+                    w
+                } else {
+                    WeightedSet::unit(p)
+                }
+            })
+            .collect();
+        let tree = SpanningTree::bfs(&graph, 0);
+
+        let sw = distclus::metrics::Stopwatch::start();
+        let ours = cluster_on_tree(
+            &tree,
+            &locals,
+            &DistributedConfig {
+                t: 1_000,
+                k: 5,
+                ..Default::default()
+            },
+            &backend,
+            &mut rng,
+        )?;
+        let t_ours = sw.secs();
+        let sw = distclus::metrics::Stopwatch::start();
+        let zhang = zhang_on_tree(
+            &tree,
+            &locals,
+            &ZhangConfig {
+                t_node: 1_000 / graph.n(),
+                k: 5,
+                objective: Objective::KMeans,
+            },
+            &backend,
+            &mut rng,
+        )?;
+        let t_zhang = sw.secs();
+        for (run, secs) in [(&ours, t_ours), (&zhang, t_zhang)] {
+            let ratio = cost_of(&global, &run.centers, Objective::KMeans) / direct.cost;
+            table.row(vec![
+                name.into(),
+                tree.height().to_string(),
+                run.algorithm.into(),
+                run.comm_points.to_string(),
+                format!("{ratio:.4}"),
+                format!("{secs:.2}"),
+            ]);
+        }
+    }
+    println!("# fig_trees (Fig. 3/6/7 series @ bench scale)\n");
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Kernel hot-path bench: assignment and weighted-Lloyd throughput of
+//! the pure-Rust backend vs the AOT Pallas/XLA backend (when artifacts
+//! are present), across the paper's dataset shapes. This is the §Perf
+//! driver for L3 (EXPERIMENTS.md §Perf).
+//!
+//! Run with `cargo bench --bench kernel_hotpath`.
+
+use distclus::clustering::backend::{Backend, RustBackend};
+use distclus::metrics::{time_reps, Summary, Table};
+use distclus::points::Dataset;
+use distclus::rng::Pcg64;
+use distclus::runtime::XlaBackend;
+use std::path::Path;
+
+fn instance(rng: &mut Pcg64, n: usize, d: usize, k: usize) -> (Dataset, Vec<f64>, Dataset) {
+    let data = distclus::data::synthetic::gaussian_mixture(rng, n, d, k);
+    let weights: Vec<f64> = (0..data.n()).map(|_| rng.uniform() + 0.1).collect();
+    let mut centers = Dataset::with_capacity(k, d);
+    for _ in 0..k {
+        let c: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        centers.push(&c);
+    }
+    (data, weights, centers)
+}
+
+fn bench_backend(
+    table: &mut Table,
+    name: &str,
+    backend: &dyn Backend,
+    shapes: &[(usize, usize, usize)],
+) {
+    let mut rng = Pcg64::seed_from(3);
+    for &(n, d, k) in shapes {
+        let (points, weights, centers) = instance(&mut rng, n, d, k);
+        let reps = if n > 50_000 { 3 } else { 5 };
+        let t_assign = Summary::of(&time_reps(
+            || {
+                std::hint::black_box(backend.assign(&points, &weights, &centers));
+            },
+            reps,
+        ));
+        let t_lloyd = Summary::of(&time_reps(
+            || {
+                std::hint::black_box(backend.lloyd_step(&points, &weights, &centers));
+            },
+            reps,
+        ));
+        let mpts = points.n() as f64 / 1e6;
+        table.row(vec![
+            name.into(),
+            format!("{n}x{d} k={k}"),
+            format!("{:.2}", t_assign.mean * 1e3),
+            format!("{:.1}", mpts / t_assign.mean),
+            format!("{:.2}", t_lloyd.mean * 1e3),
+            format!("{:.1}", mpts / t_lloyd.mean),
+        ]);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // Shapes mirroring the paper's datasets (padded-artifact shapes).
+    let shapes = [
+        (10_000usize, 16usize, 10usize), // pendigits
+        (20_000, 16, 10),                // letter
+        (68_040 / 4, 32, 10),            // colorhist/4
+        (20_000, 90, 50),                // msd slice
+    ];
+    let mut table = Table::new(&[
+        "backend",
+        "shape",
+        "assign (ms)",
+        "assign Mpts/s",
+        "lloyd (ms)",
+        "lloyd Mpts/s",
+    ]);
+    bench_backend(&mut table, "rust", &RustBackend, &shapes);
+    match XlaBackend::load(Path::new("artifacts")) {
+        Ok(xla) => bench_backend(&mut table, "xla", &xla, &shapes),
+        Err(e) => eprintln!("xla backend unavailable ({e}); run `make artifacts`"),
+    }
+    println!("# kernel_hotpath (assignment / weighted-Lloyd throughput)\n");
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,394 @@
+//! `figures` — regenerate every evaluation figure of the paper.
+//!
+//! Each subcommand sweeps the coreset budget and prints the figure's
+//! series (k-means cost ratio vs measured communication) as markdown
+//! tables, optionally writing JSON series files under `results/`.
+//!
+//! ```text
+//! figures fig2           # Fig 2: ours vs COMBINE on graphs (MSD analog)
+//! figures fig3           # Fig 3: ours vs Zhang on spanning trees
+//! figures fig4|fig5      # App B: all datasets on graphs
+//! figures fig6|fig7      # App B: all datasets on spanning trees
+//! figures thm1           # coreset-quality validation (Theorem 1)
+//! figures comm           # communication scaling (Theorems 2/3)
+//! figures all            # everything above
+//! Flags: --quick (small scale; CI), --scale F, --reps N, --backend rust|xla,
+//!        --artifacts DIR, --out results/
+//! ```
+
+use anyhow::{bail, Result};
+use distclus::clustering::backend::{Backend, RustBackend};
+use distclus::clustering::{cost_of, Objective};
+use distclus::cli::Args;
+use distclus::config::{Algorithm, ExperimentSpec, TopologySpec};
+use distclus::coordinator::{render_report, series_json, ExperimentResult, Session};
+use distclus::coreset::{distributed, DistributedConfig};
+use distclus::data::DatasetSpec;
+use distclus::metrics::{plot, Table};
+use distclus::partition::Scheme;
+use distclus::points::{Dataset, WeightedSet};
+use distclus::rng::Pcg64;
+use distclus::runtime::XlaBackend;
+use distclus::topology::{diameter, generators, SpanningTree};
+use std::path::Path;
+
+/// Budget ladder (sampled points t) swept for every series, mirroring the
+/// paper's x-axis range of growing communication.
+const T_LADDER: &[usize] = &[200, 500, 1_000, 2_000, 5_000];
+const T_LADDER_QUICK: &[usize] = &[200, 500];
+
+struct Ctx {
+    backend: Box<dyn Backend>,
+    reps: usize,
+    scale_override: Option<f64>,
+    quick: bool,
+    out_dir: String,
+}
+
+impl Ctx {
+    fn ladder(&self) -> &'static [usize] {
+        if self.quick {
+            T_LADDER_QUICK
+        } else {
+            T_LADDER
+        }
+    }
+
+    /// Dataset scale: full for small sets, subsampled MSD by default.
+    fn scale_for(&self, ds: &DatasetSpec) -> f64 {
+        if let Some(s) = self.scale_override {
+            return s;
+        }
+        let base: f64 = match ds.name {
+            "msd" => 0.2,
+            _ => 1.0,
+        };
+        if self.quick {
+            (base * 0.05).max(0.01)
+        } else {
+            base
+        }
+    }
+
+    fn write_json(&self, name: &str, results: &[ExperimentResult]) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = format!("{}/{name}.json", self.out_dir);
+        std::fs::write(&path, series_json(results).to_string())?;
+        eprintln!("wrote {path}");
+        Ok(())
+    }
+}
+
+/// The topology×partition panels of Figures 2/4/5 (graph setting).
+fn graph_panels(ds: &DatasetSpec) -> Vec<(TopologySpec, Scheme)> {
+    let random = TopologySpec::Random {
+        n: ds.sites,
+        p: 0.3,
+    };
+    let grid = TopologySpec::Grid {
+        rows: ds.grid.0,
+        cols: ds.grid.1,
+    };
+    let pref = TopologySpec::Preferential {
+        n: ds.sites,
+        m_attach: 2,
+    };
+    vec![
+        (random, Scheme::Uniform),
+        (random, Scheme::Similarity),
+        (random, Scheme::Weighted),
+        (grid, Scheme::Similarity),
+        (grid, Scheme::Weighted),
+        (pref, Scheme::Degree),
+    ]
+}
+
+fn sweep(
+    ctx: &Ctx,
+    ds: &DatasetSpec,
+    panels: &[(TopologySpec, Scheme)],
+    algorithms: &[Algorithm],
+    tag: &str,
+) -> Result<Vec<ExperimentResult>> {
+    let mut all = Vec::new();
+    // One session per dataset: the data and every per-rep baseline are
+    // shared across panels, algorithms and the whole budget ladder.
+    let base_spec = ExperimentSpec {
+        dataset: ds.name.into(),
+        scale: ctx.scale_for(ds),
+        seed: 20_130_613, // the paper's year+month+day :-)
+        ..Default::default()
+    };
+    let mut session = Session::new(&base_spec)?;
+    for (topo, part) in panels {
+        let mut table = Table::new(&["algorithm", "t", "comm(points)", "cost ratio", "±std"]);
+        let mut plot_series: Vec<plot::Series> = Vec::new();
+        for &alg in algorithms {
+            let mut curve = plot::Series {
+                label: alg.name().to_string(),
+                points: Vec::new(),
+            };
+            for &t in ctx.ladder() {
+                let spec = ExperimentSpec {
+                    topology: *topo,
+                    partition: *part,
+                    algorithm: alg,
+                    k: ds.k,
+                    t,
+                    objective: Objective::KMeans,
+                    reps: ctx.reps,
+                    ..base_spec.clone()
+                };
+                let res = session.run(&spec, ctx.backend.as_ref())?;
+                table.row(vec![
+                    alg.name().into(),
+                    t.to_string(),
+                    format!("{:.0}", res.comm.mean),
+                    format!("{:.4}", res.ratio.mean),
+                    format!("{:.4}", res.ratio.std),
+                ]);
+                curve.points.push((res.comm.mean, res.ratio.mean));
+                all.push(res);
+            }
+            plot_series.push(curve);
+        }
+        println!(
+            "\n## {tag}: {} | {} graph | {} partition\n",
+            ds.name,
+            topo.name(),
+            part.name()
+        );
+        println!("{}", table.render());
+        println!("\n{}", plot::render(&plot_series, &plot::PlotConfig::default()));
+    }
+    Ok(all)
+}
+
+fn fig_graphs(ctx: &Ctx, datasets: &[&str], tag: &str) -> Result<()> {
+    let algorithms = [Algorithm::Distributed, Algorithm::Combine];
+    let mut all = Vec::new();
+    for name in datasets {
+        let ds = distclus::data::by_name(name).unwrap();
+        all.extend(sweep(ctx, ds, &graph_panels(ds), &algorithms, tag)?);
+    }
+    ctx.write_json(tag, &all)
+}
+
+fn fig_trees(ctx: &Ctx, datasets: &[&str], tag: &str) -> Result<()> {
+    let algorithms = [Algorithm::DistributedTree, Algorithm::ZhangTree];
+    let mut all = Vec::new();
+    for name in datasets {
+        let ds = distclus::data::by_name(name).unwrap();
+        all.extend(sweep(ctx, ds, &graph_panels(ds), &algorithms, tag)?);
+    }
+    ctx.write_json(tag, &all)
+}
+
+/// Theorem-1 validation: measured coreset cost distortion vs size.
+fn thm1(ctx: &Ctx) -> Result<()> {
+    println!("\n## thm1: coreset distortion vs size (synthetic, 25 sites)\n");
+    let mut rng = Pcg64::seed_from(99);
+    let scale = if ctx.quick { 0.05 } else { 0.5 };
+    let ds = distclus::data::by_name("synthetic").unwrap();
+    let data = ds.generate(&mut rng, scale);
+    let g = generators::erdos_renyi_connected(&mut rng, 25, 0.3);
+    let locals: Vec<WeightedSet> = Scheme::Weighted
+        .partition_on(&data, &g, &mut rng)
+        .into_iter()
+        .map(WeightedSet::unit)
+        .collect();
+    let global = WeightedSet::union(locals.iter());
+    let mut table = Table::new(&["t", "coreset size", "max distortion (20 probes)"]);
+    for &t in ctx.ladder() {
+        let cfg = DistributedConfig {
+            t,
+            k: ds.k,
+            clamp_center_weights: false,
+            ..Default::default()
+        };
+        let portions =
+            distributed::build_portions(&locals, &cfg, ctx.backend.as_ref(), &mut rng);
+        let coreset = distributed::union(&portions);
+        let mut worst = 0.0f64;
+        for probe_i in 0..20 {
+            let mut prng = Pcg64::seed_from(1_000 + probe_i);
+            let probe = random_centers(&mut prng, ds.k, data.d);
+            let truth = cost_of(&global, &probe, Objective::KMeans);
+            let est = cost_of(&coreset.set, &probe, Objective::KMeans);
+            worst = worst.max(((est - truth) / truth).abs());
+        }
+        table.row(vec![
+            t.to_string(),
+            coreset.size().to_string(),
+            format!("{worst:.4}"),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Extension beyond the paper's figures: the same comparison under the
+/// k-median objective (the paper proves Theorem 1 for both objectives
+/// but only evaluates k-means; this series validates the k-median side).
+fn kmedian_series(ctx: &Ctx) -> Result<()> {
+    let ds = distclus::data::by_name("synthetic").unwrap();
+    let base_spec = ExperimentSpec {
+        dataset: ds.name.into(),
+        scale: ctx.scale_for(ds),
+        seed: 20_130_613,
+        objective: Objective::KMedian,
+        ..Default::default()
+    };
+    let mut session = Session::new(&base_spec)?;
+    let mut table = Table::new(&["algorithm", "t", "comm(points)", "kmedian cost ratio", "±std"]);
+    let mut all = Vec::new();
+    for alg in [Algorithm::Distributed, Algorithm::Combine] {
+        for &t in ctx.ladder() {
+            let spec = ExperimentSpec {
+                topology: TopologySpec::Random { n: 25, p: 0.3 },
+                partition: Scheme::Weighted,
+                algorithm: alg,
+                k: ds.k,
+                t,
+                objective: Objective::KMedian,
+                reps: ctx.reps,
+                ..base_spec.clone()
+            };
+            let res = session.run(&spec, ctx.backend.as_ref())?;
+            table.row(vec![
+                alg.name().into(),
+                t.to_string(),
+                format!("{:.0}", res.comm.mean),
+                format!("{:.4}", res.ratio.mean),
+                format!("{:.4}", res.ratio.std),
+            ]);
+            all.push(res);
+        }
+    }
+    println!("\n## kmedian: synthetic | random graph | weighted partition\n");
+    println!("{}", table.render());
+    ctx.write_json("kmedian", &all)
+}
+
+fn random_centers(rng: &mut Pcg64, k: usize, d: usize) -> Dataset {
+    let mut out = Dataset::with_capacity(k, d);
+    for _ in 0..k {
+        let c: Vec<f32> = (0..d).map(|_| 2.0 * rng.normal() as f32).collect();
+        out.push(&c);
+    }
+    out
+}
+
+/// Theorems 2/3 validation: communication vs topology size/shape.
+fn comm_scaling(ctx: &Ctx) -> Result<()> {
+    println!("\n## comm: measured communication vs theory (t=500, k=5)\n");
+    let mut table = Table::new(&[
+        "topology",
+        "n",
+        "m",
+        "diam",
+        "tree h",
+        "graph comm",
+        "2m(t+nk)+2mn",
+        "tree comm",
+    ]);
+    let mut rng = Pcg64::seed_from(5);
+    let sizes: &[usize] = if ctx.quick { &[16, 25] } else { &[16, 25, 49, 100] };
+    for &n in sizes {
+        let side = (n as f64).sqrt() as usize;
+        for (name, graph) in [
+            ("grid", generators::grid(side, side)),
+            ("random", generators::erdos_renyi_connected(&mut rng, n, 0.3)),
+        ] {
+            let ds = distclus::data::synthetic::gaussian_mixture(&mut rng, 40 * n, 8, 5);
+            let locals: Vec<WeightedSet> = Scheme::Uniform
+                .partition(&ds, graph.n(), &mut rng)
+                .into_iter()
+                .map(WeightedSet::unit)
+                .collect();
+            let cfg = DistributedConfig {
+                t: 500,
+                k: 5,
+                ..Default::default()
+            };
+            let run = distclus::protocol::cluster_on_graph(
+                &graph,
+                &locals,
+                &cfg,
+                ctx.backend.as_ref(),
+                &mut rng,
+            )?;
+            let tree = SpanningTree::random_root(&graph, &mut rng);
+            let run_t = distclus::protocol::cluster_on_tree(
+                &tree,
+                &locals,
+                &cfg,
+                ctx.backend.as_ref(),
+                &mut rng,
+            )?;
+            let theory = 2 * graph.m() * (500 + graph.n() * 5) + 2 * graph.m() * graph.n();
+            table.row(vec![
+                name.into(),
+                graph.n().to_string(),
+                graph.m().to_string(),
+                diameter(&graph).to_string(),
+                tree.height().to_string(),
+                run.comm_points.to_string(),
+                theory.to_string(),
+                run_t.comm_points.to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".into());
+    let backend: Box<dyn Backend> = match args.get_or("backend", "rust").as_str() {
+        "rust" => Box::new(RustBackend),
+        "xla" => Box::new(XlaBackend::load(Path::new(&args.get_or(
+            "artifacts",
+            "artifacts",
+        )))?),
+        other => bail!("unknown backend '{other}'"),
+    };
+    let quick = args.has("quick");
+    let ctx = Ctx {
+        backend,
+        reps: args.get_parse("reps", if quick { 2 } else { 10 })?,
+        scale_override: args.get("scale").map(|s| s.parse()).transpose()?,
+        quick,
+        out_dir: args.get_or("out", "results"),
+    };
+    args.reject_unknown()?;
+
+    let small: &[&str] = &["spam", "pendigits", "letter", "synthetic", "colorhist"];
+    let main_ds: &[&str] = &["msd"];
+    match cmd.as_str() {
+        "fig2" => fig_graphs(&ctx, main_ds, "fig2")?,
+        "fig3" => fig_trees(&ctx, main_ds, "fig3")?,
+        "fig4" | "fig5" => fig_graphs(&ctx, small, &cmd)?,
+        "fig6" | "fig7" => fig_trees(&ctx, small, &cmd)?,
+        "thm1" => thm1(&ctx)?,
+        "comm" => comm_scaling(&ctx)?,
+        "kmedian" => kmedian_series(&ctx)?,
+        "all" => {
+            fig_graphs(&ctx, main_ds, "fig2")?;
+            fig_trees(&ctx, main_ds, "fig3")?;
+            fig_graphs(&ctx, small, "fig4_5")?;
+            fig_trees(&ctx, small, "fig6_7")?;
+            thm1(&ctx)?;
+            comm_scaling(&ctx)?;
+            kmedian_series(&ctx)?;
+        }
+        other => bail!("unknown figure '{other}' (fig2..fig7, thm1, comm, kmedian, all)"),
+    }
+    let _ = render_report(&[]); // keep the import in one place
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Tiny argument parser shared by the binaries (offline crate set has no
+//! clap): `--key value` / `--key=value` flags, bare positionals, typed
+//! getters with defaults, and strict unknown-flag checking.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Boolean flag unless the next token is a value.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(flag.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(flag.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Boolean flag (present or `=true`).
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Error on any flag never queried (catches typos).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for key in self.flags.keys() {
+            if !consumed.iter().any(|c| c == key) {
+                bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["run", "--t", "500", "--verbose", "--k=7", "extra"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("t"), Some("500"));
+        assert_eq!(a.get_parse("k", 0usize).unwrap(), 7);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_parse("t", 123usize).unwrap(), 123);
+        assert_eq!(a.get_or("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["--t", "abc"]);
+        assert!(a.get_parse("t", 0usize).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse(&["--known", "1", "--typo", "2"]);
+        let _ = a.get("known");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("typo");
+        assert!(a.reject_unknown().is_ok());
+    }
+}

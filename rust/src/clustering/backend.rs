@@ -1,0 +1,241 @@
+//! The kernel-backend abstraction: where assignment and Lloyd
+//! accumulation actually execute.
+//!
+//! Two implementations exist: [`RustBackend`] (portable, always
+//! available, used as the cross-validation oracle) and
+//! [`crate::runtime::XlaBackend`] (loads the AOT-compiled Pallas/JAX
+//! artifacts through PJRT — the production hot path). The test-suite
+//! asserts they agree on random instances.
+
+use super::Objective;
+use crate::points::Dataset;
+
+/// Result of a nearest-center assignment pass.
+#[derive(Clone, Debug, Default)]
+pub struct Assignment {
+    /// Nearest-center index per point.
+    pub assign: Vec<u32>,
+    /// Weighted k-means cost contribution per point (`w * d^2`).
+    pub kmeans_cost: Vec<f64>,
+    /// Weighted k-median cost contribution per point (`w * d`).
+    pub kmedian_cost: Vec<f64>,
+}
+
+impl Assignment {
+    /// Total cost under `obj`.
+    pub fn total(&self, obj: Objective) -> f64 {
+        match obj {
+            Objective::KMeans => self.kmeans_cost.iter().sum(),
+            Objective::KMedian => self.kmedian_cost.iter().sum(),
+        }
+    }
+
+    /// Per-point cost slice under `obj`.
+    pub fn per_point(&self, obj: Objective) -> &[f64] {
+        match obj {
+            Objective::KMeans => &self.kmeans_cost,
+            Objective::KMedian => &self.kmedian_cost,
+        }
+    }
+}
+
+/// Result of one weighted Lloyd accumulation.
+#[derive(Clone, Debug)]
+pub struct LloydStep {
+    /// Weighted coordinate sums per center, row-major `[k, d]`.
+    pub sums: Vec<f64>,
+    /// Weighted counts per center.
+    pub counts: Vec<f64>,
+    /// Weighted k-means cost of the *current* centers.
+    pub cost: f64,
+}
+
+/// Executes the two kernel operations of the stack.
+pub trait Backend {
+    /// Nearest-center assignment with per-point weighted costs.
+    fn assign(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> Assignment;
+
+    /// One weighted Lloyd accumulation (k-means).
+    fn lloyd_step(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> LloydStep;
+
+    /// Human-readable backend name (for reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Portable pure-Rust backend.
+///
+/// The inner loop mirrors the Pallas kernel's math (squared-distance via
+/// explicit subtraction — *more* accurate than the MXU expansion, which
+/// is why this is the oracle side of the cross-check).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RustBackend;
+
+/// Squared distance with early abandonment: accumulates in vector-
+/// friendly blocks of 8 and bails out as soon as the partial sum exceeds
+/// `best` (returns `f32::INFINITY` then). The argmin is unchanged — only
+/// provably-losing candidates are cut short. This is the single hottest
+/// loop of the whole stack (see EXPERIMENTS.md §Perf).
+#[inline]
+fn dist2_early(p: &[f32], c: &[f32], best: f32) -> f32 {
+    let d = p.len();
+    let mut acc = 0.0f32;
+    let mut j = 0;
+    // 32-wide blocks in 4 independent lanes: wide enough for the
+    // auto-vectorizer, and the abandonment check amortizes to 1/32 ops.
+    while j + 32 <= d {
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for l in (0..32).step_by(4) {
+            unsafe {
+                let d0 = p.get_unchecked(j + l) - c.get_unchecked(j + l);
+                let d1 = p.get_unchecked(j + l + 1) - c.get_unchecked(j + l + 1);
+                let d2 = p.get_unchecked(j + l + 2) - c.get_unchecked(j + l + 2);
+                let d3 = p.get_unchecked(j + l + 3) - c.get_unchecked(j + l + 3);
+                s0 += d0 * d0;
+                s1 += d1 * d1;
+                s2 += d2 * d2;
+                s3 += d3 * d3;
+            }
+        }
+        acc += (s0 + s1) + (s2 + s3);
+        if acc >= best {
+            return f32::INFINITY;
+        }
+        j += 32;
+    }
+    while j + 8 <= d {
+        let mut block = 0.0f32;
+        for l in 0..8 {
+            let df = unsafe { p.get_unchecked(j + l) - c.get_unchecked(j + l) };
+            block += df * df;
+        }
+        acc += block;
+        if acc >= best {
+            return f32::INFINITY;
+        }
+        j += 8;
+    }
+    for l in j..d {
+        let df = p[l] - c[l];
+        acc += df * df;
+    }
+    acc
+}
+
+impl Backend for RustBackend {
+    fn assign(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> Assignment {
+        let n = points.n();
+        let d = points.d;
+        assert_eq!(weights.len(), n);
+        assert_eq!(points.d, centers.d);
+        assert!(centers.n() > 0, "assign with zero centers");
+        let k = centers.n();
+        let mut out = Assignment {
+            assign: Vec::with_capacity(n),
+            kmeans_cost: Vec::with_capacity(n),
+            kmedian_cost: Vec::with_capacity(n),
+        };
+        for i in 0..n {
+            let p = &points.data[i * d..(i + 1) * d];
+            let mut best = f32::INFINITY;
+            let mut best_c = 0u32;
+            for c in 0..k {
+                let crow = &centers.data[c * d..(c + 1) * d];
+                let d2 = dist2_early(p, crow, best);
+                if d2 < best {
+                    best = d2;
+                    best_c = c as u32;
+                }
+            }
+            let best = best.max(0.0) as f64;
+            out.assign.push(best_c);
+            out.kmeans_cost.push(weights[i] * best);
+            out.kmedian_cost.push(weights[i] * best.sqrt());
+        }
+        out
+    }
+
+    fn lloyd_step(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> LloydStep {
+        let (k, d) = (centers.n(), centers.d);
+        let asg = self.assign(points, weights, centers);
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0.0f64; k];
+        for i in 0..points.n() {
+            let c = asg.assign[i] as usize;
+            let w = weights[i];
+            counts[c] += w;
+            let row = points.row(i);
+            for (s, &x) in sums[c * d..(c + 1) * d].iter_mut().zip(row) {
+                *s += w * x as f64;
+            }
+        }
+        LloydStep {
+            sums,
+            counts,
+            cost: asg.kmeans_cost.iter().sum(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn instance(seed: u64, n: usize, d: usize, k: usize) -> (Dataset, Vec<f64>, Dataset) {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut pts = Dataset::with_capacity(n, d);
+        for _ in 0..n {
+            let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            pts.push(&p);
+        }
+        let weights: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+        let mut ctr = Dataset::with_capacity(k, d);
+        for _ in 0..k {
+            let c: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            ctr.push(&c);
+        }
+        (pts, weights, ctr)
+    }
+
+    #[test]
+    fn assign_picks_nearest() {
+        let pts = Dataset::from_flat(vec![0.0, 0.0, 10.0, 10.0], 2);
+        let ctr = Dataset::from_flat(vec![1.0, 0.0, 9.0, 9.0], 2);
+        let asg = RustBackend.assign(&pts, &[1.0, 2.0], &ctr);
+        assert_eq!(asg.assign, vec![0, 1]);
+        assert!((asg.kmeans_cost[0] - 1.0).abs() < 1e-9);
+        assert!((asg.kmeans_cost[1] - 2.0 * 2.0).abs() < 1e-9);
+        assert!((asg.kmedian_cost[1] - 2.0 * 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lloyd_counts_conserve_weight() {
+        let (pts, w, ctr) = instance(1, 500, 8, 5);
+        let step = RustBackend.lloyd_step(&pts, &w, &ctr);
+        let total_w: f64 = w.iter().sum();
+        assert!((step.counts.iter().sum::<f64>() - total_w).abs() < 1e-9);
+        assert_eq!(step.sums.len(), 5 * 8);
+        assert!(step.cost > 0.0);
+    }
+
+    #[test]
+    fn lloyd_cost_matches_assign_total() {
+        let (pts, w, ctr) = instance(2, 200, 4, 3);
+        let step = RustBackend.lloyd_step(&pts, &w, &ctr);
+        let asg = RustBackend.assign(&pts, &w, &ctr);
+        assert!((step.cost - asg.total(Objective::KMeans)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_weight_points_do_not_move_sums() {
+        let (pts, _, ctr) = instance(3, 100, 4, 3);
+        let w = vec![0.0; 100];
+        let step = RustBackend.lloyd_step(&pts, &w, &ctr);
+        assert!(step.sums.iter().all(|&s| s == 0.0));
+        assert_eq!(step.cost, 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Weighted k-means++ / k-median++ seeding (Arthur–Vassilvitskii D^2 /
+//! D sampling), the initializer behind every constant-approximation
+//! solve in the stack.
+
+use super::Objective;
+use crate::points::{dist2, Dataset, WeightedSet};
+use crate::rng::Pcg64;
+
+/// Sample `k` seed centers from `set` by weighted D^alpha sampling
+/// (`alpha = 2` for k-means, `1` for k-median). Returns a dataset of
+/// `min(k, #distinct-support)` centers — if fewer than `k` points carry
+/// positive selection mass, the seeding degenerates gracefully.
+pub fn seed(set: &WeightedSet, k: usize, obj: Objective, rng: &mut Pcg64) -> Dataset {
+    let n = set.n();
+    assert!(n > 0 && k > 0);
+    let d = set.d();
+    let mut centers = Dataset::with_capacity(k, d);
+
+    // First center: proportional to point weight (uniform when unit).
+    // Negative coreset weights carry no selection mass.
+    let sel: Vec<f64> = set.weights.iter().map(|&w| w.max(0.0)).collect();
+    let w_total: f64 = sel.iter().sum();
+    let first = if w_total > 0.0 {
+        rng.weighted_index(&sel)
+    } else {
+        rng.below(n)
+    };
+    centers.push(set.points.row(first));
+
+    // min cost-to-chosen-centers per point, maintained incrementally.
+    let mut min_d2: Vec<f64> = (0..n)
+        .map(|i| set.points.dist2_to(i, centers.row(0)))
+        .collect();
+    let mut probs = vec![0.0f64; n];
+    while centers.n() < k {
+        let mut total = 0.0;
+        for i in 0..n {
+            let p = set.weights[i].max(0.0) * obj.of_dist2(min_d2[i]);
+            probs[i] = p;
+            total += p;
+        }
+        if total <= 0.0 || !total.is_finite() {
+            break; // every remaining point coincides with a center
+        }
+        let next = rng.weighted_index(&probs);
+        centers.push(set.points.row(next));
+        let c = centers.row(centers.n() - 1).to_vec();
+        for i in 0..n {
+            let d2 = dist2(set.points.row(i), &c);
+            if d2 < min_d2[i] {
+                min_d2[i] = d2;
+            }
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::cost_of;
+    use crate::data::synthetic::gaussian_mixture_with_centers;
+
+    #[test]
+    fn returns_k_distinct_centers() {
+        let mut rng = Pcg64::seed_from(1);
+        let (data, _) = gaussian_mixture_with_centers(&mut rng, 100, 4, 4);
+        let set = WeightedSet::unit(data);
+        let seeds = seed(&set, 4, Objective::KMeans, &mut rng);
+        assert_eq!(seeds.n(), 4);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert!(dist2(seeds.row(i), seeds.row(j)) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerates_gracefully_on_duplicates() {
+        let mut rng = Pcg64::seed_from(2);
+        let data = Dataset::from_flat(vec![1.0, 2.0].repeat(10), 2); // 10 identical
+        let set = WeightedSet::unit(data);
+        let seeds = seed(&set, 3, Objective::KMeans, &mut rng);
+        assert_eq!(seeds.n(), 1, "identical points => one effective seed");
+    }
+
+    #[test]
+    fn seeding_cost_is_reasonable() {
+        // On a well-separated mixture, seeded cost should be within a
+        // small factor of the true-center cost (A-V: O(log k) expected).
+        let mut rng = Pcg64::seed_from(3);
+        let (data, truth) = gaussian_mixture_with_centers(&mut rng, 500, 6, 5);
+        let set = WeightedSet::unit(data);
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let seeds = seed(&set, 5, Objective::KMeans, &mut rng);
+            best = best.min(cost_of(&set, &seeds, Objective::KMeans));
+        }
+        let opt_ref = cost_of(&set, &truth, Objective::KMeans);
+        assert!(best < 8.0 * opt_ref, "seed cost {best} vs {opt_ref}");
+    }
+
+    #[test]
+    fn zero_weight_points_never_selected_first() {
+        let mut rng = Pcg64::seed_from(4);
+        let data = Dataset::from_flat(vec![0.0, 0.0, 5.0, 5.0], 2);
+        let set = WeightedSet::new(data, vec![0.0, 1.0]);
+        for _ in 0..20 {
+            let seeds = seed(&set, 1, Objective::KMeans, &mut rng);
+            assert_eq!(seeds.row(0), &[5.0, 5.0]);
+        }
+    }
+}

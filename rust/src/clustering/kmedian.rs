@@ -1,0 +1,186 @@
+//! Weighted k-median solver: alternating assignment (backend kernel) and
+//! per-cluster Weiszfeld geometric-median updates.
+//!
+//! Unlike k-means, the 1-cluster optimum has no closed form; Weiszfeld's
+//! iteration converges to the geometric median and each alternation step
+//! does not increase the k-median objective (up to Weiszfeld tolerance),
+//! giving the constant-approximation refinement Algorithm 1 needs.
+
+use super::backend::Backend;
+use super::{cost_of, Objective, Solution};
+use crate::points::{dist2, Dataset, WeightedSet};
+
+/// Weiszfeld iterations for the weighted geometric median of the rows of
+/// `points` selected by `idx`. Starts from the weighted mean; handles the
+/// "iterate lands on a data point" singularity by perturbation-free
+/// stopping (standard practice).
+pub fn geometric_median(
+    points: &Dataset,
+    weights: &[f64],
+    idx: &[usize],
+    iters: usize,
+) -> Vec<f32> {
+    let d = points.d;
+    assert!(!idx.is_empty());
+    // Start at the weighted mean.
+    let mut y = vec![0.0f64; d];
+    let mut wsum = 0.0;
+    for &i in idx {
+        let w = weights[i];
+        wsum += w;
+        for (acc, &x) in y.iter_mut().zip(points.row(i)) {
+            *acc += w * x as f64;
+        }
+    }
+    if wsum <= 0.0 {
+        // Degenerate all-zero weights: plain mean.
+        let inv = 1.0 / idx.len() as f64;
+        let mut m = vec![0.0f64; d];
+        for &i in idx {
+            for (acc, &x) in m.iter_mut().zip(points.row(i)) {
+                *acc += x as f64 * inv;
+            }
+        }
+        return m.iter().map(|&v| v as f32).collect();
+    }
+    for v in y.iter_mut() {
+        *v /= wsum;
+    }
+    let mut yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+    for _ in 0..iters {
+        let mut num = vec![0.0f64; d];
+        let mut den = 0.0f64;
+        let mut hit_point = false;
+        for &i in idx {
+            let w = weights[i];
+            if w == 0.0 {
+                continue;
+            }
+            let dist = dist2(points.row(i), &yf).sqrt();
+            if dist < 1e-9 {
+                hit_point = true;
+                continue;
+            }
+            let coef = w / dist;
+            den += coef;
+            for (acc, &x) in num.iter_mut().zip(points.row(i)) {
+                *acc += coef * x as f64;
+            }
+        }
+        if den <= 0.0 || hit_point {
+            break; // iterate sits on (all) the mass — optimal
+        }
+        let mut moved = 0.0f64;
+        for j in 0..d {
+            let nv = (num[j] / den) as f32;
+            moved += ((nv - yf[j]) as f64).powi(2);
+            yf[j] = nv;
+        }
+        if moved < 1e-12 {
+            break;
+        }
+    }
+    yf
+}
+
+/// Alternating k-median refinement from `init`.
+pub fn run(
+    set: &WeightedSet,
+    init: Dataset,
+    backend: &dyn Backend,
+    max_iters: usize,
+    tol: f64,
+) -> Solution {
+    assert!(init.n() > 0);
+    let mut centers = init;
+    let mut last = f64::INFINITY;
+    for _ in 0..max_iters.max(1) {
+        let asg = backend.assign(&set.points, &set.weights, &centers);
+        let cost: f64 = asg.kmedian_cost.iter().sum();
+        // Gather cluster memberships.
+        let k = centers.n();
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, &c) in asg.assign.iter().enumerate() {
+            members[c as usize].push(i);
+        }
+        let mut next = Dataset::with_capacity(k, set.d());
+        for c in 0..k {
+            if members[c].is_empty() {
+                next.push(centers.row(c));
+            } else {
+                let med = geometric_median(&set.points, &set.weights, &members[c], 30);
+                next.push(&med);
+            }
+        }
+        let improved = last.is_infinite() || (last - cost) > tol * last.max(f64::MIN_POSITIVE);
+        centers = next;
+        last = cost;
+        if !improved {
+            break;
+        }
+    }
+    let final_cost = cost_of(set, &centers, Objective::KMedian);
+    Solution {
+        centers,
+        cost: final_cost,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn median_of_collinear_points_is_middle() {
+        // Geometric median of {0, 1, 10} on a line is the middle point 1
+        // (any point between minimizes? No: for 3 collinear points the
+        // median is the middle one).
+        let pts = Dataset::from_flat(vec![0.0, 1.0, 10.0], 1);
+        let med = geometric_median(&pts, &[1.0, 1.0, 1.0], &[0, 1, 2], 200);
+        assert!((med[0] - 1.0).abs() < 0.05, "median={}", med[0]);
+    }
+
+    #[test]
+    fn median_resists_outlier_unlike_mean() {
+        let pts = Dataset::from_flat(vec![0.0, 0.1, -0.1, 100.0], 1);
+        let med = geometric_median(&pts, &[1.0; 4], &[0, 1, 2, 3], 200);
+        assert!(med[0].abs() < 0.2, "median={} should ignore outlier", med[0]);
+    }
+
+    #[test]
+    fn weighted_median_shifts_with_weight() {
+        let pts = Dataset::from_flat(vec![0.0, 10.0], 1);
+        // All the weight on the second point -> median lands there.
+        let med = geometric_median(&pts, &[0.001, 100.0], &[0, 1], 300);
+        assert!((med[0] - 10.0).abs() < 0.5, "median={}", med[0]);
+    }
+
+    #[test]
+    fn run_improves_over_init() {
+        let mut rng = Pcg64::seed_from(3);
+        let mut pts = Dataset::with_capacity(200, 3);
+        for i in 0..200 {
+            let base = if i % 2 == 0 { -5.0 } else { 5.0 };
+            let p: Vec<f32> = (0..3).map(|_| base + rng.normal() as f32).collect();
+            pts.push(&p);
+        }
+        let set = WeightedSet::unit(pts);
+        let init = Dataset::from_flat(vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0], 3);
+        let init_cost = cost_of(&set, &init, Objective::KMedian);
+        let sol = run(&set, init, &RustBackend, 20, 1e-6);
+        assert!(sol.cost < init_cost, "{} !< {init_cost}", sol.cost);
+        // Both modes found: centers near ±5 diagonal.
+        let c0 = sol.centers.row(0)[0];
+        let c1 = sol.centers.row(1)[0];
+        assert!(c0.signum() != c1.signum(), "centers {c0} {c1}");
+    }
+
+    #[test]
+    fn zero_weight_cluster_falls_back_to_mean() {
+        let pts = Dataset::from_flat(vec![1.0, 3.0], 1);
+        let med = geometric_median(&pts, &[0.0, 0.0], &[0, 1], 10);
+        assert!((med[0] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,133 @@
+//! Weighted Lloyd's algorithm for k-means, driven through a [`Backend`].
+//!
+//! Each iteration is one `lloyd_step` kernel call (assignment +
+//! accumulation — the AOT Pallas artifact on the XLA backend) followed by
+//! the division and empty-cluster repair, which stay in Rust.
+
+use super::backend::Backend;
+use super::Solution;
+use crate::points::{Dataset, WeightedSet};
+
+/// Run weighted Lloyd from `init` until the relative cost improvement
+/// drops below `tol` or `max_iters` is reached. Cost is non-increasing
+/// across iterations (asserted in tests).
+pub fn run(
+    set: &WeightedSet,
+    init: Dataset,
+    backend: &dyn Backend,
+    max_iters: usize,
+    tol: f64,
+) -> Solution {
+    assert!(init.n() > 0, "lloyd with zero centers");
+    let d = set.d();
+    let mut centers = init;
+    let mut last_cost = f64::INFINITY;
+    for _ in 0..max_iters.max(1) {
+        let step = backend.lloyd_step(&set.points, &set.weights, &centers);
+        let k = centers.n();
+        let mut next = Dataset::with_capacity(k, d);
+        for c in 0..k {
+            if step.counts[c] > 0.0 {
+                let row: Vec<f32> = step.sums[c * d..(c + 1) * d]
+                    .iter()
+                    .map(|&s| (s / step.counts[c]) as f32)
+                    .collect();
+                next.push(&row);
+            } else {
+                // Empty cluster: keep the stale center (it can re-acquire
+                // points later; replacing it with a far point would break
+                // the monotonicity the tests pin down).
+                next.push(centers.row(c));
+            }
+        }
+        let improved = last_cost.is_infinite()
+            || (last_cost - step.cost) > tol * last_cost.max(f64::MIN_POSITIVE);
+        centers = next;
+        last_cost = step.cost;
+        if !improved {
+            break;
+        }
+    }
+    // Final cost of the *final* centers.
+    let final_cost = backend
+        .assign(&set.points, &set.weights, &centers)
+        .kmeans_cost
+        .iter()
+        .sum();
+    Solution {
+        centers,
+        cost: final_cost,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::clustering::{cost_of, kmeanspp, Objective};
+    use crate::data::synthetic::gaussian_mixture_with_centers;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn cost_non_increasing() {
+        let mut rng = Pcg64::seed_from(1);
+        let (data, _) = gaussian_mixture_with_centers(&mut rng, 200, 5, 4);
+        let set = WeightedSet::unit(data);
+        let backend = RustBackend;
+        let mut centers = kmeanspp::seed(&set, 4, Objective::KMeans, &mut rng);
+        let mut prev = f64::INFINITY;
+        for _ in 0..10 {
+            let sol = run(&set, centers.clone(), &backend, 1, 0.0);
+            assert!(
+                sol.cost <= prev + 1e-6,
+                "cost increased: {} -> {}",
+                prev,
+                sol.cost
+            );
+            prev = sol.cost;
+            centers = sol.centers;
+        }
+    }
+
+    #[test]
+    fn improves_over_seeding() {
+        let mut rng = Pcg64::seed_from(2);
+        let (data, _) = gaussian_mixture_with_centers(&mut rng, 300, 6, 5);
+        let set = WeightedSet::unit(data);
+        let seeds = kmeanspp::seed(&set, 5, Objective::KMeans, &mut rng);
+        let seed_cost = cost_of(&set, &seeds, Objective::KMeans);
+        let sol = run(&set, seeds, &RustBackend, 50, 1e-6);
+        assert!(sol.cost <= seed_cost + 1e-9);
+    }
+
+    #[test]
+    fn exact_on_trivial_instance() {
+        // Two points, two centers: Lloyd must land centers on points.
+        let data = Dataset::from_flat(vec![0.0, 0.0, 10.0, 0.0], 2);
+        let set = WeightedSet::unit(data);
+        let init = Dataset::from_flat(vec![1.0, 0.0, 9.0, 0.0], 2);
+        let sol = run(&set, init, &RustBackend, 10, 0.0);
+        assert!(sol.cost < 1e-12);
+    }
+
+    #[test]
+    fn respects_weights() {
+        // One center, two points with weights 3:1 -> weighted mean.
+        let data = Dataset::from_flat(vec![0.0, 4.0], 1);
+        let set = WeightedSet::new(data, vec![3.0, 1.0]);
+        let init = Dataset::from_flat(vec![2.0], 1);
+        let sol = run(&set, init, &RustBackend, 5, 0.0);
+        assert!((sol.centers.row(0)[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_center() {
+        let data = Dataset::from_flat(vec![0.0, 1.0], 1);
+        let set = WeightedSet::unit(data);
+        // Third center far away acquires nothing.
+        let init = Dataset::from_flat(vec![0.0, 1.0, 100.0], 1);
+        let sol = run(&set, init, &RustBackend, 3, 0.0);
+        assert_eq!(sol.centers.n(), 3);
+        assert!((sol.centers.row(2)[0] - 100.0).abs() < 1e-6);
+    }
+}

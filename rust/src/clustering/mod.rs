@@ -1,0 +1,151 @@
+//! Center-based clustering: objectives, constant-factor approximation
+//! solvers and the kernel-backend abstraction.
+//!
+//! Algorithm 1 needs a *constant approximation* solver for each local
+//! dataset (Round 1) and Algorithm 2 needs an `alpha`-approximation for
+//! the weighted coreset; both are provided here. The compute hot spots
+//! (assignment + weighted Lloyd accumulation) go through the [`backend`]
+//! trait so they run either on the pure-Rust kernels or on the AOT
+//! Pallas/XLA artifacts loaded by [`crate::runtime`].
+
+pub mod backend;
+pub mod kmeanspp;
+pub mod kmedian;
+pub mod lines;
+pub mod lloyd;
+pub mod local_search;
+pub mod scalable_kmeanspp;
+
+use crate::points::{dist2, Dataset, WeightedSet};
+use crate::rng::Pcg64;
+use backend::Backend;
+
+/// Which center-based objective is being optimized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Sum of weighted squared distances.
+    KMeans,
+    /// Sum of weighted distances.
+    KMedian,
+}
+
+impl Objective {
+    /// Per-point cost of a squared distance under this objective.
+    #[inline]
+    pub fn of_dist2(self, d2: f64) -> f64 {
+        match self {
+            Objective::KMeans => d2,
+            Objective::KMedian => d2.sqrt(),
+        }
+    }
+
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::KMeans => "kmeans",
+            Objective::KMedian => "kmedian",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s {
+            "kmeans" => Some(Objective::KMeans),
+            "kmedian" => Some(Objective::KMedian),
+            _ => None,
+        }
+    }
+}
+
+/// A clustering solution: centers plus its cost on the clustered set.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// The k centers.
+    pub centers: Dataset,
+    /// Objective value on the set it was computed for.
+    pub cost: f64,
+}
+
+/// Exact weighted cost of `centers` on `set` (straight O(n k d) scan;
+/// use a [`Backend`] for the hot path).
+pub fn cost_of(set: &WeightedSet, centers: &Dataset, obj: Objective) -> f64 {
+    let mut total = 0.0;
+    for i in 0..set.n() {
+        let p = set.points.row(i);
+        let best = (0..centers.n())
+            .map(|c| dist2(p, centers.row(c)))
+            .fold(f64::INFINITY, f64::min);
+        total += set.weights[i] * obj.of_dist2(best);
+    }
+    total
+}
+
+/// Constant-factor approximation used throughout: k-means++ / k-median++
+/// seeding followed by backend-driven refinement (weighted Lloyd for
+/// k-means, alternating Weiszfeld medians for k-median).
+///
+/// Seeding alone is already `O(log k)`-approximate in expectation
+/// (Arthur–Vassilvitskii), and the refinement only decreases cost, so the
+/// result serves as the `B_i` / `A_alpha` of Algorithms 1–2.
+pub fn approx_solution(
+    set: &WeightedSet,
+    k: usize,
+    obj: Objective,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    max_iters: usize,
+) -> Solution {
+    assert!(set.n() > 0, "approx_solution on empty set");
+    let seeds = kmeanspp::seed(set, k, obj, rng);
+    match obj {
+        Objective::KMeans => lloyd::run(set, seeds, backend, max_iters, 1e-4),
+        Objective::KMedian => kmedian::run(set, seeds, backend, max_iters, 1e-4),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::data::synthetic::gaussian_mixture_with_centers;
+
+    #[test]
+    fn objective_maps_dist2() {
+        assert_eq!(Objective::KMeans.of_dist2(9.0), 9.0);
+        assert_eq!(Objective::KMedian.of_dist2(9.0), 3.0);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for o in [Objective::KMeans, Objective::KMedian] {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert!(Objective::parse("x").is_none());
+    }
+
+    #[test]
+    fn approx_solution_near_true_centers() {
+        let mut rng = Pcg64::seed_from(1);
+        let (data, true_centers) = gaussian_mixture_with_centers(&mut rng, 300, 4, 3);
+        let set = WeightedSet::unit(data);
+        let backend = RustBackend::default();
+        let sol = approx_solution(&set, 3, Objective::KMeans, &backend, &mut rng, 30);
+        let opt_ref = cost_of(&set, &true_centers, Objective::KMeans);
+        assert!(
+            sol.cost <= 2.0 * opt_ref,
+            "cost {} vs true-center cost {opt_ref}",
+            sol.cost
+        );
+    }
+
+    #[test]
+    fn approx_solution_kmedian_reasonable() {
+        let mut rng = Pcg64::seed_from(2);
+        let (data, true_centers) = gaussian_mixture_with_centers(&mut rng, 200, 4, 3);
+        let set = WeightedSet::unit(data);
+        let backend = RustBackend::default();
+        let sol = approx_solution(&set, 3, Objective::KMedian, &backend, &mut rng, 30);
+        let opt_ref = cost_of(&set, &true_centers, Objective::KMedian);
+        assert!(sol.cost <= 2.0 * opt_ref, "{} vs {opt_ref}", sol.cost);
+    }
+}

@@ -1,0 +1,158 @@
+//! Scalable k-means++ ("k-means‖", Bahmani et al., VLDB 2012 — the
+//! paper's reference \[4\] and the source of its experimental setup).
+//!
+//! Instead of k strictly-sequential D²-samples, k-means‖ runs a few
+//! *rounds*, each oversampling `ell ≈ O(k)` candidates in parallel
+//! proportional to current cost, then reduces the O(k·rounds) candidates
+//! to k by weighted clustering. In the distributed setting each round is
+//! one broadcast, making it the natural seeding when a site's local data
+//! is itself distributed; here it doubles as an ablation for how
+//! sensitive Algorithm 1 is to the local-solver seeding (bench
+//! `coreset_construction`).
+
+use super::backend::Backend;
+use super::{kmeanspp, Objective};
+use crate::points::{dist2, Dataset, WeightedSet};
+use crate::rng::Pcg64;
+
+/// Configuration for k-means‖ seeding.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeansParConfig {
+    /// Oversampling factor per round (Bahmani et al. recommend ~2k).
+    pub ell: usize,
+    /// Number of rounds (≈5 suffices per the paper's experiments).
+    pub rounds: usize,
+}
+
+impl KMeansParConfig {
+    /// Defaults for a given k.
+    pub fn for_k(k: usize) -> Self {
+        KMeansParConfig {
+            ell: 2 * k,
+            rounds: 5,
+        }
+    }
+}
+
+/// Run k-means‖: returns exactly `min(k, candidates)` centers.
+pub fn seed(
+    set: &WeightedSet,
+    k: usize,
+    cfg: &KMeansParConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> Dataset {
+    let n = set.n();
+    assert!(n > 0 && k > 0);
+    let d = set.d();
+
+    // Start from one weighted-uniform point.
+    let sel: Vec<f64> = set.weights.iter().map(|w| w.max(0.0)).collect();
+    let first = if sel.iter().sum::<f64>() > 0.0 {
+        rng.weighted_index(&sel)
+    } else {
+        rng.below(n)
+    };
+    let mut candidates = Dataset::with_capacity(cfg.ell * cfg.rounds + 1, d);
+    candidates.push(set.points.row(first));
+
+    // min distance² to candidate set, updated incrementally per round.
+    let mut min_d2: Vec<f64> = (0..n)
+        .map(|i| set.points.dist2_to(i, candidates.row(0)))
+        .collect();
+
+    for _ in 0..cfg.rounds {
+        let total: f64 = min_d2
+            .iter()
+            .zip(&set.weights)
+            .map(|(&m, &w)| w.max(0.0) * m)
+            .sum();
+        if total <= 0.0 {
+            break;
+        }
+        // Oversample: include point i independently with probability
+        // min(1, ell * w_i * d_i^2 / total).
+        let mut new_pts: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let p = cfg.ell as f64 * set.weights[i].max(0.0) * min_d2[i] / total;
+            if rng.uniform() < p {
+                new_pts.push(i);
+            }
+        }
+        for &i in &new_pts {
+            candidates.push(set.points.row(i));
+        }
+        // Update min distances against the new candidates only.
+        for i in 0..n {
+            for &j in &new_pts {
+                let d2 = dist2(set.points.row(i), set.points.row(j));
+                if d2 < min_d2[i] {
+                    min_d2[i] = d2;
+                }
+            }
+        }
+    }
+
+    if candidates.n() <= k {
+        return candidates;
+    }
+    // Reduce: weight each candidate by the mass it attracts, then run
+    // weighted k-means++ + one Lloyd pass on the candidate set.
+    let asg = backend.assign(&set.points, &set.weights, &candidates);
+    let mut cand_w = vec![0.0f64; candidates.n()];
+    for (i, &c) in asg.assign.iter().enumerate() {
+        cand_w[c as usize] += set.weights[i].max(0.0);
+    }
+    let weighted_cands = WeightedSet::new(candidates, cand_w);
+    let init = kmeanspp::seed(&weighted_cands, k, Objective::KMeans, rng);
+    super::lloyd::run(&weighted_cands, init, backend, 10, 1e-4).centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::clustering::cost_of;
+    use crate::data::synthetic::gaussian_mixture_with_centers;
+
+    #[test]
+    fn returns_k_centers() {
+        let mut rng = Pcg64::seed_from(1);
+        let (data, _) = gaussian_mixture_with_centers(&mut rng, 400, 6, 5);
+        let set = WeightedSet::unit(data);
+        let seeds = seed(&set, 5, &KMeansParConfig::for_k(5), &RustBackend, &mut rng);
+        assert_eq!(seeds.n(), 5);
+    }
+
+    #[test]
+    fn quality_comparable_to_sequential_kmeanspp() {
+        let mut rng = Pcg64::seed_from(2);
+        let (data, truth) = gaussian_mixture_with_centers(&mut rng, 600, 8, 6);
+        let set = WeightedSet::unit(data);
+        let opt_ref = cost_of(&set, &truth, Objective::KMeans);
+        let par = seed(&set, 6, &KMeansParConfig::for_k(6), &RustBackend, &mut rng);
+        let cost_par = cost_of(&set, &par, Objective::KMeans);
+        assert!(
+            cost_par < 5.0 * opt_ref,
+            "kmeans|| cost {cost_par} vs reference {opt_ref}"
+        );
+    }
+
+    #[test]
+    fn tiny_sets_degenerate_gracefully() {
+        let mut rng = Pcg64::seed_from(3);
+        let data = Dataset::from_flat(vec![0.0, 1.0, 2.0], 1);
+        let set = WeightedSet::unit(data);
+        let seeds = seed(&set, 5, &KMeansParConfig::for_k(5), &RustBackend, &mut rng);
+        assert!(seeds.n() >= 1 && seeds.n() <= 5);
+    }
+
+    #[test]
+    fn duplicate_points_stop_early() {
+        let mut rng = Pcg64::seed_from(4);
+        let data = Dataset::from_flat(vec![3.0, 3.0].repeat(20), 2);
+        let set = WeightedSet::unit(data);
+        let seeds = seed(&set, 4, &KMeansParConfig::for_k(4), &RustBackend, &mut rng);
+        assert_eq!(seeds.n(), 1);
+    }
+}

@@ -1,0 +1,293 @@
+//! Experiment configuration: typed specs plus a small `key = value`
+//! config-file format (the offline crate set has no serde/toml; the
+//! format is a strict TOML subset — flat keys, strings, numbers, and
+//! `#` comments — documented in README §Configuration).
+
+use crate::clustering::Objective;
+use crate::partition::Scheme;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Which topology to generate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TopologySpec {
+    /// Erdős–Rényi `G(n, p)` conditioned on connectivity.
+    Random {
+        /// Node count.
+        n: usize,
+        /// Edge probability.
+        p: f64,
+    },
+    /// `rows x cols` grid.
+    Grid {
+        /// Rows.
+        rows: usize,
+        /// Cols.
+        cols: usize,
+    },
+    /// Barabási–Albert with `m_attach` edges per arrival.
+    Preferential {
+        /// Node count.
+        n: usize,
+        /// Edges per arriving node.
+        m_attach: usize,
+    },
+    /// Star with a central coordinator.
+    Star {
+        /// Node count.
+        n: usize,
+    },
+}
+
+impl TopologySpec {
+    /// Number of sites this topology hosts.
+    pub fn sites(&self) -> usize {
+        match *self {
+            TopologySpec::Random { n, .. }
+            | TopologySpec::Preferential { n, .. }
+            | TopologySpec::Star { n } => n,
+            TopologySpec::Grid { rows, cols } => rows * cols,
+        }
+    }
+
+    /// Instantiate the graph.
+    pub fn build(&self, rng: &mut crate::rng::Pcg64) -> crate::topology::Graph {
+        use crate::topology::generators as g;
+        match *self {
+            TopologySpec::Random { n, p } => g::erdos_renyi_connected(rng, n, p),
+            TopologySpec::Grid { rows, cols } => g::grid(rows, cols),
+            TopologySpec::Preferential { n, m_attach } => {
+                g::preferential_attachment(rng, n, m_attach)
+            }
+            TopologySpec::Star { n } => g::star(n),
+        }
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologySpec::Random { .. } => "random",
+            TopologySpec::Grid { .. } => "grid",
+            TopologySpec::Preferential { .. } => "preferential",
+            TopologySpec::Star { .. } => "star",
+        }
+    }
+}
+
+/// Which algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's Algorithm 1+2 (flooding on the graph).
+    Distributed,
+    /// The paper's algorithm over a BFS spanning tree (Theorem 3).
+    DistributedTree,
+    /// COMBINE baseline on the graph.
+    Combine,
+    /// COMBINE baseline on a spanning tree.
+    CombineTree,
+    /// Zhang et al. on a spanning tree.
+    ZhangTree,
+}
+
+impl Algorithm {
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Distributed => "distributed",
+            Algorithm::DistributedTree => "distributed-tree",
+            Algorithm::Combine => "combine",
+            Algorithm::CombineTree => "combine-tree",
+            Algorithm::ZhangTree => "zhang-tree",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Some(match s {
+            "distributed" => Algorithm::Distributed,
+            "distributed-tree" => Algorithm::DistributedTree,
+            "combine" => Algorithm::Combine,
+            "combine-tree" => Algorithm::CombineTree,
+            "zhang-tree" => Algorithm::ZhangTree,
+            _ => return None,
+        })
+    }
+}
+
+/// A complete experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    /// Dataset name (see [`crate::data::SPECS`]) or `csv:<path>`.
+    pub dataset: String,
+    /// Subsample factor (1.0 = full size).
+    pub scale: f64,
+    /// Topology.
+    pub topology: TopologySpec,
+    /// Partition scheme.
+    pub partition: Scheme,
+    /// Algorithm under test.
+    pub algorithm: Algorithm,
+    /// Clustering k (defaults to the dataset spec's k).
+    pub k: usize,
+    /// Global sampled-point budget t.
+    pub t: usize,
+    /// Objective.
+    pub objective: Objective,
+    /// Repetitions (paper: 10).
+    pub reps: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        ExperimentSpec {
+            dataset: "synthetic".into(),
+            scale: 1.0,
+            topology: TopologySpec::Random { n: 25, p: 0.3 },
+            partition: Scheme::Uniform,
+            algorithm: Algorithm::Distributed,
+            k: 5,
+            t: 1_000,
+            objective: Objective::KMeans,
+            reps: 10,
+            seed: 1,
+        }
+    }
+}
+
+/// Parse the flat `key = value` config format.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let v = v.trim().trim_matches('"');
+        out.insert(k.trim().to_string(), v.to_string());
+    }
+    Ok(out)
+}
+
+impl ExperimentSpec {
+    /// Build a spec from parsed `key = value` pairs (unknown keys are an
+    /// error — typos should not silently become defaults).
+    pub fn from_kv(kv: &BTreeMap<String, String>) -> Result<ExperimentSpec> {
+        let mut spec = ExperimentSpec::default();
+        let mut topo_kind = "random".to_string();
+        let (mut n, mut p, mut rows, mut cols, mut m_attach) = (25usize, 0.3f64, 5, 5, 2usize);
+        for (k, v) in kv {
+            match k.as_str() {
+                "dataset" => spec.dataset = v.clone(),
+                "scale" => spec.scale = v.parse()?,
+                "topology" => topo_kind = v.clone(),
+                "sites" | "n" => n = v.parse()?,
+                "p" => p = v.parse()?,
+                "rows" => rows = v.parse()?,
+                "cols" => cols = v.parse()?,
+                "m_attach" => m_attach = v.parse()?,
+                "partition" => {
+                    spec.partition = Scheme::parse(v)
+                        .ok_or_else(|| anyhow!("unknown partition '{v}'"))?
+                }
+                "algorithm" => {
+                    spec.algorithm = Algorithm::parse(v)
+                        .ok_or_else(|| anyhow!("unknown algorithm '{v}'"))?
+                }
+                "k" => spec.k = v.parse()?,
+                "t" => spec.t = v.parse()?,
+                "objective" => {
+                    spec.objective = Objective::parse(v)
+                        .ok_or_else(|| anyhow!("unknown objective '{v}'"))?
+                }
+                "reps" => spec.reps = v.parse()?,
+                "seed" => spec.seed = v.parse()?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        spec.topology = match topo_kind.as_str() {
+            "random" => TopologySpec::Random { n, p },
+            "grid" => TopologySpec::Grid { rows, cols },
+            "preferential" => TopologySpec::Preferential { n, m_attach },
+            "star" => TopologySpec::Star { n },
+            other => bail!("unknown topology '{other}'"),
+        };
+        // Default k from the dataset spec when present and not overridden.
+        if !kv.contains_key("k") {
+            if let Some(ds) = crate::data::by_name(&spec.dataset) {
+                spec.k = ds.k;
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Parse a config file's text.
+    pub fn from_config(text: &str) -> Result<ExperimentSpec> {
+        Self::from_kv(&parse_kv(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_parsing_with_comments() {
+        let kv = parse_kv("a = 1 # comment\n# whole line\nb = \"x\"\n").unwrap();
+        assert_eq!(kv["a"], "1");
+        assert_eq!(kv["b"], "x");
+        assert!(parse_kv("novalue\n").is_err());
+    }
+
+    #[test]
+    fn spec_from_config() {
+        let spec = ExperimentSpec::from_config(
+            "dataset = pendigits\ntopology = grid\nrows = 3\ncols = 3\npartition = weighted\nalgorithm = combine\nt = 500\nreps = 3\n",
+        )
+        .unwrap();
+        assert_eq!(spec.dataset, "pendigits");
+        assert_eq!(spec.topology, TopologySpec::Grid { rows: 3, cols: 3 });
+        assert_eq!(spec.partition, Scheme::Weighted);
+        assert_eq!(spec.algorithm, Algorithm::Combine);
+        assert_eq!(spec.k, 10, "k defaults from dataset spec");
+    }
+
+    #[test]
+    fn spec_rejects_unknown_keys() {
+        assert!(ExperimentSpec::from_config("bogus = 1\n").is_err());
+        assert!(ExperimentSpec::from_config("topology = hexagon\n").is_err());
+        assert!(ExperimentSpec::from_config("algorithm = magic\n").is_err());
+    }
+
+    #[test]
+    fn topology_spec_builds() {
+        let mut rng = crate::rng::Pcg64::seed_from(1);
+        for spec in [
+            TopologySpec::Random { n: 10, p: 0.4 },
+            TopologySpec::Grid { rows: 3, cols: 4 },
+            TopologySpec::Preferential { n: 10, m_attach: 2 },
+            TopologySpec::Star { n: 6 },
+        ] {
+            let g = spec.build(&mut rng);
+            assert_eq!(g.n(), spec.sites());
+            assert!(crate::topology::connected(&g));
+        }
+    }
+
+    #[test]
+    fn algorithm_names_round_trip() {
+        for a in [
+            Algorithm::Distributed,
+            Algorithm::DistributedTree,
+            Algorithm::Combine,
+            Algorithm::CombineTree,
+            Algorithm::ZhangTree,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+    }
+}

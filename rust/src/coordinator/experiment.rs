@@ -1,0 +1,326 @@
+//! The experiment driver behind the CLI, the figure harness and the
+//! benches.
+
+use crate::clustering::backend::Backend;
+use crate::clustering::{approx_solution, cost_of, Objective};
+use crate::config::{Algorithm, ExperimentSpec};
+use crate::coreset::combine::CombineConfig;
+use crate::coreset::zhang::ZhangConfig;
+use crate::coreset::DistributedConfig;
+use crate::metrics::Summary;
+use crate::points::{Dataset, WeightedSet};
+use crate::protocol::{self, RunResult};
+use crate::rng::Pcg64;
+use crate::topology::SpanningTree;
+use anyhow::{anyhow, Result};
+
+/// Quality of one run, measured as the paper does: cluster the coreset
+/// and the global data separately, evaluate both solutions on the global
+/// data, report the ratio.
+#[derive(Clone, Copy, Debug)]
+pub struct RunQuality {
+    /// cost(P, x_coreset) / cost(P, x_global).
+    pub cost_ratio: f64,
+    /// cost(P, x_coreset) on the global data.
+    pub coreset_solution_cost: f64,
+    /// cost(P, x_global) — the denominator baseline.
+    pub baseline_cost: f64,
+}
+
+/// Aggregated result over `reps` seeds.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    /// The spec that produced this.
+    pub label: String,
+    /// Summary of cost ratios across repetitions.
+    pub ratio: Summary,
+    /// Summary of measured communication (points).
+    pub comm: Summary,
+    /// Summary of coreset sizes.
+    pub coreset_size: Summary,
+    /// Mean wall-clock seconds per repetition.
+    pub secs_per_rep: f64,
+}
+
+/// Load or generate the dataset for a spec.
+pub fn load_dataset(spec: &ExperimentSpec, rng: &mut Pcg64) -> Result<Dataset> {
+    if let Some(path) = spec.dataset.strip_prefix("csv:") {
+        return crate::data::csv::load(std::path::Path::new(path), None);
+    }
+    let ds = crate::data::by_name(&spec.dataset)
+        .ok_or_else(|| anyhow!("unknown dataset '{}'", spec.dataset))?;
+    Ok(ds.generate(rng, spec.scale))
+}
+
+/// Evaluate a solution against the global-clustering baseline.
+///
+/// `baseline_cost` can be precomputed (it does not depend on the
+/// algorithm under test) and passed in to avoid re-solving.
+pub fn evaluate_quality(
+    global: &WeightedSet,
+    run: &RunResult,
+    objective: Objective,
+    baseline_cost: f64,
+) -> RunQuality {
+    let sol_cost = cost_of(global, &run.centers, objective);
+    RunQuality {
+        cost_ratio: sol_cost / baseline_cost,
+        coreset_solution_cost: sol_cost,
+        baseline_cost,
+    }
+}
+
+/// One repetition: build topology, partition, run the algorithm.
+pub fn run_once(
+    spec: &ExperimentSpec,
+    data: &Dataset,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> Result<RunResult> {
+    let graph = spec.topology.build(rng);
+    let locals: Vec<WeightedSet> = spec
+        .partition
+        .partition_on(data, &graph, rng)
+        .into_iter()
+        .map(WeightedSet::unit)
+        .collect();
+    // Empty sites are legal for the protocols but not for local solves;
+    // give each empty site one copy of another site's first point with
+    // weight ~0 (cost-neutral, keeps Round 1 well-defined).
+    let locals = patch_empty_sites(locals);
+
+    match spec.algorithm {
+        Algorithm::Distributed => {
+            let cfg = DistributedConfig {
+                t: spec.t,
+                k: spec.k,
+                objective: spec.objective,
+                ..Default::default()
+            };
+            protocol::cluster_on_graph(&graph, &locals, &cfg, backend, rng)
+        }
+        Algorithm::DistributedTree => {
+            let tree = SpanningTree::random_root(&graph, rng);
+            let cfg = DistributedConfig {
+                t: spec.t,
+                k: spec.k,
+                objective: spec.objective,
+                ..Default::default()
+            };
+            protocol::cluster_on_tree(&tree, &locals, &cfg, backend, rng)
+        }
+        Algorithm::Combine => {
+            let cfg = CombineConfig {
+                t: spec.t,
+                k: spec.k,
+                objective: spec.objective,
+            };
+            protocol::combine_on_graph(&graph, &locals, &cfg, backend, rng)
+        }
+        Algorithm::CombineTree => {
+            let tree = SpanningTree::random_root(&graph, rng);
+            let cfg = CombineConfig {
+                t: spec.t,
+                k: spec.k,
+                objective: spec.objective,
+            };
+            protocol::combine_on_tree(&tree, &locals, &cfg, backend, rng)
+        }
+        Algorithm::ZhangTree => {
+            let tree = SpanningTree::random_root(&graph, rng);
+            // Same *total* sampled budget as the other algorithms:
+            // (n-1) node summaries cross one edge each.
+            let t_node = (spec.t / graph.n().max(1)).max(1);
+            let cfg = ZhangConfig {
+                t_node,
+                k: spec.k,
+                objective: spec.objective,
+            };
+            protocol::zhang_on_tree(&tree, &locals, &cfg, backend, rng)
+        }
+    }
+}
+
+fn patch_empty_sites(mut locals: Vec<WeightedSet>) -> Vec<WeightedSet> {
+    let donor = locals
+        .iter()
+        .find(|s| s.n() > 0)
+        .map(|s| s.points.row(0).to_vec());
+    if let Some(donor) = donor {
+        for site in locals.iter_mut() {
+            if site.n() == 0 {
+                site.push(&donor, 1e-12);
+            }
+        }
+    }
+    locals
+}
+
+/// A reusable experiment session: pins the dataset (generated once from
+/// `(dataset, scale, seed)`) and caches the per-repetition *baseline*
+/// solution — the global-data clustering that every algorithm × budget
+/// cell of a figure shares. Sweeping a 2-algorithm × 5-budget panel
+/// reuses one baseline per rep instead of solving it 10 times.
+pub struct Session {
+    dataset: String,
+    scale: f64,
+    seed: u64,
+    /// The generated/loaded global dataset.
+    pub data: Dataset,
+    /// The same data as a unit-weight set.
+    pub global: WeightedSet,
+    baselines: std::collections::HashMap<(u64, &'static str, usize), f64>,
+}
+
+impl Session {
+    /// Generate (or load) the dataset for `(dataset, scale, seed)`.
+    pub fn new(spec: &ExperimentSpec) -> Result<Session> {
+        let mut data_rng = Pcg64::seed_from(spec.seed);
+        let data = load_dataset(spec, &mut data_rng)?;
+        let global = WeightedSet::unit(data.clone());
+        Ok(Session {
+            dataset: spec.dataset.clone(),
+            scale: spec.scale,
+            seed: spec.seed,
+            data,
+            global,
+            baselines: Default::default(),
+        })
+    }
+
+    /// Baseline cost for one repetition seed (cached).
+    fn baseline_cost(
+        &mut self,
+        rep_seed: u64,
+        k: usize,
+        objective: Objective,
+        backend: &dyn Backend,
+    ) -> f64 {
+        let key = (rep_seed, objective.name(), k);
+        if let Some(&c) = self.baselines.get(&key) {
+            return c;
+        }
+        let mut rng = Pcg64::seed_from(rep_seed);
+        let sol = approx_solution(&self.global, k, objective, backend, &mut rng, 40);
+        self.baselines.insert(key, sol.cost);
+        sol.cost
+    }
+
+    /// Run one experiment against this session's dataset.
+    ///
+    /// Panics if the spec's dataset identity differs from the session's.
+    pub fn run(&mut self, spec: &ExperimentSpec, backend: &dyn Backend) -> Result<ExperimentResult> {
+        assert!(
+            spec.dataset == self.dataset && spec.scale == self.scale && spec.seed == self.seed,
+            "spec does not match session dataset"
+        );
+        let mut ratios = Vec::with_capacity(spec.reps);
+        let mut comms = Vec::with_capacity(spec.reps);
+        let mut sizes = Vec::with_capacity(spec.reps);
+        let sw = crate::metrics::Stopwatch::start();
+        for rep in 0..spec.reps {
+            let rep_seed = spec.seed.wrapping_add(1_000_003 * (rep as u64 + 1));
+            let baseline = self.baseline_cost(rep_seed, spec.k, spec.objective, backend);
+            let mut rng = Pcg64::seed_from(rep_seed);
+            // Keep RNG streams aligned with the pre-Session behaviour:
+            // the baseline solve used to consume from this stream first.
+            let run = run_once(spec, &self.data, backend, &mut rng)?;
+            let q = evaluate_quality(&self.global, &run, spec.objective, baseline);
+            ratios.push(q.cost_ratio);
+            comms.push(run.comm_points as f64);
+            sizes.push(run.coreset.size() as f64);
+        }
+        Ok(ExperimentResult {
+            label: format!(
+                "{}/{}-{}/{}",
+                spec.dataset,
+                spec.topology.name(),
+                spec.partition.name(),
+                spec.algorithm.name()
+            ),
+            ratio: Summary::of(&ratios),
+            comm: Summary::of(&comms),
+            coreset_size: Summary::of(&sizes),
+            secs_per_rep: sw.secs() / spec.reps as f64,
+        })
+    }
+}
+
+/// Run the full experiment standalone (one-shot [`Session`]): `reps`
+/// repetitions with derived seeds, the paper's quality metric per
+/// repetition, aggregate summaries.
+pub fn run_experiment(
+    spec: &ExperimentSpec,
+    backend: &dyn Backend,
+) -> Result<ExperimentResult> {
+    Session::new(spec)?.run(spec, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::config::TopologySpec;
+    use crate::partition::Scheme;
+
+    fn small_spec(algorithm: Algorithm) -> ExperimentSpec {
+        ExperimentSpec {
+            dataset: "synthetic".into(),
+            scale: 0.02, // 2k points
+            topology: TopologySpec::Random { n: 6, p: 0.4 },
+            partition: Scheme::Weighted,
+            algorithm,
+            k: 5,
+            t: 300,
+            objective: Objective::KMeans,
+            reps: 2,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn run_experiment_all_algorithms() {
+        for alg in [
+            Algorithm::Distributed,
+            Algorithm::DistributedTree,
+            Algorithm::Combine,
+            Algorithm::CombineTree,
+            Algorithm::ZhangTree,
+        ] {
+            let res = run_experiment(&small_spec(alg), &RustBackend).unwrap();
+            assert!(
+                res.ratio.mean > 0.85 && res.ratio.mean < 2.0,
+                "{alg:?}: ratio {}",
+                res.ratio.mean
+            );
+            assert!(res.comm.mean > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = small_spec(Algorithm::Distributed);
+        let a = run_experiment(&spec, &RustBackend).unwrap();
+        let b = run_experiment(&spec, &RustBackend).unwrap();
+        assert_eq!(a.ratio.mean, b.ratio.mean);
+        assert_eq!(a.comm.mean, b.comm.mean);
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        let mut spec = small_spec(Algorithm::Combine);
+        spec.dataset = "nope".into();
+        assert!(run_experiment(&spec, &RustBackend).is_err());
+    }
+
+    #[test]
+    fn empty_site_patching() {
+        let locals = vec![
+            WeightedSet::unit(Dataset::from_flat(vec![1.0, 2.0], 2)),
+            WeightedSet::empty(2),
+        ];
+        let patched = patch_empty_sites(locals);
+        assert_eq!(patched[1].n(), 1);
+        assert!(patched[1].weights[0] < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment orchestration: generate data → build topology → partition
+//! → run the selected distributed algorithm → evaluate solution quality
+//! on the *global* data, exactly as §5 of the paper measures it.
+
+mod experiment;
+mod report;
+pub mod streaming;
+
+pub use experiment::{
+    evaluate_quality, load_dataset, run_experiment, run_once, ExperimentResult, RunQuality,
+    Session,
+};
+pub use report::{render_report, series_json};

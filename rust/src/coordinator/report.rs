@@ -1,0 +1,83 @@
+//! Report rendering: markdown tables for the terminal and JSON series
+//! for downstream plotting.
+
+use super::ExperimentResult;
+use crate::json::{build, Value};
+use crate::metrics::Table;
+
+/// Render a set of experiment results as a markdown table.
+pub fn render_report(results: &[ExperimentResult]) -> String {
+    let mut t = Table::new(&[
+        "experiment",
+        "ratio(mean)",
+        "ratio(std)",
+        "comm(points)",
+        "coreset",
+        "s/rep",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.label.clone(),
+            format!("{:.4}", r.ratio.mean),
+            format!("{:.4}", r.ratio.std),
+            format!("{:.0}", r.comm.mean),
+            format!("{:.0}", r.coreset_size.mean),
+            format!("{:.2}", r.secs_per_rep),
+        ]);
+    }
+    t.render()
+}
+
+/// Encode results as a JSON array (one object per experiment) for the
+/// figure-series files written by the harness.
+pub fn series_json(results: &[ExperimentResult]) -> Value {
+    build::arr(
+        results
+            .iter()
+            .map(|r| {
+                build::obj(vec![
+                    ("experiment", build::s(r.label.clone())),
+                    ("ratio_mean", build::num(r.ratio.mean)),
+                    ("ratio_std", build::num(r.ratio.std)),
+                    ("comm_points", build::num(r.comm.mean)),
+                    ("coreset_size", build::num(r.coreset_size.mean)),
+                    ("reps", build::num(r.ratio.n as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Summary;
+
+    fn fake(label: &str) -> ExperimentResult {
+        ExperimentResult {
+            label: label.into(),
+            ratio: Summary::of(&[1.05, 1.10]),
+            comm: Summary::of(&[5_000.0]),
+            coreset_size: Summary::of(&[520.0]),
+            secs_per_rep: 0.5,
+        }
+    }
+
+    #[test]
+    fn report_contains_rows() {
+        let out = render_report(&[fake("a/b-c/d"), fake("x/y-z/w")]);
+        assert!(out.contains("a/b-c/d"));
+        assert!(out.contains("1.0750"));
+        assert_eq!(out.lines().count(), 4);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let v = series_json(&[fake("exp")]);
+        let text = v.to_string();
+        let parsed = crate::json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr[0].get("experiment").unwrap().as_str(), Some("exp"));
+        assert_eq!(arr[0].get("reps").unwrap().as_usize(), Some(2));
+    }
+}

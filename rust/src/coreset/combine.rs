@@ -1,0 +1,104 @@
+//! COMBINE baseline: every site builds a *local* FL11 coreset with an
+//! equal share of the budget and the global coreset is their union.
+//!
+//! This is the natural approach the paper compares against in every
+//! figure: correct (a union of ε-coresets is an ε-coreset of the union)
+//! but budget-blind — a site with near-zero local cost receives the same
+//! sample budget as a site carrying most of the global cost, which is
+//! exactly where Algorithm 1 wins (weighted / degree partitions).
+
+use super::fl11::{self, Fl11Config};
+use super::Coreset;
+use crate::clustering::backend::Backend;
+use crate::clustering::Objective;
+use crate::points::WeightedSet;
+use crate::rng::Pcg64;
+
+/// Configuration for the COMBINE baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct CombineConfig {
+    /// Global sampled-point budget, split evenly across sites.
+    pub t: usize,
+    /// Clustering parameter `k`.
+    pub k: usize,
+    /// Objective.
+    pub objective: Objective,
+}
+
+/// Build the per-site local coresets (each of sampled size ≈ `t / n`).
+pub fn build_portions(
+    locals: &[WeightedSet],
+    cfg: &CombineConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> Vec<Coreset> {
+    let n_sites = locals.len();
+    assert!(n_sites > 0);
+    // Equal split with largest-remainder so the totals match Algorithm 1
+    // at identical t (fair comparison at equal communication).
+    let budgets = super::distributed::allocate_budget(cfg.t, &vec![1.0; n_sites]);
+    locals
+        .iter()
+        .zip(&budgets)
+        .map(|(p, &t_i)| {
+            let site_cfg = Fl11Config {
+                t: t_i,
+                ..Fl11Config::new(t_i, cfg.k, cfg.objective)
+            };
+            fl11::build(p, &site_cfg, backend, rng)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::coreset::distributed::union;
+    use crate::data::synthetic::gaussian_mixture;
+    use crate::partition::Scheme;
+
+    #[test]
+    fn equal_budgets_regardless_of_site_cost() {
+        let mut rng = Pcg64::seed_from(1);
+        let data = gaussian_mixture(&mut rng, 4_000, 4, 4);
+        let parts: Vec<WeightedSet> = Scheme::Weighted
+            .partition(&data, 4, &mut rng)
+            .into_iter()
+            .filter(|p| p.n() > 0)
+            .map(WeightedSet::unit)
+            .collect();
+        let cfg = CombineConfig {
+            t: 400,
+            k: 4,
+            objective: Objective::KMeans,
+        };
+        let portions = build_portions(&parts, &cfg, &RustBackend, &mut rng);
+        for c in &portions {
+            assert_eq!(c.sampled, 100, "COMBINE must split evenly");
+        }
+        let total = union(&portions);
+        assert_eq!(total.sampled, 400);
+        assert_eq!(total.size(), 400 + parts.len() * 4);
+    }
+
+    #[test]
+    fn mass_is_preserved() {
+        let mut rng = Pcg64::seed_from(2);
+        let data = gaussian_mixture(&mut rng, 5_000, 5, 4);
+        let parts: Vec<WeightedSet> = Scheme::Uniform
+            .partition(&data, 5, &mut rng)
+            .into_iter()
+            .map(WeightedSet::unit)
+            .collect();
+        let cfg = CombineConfig {
+            t: 500,
+            k: 4,
+            objective: Objective::KMeans,
+        };
+        let portions = build_portions(&parts, &cfg, &RustBackend, &mut rng);
+        let coreset = union(&portions);
+        let ratio = coreset.set.total_weight() / 5_000.0;
+        assert!((ratio - 1.0).abs() < 0.2, "ratio {ratio}");
+    }
+}

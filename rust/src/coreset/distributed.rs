@@ -1,0 +1,298 @@
+//! **Algorithm 1** — communication-aware distributed coreset
+//! construction, the paper's core contribution.
+//!
+//! Round 1 (per site): compute a constant approximation `B_i` of the
+//! local data `P_i`; share the scalar `cost(P_i, B_i)` with every other
+//! site (via [`crate::protocol`]'s flooding or tree aggregation — *this
+//! one scalar per site is the only coordination the construction needs*).
+//!
+//! Round 2 (per site): allocate the global sample budget proportionally,
+//! `t_i = t · cost(P_i, B_i) / Σ_j cost(P_j, B_j)`, sample locally
+//! ∝ `m_p = cost(p, B_i)`, weight `w_q = Σ_j cost_j / (t · m_q)`, and
+//! append the centers of `B_i` with residual weights. The union of all
+//! local portions is an ε-coreset of `⋃ P_i` (Theorem 1).
+
+use super::sensitivity::{sample_portion, SampleParams};
+use super::Coreset;
+use crate::clustering::backend::{Assignment, Backend};
+use crate::clustering::{approx_solution, Objective, Solution};
+use crate::points::WeightedSet;
+use crate::rng::Pcg64;
+
+/// Configuration of the distributed construction.
+#[derive(Clone, Copy, Debug)]
+pub struct DistributedConfig {
+    /// Global number of sampled points `t` (coreset size = `t + n·k`).
+    pub t: usize,
+    /// Clustering parameter `k` (for the local solutions).
+    pub k: usize,
+    /// Objective.
+    pub objective: Objective,
+    /// Refinement iterations of the local approximation solver.
+    pub solver_iters: usize,
+    /// Clamp negative center weights.
+    pub clamp_center_weights: bool,
+}
+
+impl Default for DistributedConfig {
+    fn default() -> Self {
+        DistributedConfig {
+            t: 1000,
+            k: 5,
+            objective: Objective::KMeans,
+            solver_iters: 20,
+            clamp_center_weights: true,
+        }
+    }
+}
+
+/// Round-1 product of one site: its local solution and cost.
+#[derive(Clone, Debug)]
+pub struct LocalSummary {
+    /// The local constant-approximation solution `B_i`.
+    pub solution: Solution,
+    /// Cached assignment of `P_i` to `B_i` (reused by Round 2).
+    pub assignment: Assignment,
+}
+
+/// Round 1: local constant approximation.
+pub fn round1(
+    local: &WeightedSet,
+    cfg: &DistributedConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> LocalSummary {
+    let solution = approx_solution(
+        local,
+        cfg.k,
+        cfg.objective,
+        backend,
+        rng,
+        cfg.solver_iters,
+    );
+    let assignment = backend.assign(&local.points, &local.weights, &solution.centers);
+    LocalSummary {
+        solution,
+        assignment,
+    }
+}
+
+/// Cost of a round-1 summary under the configured objective — the single
+/// scalar each site communicates.
+pub fn local_cost(summary: &LocalSummary, obj: Objective) -> f64 {
+    summary.assignment.total(obj)
+}
+
+/// Largest-remainder apportionment of the global budget `t` to sites
+/// proportional to their local costs (`t_i = t·cost_i/Σcost_j`, summing
+/// exactly to `t`).
+pub fn allocate_budget(t: usize, costs: &[f64]) -> Vec<usize> {
+    let total: f64 = costs.iter().sum();
+    if total <= 0.0 {
+        // Degenerate: all sites have zero cost — spread evenly.
+        let base = t / costs.len().max(1);
+        let mut out = vec![base; costs.len()];
+        for item in out.iter_mut().take(t - base * costs.len()) {
+            *item += 1;
+        }
+        return out;
+    }
+    let shares: Vec<f64> = costs.iter().map(|&c| t as f64 * c / total).collect();
+    let mut out: Vec<usize> = shares.iter().map(|&s| s.floor() as usize).collect();
+    let assigned: usize = out.iter().sum();
+    // Distribute the remainder by descending fractional part.
+    let mut frac: Vec<(usize, f64)> = shares
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| (i, s - s.floor()))
+        .collect();
+    frac.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    for &(i, _) in frac.iter().take(t - assigned) {
+        out[i] += 1;
+    }
+    out
+}
+
+/// Round 2: build this site's portion given every site's cost.
+pub fn round2(
+    local: &WeightedSet,
+    summary: &LocalSummary,
+    cfg: &DistributedConfig,
+    t_local: usize,
+    total_cost: f64,
+    rng: &mut Pcg64,
+) -> Coreset {
+    sample_portion(
+        local,
+        &summary.solution.centers,
+        &summary.assignment,
+        cfg.objective,
+        &SampleParams {
+            t_local,
+            t_global: cfg.t,
+            total_sensitivity: total_cost,
+            clamp_center_weights: cfg.clamp_center_weights,
+        },
+        rng,
+    )
+}
+
+/// Run the whole construction in-process (no network simulation): used
+/// for tests, the centralized-coordinator deployment and the benches.
+/// Returns the per-site portions; their union is the coreset.
+pub fn build_portions(
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> Vec<Coreset> {
+    assert!(!locals.is_empty());
+    let summaries: Vec<LocalSummary> = locals
+        .iter()
+        .map(|p| round1(p, cfg, backend, rng))
+        .collect();
+    let costs: Vec<f64> = summaries
+        .iter()
+        .map(|s| local_cost(s, cfg.objective))
+        .collect();
+    let total: f64 = costs.iter().sum();
+    let budgets = allocate_budget(cfg.t, &costs);
+    locals
+        .iter()
+        .zip(&summaries)
+        .zip(&budgets)
+        .map(|((p, s), &t_i)| round2(p, s, cfg, t_i, total, rng))
+        .collect()
+}
+
+/// Union of portions into the global coreset.
+pub fn union(portions: &[Coreset]) -> Coreset {
+    let set = WeightedSet::union(portions.iter().map(|c| &c.set));
+    Coreset {
+        set,
+        sampled: portions.iter().map(|c| c.sampled).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::clustering::cost_of;
+    use crate::data::synthetic::gaussian_mixture;
+    use crate::partition::Scheme;
+    use crate::points::Dataset;
+
+    fn locals(seed: u64, n: usize, sites: usize, scheme: Scheme) -> Vec<WeightedSet> {
+        let mut rng = Pcg64::seed_from(seed);
+        let data = gaussian_mixture(&mut rng, n, 6, 4);
+        scheme
+            .partition(&data, sites, &mut rng)
+            .into_iter()
+            .filter(|p| p.n() > 0)
+            .map(WeightedSet::unit)
+            .collect()
+    }
+
+    #[test]
+    fn budget_allocation_sums_to_t() {
+        assert_eq!(allocate_budget(10, &[1.0, 1.0, 1.0]).iter().sum::<usize>(), 10);
+        assert_eq!(allocate_budget(7, &[0.1, 0.9]), vec![1, 6]);
+        assert_eq!(allocate_budget(5, &[0.0, 0.0]).iter().sum::<usize>(), 5);
+        let alloc = allocate_budget(100, &[5.0, 0.0, 5.0]);
+        assert_eq!(alloc[1], 0);
+        assert_eq!(alloc.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn portions_union_has_expected_size() {
+        let parts = locals(1, 3_000, 5, Scheme::Uniform);
+        let cfg = DistributedConfig {
+            t: 500,
+            k: 4,
+            ..Default::default()
+        };
+        let portions = build_portions(&parts, &cfg, &RustBackend, &mut Pcg64::seed_from(2));
+        let coreset = union(&portions);
+        // t sampled + k centers per site.
+        assert_eq!(coreset.sampled, 500);
+        assert_eq!(coreset.size(), 500 + parts.len() * 4);
+    }
+
+    #[test]
+    fn coreset_mass_matches_data() {
+        let parts = locals(3, 6_000, 6, Scheme::Weighted);
+        let cfg = DistributedConfig {
+            t: 800,
+            k: 4,
+            clamp_center_weights: false,
+            ..Default::default()
+        };
+        let portions = build_portions(&parts, &cfg, &RustBackend, &mut Pcg64::seed_from(4));
+        let coreset = union(&portions);
+        let total_n: f64 = parts.iter().map(|p| p.total_weight()).sum();
+        let ratio = coreset.set.total_weight() / total_n;
+        assert!((ratio - 1.0).abs() < 0.15, "mass ratio {ratio}");
+    }
+
+    #[test]
+    fn coreset_cost_tracks_true_cost_on_probe_centers() {
+        let parts = locals(5, 10_000, 4, Scheme::Weighted);
+        let global = WeightedSet::union(parts.iter());
+        let cfg = DistributedConfig {
+            t: 2_000,
+            k: 4,
+            clamp_center_weights: false,
+            ..Default::default()
+        };
+        let portions = build_portions(&parts, &cfg, &RustBackend, &mut Pcg64::seed_from(6));
+        let coreset = union(&portions);
+        let mut rng = Pcg64::seed_from(7);
+        for _ in 0..8 {
+            let mut probe = Dataset::with_capacity(4, 6);
+            for _ in 0..4 {
+                let c: Vec<f32> = (0..6).map(|_| 2.0 * rng.normal() as f32).collect();
+                probe.push(&c);
+            }
+            let truth = cost_of(&global, &probe, Objective::KMeans);
+            let approx = cost_of(&coreset.set, &probe, Objective::KMeans);
+            let err = (approx - truth).abs() / truth;
+            assert!(err < 0.2, "distortion {err}");
+        }
+    }
+
+    #[test]
+    fn imbalanced_sites_get_proportional_budget() {
+        // One dense noisy site and one tiny tight site: the noisy site
+        // must receive nearly all samples.
+        let mut rng = Pcg64::seed_from(8);
+        let big = gaussian_mixture(&mut rng, 5_000, 4, 8);
+        let mut tiny = Dataset::with_capacity(50, 4);
+        for _ in 0..50 {
+            tiny.push(&[0.0, 0.0, 0.0, 0.0]);
+        }
+        let parts = [WeightedSet::unit(big), WeightedSet::unit(tiny)];
+        let cfg = DistributedConfig {
+            t: 300,
+            k: 3,
+            ..Default::default()
+        };
+        let portions = build_portions(&parts, &cfg, &RustBackend, &mut rng);
+        assert!(portions[0].sampled >= 295, "{}", portions[0].sampled);
+        assert!(portions[1].sampled <= 5, "{}", portions[1].sampled);
+    }
+
+    #[test]
+    fn kmedian_construction_works() {
+        let parts = locals(9, 2_000, 3, Scheme::Uniform);
+        let cfg = DistributedConfig {
+            t: 400,
+            k: 4,
+            objective: Objective::KMedian,
+            ..Default::default()
+        };
+        let portions = build_portions(&parts, &cfg, &RustBackend, &mut Pcg64::seed_from(10));
+        let coreset = union(&portions);
+        assert_eq!(coreset.sampled, 400);
+    }
+}

@@ -1,0 +1,126 @@
+//! Centralized coreset construction of Feldman–Langberg \[10\]: compute a
+//! constant approximation on the set itself, then sensitivity-sample.
+//! This is the per-site subroutine of the COMBINE and Zhang baselines
+//! (and Algorithm 1 restricted to a single site).
+
+use super::sensitivity::{sample_portion, SampleParams};
+use super::Coreset;
+use crate::clustering::backend::Backend;
+use crate::clustering::{approx_solution, Objective};
+use crate::points::WeightedSet;
+use crate::rng::Pcg64;
+
+/// Options for the centralized construction.
+#[derive(Clone, Copy, Debug)]
+pub struct Fl11Config {
+    /// Number of sampled points `t` (the coreset has `t + k` points).
+    pub t: usize,
+    /// Number of centers in the approximate solution (the clustering k).
+    pub k: usize,
+    /// Objective.
+    pub objective: Objective,
+    /// Lloyd/Weiszfeld refinement iterations for the local solution.
+    pub solver_iters: usize,
+    /// Clamp negative center weights (see `SampleParams`).
+    pub clamp_center_weights: bool,
+}
+
+impl Fl11Config {
+    /// Sensible defaults for a given `t`, `k`, objective.
+    pub fn new(t: usize, k: usize, objective: Objective) -> Self {
+        Fl11Config {
+            t,
+            k,
+            objective,
+            solver_iters: 20,
+            clamp_center_weights: true,
+        }
+    }
+}
+
+/// Build a centralized coreset of `set`.
+pub fn build(
+    set: &WeightedSet,
+    cfg: &Fl11Config,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> Coreset {
+    assert!(set.n() > 0, "fl11 on empty set");
+    let sol = approx_solution(set, cfg.k, cfg.objective, backend, rng, cfg.solver_iters);
+    let asg = backend.assign(&set.points, &set.weights, &sol.centers);
+    let total: f64 = asg.per_point(cfg.objective).iter().sum();
+    sample_portion(
+        set,
+        &sol.centers,
+        &asg,
+        cfg.objective,
+        &SampleParams {
+            t_local: cfg.t,
+            t_global: cfg.t,
+            total_sensitivity: total,
+            clamp_center_weights: cfg.clamp_center_weights,
+        },
+        rng,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::clustering::{approx_solution, cost_of};
+    use crate::data::synthetic::gaussian_mixture;
+
+    #[test]
+    fn coreset_solution_near_full_solution() {
+        // Cluster the coreset, evaluate on full data: the paper's quality
+        // metric. Should be close to clustering the full data directly.
+        let mut rng = Pcg64::seed_from(1);
+        let data = gaussian_mixture(&mut rng, 6_000, 6, 5);
+        let set = WeightedSet::unit(data);
+        let backend = RustBackend;
+
+        let cfg = Fl11Config::new(600, 5, Objective::KMeans);
+        let coreset = build(&set, &cfg, &backend, &mut rng);
+        let sol_core =
+            approx_solution(&coreset.set, 5, Objective::KMeans, &backend, &mut rng, 20);
+        let sol_full = approx_solution(&set, 5, Objective::KMeans, &backend, &mut rng, 20);
+
+        let cost_core_on_full = cost_of(&set, &sol_core.centers, Objective::KMeans);
+        let ratio = cost_core_on_full / sol_full.cost;
+        assert!(
+            (0.8..1.35).contains(&ratio),
+            "coreset solution ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn works_for_kmedian() {
+        let mut rng = Pcg64::seed_from(2);
+        let data = gaussian_mixture(&mut rng, 2_000, 4, 3);
+        let set = WeightedSet::unit(data);
+        let cfg = Fl11Config::new(300, 3, Objective::KMedian);
+        let coreset = build(&set, &cfg, &RustBackend, &mut rng);
+        assert_eq!(coreset.size(), 303);
+        let w = coreset.set.total_weight();
+        assert!((w / set.total_weight() - 1.0).abs() < 0.3, "mass {w}");
+    }
+
+    #[test]
+    fn weighted_input_supported() {
+        // Build a coreset of a coreset (the Zhang primitive).
+        let mut rng = Pcg64::seed_from(3);
+        let data = gaussian_mixture(&mut rng, 3_000, 4, 3);
+        let set = WeightedSet::unit(data);
+        let c1 = build(&set, &Fl11Config::new(500, 3, Objective::KMeans), &RustBackend, &mut rng);
+        let c2 = build(
+            &c1.set,
+            &Fl11Config::new(200, 3, Objective::KMeans),
+            &RustBackend,
+            &mut rng,
+        );
+        assert_eq!(c2.size(), 203);
+        let ratio = c2.set.total_weight() / set.total_weight();
+        assert!((ratio - 1.0).abs() < 0.35, "mass ratio {ratio}");
+    }
+}

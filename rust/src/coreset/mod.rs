@@ -1,0 +1,41 @@
+//! Coreset constructions — the paper's contribution and its baselines.
+//!
+//! - [`sensitivity`]: the shared Feldman–Langberg sampling machinery
+//!   (sample ∝ cost-to-local-solution, reweight, add solution centers
+//!   with residual weights) that Lemma 2 builds on;
+//! - [`fl11`]: the centralized construction of \[10\] (used per-site by the
+//!   baselines);
+//! - [`distributed`]: **Algorithm 1** — the communication-aware
+//!   distributed coreset;
+//! - [`combine`]: the COMBINE baseline (union of per-site coresets with
+//!   an equal split of the budget);
+//! - [`zhang`]: the Zhang-et-al. \[26\] baseline (coreset-of-coresets
+//!   composed bottom-up along a rooted spanning tree).
+
+pub mod combine;
+pub mod distributed;
+pub mod fl11;
+pub mod klines;
+pub mod sensitivity;
+pub mod zhang;
+
+pub use distributed::{DistributedConfig, LocalSummary};
+
+use crate::points::WeightedSet;
+
+/// A coreset: a weighted point set whose weighted cost approximates the
+/// cost of the original data for *any* set of k centers (Definition 1).
+#[derive(Clone, Debug)]
+pub struct Coreset {
+    /// The weighted points (samples ∪ local-solution centers).
+    pub set: WeightedSet,
+    /// How many of the points are sampled points (the rest are centers).
+    pub sampled: usize,
+}
+
+impl Coreset {
+    /// Total number of coreset points (= its communication size).
+    pub fn size(&self) -> usize {
+        self.set.n()
+    }
+}

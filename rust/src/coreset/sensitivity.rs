@@ -1,0 +1,168 @@
+//! Sensitivity sampling (Feldman–Langberg \[10\]) over a weighted set with
+//! respect to an approximate solution `B`.
+//!
+//! Given per-point costs to `B` (the `m_p` of Lemma 1/2 — the paper's
+//! factor 2 cancels between the sampling probability and the sample
+//! weight, so we use `m_p = cost(p, b_p)` directly), draw `t` points
+//! i.i.d. ∝ `u_p · m_p` with sample weight `w_q = Σ_z u_z m_z / (t m_q)`,
+//! then append each center `b ∈ B` with weight
+//! `w_b = Σ_{p ∈ P_b} u_p − Σ_{q ∈ P_b ∩ S} w_q` (equation (1)).
+
+use super::Coreset;
+use crate::clustering::backend::Assignment;
+use crate::clustering::Objective;
+use crate::points::{Dataset, WeightedSet};
+use crate::rng::Pcg64;
+
+/// Controls for the sampling step.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleParams {
+    /// Number of points to draw from this set.
+    pub t_local: usize,
+    /// Denominator `t` of the sample weight (the *global* sample size in
+    /// the distributed construction; equals `t_local` centrally).
+    pub t_global: usize,
+    /// Numerator `Σ u m` of the sample weight (the *global* total
+    /// sensitivity in the distributed construction).
+    pub total_sensitivity: f64,
+    /// Clamp negative center weights to zero (the construction can
+    /// produce negative `w_b`; clamping is the standard practical choice
+    /// and is what keeps downstream weighted Lloyd well-posed).
+    pub clamp_center_weights: bool,
+}
+
+/// Sample a local coreset portion from `set` given its approximate
+/// solution `solution_centers` and the precomputed assignment to it.
+///
+/// `assignment` must be the result of `backend.assign(set.points,
+/// set.weights, solution_centers)` under `obj` — passed in rather than
+/// recomputed so the caller controls which backend executes the kernel.
+pub fn sample_portion(
+    set: &WeightedSet,
+    solution_centers: &Dataset,
+    assignment: &Assignment,
+    obj: Objective,
+    params: &SampleParams,
+    rng: &mut Pcg64,
+) -> Coreset {
+    let n = set.n();
+    assert_eq!(assignment.assign.len(), n);
+    // m_p already folds in the point weight u_p: per_point = u_p * cost.
+    let m: &[f64] = assignment.per_point(obj);
+    let local_total: f64 = m.iter().sum();
+
+    let mut out = WeightedSet::empty(set.d());
+    let mut sampled_weight_per_center = vec![0.0f64; solution_centers.n()];
+
+    if params.t_local > 0 && local_total > 0.0 {
+        let idx = rng.weighted_indices(m, params.t_local);
+        for &i in &idx {
+            // w_q = Σ u m / (t * m'_q) where m'_q = m_q / u_q; the
+            // per-point slice is u_q * m'_q, so multiply back by u_q.
+            let u_q = set.weights[i];
+            debug_assert!(m[i] > 0.0);
+            let w_q = params.total_sensitivity * u_q / (params.t_global as f64 * m[i]);
+            out.push(set.points.row(i), w_q);
+            sampled_weight_per_center[assignment.assign[i] as usize] += w_q;
+        }
+    }
+    let sampled = out.n();
+
+    // Weighted cluster masses |P_b| = Σ_{p in P_b} u_p.
+    let mut cluster_mass = vec![0.0f64; solution_centers.n()];
+    for i in 0..n {
+        cluster_mass[assignment.assign[i] as usize] += set.weights[i];
+    }
+    for b in 0..solution_centers.n() {
+        let mut w_b = cluster_mass[b] - sampled_weight_per_center[b];
+        if params.clamp_center_weights && w_b < 0.0 {
+            w_b = 0.0;
+        }
+        out.push(solution_centers.row(b), w_b);
+    }
+    Coreset { set: out, sampled }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::{Backend, RustBackend};
+    use crate::clustering::{approx_solution, cost_of};
+    use crate::data::synthetic::gaussian_mixture;
+
+    fn build(seed: u64, n: usize, t: usize, clamp: bool) -> (WeightedSet, Coreset) {
+        let mut rng = Pcg64::seed_from(seed);
+        let data = gaussian_mixture(&mut rng, n, 5, 4);
+        let set = WeightedSet::unit(data);
+        let backend = RustBackend;
+        let sol = approx_solution(&set, 4, Objective::KMeans, &backend, &mut rng, 10);
+        let asg = backend.assign(&set.points, &set.weights, &sol.centers);
+        let total: f64 = asg.kmeans_cost.iter().sum();
+        let coreset = sample_portion(
+            &set,
+            &sol.centers,
+            &asg,
+            Objective::KMeans,
+            &SampleParams {
+                t_local: t,
+                t_global: t,
+                total_sensitivity: total,
+                clamp_center_weights: clamp,
+            },
+            &mut rng,
+        );
+        (set, coreset)
+    }
+
+    #[test]
+    fn total_weight_approximates_total_mass() {
+        // Unclamped: E[Σ w] = |P| exactly; sampled weights concentrate.
+        let (set, coreset) = build(1, 4_000, 800, false);
+        let ratio = coreset.set.total_weight() / set.total_weight();
+        assert!((ratio - 1.0).abs() < 0.15, "ratio={ratio}");
+    }
+
+    #[test]
+    fn coreset_size_is_t_plus_k() {
+        let (_, coreset) = build(2, 1_000, 200, true);
+        assert_eq!(coreset.size(), 200 + 4);
+        assert_eq!(coreset.sampled, 200);
+    }
+
+    #[test]
+    fn coreset_preserves_cost_on_random_centers() {
+        let (set, coreset) = build(3, 8_000, 1_500, false);
+        let mut rng = Pcg64::seed_from(99);
+        for _ in 0..5 {
+            let mut centers = Dataset::with_capacity(4, 5);
+            for _ in 0..4 {
+                let c: Vec<f32> = (0..5).map(|_| 2.0 * rng.normal() as f32).collect();
+                centers.push(&c);
+            }
+            let true_cost = cost_of(&set, &centers, Objective::KMeans);
+            let core_cost = cost_of(&coreset.set, &centers, Objective::KMeans);
+            let err = (core_cost - true_cost).abs() / true_cost;
+            assert!(err < 0.25, "distortion {err} at random centers");
+        }
+    }
+
+    #[test]
+    fn clamping_only_raises_weights() {
+        let (_, unclamped) = build(4, 1_000, 900, false);
+        let (_, clamped) = build(4, 1_000, 900, true);
+        assert!(clamped.set.weights.iter().all(|&w| w >= 0.0));
+        // Same points, weights only differ where unclamped was negative.
+        for (wc, wu) in clamped.set.weights.iter().zip(&unclamped.set.weights) {
+            assert!(wc >= wu || (wc - wu).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_t_keeps_only_centers() {
+        let (_, coreset) = build(5, 500, 0, true);
+        assert_eq!(coreset.sampled, 0);
+        assert_eq!(coreset.size(), 4);
+        // Center weights then carry the full mass.
+        assert!((coreset.set.total_weight() - 500.0).abs() < 1e-6);
+    }
+}

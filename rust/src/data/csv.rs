@@ -1,0 +1,121 @@
+//! Numeric CSV loader so real UCI files can replace the analogs
+//! (`distclus run --data path.csv ...`).
+//!
+//! Accepts comma/semicolon/whitespace separated numeric rows, skips a
+//! header line if non-numeric, and ignores blank lines and a leading
+//! label column when `--label-col` asks for it.
+
+use crate::points::Dataset;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Parse one line into f32 fields; `None` if any field is non-numeric.
+fn parse_line(line: &str, skip_col: Option<usize>) -> Option<Vec<f32>> {
+    let fields = line
+        .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
+        .filter(|f| !f.is_empty());
+    let mut out = Vec::new();
+    for (i, field) in fields.enumerate() {
+        if Some(i) == skip_col {
+            continue;
+        }
+        match field.parse::<f32>() {
+            Ok(x) if x.is_finite() => out.push(x),
+            _ => return None,
+        }
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Load a numeric CSV into a [`Dataset`].
+///
+/// `skip_col` drops one column (e.g. a class label). The first line may
+/// be a header (silently skipped when non-numeric); any later bad row is
+/// an error with its line number.
+pub fn load(path: &Path, skip_col: Option<usize>) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    load_str(&text, skip_col)
+}
+
+/// Same as [`load`], from an in-memory string (tests, embedding).
+pub fn load_str(text: &str, skip_col: Option<usize>) -> Result<Dataset> {
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_line(line, skip_col) {
+            Some(row) => {
+                if let Some(first) = rows.first() {
+                    if row.len() != first.len() {
+                        bail!(
+                            "line {}: {} fields, expected {}",
+                            lineno + 1,
+                            row.len(),
+                            first.len()
+                        );
+                    }
+                }
+                rows.push(row);
+            }
+            None if rows.is_empty() => continue, // header
+            None => bail!("line {}: non-numeric row", lineno + 1),
+        }
+    }
+    if rows.is_empty() {
+        bail!("no numeric rows found");
+    }
+    let d = rows[0].len();
+    let mut data = Dataset::with_capacity(rows.len(), d);
+    for row in &rows {
+        data.push(row);
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_with_header() {
+        let ds = load_str("a,b,c\n1,2,3\n4,5,6\n", None).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn loads_whitespace_and_comments() {
+        let ds = load_str("# comment\n1 2\n3\t4\n\n", None).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d, 2);
+    }
+
+    #[test]
+    fn skip_label_column() {
+        let ds = load_str("7,1.5,2.5\n8,3.5,4.5\n", Some(0)).unwrap();
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.row(0), &[1.5, 2.5]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(load_str("1,2\n3\n", None).is_err());
+    }
+
+    #[test]
+    fn rejects_mid_file_garbage() {
+        assert!(load_str("1,2\nx,y\n", None).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(load_str("only,header\n", None).is_err());
+    }
+}

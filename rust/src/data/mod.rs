@@ -1,0 +1,9 @@
+//! Datasets: the paper's synthetic Gaussian mixture, generators that
+//! stand in for the UCI datasets of §5 (see DESIGN.md §5 Substitutions),
+//! and a CSV loader so real UCI files can be dropped in unchanged.
+
+pub mod analogs;
+pub mod csv;
+pub mod synthetic;
+
+pub use analogs::{by_name, DatasetSpec, SPECS};

@@ -1,0 +1,75 @@
+//! # distclus — Distributed k-Means / k-Median Clustering on General Topologies
+//!
+//! A production-grade reproduction of Balcan, Ehrlich & Liang,
+//! *Distributed k-Means and k-Median Clustering on General Topologies*
+//! (NIPS 2013), as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's coordination contribution:
+//!   the distributed coreset construction (Algorithm 1), the flooding
+//!   message-passing protocol (Algorithm 3), the end-to-end distributed
+//!   clustering driver (Algorithm 2), the rooted-tree specialization
+//!   (Theorem 3), and both evaluation baselines (COMBINE and the
+//!   Zhang-et-al. coreset-of-coresets composition), plus every substrate
+//!   these need: topology generators, a simulated message-passing network
+//!   with exact communication accounting, data partition schemes, dataset
+//!   generators, and constant-factor approximation solvers.
+//! - **Layer 2 (python/compile/model.py)** — the JAX compute graph for the
+//!   hot path (assignment/cost, weighted Lloyd steps), AOT-lowered to HLO
+//!   text artifacts at build time.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels (MXU-shaped
+//!   distance computation, one-hot accumulation) called by Layer 2.
+//!
+//! At runtime Python is never involved: [`runtime`] loads the AOT
+//! artifacts through the PJRT C API (`xla` crate) and [`clustering`]
+//! dispatches its inner loops either to those compiled executables or to a
+//! pure-Rust backend (the two cross-validate each other in the test
+//! suite).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use distclus::prelude::*;
+//!
+//! // 1. Data distributed over a 4x4 grid of sites.
+//! let mut rng = Pcg64::seed_from(7);
+//! let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 10_000, 10, 5);
+//! let graph = distclus::topology::generators::grid(4, 4);
+//! let locals: Vec<WeightedSet> = distclus::partition::Scheme::Uniform
+//!     .partition(&data, graph.n(), &mut rng)
+//!     .into_iter()
+//!     .map(WeightedSet::unit)
+//!     .collect();
+//!
+//! // 2. Build the distributed coreset (Algorithm 1) over the graph.
+//! let cfg = distclus::coreset::DistributedConfig { t: 2_000, k: 5, ..Default::default() };
+//! let backend = RustBackend::default();
+//! let run = distclus::protocol::cluster_on_graph(&graph, &locals, &cfg, &backend, &mut rng).unwrap();
+//! println!("centers: {}, comm: {} points", run.centers.n(), run.comm_points);
+//! ```
+#![warn(missing_docs)]
+
+pub mod cli;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod coreset;
+pub mod data;
+pub mod json;
+pub mod metrics;
+pub mod network;
+pub mod partition;
+pub mod points;
+pub mod protocol;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+pub mod topology;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::clustering::backend::{Backend, RustBackend};
+    pub use crate::coreset::{Coreset, DistributedConfig};
+    pub use crate::points::{Dataset, WeightedSet};
+    pub use crate::rng::Pcg64;
+    pub use crate::topology::Graph;
+}

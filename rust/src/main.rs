@@ -1,0 +1,239 @@
+//! `distclus` — CLI for the distributed clustering framework.
+//!
+//! Subcommands:
+//! - `run`   — run one distributed clustering experiment (paper metric:
+//!   k-means/k-median cost ratio vs measured communication);
+//! - `info`  — show datasets, algorithms, topologies and artifact status;
+//! - `selftest` — cross-validate the XLA artifact backend against the
+//!   pure-Rust backend on random instances.
+//!
+//! Examples:
+//! ```text
+//! distclus run --dataset pendigits --topology grid --rows 3 --cols 3 \
+//!     --partition weighted --algorithm distributed --t 2000 --reps 5
+//! distclus run --config examples/experiment.conf --backend xla
+//! distclus selftest --artifacts artifacts
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use distclus::clustering::backend::{Backend, RustBackend};
+use distclus::cli::Args;
+use distclus::config::{Algorithm, ExperimentSpec, TopologySpec};
+use distclus::coordinator::{render_report, run_experiment, series_json};
+use distclus::partition::Scheme;
+use distclus::rng::Pcg64;
+use distclus::runtime::XlaBackend;
+use std::path::Path;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: distclus <run|info|selftest|coreset> [flags]\n\
+         run flags: --dataset NAME|csv:PATH --scale F --topology random|grid|preferential|star\n\
+         \x20          --sites N --p P --rows R --cols C --m-attach M\n\
+         \x20          --partition uniform|similarity|weighted|degree\n\
+         \x20          --algorithm distributed|distributed-tree|combine|combine-tree|zhang-tree\n\
+         \x20          --t N --k K --objective kmeans|kmedian --reps N --seed S\n\
+         \x20          --backend rust|xla --artifacts DIR --config FILE --json OUT.json"
+    );
+    std::process::exit(2)
+}
+
+fn build_backend(args: &Args) -> Result<Box<dyn Backend>> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match args.get_or("backend", "rust").as_str() {
+        "rust" => Ok(Box::new(RustBackend)),
+        "xla" => Ok(Box::new(XlaBackend::load(Path::new(&artifacts))?)),
+        other => bail!("unknown backend '{other}' (rust|xla)"),
+    }
+}
+
+fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
+    let mut spec = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        ExperimentSpec::from_config(&text)?
+    } else {
+        ExperimentSpec::default()
+    };
+    if let Some(ds) = args.get("dataset") {
+        spec.dataset = ds.to_string();
+        if let Some(meta) = distclus::data::by_name(ds) {
+            spec.k = meta.k;
+        }
+    }
+    spec.scale = args.get_parse("scale", spec.scale)?;
+    let sites = args.get_parse("sites", 25usize)?;
+    if let Some(topo) = args.get("topology") {
+        spec.topology = match topo {
+            "random" => TopologySpec::Random {
+                n: sites,
+                p: args.get_parse("p", 0.3)?,
+            },
+            "grid" => TopologySpec::Grid {
+                rows: args.get_parse("rows", 5usize)?,
+                cols: args.get_parse("cols", 5usize)?,
+            },
+            "preferential" => TopologySpec::Preferential {
+                n: sites,
+                m_attach: args.get_parse("m-attach", 2usize)?,
+            },
+            "star" => TopologySpec::Star { n: sites },
+            other => bail!("unknown topology '{other}'"),
+        };
+    }
+    if let Some(p) = args.get("partition") {
+        spec.partition = Scheme::parse(p).ok_or_else(|| anyhow!("unknown partition '{p}'"))?;
+    }
+    if let Some(a) = args.get("algorithm") {
+        spec.algorithm = Algorithm::parse(a).ok_or_else(|| anyhow!("unknown algorithm '{a}'"))?;
+    }
+    spec.k = args.get_parse("k", spec.k)?;
+    spec.t = args.get_parse("t", spec.t)?;
+    if let Some(o) = args.get("objective") {
+        spec.objective = distclus::clustering::Objective::parse(o)
+            .ok_or_else(|| anyhow!("unknown objective '{o}'"))?;
+    }
+    spec.reps = args.get_parse("reps", spec.reps)?;
+    spec.seed = args.get_parse("seed", spec.seed)?;
+    Ok(spec)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let spec = spec_from_args(args)?;
+    let backend = build_backend(args)?;
+    eprintln!(
+        "running {} on {}/{} partition={} t={} k={} reps={} backend={}",
+        spec.algorithm.name(),
+        spec.dataset,
+        spec.topology.name(),
+        spec.partition.name(),
+        spec.t,
+        spec.k,
+        spec.reps,
+        backend.name(),
+    );
+    let json_out = args.get("json").map(str::to_string);
+    args.reject_unknown()?;
+    let result = run_experiment(&spec, backend.as_ref())?;
+    println!("{}", render_report(std::slice::from_ref(&result)));
+    if let Some(path) = json_out {
+        std::fs::write(&path, series_json(std::slice::from_ref(&result)).to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    println!("datasets:");
+    for s in distclus::data::SPECS {
+        println!(
+            "  {:<10} n={:<7} d={:<3} k={:<3} sites={} grid={}x{}",
+            s.name, s.n, s.d, s.k, s.sites, s.grid.0, s.grid.1
+        );
+    }
+    println!("algorithms: distributed distributed-tree combine combine-tree zhang-tree");
+    println!("topologies: random grid preferential star");
+    match distclus::runtime::Manifest::load(Path::new(&artifacts)) {
+        Ok(m) => {
+            println!("artifacts ({}):", artifacts);
+            for a in &m.artifacts {
+                println!("  {:<28} n={} d={:<3} k={}", a.name, a.n, a.d, a.k);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+/// Cross-validate the XLA backend against the pure-Rust backend.
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let cases = args.get_parse("cases", 10usize)?;
+    args.reject_unknown()?;
+    let xla = XlaBackend::load(Path::new(&artifacts))?;
+    let rust = RustBackend;
+    let mut rng = Pcg64::seed_from(7);
+    for case in 0..cases {
+        let n = 200 + rng.below(1_500);
+        let d = 1 + rng.below(96);
+        let k = 1 + rng.below(16);
+        let data = distclus::data::synthetic::gaussian_mixture(&mut rng, n, d, k.max(2));
+        let weights: Vec<f64> = (0..data.n()).map(|_| rng.uniform() + 0.01).collect();
+        let mut centers = distclus::points::Dataset::with_capacity(k, d);
+        for _ in 0..k {
+            let c: Vec<f32> = (0..d).map(|_| 2.0 * rng.normal() as f32).collect();
+            centers.push(&c);
+        }
+        let a = xla.assign(&data, &weights, &centers);
+        let b = rust.assign(&data, &weights, &centers);
+        let total_a: f64 = a.kmeans_cost.iter().sum();
+        let total_b: f64 = b.kmeans_cost.iter().sum();
+        let rel = (total_a - total_b).abs() / total_b.max(1e-9);
+        anyhow::ensure!(
+            rel < 1e-3,
+            "case {case}: assign cost mismatch rust={total_b} xla={total_a}"
+        );
+        let sa = xla.lloyd_step(&data, &weights, &centers);
+        let sb = rust.lloyd_step(&data, &weights, &centers);
+        let cnt_err: f64 = sa
+            .counts
+            .iter()
+            .zip(&sb.counts)
+            .map(|(x, y)| (x - y).abs())
+            .sum();
+        anyhow::ensure!(cnt_err < 1e-2, "case {case}: count mismatch {cnt_err}");
+        println!("case {case}: n={n} d={d} k={k} OK (rel cost err {rel:.2e})");
+    }
+    println!("selftest OK: xla backend matches rust backend on {cases} cases");
+    Ok(())
+}
+
+/// Build a distributed coreset and dump it (point coords + weight per
+/// row) as CSV — a practical tool for feeding downstream pipelines and
+/// inspecting what the summary actually contains.
+fn cmd_coreset(args: &Args) -> Result<()> {
+    let spec = spec_from_args(args)?;
+    let backend = build_backend(args)?;
+    let out = args.get_or("out", "coreset.csv");
+    args.reject_unknown()?;
+    let mut rng = Pcg64::seed_from(spec.seed);
+    let data = distclus::coordinator::run_once(
+        &spec,
+        &{
+            let mut data_rng = Pcg64::seed_from(spec.seed);
+            distclus::coordinator::load_dataset(&spec, &mut data_rng)?
+        },
+        backend.as_ref(),
+        &mut rng,
+    )?;
+    let cs = &data.coreset.set;
+    let mut text = String::new();
+    for i in 0..cs.n() {
+        for x in cs.points.row(i) {
+            text.push_str(&format!("{x},"));
+        }
+        text.push_str(&format!("{}\n", cs.weights[i]));
+    }
+    std::fs::write(&out, text)?;
+    println!(
+        "wrote {} ({} points = {} sampled + centers, total weight {:.1}, comm {} points)",
+        out,
+        cs.n(),
+        data.coreset.sampled,
+        cs.total_weight(),
+        data.comm_points
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("info") => cmd_info(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some("coreset") => cmd_coreset(&args),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,226 @@
+//! Terminal line plots: render the paper's figures (cost ratio vs
+//! communication) as ASCII charts so `figures` output is an actual
+//! figure, not only a table.
+
+/// One plotted series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// (x, y) points, any order (sorted internally by x).
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Plot dimensions and axes configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PlotConfig {
+    /// Character-grid width of the plot area.
+    pub width: usize,
+    /// Character-grid height.
+    pub height: usize,
+    /// Logarithmic x axis (communication spans decades).
+    pub log_x: bool,
+}
+
+impl Default for PlotConfig {
+    fn default() -> Self {
+        PlotConfig {
+            width: 64,
+            height: 16,
+            log_x: true,
+        }
+    }
+}
+
+const MARKS: &[char] = &['o', 'x', '+', '*', '#', '@'];
+
+fn x_of(v: f64, cfg: &PlotConfig) -> f64 {
+    if cfg.log_x {
+        v.max(1e-12).log10()
+    } else {
+        v
+    }
+}
+
+/// Render one or more series into an ASCII chart with axes and legend.
+///
+/// Returns a plain-text block. Empty input or degenerate (single-point)
+/// ranges are handled by padding the range.
+pub fn render(series: &[Series], cfg: &PlotConfig) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .collect();
+    if pts.is_empty() {
+        return "(no data)".to_string();
+    }
+    let (mut x_min, mut x_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y_min, mut y_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        let x = x_of(x, cfg);
+        x_min = x_min.min(x);
+        x_max = x_max.max(x);
+        y_min = y_min.min(y);
+        y_max = y_max.max(y);
+    }
+    if (x_max - x_min).abs() < 1e-12 {
+        x_min -= 0.5;
+        x_max += 0.5;
+    }
+    if (y_max - y_min).abs() < 1e-12 {
+        y_min -= 0.5;
+        y_max += 0.5;
+    }
+    // 5% y padding so extreme points don't sit on the frame.
+    let pad = 0.05 * (y_max - y_min);
+    y_min -= pad;
+    y_max += pad;
+
+    let mut grid = vec![vec![' '; cfg.width]; cfg.height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        let mut sorted = s.points.clone();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let cell = |x: f64, y: f64| -> (usize, usize) {
+            let cx = ((x_of(x, cfg) - x_min) / (x_max - x_min) * (cfg.width - 1) as f64)
+                .round() as usize;
+            let cy = ((y - y_min) / (y_max - y_min) * (cfg.height - 1) as f64).round() as usize;
+            (cx.min(cfg.width - 1), cfg.height - 1 - cy.min(cfg.height - 1))
+        };
+        // Connect consecutive points with interpolated dots.
+        for w in sorted.windows(2) {
+            let (x0, y0) = cell(w[0].0, w[0].1);
+            let (x1, y1) = cell(w[1].0, w[1].1);
+            let steps = x1.abs_diff(x0).max(y1.abs_diff(y0)).max(1);
+            for step in 0..=steps {
+                let f = step as f64 / steps as f64;
+                let cx = (x0 as f64 + f * (x1 as f64 - x0 as f64)).round() as usize;
+                let cy = (y0 as f64 + f * (y1 as f64 - y0 as f64)).round() as usize;
+                if grid[cy][cx] == ' ' {
+                    grid[cy][cx] = '.';
+                }
+            }
+        }
+        for &(x, y) in &sorted {
+            let (cx, cy) = cell(x, y);
+            grid[cy][cx] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    for (row_i, row) in grid.iter().enumerate() {
+        let y_val = y_max - (row_i as f64 / (cfg.height - 1) as f64) * (y_max - y_min);
+        out.push_str(&format!("{y_val:>8.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>8} +{}\n", "", "-".repeat(cfg.width)));
+    let x_lo = if cfg.log_x {
+        10f64.powf(x_min)
+    } else {
+        x_min
+    };
+    let x_hi = if cfg.log_x {
+        10f64.powf(x_max)
+    } else {
+        x_max
+    };
+    out.push_str(&format!(
+        "{:>9} {:<20} {:>width$.0}\n",
+        "",
+        format!("{x_lo:.0}"),
+        x_hi,
+        width = cfg.width - 20
+    ));
+    out.push_str(&format!(
+        "{:>9} x = communication (points{})\n",
+        "",
+        if cfg.log_x { ", log scale" } else { "" }
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>9} {} {}\n",
+            "",
+            MARKS[si % MARKS.len()],
+            s.label
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(label: &str, pts: &[(f64, f64)]) -> Series {
+        Series {
+            label: label.into(),
+            points: pts.to_vec(),
+        }
+    }
+
+    #[test]
+    fn renders_markers_and_legend() {
+        let s = [
+            series("ours", &[(100.0, 1.1), (1000.0, 1.05), (10000.0, 1.01)]),
+            series("combine", &[(100.0, 1.2), (1000.0, 1.12), (10000.0, 1.03)]),
+        ];
+        let out = render(&s, &PlotConfig::default());
+        assert!(out.contains('o'));
+        assert!(out.contains('x'));
+        assert!(out.contains("ours"));
+        assert!(out.contains("combine"));
+        assert!(out.contains("log scale"));
+    }
+
+    #[test]
+    fn empty_input_is_safe() {
+        assert_eq!(render(&[], &PlotConfig::default()), "(no data)");
+    }
+
+    #[test]
+    fn single_point_padding() {
+        let out = render(
+            &[series("one", &[(5.0, 2.0)])],
+            &PlotConfig {
+                log_x: false,
+                ..Default::default()
+            },
+        );
+        assert!(out.contains('o'));
+    }
+
+    #[test]
+    fn monotone_series_has_monotone_rows() {
+        // Decreasing series: the marker of the largest x must appear on a
+        // lower-or-equal text row than the marker of the smallest x.
+        let s = [series("d", &[(1.0, 10.0), (100.0, 0.0)])];
+        let out = render(&s, &PlotConfig::default());
+        let rows: Vec<&str> = out.lines().collect();
+        let first_marker_row = rows.iter().position(|r| r.contains('o')).unwrap();
+        let last_marker_row = rows.iter().rposition(|r| r.contains('o')).unwrap();
+        assert!(first_marker_row < last_marker_row);
+        // Highest y (10.0) renders near the top: its row label > 8.
+        let label: f64 = rows[first_marker_row]
+            .split('|')
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(label > 8.0, "top marker row label {label}");
+    }
+
+    #[test]
+    fn respects_dimensions() {
+        let s = [series("a", &[(1.0, 1.0), (2.0, 2.0)])];
+        let cfg = PlotConfig {
+            width: 30,
+            height: 8,
+            log_x: false,
+        };
+        let out = render(&s, &cfg);
+        // 8 grid rows + axis + xlabels + legend lines.
+        assert_eq!(out.lines().count(), 8 + 3 + 1);
+    }
+}

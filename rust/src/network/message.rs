@@ -1,0 +1,110 @@
+//! Message payloads and their communication-cost accounting.
+
+use crate::points::{Dataset, WeightedSet};
+use std::sync::Arc;
+
+/// What a node can put on the wire.
+///
+/// The paper measures communication in *points transmitted*; a d-vector
+/// with its weight is one point, and a scalar statistic is charged as one
+/// point as well (this matches the paper's accounting, where broadcasting
+/// one local cost per node over m edges contributes O(mn)).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// The total cost of a site's local approximate solution
+    /// (Algorithm 1, Round 1: "Communicate cost(P_i, B_i)").
+    LocalCost {
+        /// Originating site.
+        site: usize,
+        /// cost(P_i, B_i) under the active objective.
+        cost: f64,
+    },
+    /// A local coreset portion `D_i` (Algorithm 2, Round 2) or any other
+    /// weighted point set. `Arc`-wrapped: flooding clones the payload
+    /// once per edge traversal, and a deep copy there would turn the
+    /// O(m·Σ|I_j|) *accounted* communication into O(m·Σ|I_j|) *actual
+    /// memcpy* on the simulator host (see EXPERIMENTS.md §Perf L3).
+    Portion {
+        /// Originating site.
+        site: usize,
+        /// The weighted points.
+        set: Arc<WeightedSet>,
+    },
+    /// A set of cluster centers (broadcast of the final solution).
+    Centers(Dataset),
+    /// A bare scalar (generic statistic).
+    Scalar(f64),
+    /// Acknowledgement of a flooded payload (lossy-link extension; see
+    /// [`crate::protocol::flood_reliable`]).
+    Ack {
+        /// `flood_key().0` of the acked payload.
+        kind: u8,
+        /// `flood_key().1` (origin site) of the acked payload.
+        site: usize,
+    },
+}
+
+impl Payload {
+    /// Size in the paper's unit (points transmitted).
+    pub fn size_points(&self) -> usize {
+        match self {
+            Payload::LocalCost { .. } | Payload::Scalar(_) | Payload::Ack { .. } => 1,
+            Payload::Portion { set, .. } => set.n(),
+            Payload::Centers(c) => c.n(),
+        }
+    }
+
+    /// Stable identity used by flooding dedup: `(kind_tag, site)`.
+    /// Returns `None` for payloads without an origin (not floodable).
+    pub fn flood_key(&self) -> Option<(u8, usize)> {
+        match self {
+            Payload::LocalCost { site, .. } => Some((0, *site)),
+            Payload::Portion { site, .. } => Some((1, *site)),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded transmission.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TranscriptEntry {
+    /// Simulation round in which the send happened.
+    pub round: usize,
+    /// Sender node.
+    pub from: usize,
+    /// Receiver node (must be a graph neighbor of `from`).
+    pub to: usize,
+    /// Charged size in points.
+    pub points: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::Dataset;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Payload::Scalar(1.0).size_points(), 1);
+        assert_eq!(Payload::LocalCost { site: 0, cost: 2.0 }.size_points(), 1);
+        let set = WeightedSet::unit(Dataset::from_flat(vec![0.0; 6], 2));
+        assert_eq!(Payload::Portion { site: 1, set: std::sync::Arc::new(set) }.size_points(), 3);
+        assert_eq!(
+            Payload::Centers(Dataset::from_flat(vec![0.0; 8], 4)).size_points(),
+            2
+        );
+    }
+
+    #[test]
+    fn flood_keys_distinguish_kinds_and_sites() {
+        let a = Payload::LocalCost { site: 3, cost: 0.0 }.flood_key();
+        let b = Payload::Portion {
+            site: 3,
+            set: std::sync::Arc::new(WeightedSet::empty(2)),
+        }
+        .flood_key();
+        assert_ne!(a, b);
+        assert_eq!(a, Some((0, 3)));
+        assert_eq!(Payload::Scalar(0.0).flood_key(), None);
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated message-passing network (the paper's §2 communication
+//! model).
+//!
+//! Nodes exchange typed messages strictly along the edges of an
+//! undirected connected graph; the simulator charges every transmission
+//! in the paper's cost unit — *number of points transmitted* — and keeps
+//! a full transcript so tests can assert exact protocol costs (e.g.
+//! flooding a payload of size `|I_j|` from every node costs exactly
+//! `2 m Σ_j |I_j|`, matching the `O(m Σ |I_j|)` bound of Theorem 2).
+
+mod message;
+mod sim;
+
+pub use message::{Payload, TranscriptEntry};
+pub use sim::Network;

@@ -1,0 +1,221 @@
+//! The network simulator: edge-restricted delivery, exact cost metering,
+//! full transcript.
+
+use super::{Payload, TranscriptEntry};
+use crate::topology::Graph;
+use std::collections::VecDeque;
+
+/// A deterministic, round-based message-passing simulator.
+///
+/// Protocols call [`Network::send`] (edge-checked, cost-metered) and
+/// [`Network::recv`]; [`Network::step`] advances one synchronous round,
+/// making everything sent in the previous round deliverable. The
+/// accumulated [`Network::cost_points`] is the paper's communication
+/// metric.
+pub struct Network {
+    graph: Graph,
+    /// Messages awaiting delivery next round: (from, to, payload).
+    in_flight: Vec<(usize, usize, Payload)>,
+    /// Per-node inbox for the current round.
+    inboxes: Vec<VecDeque<(usize, Payload)>>,
+    transcript: Vec<TranscriptEntry>,
+    cost_points: usize,
+    round: usize,
+    record_transcript: bool,
+    /// Per-transmission drop probability (lossy-link extension).
+    loss: f64,
+    loss_rng: Option<crate::rng::Pcg64>,
+    dropped: usize,
+}
+
+impl Network {
+    /// Create a simulator over `graph`.
+    pub fn new(graph: Graph) -> Self {
+        let n = graph.n();
+        Network {
+            graph,
+            in_flight: Vec::new(),
+            inboxes: vec![VecDeque::new(); n],
+            transcript: Vec::new(),
+            cost_points: 0,
+            round: 0,
+            record_transcript: true,
+            loss: 0.0,
+            loss_rng: None,
+            dropped: 0,
+        }
+    }
+
+    /// Enable i.i.d. per-transmission loss with probability `p`
+    /// (deterministic given `seed`). Transmissions are still *charged* —
+    /// the sender paid for the send — but may never be delivered. See
+    /// [`crate::protocol::flood_reliable`] for the recovery protocol.
+    pub fn with_loss(mut self, p: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        self.loss = p;
+        self.loss_rng = Some(crate::rng::Pcg64::seed_from(seed));
+        self
+    }
+
+    /// Transmissions dropped so far (lossy mode).
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Disable transcript recording (large experiments; cost metering
+    /// stays on).
+    pub fn without_transcript(mut self) -> Self {
+        self.record_transcript = false;
+        self
+    }
+
+    /// The underlying topology.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    /// Total points transmitted so far.
+    pub fn cost_points(&self) -> usize {
+        self.cost_points
+    }
+
+    /// Completed synchronous rounds.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Full send log (empty if disabled).
+    pub fn transcript(&self) -> &[TranscriptEntry] {
+        &self.transcript
+    }
+
+    /// Queue a message for delivery in the next round.
+    ///
+    /// Panics if `(from, to)` is not an edge of the topology — protocols
+    /// physically cannot cheat the communication graph.
+    pub fn send(&mut self, from: usize, to: usize, payload: Payload) {
+        assert!(
+            self.graph.has_edge(from, to),
+            "send({from},{to}) is not an edge"
+        );
+        let points = payload.size_points();
+        self.cost_points += points;
+        if self.record_transcript {
+            self.transcript.push(TranscriptEntry {
+                round: self.round,
+                from,
+                to,
+                points,
+            });
+        }
+        self.in_flight.push((from, to, payload));
+    }
+
+    /// Broadcast to every neighbor of `from`.
+    pub fn send_to_neighbors(&mut self, from: usize, payload: &Payload) {
+        // Clone per neighbor; neighbor list copied to appease borrows.
+        let neigh: Vec<usize> = self.graph.neighbors(from).to_vec();
+        for to in neigh {
+            self.send(from, to, payload.clone());
+        }
+    }
+
+    /// Advance one synchronous round: everything sent becomes receivable
+    /// (minus lossy drops). Returns the number of messages delivered.
+    pub fn step(&mut self) -> usize {
+        self.round += 1;
+        let mut delivered = 0;
+        let loss = self.loss;
+        for (from, to, payload) in std::mem::take(&mut self.in_flight) {
+            if loss > 0.0 {
+                let rng = self.loss_rng.as_mut().expect("loss rng");
+                if rng.uniform() < loss {
+                    self.dropped += 1;
+                    continue;
+                }
+            }
+            self.inboxes[to].push_back((from, payload));
+            delivered += 1;
+        }
+        delivered
+    }
+
+    /// Pop one pending message for `node`, if any.
+    pub fn recv(&mut self, node: usize) -> Option<(usize, Payload)> {
+        self.inboxes[node].pop_front()
+    }
+
+    /// Drain all pending messages for `node`.
+    pub fn recv_all(&mut self, node: usize) -> Vec<(usize, Payload)> {
+        self.inboxes[node].drain(..).collect()
+    }
+
+    /// True when nothing is queued or in flight.
+    pub fn quiescent(&self) -> bool {
+        self.in_flight.is_empty() && self.inboxes.iter().all(|q| q.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators;
+
+    #[test]
+    fn delivery_and_cost() {
+        let mut net = Network::new(generators::path(3));
+        net.send(0, 1, Payload::Scalar(5.0));
+        assert_eq!(net.cost_points(), 1);
+        assert!(net.recv(1).is_none(), "not delivered before step");
+        net.step();
+        let (from, payload) = net.recv(1).unwrap();
+        assert_eq!(from, 0);
+        assert_eq!(payload, Payload::Scalar(5.0));
+        assert!(net.quiescent());
+    }
+
+    #[test]
+    #[should_panic(expected = "not an edge")]
+    fn rejects_non_edges() {
+        let mut net = Network::new(generators::path(3));
+        net.send(0, 2, Payload::Scalar(1.0));
+    }
+
+    #[test]
+    fn neighbor_broadcast_costs_degree() {
+        let g = generators::star(5);
+        let mut net = Network::new(g);
+        net.send_to_neighbors(0, &Payload::Scalar(1.0));
+        assert_eq!(net.cost_points(), 4);
+        net.step();
+        for v in 1..5 {
+            assert!(net.recv(v).is_some());
+        }
+    }
+
+    #[test]
+    fn transcript_records_rounds() {
+        let mut net = Network::new(generators::path(4));
+        net.send(0, 1, Payload::Scalar(1.0));
+        net.step();
+        net.send(1, 2, Payload::Scalar(1.0));
+        net.step();
+        let t = net.transcript();
+        assert_eq!(t.len(), 2);
+        assert_eq!((t[0].round, t[0].from, t[0].to), (0, 0, 1));
+        assert_eq!((t[1].round, t[1].from, t[1].to), (1, 1, 2));
+    }
+
+    #[test]
+    fn without_transcript_still_meters() {
+        let mut net = Network::new(generators::path(2)).without_transcript();
+        net.send(0, 1, Payload::Scalar(1.0));
+        assert_eq!(net.cost_points(), 1);
+        assert!(net.transcript().is_empty());
+    }
+}

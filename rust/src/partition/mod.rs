@@ -1,0 +1,262 @@
+//! Data partition schemes (§5 Experimental Methodology).
+//!
+//! The global dataset is split across the `n` sites by one of the paper's
+//! four methods. The partition scheme — not the topology — is what
+//! creates the *local-cost imbalance* that separates Algorithm 1 from the
+//! COMBINE baseline, so these follow the paper exactly:
+//!
+//! - **uniform**: each point to a uniformly random site;
+//! - **similarity**: each site gets a random associated point; points go
+//!   to sites with probability proportional to a Gaussian-kernel
+//!   similarity to the associated point;
+//! - **weighted**: sites draw weights `|N(0,1)|`; points go to sites with
+//!   probability proportional to site weight;
+//! - **degree**: like weighted, with the site's topology degree as its
+//!   weight (used with preferential-attachment graphs).
+
+use crate::points::{dist2, Dataset};
+use crate::rng::Pcg64;
+use crate::topology::Graph;
+
+/// Which of the paper's partition methods to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Uniformly random site per point.
+    Uniform,
+    /// Gaussian-kernel similarity to per-site associated points.
+    Similarity,
+    /// Site weights drawn `|N(0,1)|`.
+    Weighted,
+    /// Site weight = topology degree (requires the graph).
+    Degree,
+}
+
+impl Scheme {
+    /// Name used by CLI / figure titles.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Uniform => "uniform",
+            Scheme::Similarity => "similarity",
+            Scheme::Weighted => "weighted",
+            Scheme::Degree => "degree",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Scheme> {
+        Some(match s {
+            "uniform" => Scheme::Uniform,
+            "similarity" => Scheme::Similarity,
+            "weighted" => Scheme::Weighted,
+            "degree" => Scheme::Degree,
+            _ => return None,
+        })
+    }
+
+    /// Split `data` into `sites` local datasets.
+    ///
+    /// For [`Scheme::Degree`] use [`Scheme::partition_on`] (needs the
+    /// topology); calling `partition` with `Degree` panics.
+    pub fn partition(self, data: &Dataset, sites: usize, rng: &mut Pcg64) -> Vec<Dataset> {
+        match self {
+            Scheme::Uniform => uniform(data, sites, rng),
+            Scheme::Similarity => similarity(data, sites, rng),
+            Scheme::Weighted => {
+                let w: Vec<f64> = (0..sites).map(|_| rng.normal().abs()).collect();
+                by_site_weight(data, &w, rng)
+            }
+            Scheme::Degree => panic!("Degree partition needs a graph; use partition_on"),
+        }
+    }
+
+    /// Split `data` across the nodes of `graph` (any scheme; required for
+    /// [`Scheme::Degree`]).
+    pub fn partition_on(self, data: &Dataset, graph: &Graph, rng: &mut Pcg64) -> Vec<Dataset> {
+        match self {
+            Scheme::Degree => {
+                let w: Vec<f64> = (0..graph.n()).map(|v| graph.degree(v) as f64).collect();
+                by_site_weight(data, &w, rng)
+            }
+            other => other.partition(data, graph.n(), rng),
+        }
+    }
+}
+
+/// Uniform partition.
+fn uniform(data: &Dataset, sites: usize, rng: &mut Pcg64) -> Vec<Dataset> {
+    let mut parts: Vec<Dataset> = (0..sites)
+        .map(|_| Dataset::with_capacity(data.n() / sites + 1, data.d))
+        .collect();
+    for i in 0..data.n() {
+        parts[rng.below(sites)].push(data.row(i));
+    }
+    parts
+}
+
+/// Similarity-based partition with Gaussian kernel
+/// `exp(-||p - a_s||^2 / (2 sigma^2))`. The bandwidth follows the median
+/// trick scaled down by the site count: `sigma^2` = (mean squared
+/// inter-associate distance) / 8, which keeps the kernel informative at
+/// any data scale *and* sharp enough that each site attracts a coherent
+/// region (the paper's similarity partition is meant to model
+/// geographically coherent sites with balanced local costs).
+fn similarity(data: &Dataset, sites: usize, rng: &mut Pcg64) -> Vec<Dataset> {
+    let assoc: Vec<usize> = (0..sites).map(|_| rng.below(data.n())).collect();
+    // Bandwidth from inter-associate distances.
+    let mut acc = 0.0;
+    let mut cnt = 0usize;
+    for i in 0..sites {
+        for j in (i + 1)..sites {
+            acc += dist2(data.row(assoc[i]), data.row(assoc[j]));
+            cnt += 1;
+        }
+    }
+    let sigma2 = if cnt > 0 && acc > 0.0 {
+        acc / cnt as f64 / 8.0
+    } else {
+        1.0
+    };
+    let mut parts: Vec<Dataset> = (0..sites)
+        .map(|_| Dataset::with_capacity(data.n() / sites + 1, data.d))
+        .collect();
+    let mut probs = vec![0.0f64; sites];
+    for i in 0..data.n() {
+        for (s, &a) in assoc.iter().enumerate() {
+            probs[s] = (-dist2(data.row(i), data.row(a)) / (2.0 * sigma2)).exp();
+        }
+        let total: f64 = probs.iter().sum();
+        let s = if total > 0.0 && total.is_finite() {
+            rng.weighted_index(&probs)
+        } else {
+            rng.below(sites) // all kernels underflowed: fall back
+        };
+        parts[s].push(data.row(i));
+    }
+    parts
+}
+
+/// Weighted partition given per-site weights.
+fn by_site_weight(data: &Dataset, weights: &[f64], rng: &mut Pcg64) -> Vec<Dataset> {
+    let mut parts: Vec<Dataset> = (0..weights.len())
+        .map(|_| Dataset::with_capacity(0, data.d))
+        .collect();
+    for i in 0..data.n() {
+        parts[rng.weighted_index(weights)].push(data.row(i));
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_mixture;
+    use crate::topology::generators;
+
+    fn total_points(parts: &[Dataset]) -> usize {
+        parts.iter().map(|p| p.n()).sum()
+    }
+
+    #[test]
+    fn all_schemes_conserve_points() {
+        let mut rng = Pcg64::seed_from(1);
+        let data = gaussian_mixture(&mut rng, 2_000, 6, 4);
+        let g = generators::preferential_attachment(&mut rng, 10, 2);
+        for scheme in [
+            Scheme::Uniform,
+            Scheme::Similarity,
+            Scheme::Weighted,
+            Scheme::Degree,
+        ] {
+            let parts = scheme.partition_on(&data, &g, &mut rng);
+            assert_eq!(parts.len(), 10);
+            assert_eq!(total_points(&parts), data.n(), "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn uniform_is_balanced() {
+        let mut rng = Pcg64::seed_from(2);
+        let data = gaussian_mixture(&mut rng, 10_000, 4, 4);
+        let parts = Scheme::Uniform.partition(&data, 10, &mut rng);
+        for p in &parts {
+            assert!((p.n() as f64 - 1_000.0).abs() < 200.0, "n={}", p.n());
+        }
+    }
+
+    #[test]
+    fn weighted_is_imbalanced() {
+        let mut rng = Pcg64::seed_from(3);
+        let data = gaussian_mixture(&mut rng, 10_000, 4, 4);
+        let parts = Scheme::Weighted.partition(&data, 10, &mut rng);
+        let max = parts.iter().map(|p| p.n()).max().unwrap();
+        let min = parts.iter().map(|p| p.n()).min().unwrap();
+        assert!(max > 2 * min.max(1), "max={max} min={min}");
+    }
+
+    #[test]
+    fn degree_follows_topology_degree() {
+        let mut rng = Pcg64::seed_from(4);
+        let data = gaussian_mixture(&mut rng, 20_000, 4, 4);
+        let g = generators::star(10); // hub degree 9, leaves degree 1
+        let parts = Scheme::Degree.partition_on(&data, &g, &mut rng);
+        let hub = parts[0].n() as f64;
+        let leaf_mean =
+            parts[1..].iter().map(|p| p.n()).sum::<usize>() as f64 / 9.0;
+        let ratio = hub / leaf_mean;
+        assert!((ratio - 9.0).abs() < 2.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn similarity_groups_nearby_points() {
+        // Two tight, far-apart blobs and 2 sites: each site's points
+        // should be dominated by one blob.
+        let mut rng = Pcg64::seed_from(5);
+        let mut data = Dataset::with_capacity(400, 2);
+        for i in 0..400 {
+            let base = if i < 200 { -50.0 } else { 50.0 };
+            data.push(&[
+                base + rng.normal() as f32,
+                base + rng.normal() as f32,
+            ]);
+        }
+        // Retry until associated points land in different blobs (random).
+        for attempt in 0..20 {
+            let mut r2 = Pcg64::seed_from(100 + attempt);
+            let parts = Scheme::Similarity.partition(&data, 2, &mut r2);
+            if parts[0].n() < 10 || parts[1].n() < 10 {
+                continue;
+            }
+            let frac_left = |p: &Dataset| {
+                p.data.chunks(2).filter(|c| c[0] < 0.0).count() as f64
+                    / p.n() as f64
+            };
+            let f0 = frac_left(&parts[0]);
+            let f1 = frac_left(&parts[1]);
+            if (f0 - f1).abs() > 0.6 {
+                return; // clearly separated — pass
+            }
+        }
+        panic!("similarity partition never separated the blobs");
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a graph")]
+    fn degree_without_graph_panics() {
+        let mut rng = Pcg64::seed_from(6);
+        let data = gaussian_mixture(&mut rng, 100, 2, 2);
+        Scheme::Degree.partition(&data, 4, &mut rng);
+    }
+
+    #[test]
+    fn parse_names_round_trip() {
+        for s in [
+            Scheme::Uniform,
+            Scheme::Similarity,
+            Scheme::Weighted,
+            Scheme::Degree,
+        ] {
+            assert_eq!(Scheme::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,247 @@
+//! Core data containers: dense row-major point sets and weighted sets.
+//!
+//! Everything downstream (partitions, solvers, coresets, the PJRT
+//! executors) works over these two types. Points are `f32` row-major —
+//! the exact layout the AOT artifacts expect — while all *aggregates*
+//! (costs, weights, sums) are accumulated in `f64` to keep the
+//! coreset-quality guarantees from drowning in rounding error.
+
+/// A dense set of `n` points in `R^d`, row-major `f32`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Dataset {
+    /// Row-major coordinates, `len == n * d`.
+    pub data: Vec<f32>,
+    /// Dimensionality.
+    pub d: usize,
+}
+
+impl Dataset {
+    /// Build from a flat row-major buffer.
+    pub fn from_flat(data: Vec<f32>, d: usize) -> Self {
+        assert!(d > 0 && data.len() % d == 0, "flat len {} % d {}", data.len(), d);
+        Dataset { data, d }
+    }
+
+    /// Build with capacity for `n` points.
+    pub fn with_capacity(n: usize, d: usize) -> Self {
+        Dataset {
+            data: Vec::with_capacity(n * d),
+            d,
+        }
+    }
+
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    /// True when the set holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Coordinates of point `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Append one point.
+    pub fn push(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.d);
+        self.data.extend_from_slice(p);
+    }
+
+    /// Gather rows by index into a new dataset.
+    pub fn gather(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::with_capacity(idx.len(), self.d);
+        for &i in idx {
+            out.push(self.row(i));
+        }
+        out
+    }
+
+    /// Squared Euclidean distance between point `i` and an external point.
+    #[inline]
+    pub fn dist2_to(&self, i: usize, q: &[f32]) -> f64 {
+        dist2(self.row(i), q)
+    }
+
+    /// Coordinate-wise mean of the whole set (f64 accumulation).
+    pub fn mean(&self) -> Vec<f32> {
+        let n = self.n();
+        assert!(n > 0, "mean of empty dataset");
+        let mut acc = vec![0.0f64; self.d];
+        for i in 0..n {
+            for (a, &x) in acc.iter_mut().zip(self.row(i)) {
+                *a += x as f64;
+            }
+        }
+        acc.iter().map(|&a| (a / n as f64) as f32).collect()
+    }
+}
+
+/// Squared Euclidean distance between two coordinate slices.
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let diff = (x - y) as f64;
+        acc += diff * diff;
+    }
+    acc
+}
+
+/// A weighted point set: the universal currency of the coreset pipeline.
+///
+/// Raw data is a weighted set with unit weights; coresets are weighted
+/// sets with importance weights; messages carry weighted sets. The
+/// *communication size* of a weighted set is `n` points (the paper counts
+/// transmitted points, and a weight rides along with its point).
+///
+/// Weights may be *negative*: the paper's center reweighting
+/// `w_b = |P_b| − Σ_{q∈P_b∩S} w_q` (Algorithm 1) can dip below zero.
+/// Solvers that need non-negative weights use the clamped construction
+/// (see `coreset::sensitivity::SampleParams::clamp_center_weights`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WeightedSet {
+    /// The points.
+    pub points: Dataset,
+    /// One non-negative weight per point.
+    pub weights: Vec<f64>,
+}
+
+impl WeightedSet {
+    /// Wrap a dataset with unit weights.
+    pub fn unit(points: Dataset) -> Self {
+        let n = points.n();
+        WeightedSet {
+            points,
+            weights: vec![1.0; n],
+        }
+    }
+
+    /// Build from parts, validating lengths and finiteness.
+    pub fn new(points: Dataset, weights: Vec<f64>) -> Self {
+        assert_eq!(points.n(), weights.len());
+        debug_assert!(weights.iter().all(|&w| w.is_finite()));
+        WeightedSet { points, weights }
+    }
+
+    /// Empty set of dimension `d`.
+    pub fn empty(d: usize) -> Self {
+        WeightedSet {
+            points: Dataset::with_capacity(0, d),
+            weights: vec![],
+        }
+    }
+
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.points.n()
+    }
+
+    /// Dimensionality.
+    pub fn d(&self) -> usize {
+        self.points.d
+    }
+
+    /// Total weight (≈ |P| for a faithful coreset of P).
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+
+    /// Append one weighted point (signed weights allowed, see type docs).
+    pub fn push(&mut self, p: &[f32], w: f64) {
+        debug_assert!(w.is_finite(), "weight {w}");
+        self.points.push(p);
+        self.weights.push(w);
+    }
+
+    /// Concatenate another weighted set (union of multisets).
+    pub fn extend(&mut self, other: &WeightedSet) {
+        assert_eq!(self.d(), other.d());
+        self.points.data.extend_from_slice(&other.points.data);
+        self.weights.extend_from_slice(&other.weights);
+    }
+
+    /// Union of many weighted sets.
+    pub fn union<'a>(sets: impl IntoIterator<Item = &'a WeightedSet>) -> WeightedSet {
+        let mut iter = sets.into_iter();
+        let first = iter.next().expect("union of zero sets");
+        let mut out = first.clone();
+        for s in iter {
+            out.extend(s);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(rows: &[&[f32]]) -> Dataset {
+        let d = rows[0].len();
+        let mut out = Dataset::with_capacity(rows.len(), d);
+        for r in rows {
+            out.push(r);
+        }
+        out
+    }
+
+    #[test]
+    fn rows_round_trip() {
+        let d = ds(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(d.n(), 2);
+        assert_eq!(d.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn dist2_basic() {
+        assert_eq!(dist2(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(dist2(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let d = ds(&[&[0.0], &[1.0], &[2.0], &[3.0]]);
+        let g = d.gather(&[3, 1]);
+        assert_eq!(g.row(0), &[3.0]);
+        assert_eq!(g.row(1), &[1.0]);
+    }
+
+    #[test]
+    fn mean_is_centroid() {
+        let d = ds(&[&[0.0, 0.0], &[2.0, 4.0]]);
+        assert_eq!(d.mean(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mean_empty_panics() {
+        Dataset::with_capacity(0, 2).mean();
+    }
+
+    #[test]
+    fn weighted_total_and_union() {
+        let a = WeightedSet::new(ds(&[&[1.0]]), vec![2.0]);
+        let b = WeightedSet::new(ds(&[&[2.0], &[3.0]]), vec![1.0, 0.5]);
+        let u = WeightedSet::union([&a, &b]);
+        assert_eq!(u.n(), 3);
+        assert!((u.total_weight() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_weights() {
+        let w = WeightedSet::unit(ds(&[&[0.0], &[1.0]]));
+        assert_eq!(w.weights, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_flat_rejects_ragged() {
+        Dataset::from_flat(vec![1.0, 2.0, 3.0], 2);
+    }
+}

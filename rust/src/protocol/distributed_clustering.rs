@@ -1,0 +1,404 @@
+//! **Algorithm 2** — end-to-end distributed clustering drivers.
+//!
+//! Variants: the paper's algorithm over general graphs (flooding) and
+//! over rooted trees (converge-cast), plus the two baselines wired
+//! through the same network simulator so every figure compares *measured*
+//! communication, not assumed bounds.
+
+use crate::clustering::backend::Backend;
+use crate::clustering::{approx_solution, Solution};
+use crate::coreset::combine::{self, CombineConfig};
+use crate::coreset::distributed::{self, allocate_budget, local_cost, DistributedConfig};
+use crate::coreset::zhang::{self, ZhangConfig};
+use crate::coreset::Coreset;
+use crate::network::{Network, Payload};
+use crate::points::{Dataset, WeightedSet};
+use crate::protocol::{broadcast_down, converge_cast, flood};
+use crate::rng::Pcg64;
+use crate::topology::{Graph, SpanningTree};
+
+/// Outcome of one distributed clustering run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// The k centers of the final solution.
+    pub centers: Dataset,
+    /// Cost of the solution *on the coreset* (the solver's view).
+    pub coreset_cost: f64,
+    /// The global coreset the solution was computed on.
+    pub coreset: Coreset,
+    /// Total measured communication (points transmitted).
+    pub comm_points: usize,
+    /// Synchronous network rounds used.
+    pub rounds: usize,
+    /// Algorithm label for reports.
+    pub algorithm: &'static str,
+}
+
+fn solve_on(
+    coreset: &Coreset,
+    k: usize,
+    cfg_obj: crate::clustering::Objective,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> Solution {
+    approx_solution(&coreset.set, k, cfg_obj, backend, rng, 40)
+}
+
+/// The paper's algorithm on a general graph: distributed coreset
+/// construction with flooding for both the cost exchange and the coreset
+/// exchange. Every node ends holding the full coreset (as in Algorithm
+/// 2); the solver runs once since all nodes compute identically.
+pub fn cluster_on_graph(
+    graph: &Graph,
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> anyhow::Result<RunResult> {
+    anyhow::ensure!(graph.n() == locals.len(), "one local set per node");
+    let mut net = Network::new(graph.clone()).without_transcript();
+
+    // Round 1: local solves; flood the scalar costs.
+    let summaries: Vec<_> = locals
+        .iter()
+        .map(|p| distributed::round1(p, cfg, backend, rng))
+        .collect();
+    let cost_payloads: Vec<Payload> = summaries
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Payload::LocalCost {
+            site: i,
+            cost: local_cost(s, cfg.objective),
+        })
+        .collect();
+    let held = flood(&mut net, cost_payloads);
+
+    // Every node now knows every cost; reconstruct (identically) at node 0.
+    let costs: Vec<f64> = held[0]
+        .iter()
+        .map(|p| match p {
+            Payload::LocalCost { cost, .. } => *cost,
+            _ => unreachable!(),
+        })
+        .collect();
+    let total: f64 = costs.iter().sum();
+    let budgets = allocate_budget(cfg.t, &costs);
+
+    // Round 2: local portions; flood them so all nodes hold the coreset.
+    let portions: Vec<Coreset> = locals
+        .iter()
+        .zip(&summaries)
+        .zip(&budgets)
+        .map(|((p, s), &t_i)| distributed::round2(p, s, cfg, t_i, total, rng))
+        .collect();
+    let portion_payloads: Vec<Payload> = portions
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Payload::Portion {
+            site: i,
+            set: std::sync::Arc::new(c.set.clone()),
+        })
+        .collect();
+    flood(&mut net, portion_payloads);
+
+    let coreset = distributed::union(&portions);
+    let sol = solve_on(&coreset, cfg.k, cfg.objective, backend, rng);
+    Ok(RunResult {
+        centers: sol.centers,
+        coreset_cost: sol.cost,
+        coreset,
+        comm_points: net.cost_points(),
+        rounds: net.round(),
+        algorithm: "distributed-coreset (Alg.1+3)",
+    })
+}
+
+/// The paper's algorithm on a rooted tree (Theorem 3): costs converge to
+/// the root, the total broadcasts down, portions converge to the root,
+/// the root solves and broadcasts the centers.
+pub fn cluster_on_tree(
+    tree: &SpanningTree,
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> anyhow::Result<RunResult> {
+    anyhow::ensure!(tree.n() == locals.len(), "one local set per node");
+    let mut net = Network::new(tree.as_graph()).without_transcript();
+
+    let summaries: Vec<_> = locals
+        .iter()
+        .map(|p| distributed::round1(p, cfg, backend, rng))
+        .collect();
+    let cost_payloads: Vec<Payload> = summaries
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Payload::LocalCost {
+            site: i,
+            cost: local_cost(s, cfg.objective),
+        })
+        .collect();
+    let at_root = converge_cast(&mut net, tree, cost_payloads);
+    let costs: Vec<f64> = at_root
+        .iter()
+        .map(|p| match p {
+            Payload::LocalCost { cost, .. } => *cost,
+            _ => unreachable!(),
+        })
+        .collect();
+    let total: f64 = costs.iter().sum();
+    broadcast_down(&mut net, tree, &Payload::Scalar(total));
+
+    let budgets = allocate_budget(cfg.t, &costs);
+    let portions: Vec<Coreset> = locals
+        .iter()
+        .zip(&summaries)
+        .zip(&budgets)
+        .map(|((p, s), &t_i)| distributed::round2(p, s, cfg, t_i, total, rng))
+        .collect();
+    let portion_payloads: Vec<Payload> = portions
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Payload::Portion {
+            site: i,
+            set: std::sync::Arc::new(c.set.clone()),
+        })
+        .collect();
+    converge_cast(&mut net, tree, portion_payloads);
+
+    let coreset = distributed::union(&portions);
+    let sol = solve_on(&coreset, cfg.k, cfg.objective, backend, rng);
+    broadcast_down(&mut net, tree, &Payload::Centers(sol.centers.clone()));
+    Ok(RunResult {
+        centers: sol.centers,
+        coreset_cost: sol.cost,
+        coreset,
+        comm_points: net.cost_points(),
+        rounds: net.round(),
+        algorithm: "distributed-coreset (tree)",
+    })
+}
+
+/// COMBINE baseline on a general graph: local FL11 coresets flooded to
+/// every node.
+pub fn combine_on_graph(
+    graph: &Graph,
+    locals: &[WeightedSet],
+    cfg: &CombineConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> anyhow::Result<RunResult> {
+    anyhow::ensure!(graph.n() == locals.len());
+    let mut net = Network::new(graph.clone()).without_transcript();
+    let portions = combine::build_portions(locals, cfg, backend, rng);
+    let payloads: Vec<Payload> = portions
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Payload::Portion {
+            site: i,
+            set: std::sync::Arc::new(c.set.clone()),
+        })
+        .collect();
+    flood(&mut net, payloads);
+    let coreset = distributed::union(&portions);
+    let sol = solve_on(&coreset, cfg.k, cfg.objective, backend, rng);
+    Ok(RunResult {
+        centers: sol.centers,
+        coreset_cost: sol.cost,
+        coreset,
+        comm_points: net.cost_points(),
+        rounds: net.round(),
+        algorithm: "combine",
+    })
+}
+
+/// COMBINE baseline on a rooted tree: local coresets converge to the
+/// root, which solves and broadcasts.
+pub fn combine_on_tree(
+    tree: &SpanningTree,
+    locals: &[WeightedSet],
+    cfg: &CombineConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> anyhow::Result<RunResult> {
+    anyhow::ensure!(tree.n() == locals.len());
+    let mut net = Network::new(tree.as_graph()).without_transcript();
+    let portions = combine::build_portions(locals, cfg, backend, rng);
+    let payloads: Vec<Payload> = portions
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Payload::Portion {
+            site: i,
+            set: std::sync::Arc::new(c.set.clone()),
+        })
+        .collect();
+    converge_cast(&mut net, tree, payloads);
+    let coreset = distributed::union(&portions);
+    let sol = solve_on(&coreset, cfg.k, cfg.objective, backend, rng);
+    broadcast_down(&mut net, tree, &Payload::Centers(sol.centers.clone()));
+    Ok(RunResult {
+        centers: sol.centers,
+        coreset_cost: sol.cost,
+        coreset,
+        comm_points: net.cost_points(),
+        rounds: net.round(),
+        algorithm: "combine (tree)",
+    })
+}
+
+/// Zhang-et-al. baseline on a rooted tree: coreset-of-coresets composed
+/// bottom-up, each hop charged through the simulator.
+pub fn zhang_on_tree(
+    tree: &SpanningTree,
+    locals: &[WeightedSet],
+    cfg: &ZhangConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> anyhow::Result<RunResult> {
+    anyhow::ensure!(tree.n() == locals.len());
+    let mut net = Network::new(tree.as_graph()).without_transcript();
+    let result = zhang::build_on_tree(locals, tree, cfg, backend, rng);
+    // Charge each child -> parent summary transfer on the simulator.
+    for v in 0..tree.n() {
+        if v != tree.root && result.sent_points[v] > 0 {
+            let set = WeightedSet::new(
+                Dataset::from_flat(
+                    vec![0.0; result.sent_points[v] * locals[v].d().max(1)],
+                    locals[v].d().max(1),
+                ),
+                vec![0.0; result.sent_points[v]],
+            );
+            net.send(v, tree.parent[v], Payload::Portion { site: v, set: std::sync::Arc::new(set) });
+            net.step();
+            net.recv_all(tree.parent[v]);
+        }
+    }
+    let sol = solve_on(&result.coreset, cfg.k, cfg.objective, backend, rng);
+    broadcast_down(&mut net, tree, &Payload::Centers(sol.centers.clone()));
+    Ok(RunResult {
+        centers: sol.centers,
+        coreset_cost: sol.cost,
+        coreset: result.coreset,
+        comm_points: net.cost_points(),
+        rounds: net.round(),
+        algorithm: "zhang (tree)",
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::clustering::{cost_of, Objective};
+    use crate::data::synthetic::gaussian_mixture;
+    use crate::partition::Scheme;
+    use crate::topology::generators;
+
+    fn setup(seed: u64, sites: usize) -> (Graph, Vec<WeightedSet>, WeightedSet) {
+        let mut rng = Pcg64::seed_from(seed);
+        let data = gaussian_mixture(&mut rng, 4_000, 5, 4);
+        let g = generators::erdos_renyi_connected(&mut rng, sites, 0.3);
+        let locals: Vec<WeightedSet> = Scheme::Weighted
+            .partition_on(&data, &g, &mut rng)
+            .into_iter()
+            .map(WeightedSet::unit)
+            .collect();
+        let global = WeightedSet::union(locals.iter());
+        (g, locals, global)
+    }
+
+    #[test]
+    fn graph_run_produces_good_solution() {
+        let (g, locals, global) = setup(1, 8);
+        let cfg = DistributedConfig {
+            t: 800,
+            k: 4,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(2);
+        let run = cluster_on_graph(&g, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        assert_eq!(run.centers.n(), 4);
+        assert!(run.comm_points > 0);
+
+        // Solution quality on the *global* data vs direct clustering.
+        let mut rng2 = Pcg64::seed_from(3);
+        let direct = approx_solution(&global, 4, Objective::KMeans, &RustBackend, &mut rng2, 40);
+        let run_cost = cost_of(&global, &run.centers, Objective::KMeans);
+        let ratio = run_cost / direct.cost;
+        assert!(ratio < 1.3, "cost ratio {ratio}");
+    }
+
+    #[test]
+    fn graph_comm_matches_2m_formula() {
+        let (g, locals, _) = setup(4, 6);
+        let cfg = DistributedConfig {
+            t: 300,
+            k: 3,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(5);
+        let run = cluster_on_graph(&g, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        // Flood #1: n scalars -> 2 m n. Flood #2: coreset points ->
+        // 2 m (t + n k).
+        let n = g.n();
+        let expected = 2 * g.m() * n + 2 * g.m() * (cfg.t + n * cfg.k);
+        assert_eq!(run.comm_points, expected);
+    }
+
+    #[test]
+    fn tree_run_cheaper_than_graph_run() {
+        let (g, locals, _) = setup(6, 10);
+        let cfg = DistributedConfig {
+            t: 500,
+            k: 4,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(7);
+        let tree = SpanningTree::random_root(&g, &mut rng);
+        let run_tree =
+            cluster_on_tree(&tree, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        let run_graph =
+            cluster_on_graph(&g, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        assert!(
+            run_tree.comm_points < run_graph.comm_points,
+            "tree {} !< graph {}",
+            run_tree.comm_points,
+            run_graph.comm_points
+        );
+        assert_eq!(run_tree.centers.n(), 4);
+    }
+
+    #[test]
+    fn combine_runs_on_both_topologies() {
+        let (g, locals, global) = setup(8, 6);
+        let cfg = CombineConfig {
+            t: 600,
+            k: 4,
+            objective: Objective::KMeans,
+        };
+        let mut rng = Pcg64::seed_from(9);
+        let tree = SpanningTree::random_root(&g, &mut rng);
+        let a = combine_on_graph(&g, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        let b = combine_on_tree(&tree, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        for run in [&a, &b] {
+            let cost = cost_of(&global, &run.centers, Objective::KMeans);
+            assert!(cost.is_finite() && cost > 0.0);
+        }
+    }
+
+    #[test]
+    fn zhang_runs_and_charges_tree_edges() {
+        let (g, locals, global) = setup(10, 9);
+        let mut rng = Pcg64::seed_from(11);
+        let tree = SpanningTree::random_root(&g, &mut rng);
+        let cfg = ZhangConfig {
+            t_node: 120,
+            k: 4,
+            objective: Objective::KMeans,
+        };
+        let run = zhang_on_tree(&tree, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        assert!(run.comm_points > 0);
+        let cost = cost_of(&global, &run.centers, Objective::KMeans);
+        assert!(cost.is_finite() && cost > 0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! **Algorithm 3** — Message-Passing(I_i, N_i).
+//!
+//! Every node starts with a payload `I_i` and sends it to all neighbors;
+//! whenever a node receives a payload it has not seen, it records it and
+//! forwards it to all neighbors. Payloads propagate breadth-first, so
+//! after at most `diameter` rounds every node holds `{I_j : j ∈ [n]}`.
+//! Each node sends each payload to its neighbors exactly once, so the
+//! total communication is exactly `Σ_i |N_i| · Σ_j |I_j| = 2m Σ_j |I_j|`
+//! — the `O(m Σ |I_j|)` of Theorem 2, asserted exactly in the tests.
+
+use crate::network::{Network, Payload};
+use std::collections::HashSet;
+
+/// Flood one payload per node to every node. `payloads[i]` is node `i`'s
+/// `I_i` (must be floodable, i.e. carry an origin site id).
+///
+/// Returns, per node, all `n` payloads it ended up holding (its own
+/// included), ordered by origin site.
+pub fn flood(net: &mut Network, payloads: Vec<Payload>) -> Vec<Vec<Payload>> {
+    let n = net.n();
+    assert_eq!(payloads.len(), n, "one payload per node");
+    let mut seen: Vec<HashSet<(u8, usize)>> = vec![HashSet::new(); n];
+    let mut held: Vec<Vec<Payload>> = vec![Vec::new(); n];
+
+    // Initialize: R_i = {I_i}, send I_i to all neighbors.
+    for (i, payload) in payloads.into_iter().enumerate() {
+        let key = payload
+            .flood_key()
+            .expect("flooded payloads must have an origin");
+        assert_eq!(key.1, i, "payload origin must match its node");
+        seen[i].insert(key);
+        net.send_to_neighbors(i, &payload);
+        held[i].push(payload);
+    }
+
+    // Rounds until quiescent. Each delivery of an unseen payload
+    // triggers one forward to all neighbors.
+    while net.step() > 0 {
+        for v in 0..n {
+            for (_, payload) in net.recv_all(v) {
+                let key = payload.flood_key().expect("floodable");
+                if seen[v].insert(key) {
+                    net.send_to_neighbors(v, &payload);
+                    held[v].push(payload);
+                }
+            }
+        }
+    }
+
+    for (v, h) in held.iter_mut().enumerate() {
+        assert_eq!(
+            h.len(),
+            n,
+            "node {v} only saw {} of {n} payloads (disconnected graph?)",
+            h.len()
+        );
+        h.sort_by_key(|p| p.flood_key().unwrap());
+    }
+    held
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Network;
+    use crate::rng::Pcg64;
+    use crate::topology::{diameter, generators};
+
+    fn scalar_payloads(n: usize) -> Vec<Payload> {
+        (0..n)
+            .map(|i| Payload::LocalCost {
+                site: i,
+                cost: i as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_nodes_receive_all_payloads() {
+        for g in [
+            generators::path(6),
+            generators::grid(3, 3),
+            generators::star(7),
+            generators::complete(5),
+        ] {
+            let n = g.n();
+            let mut net = Network::new(g);
+            let held = flood(&mut net, scalar_payloads(n));
+            for h in &held {
+                let sites: Vec<usize> = h
+                    .iter()
+                    .map(|p| p.flood_key().unwrap().1)
+                    .collect();
+                assert_eq!(sites, (0..n).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn cost_is_exactly_2m_sum_sizes() {
+        // Unit payloads: Σ|I_j| = n, so cost must be exactly 2 m n.
+        let mut rng = Pcg64::seed_from(1);
+        let g = generators::erdos_renyi_connected(&mut rng, 20, 0.25);
+        let (n, m) = (g.n(), g.m());
+        let mut net = Network::new(g);
+        flood(&mut net, scalar_payloads(n));
+        assert_eq!(net.cost_points(), 2 * m * n);
+    }
+
+    #[test]
+    fn rounds_bounded_by_diameter_plus_one() {
+        let g = generators::path(10);
+        let diam = diameter(&g);
+        let mut net = Network::new(g);
+        flood(&mut net, scalar_payloads(10));
+        // One extra quiescence-check round at the end.
+        assert!(
+            net.round() <= diam + 2,
+            "rounds {} > diam {diam} + 2",
+            net.round()
+        );
+    }
+
+    #[test]
+    fn works_on_random_trees() {
+        let mut rng = Pcg64::seed_from(2);
+        for _ in 0..5 {
+            let g = generators::random_tree(&mut rng, 15);
+            let m = g.m();
+            let mut net = Network::new(g);
+            flood(&mut net, scalar_payloads(15));
+            assert_eq!(net.cost_points(), 2 * m * 15);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "origin")]
+    fn rejects_unfloodable_payloads() {
+        let mut net = Network::new(generators::path(2));
+        flood(&mut net, vec![Payload::Scalar(1.0), Payload::Scalar(2.0)]);
+    }
+}

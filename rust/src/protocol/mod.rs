@@ -1,0 +1,17 @@
+//! Distributed protocols (§4): flooding message-passing on general
+//! graphs (Algorithm 3), rooted-tree aggregation (Theorem 3), and the
+//! end-to-end distributed clustering drivers (Algorithm 2) that tie the
+//! coreset construction, the network simulator and the solvers together.
+
+mod distributed_clustering;
+mod flooding;
+mod reliable;
+mod tree;
+
+pub use distributed_clustering::{
+    cluster_on_graph, cluster_on_tree, combine_on_graph, combine_on_tree, zhang_on_tree,
+    RunResult,
+};
+pub use flooding::flood;
+pub use reliable::flood_reliable;
+pub use tree::{broadcast_down, converge_cast};

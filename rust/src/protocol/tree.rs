@@ -1,0 +1,144 @@
+//! Rooted-tree communication primitives (Theorem 3): converge-cast
+//! (leaves → root, accumulating payload sets hop by hop) and broadcast
+//! (root → leaves). Every hop moves through the [`Network`] simulator so
+//! the `O(h · Σ|D_i|)` communication accounting is measured, not assumed.
+
+use crate::network::{Network, Payload};
+use crate::topology::SpanningTree;
+
+/// Send every node's payload up to the root; the root receives all `n`
+/// payloads (its own included in the return). Each payload crosses
+/// `depth(origin)` edges, so total cost is `Σ_i depth_i · |I_i| ≤ h Σ|I_i|`.
+///
+/// Returns the payloads collected at the root, ordered by origin where
+/// the payload carries one.
+pub fn converge_cast(net: &mut Network, tree: &SpanningTree, payloads: Vec<Payload>) -> Vec<Payload> {
+    let n = net.n();
+    assert_eq!(payloads.len(), n);
+    assert_eq!(tree.n(), n);
+    // relay[v]: payloads waiting at v to move one hop up.
+    let mut relay: Vec<Vec<Payload>> = payloads.into_iter().map(|p| vec![p]).collect();
+    let mut at_root: Vec<Payload> = Vec::new();
+    at_root.append(&mut relay[tree.root]);
+
+    loop {
+        let mut sent_any = false;
+        for v in 0..n {
+            if v == tree.root || relay[v].is_empty() {
+                continue;
+            }
+            let parent = tree.parent[v];
+            for p in relay[v].drain(..) {
+                net.send(v, parent, p);
+                sent_any = true;
+            }
+        }
+        if !sent_any {
+            break;
+        }
+        net.step();
+        for v in 0..n {
+            for (_, p) in net.recv_all(v) {
+                if v == tree.root {
+                    at_root.push(p);
+                } else {
+                    relay[v].push(p);
+                }
+            }
+        }
+    }
+    at_root.sort_by_key(|p| p.flood_key().map(|k| k.1).unwrap_or(usize::MAX));
+    at_root
+}
+
+/// Broadcast one payload from the root to every node (each edge carries
+/// it exactly once: cost `(n-1) · |payload|`). Returns nothing; every
+/// node is assumed to record it on receipt (the drivers do).
+pub fn broadcast_down(net: &mut Network, tree: &SpanningTree, payload: &Payload) {
+    // BFS order: parents before children, so one pass per depth level.
+    let mut order: Vec<usize> = (0..tree.n()).collect();
+    order.sort_by_key(|&v| tree.depth[v]);
+    let mut pending = vec![false; tree.n()];
+    pending[tree.root] = true;
+    for &v in &order {
+        if !pending[v] {
+            continue;
+        }
+        for &c in &tree.children[v] {
+            net.send(v, c, payload.clone());
+            pending[c] = true;
+        }
+        net.step();
+        // Drain inboxes (delivery only; content is `payload` everywhere).
+        for u in 0..tree.n() {
+            net.recv_all(u);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators;
+
+    fn tree_over(g: crate::topology::Graph, root: usize) -> SpanningTree {
+        SpanningTree::bfs(&g, root)
+    }
+
+    #[test]
+    fn converge_cast_collects_everything() {
+        let g = generators::grid(3, 3);
+        let tree = tree_over(g.clone(), 4);
+        let mut net = Network::new(g);
+        let payloads: Vec<Payload> = (0..9)
+            .map(|i| Payload::LocalCost {
+                site: i,
+                cost: i as f64,
+            })
+            .collect();
+        let collected = converge_cast(&mut net, &tree, payloads);
+        assert_eq!(collected.len(), 9);
+        let sites: Vec<usize> = collected
+            .iter()
+            .map(|p| p.flood_key().unwrap().1)
+            .collect();
+        assert_eq!(sites, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn converge_cast_cost_is_sum_of_depths() {
+        let g = generators::path(5);
+        let tree = tree_over(g.clone(), 0); // depths 0,1,2,3,4
+        let mut net = Network::new(g);
+        let payloads: Vec<Payload> = (0..5)
+            .map(|i| Payload::LocalCost {
+                site: i,
+                cost: 0.0,
+            })
+            .collect();
+        converge_cast(&mut net, &tree, payloads);
+        // Unit payloads: cost = Σ depth_i = 0+1+2+3+4 = 10.
+        assert_eq!(net.cost_points(), 10);
+    }
+
+    #[test]
+    fn broadcast_cost_is_n_minus_1() {
+        let g = generators::grid(3, 3);
+        let tree = tree_over(g.clone(), 0);
+        let mut net = Network::new(g);
+        broadcast_down(&mut net, &tree, &Payload::Scalar(7.0));
+        assert_eq!(net.cost_points(), 8);
+    }
+
+    #[test]
+    fn broadcast_reaches_leaves_of_deep_tree() {
+        let g = generators::path(6);
+        let tree = tree_over(g.clone(), 0);
+        let mut net = Network::new(g);
+        // Track delivery by transcript: edge (4,5) must carry the payload.
+        broadcast_down(&mut net, &tree, &Payload::Scalar(1.0));
+        let t = net.transcript();
+        assert!(t.iter().any(|e| e.from == 4 && e.to == 5));
+        assert_eq!(t.len(), 5);
+    }
+}

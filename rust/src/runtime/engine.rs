@@ -1,0 +1,232 @@
+//! The PJRT engine: compiles HLO-text artifacts once (cached) and
+//! executes them with shape padding/unpadding.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Sentinel coordinate for padded center rows (kept in lockstep with
+/// `python/compile/kernels/distance.py::PAD_CENTER`): large enough to
+/// dominate any real distance, small enough that `D * PAD_CENTER^2`
+/// stays finite in `f32`.
+pub const PAD_CENTER: f32 = 1e17;
+
+/// Outputs of one `assign_cost` chunk execution (already unpadded).
+#[derive(Debug)]
+pub struct AssignChunk {
+    /// Nearest-center index per point.
+    pub assign: Vec<i32>,
+    /// `w * d^2` per point.
+    pub kmeans_cost: Vec<f32>,
+    /// `w * d` per point.
+    pub kmedian_cost: Vec<f32>,
+}
+
+/// Outputs of one `lloyd_step` chunk execution (still padded `[K_a, D_a]`
+/// — the caller folds into its own accumulator).
+#[derive(Debug)]
+pub struct LloydChunk {
+    /// Weighted coordinate sums, row-major `[k_pad, d_pad]`.
+    pub sums: Vec<f32>,
+    /// Weighted counts per padded center.
+    pub counts: Vec<f32>,
+    /// Chunk's weighted k-means cost.
+    pub cost: f32,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+/// Loads + compiles artifacts on demand, caches the executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, &'static Compiled>>,
+}
+
+impl Engine {
+    /// Open the artifact directory and create a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True when an artifact of `entry` fits problem shape `(d, k)`.
+    pub fn supports(&self, entry: &str, d: usize, k: usize) -> bool {
+        self.manifest.select(entry, d, k).is_some()
+    }
+
+    fn compiled(&self, entry: &str, d: usize, k: usize) -> Result<&'static Compiled> {
+        let meta = self
+            .manifest
+            .select(entry, d, k)
+            .ok_or_else(|| anyhow!("no artifact for {entry} d={d} k={k}"))?
+            .clone();
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(c) = cache.get(&meta.name) {
+            return Ok(c);
+        }
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", meta.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+        // Executables live for the process lifetime; leaking keeps the
+        // borrow simple across the Mutex (bounded: one per artifact).
+        let leaked: &'static Compiled = Box::leak(Box::new(Compiled { exe, meta }));
+        cache.insert(leaked.meta.name.clone(), leaked);
+        Ok(leaked)
+    }
+
+    /// Pad `points [n, d]` / `weights [n]` / `centers [k, d]` to the
+    /// artifact shape and build the input literals.
+    fn pad_inputs(
+        points: &[f32],
+        weights: &[f32],
+        centers: &[f32],
+        d: usize,
+        k: usize,
+        meta: &ArtifactMeta,
+    ) -> Result<[xla::Literal; 3]> {
+        let n = weights.len();
+        assert!(n <= meta.n, "chunk larger than artifact N");
+        assert!(d <= meta.d && k <= meta.k);
+        let mut p_pad = vec![0.0f32; meta.n * meta.d];
+        for i in 0..n {
+            p_pad[i * meta.d..i * meta.d + d].copy_from_slice(&points[i * d..(i + 1) * d]);
+        }
+        let mut w_pad = vec![0.0f32; meta.n];
+        w_pad[..n].copy_from_slice(weights);
+        let mut c_pad = vec![PAD_CENTER; meta.k * meta.d];
+        for c in 0..k {
+            let row = &mut c_pad[c * meta.d..(c + 1) * meta.d];
+            row[..d].copy_from_slice(&centers[c * d..(c + 1) * d]);
+            row[d..].fill(0.0); // zero-pad D of real centers
+        }
+        let lp = xla::Literal::vec1(&p_pad)
+            .reshape(&[meta.n as i64, meta.d as i64])
+            .map_err(|e| anyhow!("reshape points: {e:?}"))?;
+        let lw = xla::Literal::vec1(&w_pad);
+        let lc = xla::Literal::vec1(&c_pad)
+            .reshape(&[meta.k as i64, meta.d as i64])
+            .map_err(|e| anyhow!("reshape centers: {e:?}"))?;
+        Ok([lp, lw, lc])
+    }
+
+    fn run(
+        &self,
+        entry: &str,
+        points: &[f32],
+        weights: &[f32],
+        centers: &[f32],
+        d: usize,
+        k: usize,
+    ) -> Result<(Vec<xla::Literal>, ArtifactMeta)> {
+        let compiled = self.compiled(entry, d, k)?;
+        let inputs = Self::pad_inputs(points, weights, centers, d, k, &compiled.meta)?;
+        let result = compiled
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {entry}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("tuple unwrap: {e:?}"))?;
+        Ok((parts, compiled.meta.clone()))
+    }
+
+    /// Execute one `assign_cost` chunk (`n ≤ 1024` points).
+    pub fn assign_cost_chunk(
+        &self,
+        points: &[f32],
+        weights: &[f32],
+        centers: &[f32],
+        d: usize,
+        k: usize,
+    ) -> Result<AssignChunk> {
+        let n = weights.len();
+        let (parts, _) = self.run("assign_cost", points, weights, centers, d, k)?;
+        let [a, kc, mc]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| anyhow!("assign_cost: expected 3 outputs"))?;
+        let mut assign = a.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        let mut kmeans = kc.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let mut kmedian = mc.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        assign.truncate(n);
+        kmeans.truncate(n);
+        kmedian.truncate(n);
+        Ok(AssignChunk {
+            assign,
+            kmeans_cost: kmeans,
+            kmedian_cost: kmedian,
+        })
+    }
+
+    /// Execute one `lloyd_step` chunk; returns padded accumulators plus
+    /// the artifact's padded shape `(k_pad, d_pad)`.
+    pub fn lloyd_step_chunk(
+        &self,
+        points: &[f32],
+        weights: &[f32],
+        centers: &[f32],
+        d: usize,
+        k: usize,
+    ) -> Result<(LloydChunk, usize, usize)> {
+        let (parts, meta) = self.run("lloyd_step", points, weights, centers, d, k)?;
+        let [s, c, cost]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| anyhow!("lloyd_step: expected 3 outputs"))?;
+        Ok((
+            LloydChunk {
+                sums: s.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                counts: c.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                cost: cost
+                    .get_first_element::<f32>()
+                    .map_err(|e| anyhow!("{e:?}"))?,
+            },
+            meta.k,
+            meta.d,
+        ))
+    }
+
+    /// Execute one `total_cost` chunk: returns `(kmeans, kmedian)` sums.
+    pub fn total_cost_chunk(
+        &self,
+        points: &[f32],
+        weights: &[f32],
+        centers: &[f32],
+        d: usize,
+        k: usize,
+    ) -> Result<(f32, f32)> {
+        let (parts, _) = self.run("total_cost", points, weights, centers, d, k)?;
+        let [kc, mc]: [xla::Literal; 2] = parts
+            .try_into()
+            .map_err(|_| anyhow!("total_cost: expected 2 outputs"))?;
+        Ok((
+            kc.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            mc.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// The chunk size artifacts were lowered at (points per execution).
+    pub fn chunk_n(&self, entry: &str, d: usize, k: usize) -> Option<usize> {
+        self.manifest.select(entry, d, k).map(|m| m.n)
+    }
+}

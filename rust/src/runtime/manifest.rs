@@ -1,0 +1,123 @@
+//! `artifacts/manifest.json` — what `aot.py` built and at which shapes.
+
+use crate::json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// Unique name, e.g. `assign_cost_n1024_d32_k16`.
+    pub name: String,
+    /// Entry point (`assign_cost`, `lloyd_step`, `total_cost`).
+    pub entry: String,
+    /// Chunk size N the artifact was lowered at.
+    pub n: usize,
+    /// Padded dimension D.
+    pub d: usize,
+    /// Padded center count K.
+    pub k: usize,
+    /// HLO text file (absolute, resolved against the manifest dir).
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text, resolving files against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest: missing 'artifacts' array"))?;
+        let mut out = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_s = |key: &str| {
+                a.get(key)
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("manifest entry: missing '{key}'"))
+            };
+            let get_n = |key: &str| {
+                a.get(key)
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("manifest entry: missing '{key}'"))
+            };
+            out.push(ArtifactMeta {
+                name: get_s("name")?.to_string(),
+                entry: get_s("entry")?.to_string(),
+                n: get_n("n")?,
+                d: get_n("d")?,
+                k: get_n("k")?,
+                path: dir.join(get_s("file")?),
+            });
+        }
+        if out.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest { artifacts: out })
+    }
+
+    /// Smallest artifact of `entry` that fits `(d, k)` (minimizing padded
+    /// area `D*K`); `None` when nothing fits.
+    pub fn select(&self, entry: &str, d: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == entry && a.d >= d && a.k >= k)
+            .min_by_key(|a| a.d * a.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name":"assign_cost_n1024_d16_k8","entry":"assign_cost","n":1024,"d":16,"k":8,"file":"a.hlo.txt"},
+        {"name":"assign_cost_n1024_d32_k16","entry":"assign_cost","n":1024,"d":32,"k":16,"file":"b.hlo.txt"},
+        {"name":"lloyd_step_n1024_d32_k16","entry":"lloyd_step","n":1024,"d":32,"k":16,"file":"c.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_resolves_paths() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(
+            m.artifacts[0].path,
+            PathBuf::from("/tmp/artifacts/a.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn select_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert_eq!(m.select("assign_cost", 10, 5).unwrap().d, 16);
+        assert_eq!(m.select("assign_cost", 17, 5).unwrap().d, 32);
+        assert_eq!(m.select("assign_cost", 20, 10).unwrap().k, 16);
+        assert!(m.select("assign_cost", 64, 8).is_none());
+        assert!(m.select("nope", 1, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_empty_and_malformed() {
+        assert!(Manifest::parse(r#"{"artifacts":[]}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"name":"x"}]}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse("not json", Path::new(".")).is_err());
+    }
+}

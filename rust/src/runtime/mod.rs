@@ -1,0 +1,27 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text,
+//! see `python/compile/aot.py`) and executes them from the Rust hot path.
+//!
+//! Python never runs here — `make artifacts` produced `artifacts/*.hlo.txt`
+//! once at build time, and this module compiles them with the XLA CPU
+//! PJRT client and exposes them behind the [`crate::clustering::backend::
+//! Backend`] trait as [`XlaBackend`].
+//!
+//! ## Padding contract (DESIGN.md §7, validated by `python/tests`)
+//!
+//! Artifacts have fixed shapes `(N=1024, D, K)`. Inputs are padded:
+//! - points: zero rows (weight 0 ⇒ cost-neutral), zero columns
+//!   (distance-neutral);
+//! - centers: zero columns + `PAD_CENTER = 1e17` sentinel rows whose
+//!   squared distance dominates every real distance without overflowing
+//!   `f32`, so they never win the argmin.
+
+mod engine;
+mod manifest;
+mod xla_backend;
+
+pub use engine::{Engine, PAD_CENTER};
+pub use manifest::{ArtifactMeta, Manifest};
+pub use xla_backend::XlaBackend;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

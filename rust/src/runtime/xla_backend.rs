@@ -1,0 +1,126 @@
+//! [`XlaBackend`]: the [`Backend`] implementation that routes the kernel
+//! operations through the AOT-compiled Pallas/JAX artifacts.
+//!
+//! Inputs of arbitrary `n` are processed in artifact-sized chunks
+//! (N=1024); `f64` weights are narrowed to `f32` for the wire and the
+//! accumulators are widened back to `f64`. Problem shapes larger than
+//! any artifact (`d > 128` or `k > 64` by default) fall back to the
+//! pure-Rust kernels with a log warning — correctness is never shape-
+//! limited, only acceleration.
+
+use super::Engine;
+use crate::clustering::backend::{Assignment, Backend, LloydStep, RustBackend};
+use crate::points::Dataset;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Backend executing on the PJRT CPU client via AOT artifacts.
+#[derive(Clone)]
+pub struct XlaBackend {
+    engine: Arc<Engine>,
+    fallback: RustBackend,
+}
+
+impl XlaBackend {
+    /// Load artifacts from `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<XlaBackend> {
+        Ok(XlaBackend {
+            engine: Arc::new(Engine::load(dir)?),
+            fallback: RustBackend,
+        })
+    }
+
+    /// Wrap an existing engine.
+    pub fn from_engine(engine: Arc<Engine>) -> XlaBackend {
+        XlaBackend {
+            engine,
+            fallback: RustBackend,
+        }
+    }
+
+    /// Access the underlying engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn weights_f32(weights: &[f64]) -> Vec<f32> {
+        weights.iter().map(|&w| w as f32).collect()
+    }
+}
+
+impl Backend for XlaBackend {
+    fn assign(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> Assignment {
+        let (n, d, k) = (points.n(), points.d, centers.n());
+        assert_eq!(weights.len(), n);
+        if !self.engine.supports("assign_cost", d, k) {
+            log::warn!("assign: no artifact for d={d} k={k}; pure-Rust fallback");
+            return self.fallback.assign(points, weights, centers);
+        }
+        let chunk = self.engine.chunk_n("assign_cost", d, k).unwrap();
+        let wf = Self::weights_f32(weights);
+        let mut out = Assignment {
+            assign: Vec::with_capacity(n),
+            kmeans_cost: Vec::with_capacity(n),
+            kmedian_cost: Vec::with_capacity(n),
+        };
+        for start in (0..n).step_by(chunk) {
+            let end = (start + chunk).min(n);
+            let res = self
+                .engine
+                .assign_cost_chunk(
+                    &points.data[start * d..end * d],
+                    &wf[start..end],
+                    &centers.data,
+                    d,
+                    k,
+                )
+                .expect("assign_cost chunk failed");
+            out.assign.extend(res.assign.iter().map(|&a| a as u32));
+            out.kmeans_cost
+                .extend(res.kmeans_cost.iter().map(|&c| c as f64));
+            out.kmedian_cost
+                .extend(res.kmedian_cost.iter().map(|&c| c as f64));
+        }
+        out
+    }
+
+    fn lloyd_step(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> LloydStep {
+        let (n, d, k) = (points.n(), points.d, centers.n());
+        assert_eq!(weights.len(), n);
+        if !self.engine.supports("lloyd_step", d, k) {
+            log::warn!("lloyd_step: no artifact for d={d} k={k}; pure-Rust fallback");
+            return self.fallback.lloyd_step(points, weights, centers);
+        }
+        let chunk = self.engine.chunk_n("lloyd_step", d, k).unwrap();
+        let wf = Self::weights_f32(weights);
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0.0f64; k];
+        let mut cost = 0.0f64;
+        for start in (0..n).step_by(chunk) {
+            let end = (start + chunk).min(n);
+            let (res, k_pad, d_pad) = self
+                .engine
+                .lloyd_step_chunk(
+                    &points.data[start * d..end * d],
+                    &wf[start..end],
+                    &centers.data,
+                    d,
+                    k,
+                )
+                .expect("lloyd_step chunk failed");
+            for c in 0..k {
+                counts[c] += res.counts[c] as f64;
+                for j in 0..d {
+                    sums[c * d + j] += res.sums[c * d_pad + j] as f64;
+                }
+            }
+            let _ = k_pad;
+            cost += res.cost as f64;
+        }
+        LloydStep { sums, counts, cost }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

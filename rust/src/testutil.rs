@@ -1,0 +1,104 @@
+//! Property-testing harness (the offline crate set has no `proptest`):
+//! seeded random-instance generators + a `for_all` driver that reports
+//! the failing seed so any counterexample reproduces deterministically.
+
+use crate::points::{Dataset, WeightedSet};
+use crate::rng::Pcg64;
+use crate::topology::{generators, Graph};
+
+/// Run `prop` over `cases` generated instances; panics with the seed of
+/// the first failing case (re-run with that seed to debug).
+pub fn for_all<G, T, P>(cases: usize, base_seed: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(case as u64);
+        let mut rng = Pcg64::seed_from(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for [`for_all`].
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// A random connected graph of 2..=max_n nodes (mixed families).
+pub fn arb_connected_graph(rng: &mut Pcg64, max_n: usize) -> Graph {
+    let n = 2 + rng.below(max_n.saturating_sub(1).max(1));
+    match rng.below(4) {
+        0 => generators::erdos_renyi_connected(rng, n, 0.45),
+        1 => {
+            let rows = 1 + rng.below(4);
+            let cols = n.div_ceil(rows).max(1);
+            generators::grid(rows, cols)
+        }
+        2 => generators::random_tree(rng, n),
+        _ => generators::preferential_attachment(rng, n.max(3), 2),
+    }
+}
+
+/// A random dataset: mixture with random shape parameters.
+pub fn arb_dataset(rng: &mut Pcg64, max_n: usize, max_d: usize) -> Dataset {
+    let n = 10 + rng.below(max_n.saturating_sub(10).max(1));
+    let d = 1 + rng.below(max_d);
+    let k = 1 + rng.below(6);
+    crate::data::synthetic::gaussian_mixture(rng, n, d, k)
+}
+
+/// A random weighted set (weights in (0, 2]).
+pub fn arb_weighted_set(rng: &mut Pcg64, max_n: usize, max_d: usize) -> WeightedSet {
+    let data = arb_dataset(rng, max_n, max_d);
+    let weights = (0..data.n()).map(|_| rng.uniform() * 2.0 + 1e-6).collect();
+    WeightedSet::new(data, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::connected;
+
+    #[test]
+    fn for_all_passes_trivially() {
+        for_all(10, 1, |rng| rng.below(100), |&x| {
+            prop_assert!(x < 100, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn for_all_reports_failures() {
+        for_all(10, 2, |rng| rng.below(100), |&x| {
+            prop_assert!(x < 5, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn arb_graph_always_connected() {
+        for_all(25, 3, |rng| arb_connected_graph(rng, 20), |g| {
+            prop_assert!(connected(g), "disconnected graph n={}", g.n());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn arb_weighted_set_valid() {
+        for_all(10, 4, |rng| arb_weighted_set(rng, 200, 8), |s| {
+            prop_assert!(s.n() >= 10, "too small");
+            prop_assert!(s.weights.iter().all(|&w| w > 0.0), "bad weight");
+            Ok(())
+        });
+    }
+}

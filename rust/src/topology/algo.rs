@@ -1,0 +1,230 @@
+//! Graph algorithms used by the protocols and the evaluation harness:
+//! BFS, connectivity, diameter, and BFS spanning trees (the paper
+//! restricts the Zhang-et-al. baseline to "a spanning tree by picking a
+//! root uniformly at random and performing a breadth first search").
+
+use super::Graph;
+use crate::rng::Pcg64;
+use std::collections::VecDeque;
+
+/// BFS hop distances from `src` (`usize::MAX` for unreachable nodes).
+pub fn bfs_distances(g: &Graph, src: usize) -> Vec<usize> {
+    let mut dist = vec![usize::MAX; g.n()];
+    let mut queue = VecDeque::new();
+    dist[src] = 0;
+    queue.push_back(src);
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            if dist[v] == usize::MAX {
+                dist[v] = dist[u] + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// True when every node is reachable from node 0 (or the graph is empty).
+pub fn connected(g: &Graph) -> bool {
+    if g.n() == 0 {
+        return true;
+    }
+    bfs_distances(g, 0).iter().all(|&d| d != usize::MAX)
+}
+
+/// Exact diameter by all-pairs BFS (fine at the paper's n <= 100 scale).
+/// Panics on disconnected graphs.
+pub fn diameter(g: &Graph) -> usize {
+    (0..g.n())
+        .map(|s| {
+            bfs_distances(g, s)
+                .into_iter()
+                .map(|d| {
+                    assert!(d != usize::MAX, "diameter of disconnected graph");
+                    d
+                })
+                .max()
+                .unwrap_or(0)
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// A rooted spanning tree: parent pointers + children lists + height.
+#[derive(Clone, Debug)]
+pub struct SpanningTree {
+    /// Root node id.
+    pub root: usize,
+    /// `parent[v]` (`parent[root] == root`).
+    pub parent: Vec<usize>,
+    /// Children lists.
+    pub children: Vec<Vec<usize>>,
+    /// Depth of each node (root = 0).
+    pub depth: Vec<usize>,
+}
+
+impl SpanningTree {
+    /// BFS spanning tree of a connected graph from `root`.
+    pub fn bfs(g: &Graph, root: usize) -> Self {
+        let n = g.n();
+        let mut parent = vec![usize::MAX; n];
+        let mut depth = vec![usize::MAX; n];
+        let mut children = vec![Vec::new(); n];
+        let mut queue = VecDeque::new();
+        parent[root] = root;
+        depth[root] = 0;
+        queue.push_back(root);
+        while let Some(u) = queue.pop_front() {
+            for &v in g.neighbors(u) {
+                if parent[v] == usize::MAX {
+                    parent[v] = u;
+                    depth[v] = depth[u] + 1;
+                    children[u].push(v);
+                    queue.push_back(v);
+                }
+            }
+        }
+        assert!(
+            parent.iter().all(|&p| p != usize::MAX),
+            "SpanningTree::bfs on disconnected graph"
+        );
+        SpanningTree {
+            root,
+            parent,
+            children,
+            depth,
+        }
+    }
+
+    /// BFS spanning tree from a uniformly random root (paper §5).
+    pub fn random_root(g: &Graph, rng: &mut Pcg64) -> Self {
+        Self::bfs(g, rng.below(g.n()))
+    }
+
+    /// BFS spanning tree rooted at a graph *center* (minimum
+    /// eccentricity vertex) — the minimum-height BFS tree. An ablation
+    /// beyond the paper's random-root policy: tree height drives both
+    /// our tree-variant communication (Theorem 3) and the Zhang
+    /// baseline's error accumulation, so root choice is a free knob
+    /// (bench `tree_policy` quantifies it).
+    pub fn center_root(g: &Graph) -> Self {
+        let center = (0..g.n())
+            .min_by_key(|&v| {
+                bfs_distances(g, v)
+                    .into_iter()
+                    .max()
+                    .unwrap_or(0)
+            })
+            .expect("non-empty graph");
+        Self::bfs(g, center)
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.parent.len()
+    }
+
+    /// Tree height `h` = max depth.
+    pub fn height(&self) -> usize {
+        self.depth.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Nodes ordered bottom-up (children strictly before parents).
+    pub fn bottom_up_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.n()).collect();
+        order.sort_by(|&a, &b| self.depth[b].cmp(&self.depth[a]));
+        order
+    }
+
+    /// The tree's edges as a [`Graph`].
+    pub fn as_graph(&self) -> Graph {
+        let mut g = Graph::empty(self.n());
+        for v in 0..self.n() {
+            if v != self.root {
+                g.add_edge(v, self.parent[v]);
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators;
+
+    #[test]
+    fn bfs_distances_on_path() {
+        let g = generators::path(5);
+        assert_eq!(bfs_distances(&g, 0), vec![0, 1, 2, 3, 4]);
+        assert_eq!(bfs_distances(&g, 2), vec![2, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn connectivity() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        assert!(!connected(&g));
+        g.add_edge(1, 2);
+        assert!(connected(&g));
+    }
+
+    #[test]
+    fn spanning_tree_covers_all_nodes() {
+        let mut rng = Pcg64::seed_from(11);
+        let g = generators::erdos_renyi_connected(&mut rng, 30, 0.2);
+        let t = SpanningTree::random_root(&g, &mut rng);
+        assert_eq!(t.as_graph().m(), 29);
+        assert!(connected(&t.as_graph()));
+        // Tree edges must be graph edges.
+        for v in 0..30 {
+            if v != t.root {
+                assert!(g.has_edge(v, t.parent[v]));
+            }
+        }
+        // Height bounds: ecc(root) <= diameter, and >= radius >= diam/2.
+        let diam = diameter(&g);
+        assert!(t.height() <= diam);
+        assert!(2 * t.height() >= diam);
+    }
+
+    #[test]
+    fn bottom_up_has_children_first() {
+        let g = generators::grid(3, 3);
+        let t = SpanningTree::bfs(&g, 4);
+        let order = t.bottom_up_order();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 9];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for v in 0..9 {
+            if v != t.root {
+                assert!(pos[v] < pos[t.parent[v]], "child {v} after parent");
+            }
+        }
+    }
+
+    #[test]
+    fn center_root_minimizes_height() {
+        let g = generators::path(9);
+        let t = SpanningTree::center_root(&g);
+        assert_eq!(t.root, 4);
+        assert_eq!(t.height(), 4); // vs 8 from an endpoint
+        let g2 = generators::grid(5, 5);
+        let tc = SpanningTree::center_root(&g2);
+        let worst = SpanningTree::bfs(&g2, 0);
+        assert!(tc.height() <= worst.height());
+        assert_eq!(tc.height(), 4); // center of a 5x5 grid
+    }
+
+    #[test]
+    fn height_of_star_tree() {
+        let g = generators::star(6);
+        assert_eq!(SpanningTree::bfs(&g, 0).height(), 1);
+        assert_eq!(SpanningTree::bfs(&g, 3).height(), 2);
+    }
+}

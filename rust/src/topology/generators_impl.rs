@@ -1,0 +1,218 @@
+//! Graph generators for the paper's evaluation topologies (§5):
+//! Erdős–Rényi `G(n, p)`, 2-D grids, Barabási–Albert preferential
+//! attachment, plus the star / path / complete graphs used by tests and
+//! the communication-scaling benches.
+
+use super::{connected, Graph};
+use crate::rng::Pcg64;
+
+/// Erdős–Rényi `G(n, p)`: each of the `n(n-1)/2` potential edges included
+/// independently with probability `p`. The paper uses `p = 0.3`.
+pub fn erdos_renyi(rng: &mut Pcg64, n: usize, p: f64) -> Graph {
+    let mut g = Graph::empty(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.uniform() < p {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    g
+}
+
+/// Erdős–Rényi conditioned on connectivity: resample until connected
+/// (the paper's experiments require a connected communication graph).
+pub fn erdos_renyi_connected(rng: &mut Pcg64, n: usize, p: f64) -> Graph {
+    for _ in 0..10_000 {
+        let g = erdos_renyi(rng, n, p);
+        if connected(&g) {
+            return g;
+        }
+    }
+    panic!("erdos_renyi_connected: p={p} too small for n={n}");
+}
+
+/// 2-D grid (4-neighbor lattice) with `rows x cols` nodes. Node `(r, c)`
+/// has index `r * cols + c`. Diameter is `rows + cols - 2` — the paper's
+/// large-diameter motivating case (`Omega(sqrt(n))`).
+pub fn grid(rows: usize, cols: usize) -> Graph {
+    let mut g = Graph::empty(rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            let u = r * cols + c;
+            if c + 1 < cols {
+                g.add_edge(u, u + 1);
+            }
+            if r + 1 < rows {
+                g.add_edge(u, u + cols);
+            }
+        }
+    }
+    g
+}
+
+/// Barabási–Albert preferential attachment: start from a clique on
+/// `m_attach + 1` nodes; each arriving node attaches to `m_attach`
+/// distinct existing nodes chosen proportional to degree. Produces the
+/// heavy-tailed degree distribution behind the paper's degree-based
+/// partition.
+pub fn preferential_attachment(rng: &mut Pcg64, n: usize, m_attach: usize) -> Graph {
+    assert!(m_attach >= 1 && n > m_attach, "need n > m_attach >= 1");
+    let mut g = Graph::empty(n);
+    // Repeated-endpoint list: sampling uniformly from it is sampling
+    // proportional to degree.
+    let mut endpoints: Vec<usize> = Vec::new();
+    let seed = m_attach + 1;
+    for u in 0..seed {
+        for v in (u + 1)..seed {
+            g.add_edge(u, v);
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+    }
+    for u in seed..n {
+        let mut targets = Vec::with_capacity(m_attach);
+        while targets.len() < m_attach {
+            let t = endpoints[rng.below(endpoints.len())];
+            if !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            g.add_edge(u, t);
+            endpoints.push(u);
+            endpoints.push(t);
+        }
+    }
+    g
+}
+
+/// Star graph: node 0 is the hub (the "central coordinator" special case).
+pub fn star(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for v in 1..n {
+        g.add_edge(0, v);
+    }
+    g
+}
+
+/// Path graph `0 - 1 - ... - n-1` (worst-case diameter).
+pub fn path(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for v in 1..n {
+        g.add_edge(v - 1, v);
+    }
+    g
+}
+
+/// Complete graph `K_n`.
+pub fn complete(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            g.add_edge(u, v);
+        }
+    }
+    g
+}
+
+/// Uniform random labelled tree via a Prüfer sequence (used by property
+/// tests to exercise arbitrary tree shapes).
+pub fn random_tree(rng: &mut Pcg64, n: usize) -> Graph {
+    assert!(n >= 1);
+    let mut g = Graph::empty(n);
+    if n == 1 {
+        return g;
+    }
+    if n == 2 {
+        g.add_edge(0, 1);
+        return g;
+    }
+    let prufer: Vec<usize> = (0..n - 2).map(|_| rng.below(n)).collect();
+    let mut degree = vec![1usize; n];
+    for &p in &prufer {
+        degree[p] += 1;
+    }
+    let mut leaves: std::collections::BinaryHeap<std::cmp::Reverse<usize>> = (0..n)
+        .filter(|&v| degree[v] == 1)
+        .map(std::cmp::Reverse)
+        .collect();
+    for &p in &prufer {
+        let std::cmp::Reverse(leaf) = leaves.pop().unwrap();
+        g.add_edge(leaf, p);
+        degree[p] -= 1;
+        if degree[p] == 1 {
+            leaves.push(std::cmp::Reverse(p));
+        }
+    }
+    let std::cmp::Reverse(a) = leaves.pop().unwrap();
+    let std::cmp::Reverse(b) = leaves.pop().unwrap();
+    g.add_edge(a, b);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{connected, diameter};
+
+    #[test]
+    fn er_edge_count_near_expectation() {
+        let mut rng = Pcg64::seed_from(1);
+        let n = 60;
+        let g = erdos_renyi(&mut rng, n, 0.3);
+        let expect = 0.3 * (n * (n - 1) / 2) as f64;
+        assert!((g.m() as f64 - expect).abs() < 0.2 * expect, "m={}", g.m());
+    }
+
+    #[test]
+    fn er_connected_is_connected() {
+        let mut rng = Pcg64::seed_from(2);
+        for _ in 0..5 {
+            assert!(connected(&erdos_renyi_connected(&mut rng, 25, 0.3)));
+        }
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = grid(3, 4);
+        assert_eq!(g.n(), 12);
+        assert_eq!(g.m(), 3 * 3 + 2 * 4); // rows*(cols-1) + (rows-1)*cols
+        assert!(connected(&g));
+        assert_eq!(diameter(&g), 3 + 4 - 2);
+        assert!(g.has_edge(0, 1) && g.has_edge(0, 4));
+        assert!(!g.has_edge(3, 4)); // row wrap must not connect
+    }
+
+    #[test]
+    fn preferential_properties() {
+        let mut rng = Pcg64::seed_from(3);
+        let g = preferential_attachment(&mut rng, 100, 2);
+        assert!(connected(&g));
+        // Each arrival adds exactly m_attach edges to distinct targets.
+        assert_eq!(g.m(), 3 + (100 - 3) * 2);
+        // Heavy tail: max degree well above m_attach.
+        let max_deg = (0..100).map(|v| g.degree(v)).max().unwrap();
+        assert!(max_deg >= 8, "max degree {max_deg}");
+    }
+
+    #[test]
+    fn star_path_complete() {
+        assert_eq!(star(5).m(), 4);
+        assert_eq!(diameter(&star(5)), 2);
+        assert_eq!(path(5).m(), 4);
+        assert_eq!(diameter(&path(5)), 4);
+        assert_eq!(complete(5).m(), 10);
+        assert_eq!(diameter(&complete(5)), 1);
+    }
+
+    #[test]
+    fn random_tree_is_tree() {
+        let mut rng = Pcg64::seed_from(4);
+        for n in [1usize, 2, 3, 10, 57] {
+            let g = random_tree(&mut rng, n);
+            assert_eq!(g.m(), n.saturating_sub(1));
+            assert!(connected(&g), "n={n}");
+        }
+    }
+}

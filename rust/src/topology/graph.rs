@@ -1,0 +1,114 @@
+//! Undirected simple graph with adjacency lists.
+
+/// An undirected simple graph over nodes `0..n`.
+///
+/// Invariants: no self-loops, no parallel edges, adjacency lists sorted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    adj: Vec<Vec<usize>>,
+    m: usize,
+}
+
+impl Graph {
+    /// Empty graph on `n` nodes.
+    pub fn empty(n: usize) -> Self {
+        Graph {
+            adj: vec![Vec::new(); n],
+            m: 0,
+        }
+    }
+
+    /// Build from an edge list (deduplicates, rejects self-loops).
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut g = Graph::empty(n);
+        for &(u, v) in edges {
+            g.add_edge(u, v);
+        }
+        g
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Number of edges `m = |E|`.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Add an undirected edge; no-op if it already exists.
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        assert!(u != v, "self-loop {u}");
+        assert!(u < self.n() && v < self.n(), "edge ({u},{v}) out of range");
+        if let Err(pos) = self.adj[u].binary_search(&v) {
+            self.adj[u].insert(pos, v);
+            let pos_v = self.adj[v].binary_search(&u).unwrap_err();
+            self.adj[v].insert(pos_v, u);
+            self.m += 1;
+        }
+    }
+
+    /// True if `(u, v)` is an edge.
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].binary_search(&v).is_ok()
+    }
+
+    /// Neighbors of `u` (sorted).
+    pub fn neighbors(&self, u: usize) -> &[usize] {
+        &self.adj[u]
+    }
+
+    /// Degree of `u`.
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    /// All edges as `(u, v)` with `u < v`.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.m);
+        for u in 0..self.n() {
+            for &v in &self.adj[u] {
+                if u < v {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_edge_dedups_and_counts() {
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1);
+        g.add_edge(1, 0);
+        g.add_edge(1, 2);
+        assert_eq!(g.m(), 2);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn edges_lists_each_once() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3), (1, 2)]);
+        assert_eq!(g.edges(), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loop() {
+        Graph::empty(2).add_edge(1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        Graph::empty(2).add_edge(0, 5);
+    }
+}

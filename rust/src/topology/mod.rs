@@ -1,0 +1,17 @@
+//! Communication topologies: the undirected graphs `G = (V, E)` the
+//! paper's nodes communicate over (§2), their generators (§5: random,
+//! grid, preferential) and the graph algorithms the protocols need
+//! (BFS spanning trees for the Zhang-et-al. baseline and Theorem 3,
+//! diameter for the analysis-facing benches).
+
+mod algo;
+mod generators_impl;
+mod graph;
+
+pub use algo::{bfs_distances, connected, diameter, SpanningTree};
+pub use graph::Graph;
+
+/// Graph generators matching the paper's experimental setup.
+pub mod generators {
+    pub use super::generators_impl::*;
+}

@@ -1,0 +1,216 @@
+//! CLI black-box tests: spawn the real binaries and assert on their
+//! observable behaviour (exit codes, stdout shape, artifacts on disk).
+
+use std::path::Path;
+use std::process::Command;
+
+fn distclus() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_distclus"))
+}
+
+#[test]
+fn info_lists_datasets_and_algorithms() {
+    let out = distclus().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["synthetic", "spam", "pendigits", "letter", "colorhist", "msd"] {
+        assert!(text.contains(name), "missing dataset {name}");
+    }
+    assert!(text.contains("zhang-tree"));
+}
+
+#[test]
+fn run_small_experiment_prints_report() {
+    let out = distclus()
+        .args([
+            "run",
+            "--dataset",
+            "synthetic",
+            "--scale",
+            "0.01",
+            "--topology",
+            "grid",
+            "--rows",
+            "2",
+            "--cols",
+            "2",
+            "--partition",
+            "uniform",
+            "--algorithm",
+            "combine",
+            "--t",
+            "100",
+            "--reps",
+            "1",
+            "--seed",
+            "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("synthetic/grid-uniform/combine"));
+    assert!(text.contains("ratio(mean)"));
+}
+
+#[test]
+fn run_writes_json_series() {
+    let tmp = std::env::temp_dir().join("distclus_cli_test.json");
+    let _ = std::fs::remove_file(&tmp);
+    let out = distclus()
+        .args([
+            "run",
+            "--dataset",
+            "synthetic",
+            "--scale",
+            "0.01",
+            "--topology",
+            "star",
+            "--sites",
+            "4",
+            "--algorithm",
+            "distributed",
+            "--t",
+            "100",
+            "--reps",
+            "1",
+            "--json",
+            tmp.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = std::fs::read_to_string(&tmp).unwrap();
+    assert!(text.contains("ratio_mean"), "json: {text}");
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn rejects_unknown_flags_and_values() {
+    let out = distclus()
+        .args(["run", "--bogus-flag", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = distclus()
+        .args(["run", "--algorithm", "sorcery"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("sorcery"), "stderr: {err}");
+}
+
+#[test]
+fn no_subcommand_shows_usage() {
+    let out = distclus().output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage:"));
+}
+
+#[test]
+fn coreset_subcommand_dumps_csv() {
+    let tmp = std::env::temp_dir().join("distclus_coreset_test.csv");
+    let _ = std::fs::remove_file(&tmp);
+    let out = distclus()
+        .args([
+            "coreset",
+            "--dataset",
+            "synthetic",
+            "--scale",
+            "0.01",
+            "--topology",
+            "grid",
+            "--rows",
+            "2",
+            "--cols",
+            "2",
+            "--algorithm",
+            "distributed",
+            "--t",
+            "50",
+            "--out",
+            tmp.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&tmp).unwrap();
+    // 50 samples + 4 sites * 5 centers rows, 10 coords + weight each.
+    let rows: Vec<&str> = text.lines().collect();
+    assert_eq!(rows.len(), 50 + 4 * 5, "rows: {}", rows.len());
+    assert_eq!(rows[0].split(',').count(), 11);
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn csv_dataset_round_trip() {
+    // Dump a coreset, reload it as a csv dataset through `run`.
+    let tmp = std::env::temp_dir().join("distclus_csv_roundtrip.csv");
+    let _ = std::fs::remove_file(&tmp);
+    let ok = distclus()
+        .args([
+            "coreset",
+            "--dataset",
+            "synthetic",
+            "--scale",
+            "0.01",
+            "--topology",
+            "star",
+            "--sites",
+            "3",
+            "--algorithm",
+            "combine",
+            "--t",
+            "60",
+            "--out",
+            tmp.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(ok.success());
+    let out = distclus()
+        .args([
+            "run",
+            "--dataset",
+            &format!("csv:{}", tmp.display()),
+            "--topology",
+            "star",
+            "--sites",
+            "3",
+            "--algorithm",
+            "combine",
+            "--k",
+            "5",
+            "--t",
+            "40",
+            "--reps",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_file(&tmp);
+    assert!(Path::new(env!("CARGO_BIN_EXE_figures")).exists());
+}
+
+#[test]
+fn figures_rejects_unknown_subcommand() {
+    let out = Command::new(env!("CARGO_BIN_EXE_figures"))
+        .arg("fig99")
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,241 @@
+//! Property tests for the paper's central claim (Theorem 1): the
+//! distributed construction yields an ε-coreset — its weighted cost
+//! tracks the true cost for arbitrary center sets — across random data,
+//! random partitions and random topologies; plus invariants of the
+//! budget allocation and the baselines.
+
+use distclus::clustering::backend::{Backend, RustBackend};
+use distclus::clustering::Objective;
+use distclus::coreset::combine::{self, CombineConfig};
+use distclus::coreset::distributed::{self, allocate_budget, DistributedConfig};
+use distclus::coreset::zhang::{self, ZhangConfig};
+use distclus::partition::Scheme;
+use distclus::points::{Dataset, WeightedSet};
+use distclus::prop_assert;
+use distclus::rng::Pcg64;
+use distclus::testutil::for_all;
+use distclus::topology::{generators, SpanningTree};
+
+struct Instance {
+    locals: Vec<WeightedSet>,
+    global: WeightedSet,
+    k: usize,
+    seed: u64,
+}
+
+fn gen_instance(rng: &mut Pcg64) -> Instance {
+    let d = 2 + rng.below(6);
+    let k = 2 + rng.below(4);
+    let n = 2_000 + rng.below(4_000);
+    let sites = 2 + rng.below(6);
+    let data = distclus::data::synthetic::gaussian_mixture(rng, n, d, k);
+    let scheme = [Scheme::Uniform, Scheme::Similarity, Scheme::Weighted][rng.below(3)];
+    let locals: Vec<WeightedSet> = scheme
+        .partition(&data, sites, rng)
+        .into_iter()
+        .filter(|p| p.n() > 0)
+        .map(WeightedSet::unit)
+        .collect();
+    let global = WeightedSet::union(locals.iter());
+    Instance {
+        locals,
+        global,
+        k,
+        seed: rng.next_u64(),
+    }
+}
+
+fn probe_centers(rng: &mut Pcg64, k: usize, d: usize, global: &WeightedSet) -> Dataset {
+    // Mix of data points and random Gaussians: covers both the "near the
+    // data" and "far from the data" regimes of Definition 1's ∀x.
+    let mut out = Dataset::with_capacity(k, d);
+    for _ in 0..k {
+        if rng.uniform() < 0.5 && global.n() > 0 {
+            out.push(global.points.row(rng.below(global.n())));
+        } else {
+            let c: Vec<f32> = (0..d).map(|_| 3.0 * rng.normal() as f32).collect();
+            out.push(&c);
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_distributed_coreset_distortion_bounded() {
+    for_all(8, 101, gen_instance, |inst| {
+        let mut rng = Pcg64::seed_from(inst.seed);
+        let cfg = DistributedConfig {
+            t: 2_500,
+            k: inst.k,
+            clamp_center_weights: false,
+            ..Default::default()
+        };
+        let portions =
+            distributed::build_portions(&inst.locals, &cfg, &RustBackend, &mut rng);
+        let coreset = distributed::union(&portions);
+        for probe_i in 0..6 {
+            let mut prng = Pcg64::seed_from(inst.seed ^ (probe_i + 1));
+            let probe = probe_centers(&mut prng, inst.k, inst.global.d(), &inst.global);
+            let truth =
+                distclus::clustering::cost_of(&inst.global, &probe, Objective::KMeans);
+            let est =
+                distclus::clustering::cost_of(&coreset.set, &probe, Objective::KMeans);
+            if truth > 1e-9 {
+                let err = (est - truth).abs() / truth;
+                prop_assert!(err < 0.35, "distortion {err} on probe {probe_i}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coreset_mass_is_unbiased() {
+    for_all(10, 202, gen_instance, |inst| {
+        let mut rng = Pcg64::seed_from(inst.seed);
+        let cfg = DistributedConfig {
+            t: 1_500,
+            k: inst.k,
+            clamp_center_weights: false,
+            ..Default::default()
+        };
+        let portions =
+            distributed::build_portions(&inst.locals, &cfg, &RustBackend, &mut rng);
+        let coreset = distributed::union(&portions);
+        let ratio = coreset.set.total_weight() / inst.global.total_weight();
+        prop_assert!((ratio - 1.0).abs() < 0.25, "mass ratio {ratio}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_budget_allocation_exact_and_proportional() {
+    for_all(
+        50,
+        303,
+        |rng| {
+            let sites = 1 + rng.below(20);
+            let t = rng.below(5_000);
+            let costs: Vec<f64> = (0..sites)
+                .map(|_| if rng.uniform() < 0.2 { 0.0 } else { rng.uniform() * 100.0 })
+                .collect();
+            (t, costs)
+        },
+        |(t, costs)| {
+            let alloc = allocate_budget(*t, costs);
+            prop_assert!(
+                alloc.iter().sum::<usize>() == *t,
+                "allocation sums to {} != {t}",
+                alloc.iter().sum::<usize>()
+            );
+            let total: f64 = costs.iter().sum();
+            if total > 0.0 {
+                for (i, (&a, &c)) in alloc.iter().zip(costs).enumerate() {
+                    let share = *t as f64 * c / total;
+                    prop_assert!(
+                        (a as f64 - share).abs() <= 1.0,
+                        "site {i}: {a} vs share {share}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_combine_vs_distributed_same_budget_same_size() {
+    for_all(6, 404, gen_instance, |inst| {
+        let mut rng = Pcg64::seed_from(inst.seed);
+        let t = 900;
+        let d_portions = distributed::build_portions(
+            &inst.locals,
+            &DistributedConfig {
+                t,
+                k: inst.k,
+                ..Default::default()
+            },
+            &RustBackend,
+            &mut rng,
+        );
+        let c_portions = combine::build_portions(
+            &inst.locals,
+            &CombineConfig {
+                t,
+                k: inst.k,
+                objective: Objective::KMeans,
+            },
+            &RustBackend,
+            &mut rng,
+        );
+        let ds = distributed::union(&d_portions);
+        let cs = distributed::union(&c_portions);
+        prop_assert!(
+            ds.size() == cs.size(),
+            "sizes differ: alg1 {} vs combine {} (unfair comparison)",
+            ds.size(),
+            cs.size()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zhang_composition_mass_and_size() {
+    for_all(6, 505, gen_instance, |inst| {
+        let mut rng = Pcg64::seed_from(inst.seed);
+        let n = inst.locals.len();
+        let g = generators::random_tree(&mut rng, n);
+        let tree = SpanningTree::bfs(&g, rng.below(n));
+        let cfg = ZhangConfig {
+            t_node: 400,
+            k: inst.k,
+            objective: Objective::KMeans,
+        };
+        let res = zhang::build_on_tree(&inst.locals, &tree, &cfg, &RustBackend, &mut rng);
+        prop_assert!(
+            res.coreset.size() <= cfg.t_node + cfg.k + inst.global.n(),
+            "root coreset too large: {}",
+            res.coreset.size()
+        );
+        let ratio = res.coreset.set.total_weight() / inst.global.total_weight();
+        prop_assert!((ratio - 1.0).abs() < 0.5, "mass ratio {ratio}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assignment_per_point_costs_consistent() {
+    // kmedian_cost^2 == kmeans_cost * weight for every point, any data.
+    for_all(
+        20,
+        606,
+        |rng| {
+            let set = distclus::testutil::arb_weighted_set(rng, 300, 6);
+            let k = 1 + rng.below(5);
+            let centers = distclus::clustering::kmeanspp::seed(
+                &set,
+                k,
+                Objective::KMeans,
+                rng,
+            );
+            (set, centers)
+        },
+        |(set, centers)| {
+            let asg = RustBackend.assign(&set.points, &set.weights, centers);
+            for i in 0..set.n() {
+                let w = set.weights[i];
+                if w <= 0.0 {
+                    continue;
+                }
+                let lhs = asg.kmedian_cost[i].powi(2);
+                let rhs = asg.kmeans_cost[i] * w;
+                prop_assert!(
+                    (lhs - rhs).abs() <= 1e-6 * (1.0 + rhs.abs()),
+                    "point {i}: {lhs} vs {rhs}"
+                );
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,267 @@
+//! Edge-case integration tests: degenerate topologies, degenerate data,
+//! and boundary parameters through the full pipeline.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::{approx_solution, Objective};
+use distclus::coreset::zhang::ZhangConfig;
+use distclus::coreset::DistributedConfig;
+use distclus::network::{Network, Payload};
+use distclus::points::{Dataset, WeightedSet};
+use distclus::protocol::{cluster_on_graph, cluster_on_tree, flood, zhang_on_tree};
+use distclus::rng::Pcg64;
+use distclus::topology::{generators, Graph, SpanningTree};
+
+#[test]
+fn single_site_reduces_to_centralized() {
+    let mut rng = Pcg64::seed_from(1);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 1_000, 4, 3);
+    let g = Graph::empty(1);
+    let locals = vec![WeightedSet::unit(data.clone())];
+    let run = cluster_on_graph(
+        &g,
+        &locals,
+        &DistributedConfig {
+            t: 200,
+            k: 3,
+            ..Default::default()
+        },
+        &RustBackend,
+        &mut rng,
+    )
+    .unwrap();
+    assert_eq!(run.comm_points, 0, "single node never transmits");
+    assert_eq!(run.centers.n(), 3);
+    assert_eq!(run.coreset.size(), 200 + 3);
+}
+
+#[test]
+fn single_node_flood_is_trivial() {
+    let mut net = Network::new(Graph::empty(1));
+    let held = flood(
+        &mut net,
+        vec![Payload::LocalCost { site: 0, cost: 1.0 }],
+    );
+    assert_eq!(held[0].len(), 1);
+    assert_eq!(net.cost_points(), 0);
+}
+
+#[test]
+fn two_node_tree_pipeline() {
+    let mut rng = Pcg64::seed_from(2);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 500, 3, 2);
+    let g = generators::path(2);
+    let half = data.n() / 2;
+    let locals = vec![
+        WeightedSet::unit(data.gather(&(0..half).collect::<Vec<_>>())),
+        WeightedSet::unit(data.gather(&(half..data.n()).collect::<Vec<_>>())),
+    ];
+    let tree = SpanningTree::bfs(&g, 0);
+    let run = cluster_on_tree(
+        &tree,
+        &locals,
+        &DistributedConfig {
+            t: 100,
+            k: 2,
+            ..Default::default()
+        },
+        &RustBackend,
+        &mut rng,
+    )
+    .unwrap();
+    assert!(run.comm_points > 0);
+    assert_eq!(run.centers.n(), 2);
+}
+
+#[test]
+fn identical_points_everywhere() {
+    // All data identical: every algorithm must return finite results and
+    // a zero-cost solution.
+    let mut rng = Pcg64::seed_from(3);
+    let data = Dataset::from_flat(vec![2.5f32, -1.0].repeat(400), 2);
+    let g = generators::grid(2, 2);
+    let locals: Vec<WeightedSet> = (0..4)
+        .map(|i| {
+            WeightedSet::unit(data.gather(&(i * 100..(i + 1) * 100).collect::<Vec<_>>()))
+        })
+        .collect();
+    let run = cluster_on_graph(
+        &g,
+        &locals,
+        &DistributedConfig {
+            t: 50,
+            k: 3,
+            ..Default::default()
+        },
+        &RustBackend,
+        &mut rng,
+    )
+    .unwrap();
+    assert!(run.coreset_cost.abs() < 1e-6, "cost {}", run.coreset_cost);
+    assert_eq!(run.centers.row(0), &[2.5, -1.0]);
+}
+
+#[test]
+fn k_larger_than_site_points() {
+    // k=5 but some sites hold fewer than 5 points: local solves must
+    // degrade gracefully (fewer effective centers) and the pipeline
+    // still produce k global centers from the coreset.
+    let mut rng = Pcg64::seed_from(4);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 40, 3, 5);
+    let g = generators::path(8);
+    let locals: Vec<WeightedSet> = (0..8)
+        .map(|i| {
+            WeightedSet::unit(data.gather(&(i * 5..(i + 1) * 5).collect::<Vec<_>>()))
+        })
+        .collect();
+    let run = cluster_on_graph(
+        &g,
+        &locals,
+        &DistributedConfig {
+            t: 30,
+            k: 5,
+            ..Default::default()
+        },
+        &RustBackend,
+        &mut rng,
+    )
+    .unwrap();
+    assert!(run.centers.n() >= 1 && run.centers.n() <= 5);
+    assert!(run.coreset_cost.is_finite());
+}
+
+#[test]
+fn zhang_on_star_tree_is_single_hop() {
+    let mut rng = Pcg64::seed_from(5);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 2_000, 4, 3);
+    let g = generators::star(5);
+    let locals: Vec<WeightedSet> = (0..5)
+        .map(|i| {
+            WeightedSet::unit(data.gather(&(i * 400..(i + 1) * 400).collect::<Vec<_>>()))
+        })
+        .collect();
+    let tree = SpanningTree::bfs(&g, 0);
+    let run = zhang_on_tree(
+        &tree,
+        &locals,
+        &ZhangConfig {
+            t_node: 100,
+            k: 3,
+            objective: Objective::KMeans,
+        },
+        &RustBackend,
+        &mut rng,
+    )
+    .unwrap();
+    // Leaves each send one summary; root sends centers back: 4 hops +
+    // 4 center broadcasts.
+    assert!(run.comm_points > 0);
+    assert_eq!(run.rounds > 0, true);
+}
+
+#[test]
+fn huge_t_saturates_at_data_size() {
+    // t >> |P|: sampling with replacement still works; coreset bigger
+    // than the data is wasteful but legal, and quality is near-exact.
+    let mut rng = Pcg64::seed_from(6);
+    // Well-separated blobs so both solves share one clear optimum and
+    // the ratio isolates the coreset (not seeding luck).
+    let mut data = Dataset::with_capacity(300, 3);
+    for i in 0..300 {
+        let base = if i % 2 == 0 { -8.0 } else { 8.0 };
+        let p: Vec<f32> = (0..3).map(|_| base + rng.normal() as f32).collect();
+        data.push(&p);
+    }
+    let global = WeightedSet::unit(data.clone());
+    let g = generators::path(3);
+    let locals: Vec<WeightedSet> = (0..3)
+        .map(|i| {
+            WeightedSet::unit(data.gather(&(i * 100..(i + 1) * 100).collect::<Vec<_>>()))
+        })
+        .collect();
+    let run = cluster_on_graph(
+        &g,
+        &locals,
+        &DistributedConfig {
+            t: 2_000,
+            k: 2,
+            ..Default::default()
+        },
+        &RustBackend,
+        &mut rng,
+    )
+    .unwrap();
+    let direct = approx_solution(&global, 2, Objective::KMeans, &RustBackend, &mut rng, 30);
+    let ratio =
+        distclus::clustering::cost_of(&global, &run.centers, Objective::KMeans) / direct.cost;
+    assert!(ratio < 1.05, "ratio {ratio}");
+}
+
+#[test]
+fn one_dimensional_data() {
+    let mut rng = Pcg64::seed_from(7);
+    let mut data = Dataset::with_capacity(600, 1);
+    for i in 0..600 {
+        let base = [0.0f32, 10.0, 20.0][i % 3];
+        data.push(&[base + rng.normal() as f32 * 0.1]);
+    }
+    let g = generators::grid(2, 3);
+    let mut r2 = Pcg64::seed_from(8);
+    let locals: Vec<WeightedSet> = distclus::partition::Scheme::Uniform
+        .partition(&data, 6, &mut r2)
+        .into_iter()
+        .map(WeightedSet::unit)
+        .collect();
+    let run = cluster_on_graph(
+        &g,
+        &locals,
+        &DistributedConfig {
+            t: 120,
+            k: 3,
+            ..Default::default()
+        },
+        &RustBackend,
+        &mut r2,
+    )
+    .unwrap();
+    // Centers near 0/10/20.
+    let mut cs: Vec<f32> = (0..3).map(|c| run.centers.row(c)[0]).collect();
+    cs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!((cs[0] - 0.0).abs() < 1.0, "{cs:?}");
+    assert!((cs[1] - 10.0).abs() < 1.0, "{cs:?}");
+    assert!((cs[2] - 20.0).abs() < 1.0, "{cs:?}");
+}
+
+#[test]
+fn klines_pipeline_end_to_end() {
+    // The k-line extension through the distributed construction.
+    use distclus::coreset::klines::{build_portions, KLinesConfig};
+    let mut rng = Pcg64::seed_from(9);
+    let mut data = Dataset::with_capacity(2_000, 2);
+    for i in 0..2_000 {
+        let t = 8.0 * (rng.uniform() as f32 - 0.5);
+        let p = if i % 2 == 0 {
+            [t, 0.1 * rng.normal() as f32]
+        } else {
+            [0.1 * rng.normal() as f32 + 10.0, t]
+        };
+        data.push(&p);
+    }
+    let locals: Vec<WeightedSet> = (0..4)
+        .map(|i| {
+            WeightedSet::unit(data.gather(&(i * 500..(i + 1) * 500).collect::<Vec<_>>()))
+        })
+        .collect();
+    let portions = build_portions(
+        &locals,
+        &KLinesConfig {
+            t: 400,
+            k: 2,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let coreset = distclus::coreset::distributed::union(&portions);
+    assert!(coreset.size() <= 400 + 4 * 2 * 8 + 8);
+    let ratio = coreset.set.total_weight() / 2_000.0;
+    assert!((ratio - 1.0).abs() < 0.2, "mass {ratio}");
+}

@@ -1,0 +1,148 @@
+//! End-to-end integration tests: full Algorithm 2 runs over simulated
+//! networks, all algorithms, both objectives, config files and the CLI
+//! experiment path.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::{approx_solution, cost_of, Objective};
+use distclus::config::{Algorithm, ExperimentSpec, TopologySpec};
+use distclus::coordinator::{run_experiment, run_once};
+use distclus::coreset::DistributedConfig;
+use distclus::partition::Scheme;
+use distclus::points::WeightedSet;
+use distclus::protocol::cluster_on_graph;
+use distclus::rng::Pcg64;
+use distclus::topology::generators;
+
+fn spec(alg: Algorithm, partition: Scheme) -> ExperimentSpec {
+    ExperimentSpec {
+        dataset: "synthetic".into(),
+        scale: 0.03,
+        topology: TopologySpec::Random { n: 8, p: 0.35 },
+        partition,
+        algorithm: alg,
+        k: 5,
+        t: 400,
+        objective: Objective::KMeans,
+        reps: 2,
+        seed: 7,
+    }
+}
+
+#[test]
+fn full_pipeline_all_algorithms_all_partitions() {
+    for alg in [
+        Algorithm::Distributed,
+        Algorithm::DistributedTree,
+        Algorithm::Combine,
+        Algorithm::CombineTree,
+        Algorithm::ZhangTree,
+    ] {
+        for part in [Scheme::Uniform, Scheme::Weighted, Scheme::Degree] {
+            let res = run_experiment(&spec(alg, part), &RustBackend).unwrap();
+            assert!(
+                res.ratio.mean > 0.8 && res.ratio.mean < 2.5,
+                "{alg:?}/{part:?}: ratio {}",
+                res.ratio.mean
+            );
+        }
+    }
+}
+
+#[test]
+fn kmedian_objective_end_to_end() {
+    let mut s = spec(Algorithm::Distributed, Scheme::Weighted);
+    s.objective = Objective::KMedian;
+    let res = run_experiment(&s, &RustBackend).unwrap();
+    assert!(
+        res.ratio.mean > 0.8 && res.ratio.mean < 2.0,
+        "kmedian ratio {}",
+        res.ratio.mean
+    );
+}
+
+#[test]
+fn all_dataset_analogs_generate_and_cluster() {
+    let backend = RustBackend;
+    for ds in distclus::data::SPECS {
+        let mut rng = Pcg64::seed_from(3);
+        // Tiny slice of each dataset, just to prove the path works.
+        let scale = (2_000.0 / ds.n as f64).min(1.0);
+        let data = ds.generate(&mut rng, scale);
+        assert_eq!(data.d, ds.d, "{}", ds.name);
+        let set = WeightedSet::unit(data);
+        let sol = approx_solution(&set, ds.k.min(8), Objective::KMeans, &backend, &mut rng, 5);
+        assert!(sol.cost.is_finite() && sol.cost > 0.0, "{}", ds.name);
+    }
+}
+
+#[test]
+fn cost_ratio_close_to_one_with_generous_budget() {
+    // With a large coreset the distributed solution should be
+    // near-indistinguishable from the centralized one.
+    let mut rng = Pcg64::seed_from(11);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 6_000, 8, 5);
+    let g = generators::grid(3, 3);
+    let locals: Vec<WeightedSet> = Scheme::Uniform
+        .partition_on(&data, &g, &mut rng)
+        .into_iter()
+        .map(WeightedSet::unit)
+        .collect();
+    let global = WeightedSet::unit(data);
+    let run = cluster_on_graph(
+        &g,
+        &locals,
+        &DistributedConfig {
+            t: 3_000,
+            k: 5,
+            ..Default::default()
+        },
+        &RustBackend,
+        &mut rng,
+    )
+    .unwrap();
+    let direct = approx_solution(&global, 5, Objective::KMeans, &RustBackend, &mut rng, 40);
+    let ratio = cost_of(&global, &run.centers, Objective::KMeans) / direct.cost;
+    assert!(ratio < 1.05, "ratio {ratio}");
+}
+
+#[test]
+fn config_file_round_trip_through_runner() {
+    let text = "dataset = synthetic\nscale = 0.02\ntopology = grid\nrows = 2\ncols = 3\n\
+                partition = similarity\nalgorithm = combine-tree\nt = 200\nreps = 1\nseed = 5\n";
+    let spec = ExperimentSpec::from_config(text).unwrap();
+    let res = run_experiment(&spec, &RustBackend).unwrap();
+    assert!(res.ratio.mean.is_finite());
+    assert_eq!(res.label, "synthetic/grid-similarity/combine-tree");
+}
+
+#[test]
+fn run_once_exposes_coreset_and_comm() {
+    let s = spec(Algorithm::Distributed, Scheme::Weighted);
+    let mut rng = Pcg64::seed_from(1);
+    let mut data_rng = Pcg64::seed_from(s.seed);
+    let data = distclus::coordinator::run_once(
+        &s,
+        &distclus::data::by_name("synthetic")
+            .unwrap()
+            .generate(&mut data_rng, s.scale),
+        &RustBackend,
+        &mut rng,
+    )
+    .unwrap();
+    assert!(data.coreset.size() >= s.t);
+    assert!(data.comm_points > 0);
+    assert_eq!(data.centers.n(), s.k);
+    let _ = run_once; // silence unused-import style lints on some setups
+}
+
+#[test]
+fn star_topology_acts_as_central_coordinator() {
+    // With a star, flooding is 2 hops and communication is low relative
+    // to a dense random graph at the same t.
+    let mut s = spec(Algorithm::Distributed, Scheme::Uniform);
+    s.topology = TopologySpec::Star { n: 8 };
+    let star = run_experiment(&s, &RustBackend).unwrap();
+    s.topology = TopologySpec::Random { n: 8, p: 0.9 };
+    let dense = run_experiment(&s, &RustBackend).unwrap();
+    assert!(star.comm.mean < dense.comm.mean);
+}

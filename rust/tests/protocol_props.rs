@@ -1,0 +1,194 @@
+//! Property tests for the protocols (Algorithms 2–3, Theorems 2–3):
+//! exact communication accounting and delivery guarantees on arbitrary
+//! connected topologies.
+
+use distclus::network::{Network, Payload};
+use distclus::points::{Dataset, WeightedSet};
+use distclus::prop_assert;
+use distclus::protocol::{broadcast_down, converge_cast, flood};
+use distclus::rng::Pcg64;
+use distclus::testutil::{arb_connected_graph, for_all};
+use distclus::topology::{connected, diameter, Graph, SpanningTree};
+
+#[test]
+fn prop_flooding_delivers_everything_at_exact_cost() {
+    for_all(
+        30,
+        11,
+        |rng| {
+            let g = arb_connected_graph(rng, 24);
+            // Mixed payload sizes: scalars and point sets.
+            let sizes: Vec<usize> = (0..g.n()).map(|_| 1 + rng.below(7)).collect();
+            (g, sizes)
+        },
+        |(g, sizes)| {
+            let payloads: Vec<Payload> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    if s == 1 {
+                        Payload::LocalCost {
+                            site: i,
+                            cost: 1.0,
+                        }
+                    } else {
+                        Payload::Portion {
+                            site: i,
+                            set: std::sync::Arc::new(WeightedSet::unit(
+                                Dataset::from_flat(vec![0.0; s * 2], 2),
+                            )),
+                        }
+                    }
+                })
+                .collect();
+            let total_size: usize = payloads.iter().map(|p| p.size_points()).sum();
+            let mut net = Network::new(g.clone());
+            let held = flood(&mut net, payloads);
+            // Delivery: every node holds every payload.
+            for (v, h) in held.iter().enumerate() {
+                prop_assert!(h.len() == g.n(), "node {v} missing payloads");
+            }
+            // Exact Theorem-2 accounting: each node forwards each payload
+            // to all neighbors exactly once.
+            prop_assert!(
+                net.cost_points() == 2 * g.m() * total_size,
+                "cost {} != 2*{}*{}",
+                net.cost_points(),
+                g.m(),
+                total_size
+            );
+            // Round bound: BFS propagation terminates within diam + 2.
+            prop_assert!(
+                net.round() <= diameter(g) + 2,
+                "rounds {} vs diameter {}",
+                net.round(),
+                diameter(g)
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tree_convergecast_cost_is_sum_of_depths() {
+    for_all(
+        30,
+        22,
+        |rng| {
+            let g = arb_connected_graph(rng, 24);
+            let root = rng.below(g.n());
+            (g, root)
+        },
+        |(g, root)| {
+            let tree = SpanningTree::bfs(g, *root);
+            let payloads: Vec<Payload> = (0..g.n())
+                .map(|i| Payload::LocalCost {
+                    site: i,
+                    cost: 0.0,
+                })
+                .collect();
+            let mut net = Network::new(tree.as_graph());
+            let collected = converge_cast(&mut net, &tree, payloads);
+            prop_assert!(collected.len() == g.n(), "root missing payloads");
+            let expect: usize = (0..g.n()).map(|v| tree.depth[v]).sum();
+            prop_assert!(
+                net.cost_points() == expect,
+                "cost {} != Σdepth {}",
+                net.cost_points(),
+                expect
+            );
+            prop_assert!(
+                net.cost_points() <= g.n() * tree.height().max(1),
+                "Theorem 3 bound violated"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_broadcast_charges_each_edge_once() {
+    for_all(
+        30,
+        33,
+        |rng| {
+            let g = arb_connected_graph(rng, 24);
+            let root = rng.below(g.n());
+            (g, root)
+        },
+        |(g, root)| {
+            let tree = SpanningTree::bfs(g, *root);
+            let mut net = Network::new(tree.as_graph());
+            broadcast_down(&mut net, &tree, &Payload::Scalar(1.0));
+            prop_assert!(
+                net.cost_points() == g.n() - 1,
+                "broadcast cost {} != n-1 = {}",
+                net.cost_points(),
+                g.n() - 1
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spanning_tree_is_spanning_and_minimal_depth() {
+    for_all(
+        40,
+        44,
+        |rng| {
+            let g = arb_connected_graph(rng, 30);
+            let root = rng.below(g.n());
+            (g, root)
+        },
+        |(g, root)| {
+            let tree = SpanningTree::bfs(g, *root);
+            let tg: Graph = tree.as_graph();
+            prop_assert!(tg.m() == g.n() - 1, "not a tree: {} edges", tg.m());
+            prop_assert!(connected(&tg), "tree disconnected");
+            // BFS trees give shortest-path depths.
+            let dist = distclus::topology::bfs_distances(g, *root);
+            for v in 0..g.n() {
+                prop_assert!(
+                    tree.depth[v] == dist[v],
+                    "depth[{v}]={} != bfs dist {}",
+                    tree.depth[v],
+                    dist[v]
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitions_conserve_points_on_arbitrary_graphs() {
+    use distclus::partition::Scheme;
+    for_all(
+        20,
+        55,
+        |rng| {
+            let g = arb_connected_graph(rng, 16);
+            let data = distclus::testutil::arb_dataset(rng, 1_500, 8);
+            let scheme = [
+                Scheme::Uniform,
+                Scheme::Similarity,
+                Scheme::Weighted,
+                Scheme::Degree,
+            ][rng.below(4)];
+            let seed = rng.next_u64();
+            (g, data, scheme, seed)
+        },
+        |(g, data, scheme, seed)| {
+            let mut rng = Pcg64::seed_from(*seed);
+            let parts = scheme.partition_on(data, g, &mut rng);
+            prop_assert!(parts.len() == g.n(), "wrong number of sites");
+            let total: usize = parts.iter().map(|p| p.n()).sum();
+            prop_assert!(total == data.n(), "lost points: {total} != {}", data.n());
+            for p in parts {
+                prop_assert!(p.d == data.d, "dimension drift");
+            }
+            Ok(())
+        },
+    );
+}

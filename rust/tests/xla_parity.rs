@@ -1,0 +1,162 @@
+//! Cross-backend parity: the AOT Pallas/XLA backend must agree with the
+//! pure-Rust oracle backend on random instances across the supported
+//! shape envelope — including the padding edges (d or k exactly at an
+//! artifact boundary, chunk-straddling n).
+//!
+//! These tests are skipped (with a note) when `artifacts/` has not been
+//! built; `make artifacts && cargo test` runs them.
+
+use distclus::clustering::backend::{Backend, RustBackend};
+use distclus::clustering::{approx_solution, Objective};
+use distclus::points::{Dataset, WeightedSet};
+use distclus::rng::Pcg64;
+use distclus::runtime::XlaBackend;
+use std::path::Path;
+
+fn xla() -> Option<XlaBackend> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match XlaBackend::load(&dir) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("skipping xla parity tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn instance(rng: &mut Pcg64, n: usize, d: usize, k: usize) -> (Dataset, Vec<f64>, Dataset) {
+    let data = distclus::data::synthetic::gaussian_mixture(rng, n, d, k.max(2));
+    let weights: Vec<f64> = (0..data.n()).map(|_| rng.uniform() * 3.0 + 0.01).collect();
+    let mut centers = Dataset::with_capacity(k, d);
+    for _ in 0..k {
+        let c: Vec<f32> = (0..d).map(|_| 2.0 * rng.normal() as f32).collect();
+        centers.push(&c);
+    }
+    (data, weights, centers)
+}
+
+fn check_parity(xla: &XlaBackend, n: usize, d: usize, k: usize, seed: u64) {
+    let mut rng = Pcg64::seed_from(seed);
+    let (points, weights, centers) = instance(&mut rng, n, d, k);
+    let a = xla.assign(&points, &weights, &centers);
+    let b = RustBackend.assign(&points, &weights, &centers);
+    assert_eq!(a.assign.len(), points.n());
+    // Assignments may differ on exact ties only; costs must agree.
+    let (ta, tb): (f64, f64) = (a.kmeans_cost.iter().sum(), b.kmeans_cost.iter().sum());
+    assert!(
+        (ta - tb).abs() / tb.max(1e-12) < 1e-3,
+        "n={n} d={d} k={k}: kmeans total {ta} vs {tb}"
+    );
+    let (ma, mb): (f64, f64) = (a.kmedian_cost.iter().sum(), b.kmedian_cost.iter().sum());
+    assert!(
+        (ma - mb).abs() / mb.max(1e-12) < 1e-3,
+        "n={n} d={d} k={k}: kmedian total {ma} vs {mb}"
+    );
+    let sa = xla.lloyd_step(&points, &weights, &centers);
+    let sb = RustBackend.lloyd_step(&points, &weights, &centers);
+    for c in 0..k {
+        assert!(
+            (sa.counts[c] - sb.counts[c]).abs() < 1e-2 * (1.0 + sb.counts[c]),
+            "count[{c}]"
+        );
+        for j in 0..d {
+            let (x, y) = (sa.sums[c * d + j], sb.sums[c * d + j]);
+            assert!(
+                (x - y).abs() < 1e-2 * (1.0 + y.abs()),
+                "sums[{c},{j}]: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_across_shape_envelope() {
+    let Some(xla) = xla() else { return };
+    // (n, d, k): interior, chunk boundary (1024), straddle, artifact
+    // boundaries d=16/32/64/96/128, k=8/16/64.
+    for (i, &(n, d, k)) in [
+        (100usize, 4usize, 3usize),
+        (1024, 16, 8),
+        (1025, 16, 9),
+        (2048, 10, 5),
+        (3000, 32, 16),
+        (500, 33, 16),
+        (700, 64, 16),
+        (650, 90, 50),
+        (300, 128, 64),
+        (64, 1, 1),
+    ]
+    .iter()
+    .enumerate()
+    {
+        check_parity(&xla, n, d, k, 1_000 + i as u64);
+    }
+}
+
+#[test]
+fn parity_on_unsupported_shapes_falls_back() {
+    let Some(xla) = xla() else { return };
+    // d > 128 exceeds every artifact: the backend must still answer
+    // correctly (pure-Rust fallback).
+    let mut rng = Pcg64::seed_from(9);
+    let (points, weights, centers) = instance(&mut rng, 200, 150, 4);
+    let a = xla.assign(&points, &weights, &centers);
+    let b = RustBackend.assign(&points, &weights, &centers);
+    assert_eq!(a.assign, b.assign);
+}
+
+#[test]
+fn full_lloyd_converges_identically_enough_for_equal_solutions() {
+    // Run the complete weighted-Lloyd solver on both backends from the
+    // same seed: final costs must agree to f32-kernel tolerance.
+    let Some(xla) = xla() else { return };
+    let mut rng = Pcg64::seed_from(17);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 3_000, 12, 6);
+    let set = WeightedSet::unit(data);
+    let mut rng_a = Pcg64::seed_from(5);
+    let mut rng_b = Pcg64::seed_from(5);
+    let sol_rust = approx_solution(&set, 6, Objective::KMeans, &RustBackend, &mut rng_a, 25);
+    let sol_xla = approx_solution(&set, 6, Objective::KMeans, &xla, &mut rng_b, 25);
+    let rel = (sol_rust.cost - sol_xla.cost).abs() / sol_rust.cost;
+    assert!(
+        rel < 5e-2,
+        "lloyd end-state diverged: rust {} xla {}",
+        sol_rust.cost,
+        sol_xla.cost
+    );
+}
+
+#[test]
+fn distributed_pipeline_runs_on_xla_backend() {
+    let Some(xla) = xla() else { return };
+    use distclus::coreset::DistributedConfig;
+    use distclus::partition::Scheme;
+    use distclus::protocol::cluster_on_graph;
+    use distclus::topology::generators;
+    let mut rng = Pcg64::seed_from(23);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 4_000, 10, 5);
+    let g = generators::grid(2, 3);
+    let locals: Vec<WeightedSet> = Scheme::Weighted
+        .partition_on(&data, &g, &mut rng)
+        .into_iter()
+        .map(WeightedSet::unit)
+        .collect();
+    let run = cluster_on_graph(
+        &g,
+        &locals,
+        &DistributedConfig {
+            t: 500,
+            k: 5,
+            ..Default::default()
+        },
+        &xla,
+        &mut rng,
+    )
+    .unwrap();
+    assert_eq!(run.centers.n(), 5);
+    let global = WeightedSet::unit(data);
+    let direct = approx_solution(&global, 5, Objective::KMeans, &xla, &mut rng, 30);
+    let ratio =
+        distclus::clustering::cost_of(&global, &run.centers, Objective::KMeans) / direct.cost;
+    assert!(ratio < 1.3, "xla-backend pipeline ratio {ratio}");
+}
