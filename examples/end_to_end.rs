@@ -110,6 +110,7 @@ fn main() -> Result<()> {
             objective: Objective::KMeans,
             reps,
             seed: 2013,
+            ..Default::default()
         };
         eprintln!("running {} ...", alg.name());
         results.push(run_experiment(&spec, backend.as_ref())?);

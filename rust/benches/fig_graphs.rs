@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
                     objective: Objective::KMeans,
                     reps: 3,
                     seed: 17,
+                    ..Default::default()
                 };
                 let res = run_experiment(&spec, &backend)?;
                 table.row(vec![

@@ -1,11 +1,12 @@
 //! Kernel hot-path bench: assignment and weighted-Lloyd throughput of
-//! the pure-Rust backend vs the AOT Pallas/XLA backend (when artifacts
-//! are present), across the paper's dataset shapes. This is the §Perf
-//! driver for L3 (EXPERIMENTS.md §Perf).
+//! the pure-Rust backend vs the chunk-parallel backend (sequential vs
+//! parallel at several thread counts) vs the AOT Pallas/XLA backend
+//! (when artifacts are present), across the paper's dataset shapes.
+//! This is the §Perf driver for L3 (EXPERIMENTS.md §Perf).
 //!
 //! Run with `cargo bench --bench kernel_hotpath`.
 
-use distclus::clustering::backend::{Backend, RustBackend};
+use distclus::clustering::backend::{Backend, ParallelBackend, RustBackend};
 use distclus::metrics::{time_reps, Summary, Table};
 use distclus::points::Dataset;
 use distclus::rng::Pcg64;
@@ -74,6 +75,15 @@ fn main() -> anyhow::Result<()> {
         "lloyd Mpts/s",
     ]);
     bench_backend(&mut table, "rust", &RustBackend, &shapes);
+    let hw = distclus::exec::available_threads();
+    let mut thread_counts = vec![2usize];
+    if hw > 2 {
+        thread_counts.push(hw);
+    }
+    for &threads in &thread_counts {
+        let name = format!("parallel-{threads}");
+        bench_backend(&mut table, &name, &ParallelBackend::new(threads), &shapes);
+    }
     match XlaBackend::load(Path::new("artifacts")) {
         Ok(xla) => bench_backend(&mut table, "xla", &xla, &shapes),
         Err(e) => eprintln!("xla backend unavailable ({e}); run `make artifacts`"),

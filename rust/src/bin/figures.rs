@@ -303,6 +303,7 @@ fn comm_scaling(ctx: &Ctx) -> Result<()> {
             let ds = distclus::data::synthetic::gaussian_mixture(&mut rng, 40 * n, 8, 5);
             let locals: Vec<WeightedSet> = Scheme::Uniform
                 .partition(&ds, graph.n(), &mut rng)
+                .expect("uniform partition is graph-free")
                 .into_iter()
                 .map(WeightedSet::unit)
                 .collect();

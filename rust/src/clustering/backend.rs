@@ -1,11 +1,13 @@
 //! The kernel-backend abstraction: where assignment and Lloyd
 //! accumulation actually execute.
 //!
-//! Two implementations exist: [`RustBackend`] (portable, always
-//! available, used as the cross-validation oracle) and
-//! [`crate::runtime::XlaBackend`] (loads the AOT-compiled Pallas/JAX
-//! artifacts through PJRT — the production hot path). The test-suite
-//! asserts they agree on random instances.
+//! Three implementations exist: [`RustBackend`] (portable,
+//! single-threaded, used as the cross-validation oracle),
+//! [`ParallelBackend`] (the same kernels chunked over a scoped thread
+//! pool — the multicore hot path) and [`crate::runtime::XlaBackend`]
+//! (loads the AOT-compiled Pallas/JAX artifacts through PJRT). The
+//! test-suite asserts they agree on random instances, and that the
+//! parallel backend is bit-identical across thread counts.
 
 use super::Objective;
 use crate::points::Dataset;
@@ -51,7 +53,10 @@ pub struct LloydStep {
 }
 
 /// Executes the two kernel operations of the stack.
-pub trait Backend {
+///
+/// Backends must be [`Sync`]: the per-site execution engine
+/// ([`crate::exec`]) invokes kernels from worker threads.
+pub trait Backend: Sync {
     /// Nearest-center assignment with per-point weighted costs.
     fn assign(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> Assignment;
 
@@ -60,6 +65,13 @@ pub trait Backend {
 
     /// Human-readable backend name (for reports).
     fn name(&self) -> &'static str;
+
+    /// Worker threads one kernel call may use (1 = sequential). Solvers
+    /// use this to size their own data-parallel scans (e.g. the D²
+    /// seeding pass), which stay bit-identical at any thread count.
+    fn threads(&self) -> usize {
+        1
+    }
 }
 
 /// Portable pure-Rust backend.
@@ -121,62 +133,201 @@ fn dist2_early(p: &[f32], c: &[f32], best: f32) -> f32 {
     acc
 }
 
+fn check_shapes(points: &Dataset, weights: &[f64], centers: &Dataset) {
+    assert_eq!(weights.len(), points.n());
+    assert_eq!(points.d, centers.d);
+    assert!(centers.n() > 0, "assign with zero centers");
+}
+
+/// Nearest-center assignment of points `start..end` (indices absolute,
+/// output vectors local to the range). The shared inner loop of both
+/// CPU backends.
+fn assign_range(
+    points: &Dataset,
+    weights: &[f64],
+    centers: &Dataset,
+    start: usize,
+    end: usize,
+) -> Assignment {
+    let d = points.d;
+    let k = centers.n();
+    let mut out = Assignment {
+        assign: Vec::with_capacity(end - start),
+        kmeans_cost: Vec::with_capacity(end - start),
+        kmedian_cost: Vec::with_capacity(end - start),
+    };
+    for i in start..end {
+        let p = &points.data[i * d..(i + 1) * d];
+        let mut best = f32::INFINITY;
+        let mut best_c = 0u32;
+        for c in 0..k {
+            let crow = &centers.data[c * d..(c + 1) * d];
+            let d2 = dist2_early(p, crow, best);
+            if d2 < best {
+                best = d2;
+                best_c = c as u32;
+            }
+        }
+        let best = best.max(0.0) as f64;
+        out.assign.push(best_c);
+        out.kmeans_cost.push(weights[i] * best);
+        out.kmedian_cost.push(weights[i] * best.sqrt());
+    }
+    out
+}
+
+/// One weighted-Lloyd accumulation over points `start..end`: assignment
+/// plus per-center weighted sums/counts/cost for that range. Summing
+/// range results in range order reproduces the full-set accumulation.
+fn lloyd_range(
+    points: &Dataset,
+    weights: &[f64],
+    centers: &Dataset,
+    start: usize,
+    end: usize,
+) -> LloydStep {
+    let (k, d) = (centers.n(), centers.d);
+    let asg = assign_range(points, weights, centers, start, end);
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0.0f64; k];
+    for (j, i) in (start..end).enumerate() {
+        let c = asg.assign[j] as usize;
+        let w = weights[i];
+        counts[c] += w;
+        let row = points.row(i);
+        for (s, &x) in sums[c * d..(c + 1) * d].iter_mut().zip(row) {
+            *s += w * x as f64;
+        }
+    }
+    LloydStep {
+        sums,
+        counts,
+        cost: asg.kmeans_cost.iter().sum(),
+    }
+}
+
 impl Backend for RustBackend {
     fn assign(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> Assignment {
+        check_shapes(points, weights, centers);
+        assign_range(points, weights, centers, 0, points.n())
+    }
+
+    fn lloyd_step(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> LloydStep {
+        check_shapes(points, weights, centers);
+        lloyd_range(points, weights, centers, 0, points.n())
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Points per parallel work item. Fixed (independent of the thread
+/// count) so the chunk decomposition — and therefore the merged
+/// floating-point result — never depends on how many workers ran it.
+/// 4096 rows × ≤128 dims of `f32` is ~2 MB, L2-resident on every target
+/// we care about.
+const PAR_CHUNK: usize = 4096;
+
+/// Multithreaded CPU backend: the [`RustBackend`] kernels executed over
+/// fixed-size point chunks by scoped worker threads.
+///
+/// Guarantees:
+/// - `assign` is *bit-identical* to [`RustBackend`] (per-point work);
+/// - `lloyd_step` merges per-chunk `f64` accumulators in chunk order,
+///   so it is bit-identical across thread counts (and agrees with
+///   [`RustBackend`] up to `f64` summation re-association);
+/// - small inputs (one chunk) take the sequential path, which is the
+///   same code, so there is no behavioural cliff.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelBackend {
+    threads: usize,
+}
+
+impl Default for ParallelBackend {
+    fn default() -> Self {
+        ParallelBackend::new(0)
+    }
+}
+
+impl ParallelBackend {
+    /// Backend using `threads` workers (0 = all available cores).
+    pub fn new(threads: usize) -> ParallelBackend {
+        ParallelBackend { threads }
+    }
+
+    fn workers(&self, chunks: usize) -> usize {
+        self.threads().min(chunks).max(1)
+    }
+}
+
+impl Backend for ParallelBackend {
+    fn assign(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> Assignment {
+        check_shapes(points, weights, centers);
         let n = points.n();
-        let d = points.d;
-        assert_eq!(weights.len(), n);
-        assert_eq!(points.d, centers.d);
-        assert!(centers.n() > 0, "assign with zero centers");
-        let k = centers.n();
+        // Always decompose by PAR_CHUNK — even on one worker — so the
+        // result is a function of the chunk grid only, never of the
+        // thread count (par_map_chunks runs inline when workers <= 1).
+        let workers = self.workers(n.div_ceil(PAR_CHUNK));
+        let parts = crate::exec::par_map_chunks(n, PAR_CHUNK, workers, |start, end| {
+            assign_range(points, weights, centers, start, end)
+        });
         let mut out = Assignment {
             assign: Vec::with_capacity(n),
             kmeans_cost: Vec::with_capacity(n),
             kmedian_cost: Vec::with_capacity(n),
         };
-        for i in 0..n {
-            let p = &points.data[i * d..(i + 1) * d];
-            let mut best = f32::INFINITY;
-            let mut best_c = 0u32;
-            for c in 0..k {
-                let crow = &centers.data[c * d..(c + 1) * d];
-                let d2 = dist2_early(p, crow, best);
-                if d2 < best {
-                    best = d2;
-                    best_c = c as u32;
-                }
-            }
-            let best = best.max(0.0) as f64;
-            out.assign.push(best_c);
-            out.kmeans_cost.push(weights[i] * best);
-            out.kmedian_cost.push(weights[i] * best.sqrt());
+        for p in parts {
+            out.assign.extend_from_slice(&p.assign);
+            out.kmeans_cost.extend_from_slice(&p.kmeans_cost);
+            out.kmedian_cost.extend_from_slice(&p.kmedian_cost);
         }
         out
     }
 
     fn lloyd_step(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> LloydStep {
+        check_shapes(points, weights, centers);
+        let n = points.n();
         let (k, d) = (centers.n(), centers.d);
-        let asg = self.assign(points, weights, centers);
+        // Same chunk grid at every thread count: the `f64` accumulator
+        // merge happens in chunk order, so `lloyd_step` is bit-stable
+        // from 1 worker to many (pinned by the tests below).
+        let workers = self.workers(n.div_ceil(PAR_CHUNK));
+        let parts = crate::exec::par_map_chunks(n, PAR_CHUNK, workers, |start, end| {
+            lloyd_range(points, weights, centers, start, end)
+        });
         let mut sums = vec![0.0f64; k * d];
         let mut counts = vec![0.0f64; k];
-        for i in 0..points.n() {
-            let c = asg.assign[i] as usize;
-            let w = weights[i];
-            counts[c] += w;
-            let row = points.row(i);
-            for (s, &x) in sums[c * d..(c + 1) * d].iter_mut().zip(row) {
-                *s += w * x as f64;
+        let mut cost = 0.0f64;
+        for p in parts {
+            for (acc, v) in sums.iter_mut().zip(&p.sums) {
+                *acc += v;
             }
+            for (acc, v) in counts.iter_mut().zip(&p.counts) {
+                *acc += v;
+            }
+            cost += p.cost;
         }
-        LloydStep {
-            sums,
-            counts,
-            cost: asg.kmeans_cost.iter().sum(),
-        }
+        LloydStep { sums, counts, cost }
     }
 
     fn name(&self) -> &'static str {
-        "rust"
+        "parallel"
+    }
+
+    /// Resolved kernel thread budget. Inside a parallel site worker
+    /// (see [`crate::exec::in_site_worker`]) this is 1: the machine is
+    /// already saturated across sites, and nesting a second pool would
+    /// oversubscribe it W×T. Results don't change — the chunk grid is
+    /// thread-count invariant — only scheduling does.
+    fn threads(&self) -> usize {
+        if crate::exec::in_site_worker() {
+            1
+        } else if self.threads == 0 {
+            crate::exec::available_threads()
+        } else {
+            self.threads
+        }
     }
 }
 
@@ -237,5 +388,45 @@ mod tests {
         let step = RustBackend.lloyd_step(&pts, &w, &ctr);
         assert!(step.sums.iter().all(|&s| s == 0.0));
         assert_eq!(step.cost, 0.0);
+    }
+
+    #[test]
+    fn parallel_assign_is_bit_identical_to_rust() {
+        let (pts, w, ctr) = instance(4, 20_000, 12, 7);
+        let a = RustBackend.assign(&pts, &w, &ctr);
+        for threads in [2usize, 5] {
+            let b = ParallelBackend::new(threads).assign(&pts, &w, &ctr);
+            assert_eq!(a.assign, b.assign);
+            assert_eq!(a.kmeans_cost, b.kmeans_cost);
+            assert_eq!(a.kmedian_cost, b.kmedian_cost);
+        }
+    }
+
+    #[test]
+    fn parallel_lloyd_thread_invariant_and_close_to_rust() {
+        let (pts, w, ctr) = instance(5, 20_000, 8, 5);
+        let one = ParallelBackend::new(1).lloyd_step(&pts, &w, &ctr);
+        let two = ParallelBackend::new(2).lloyd_step(&pts, &w, &ctr);
+        let eight = ParallelBackend::new(8).lloyd_step(&pts, &w, &ctr);
+        assert_eq!(two.sums, eight.sums, "chunk merge must be bit-stable");
+        assert_eq!(one.sums, two.sums, "1 worker must use the same chunk grid");
+        assert_eq!(two.counts, eight.counts);
+        assert_eq!(two.cost, eight.cost);
+        assert_eq!(one.cost, two.cost);
+
+        let seq = RustBackend.lloyd_step(&pts, &w, &ctr);
+        assert!((two.cost - seq.cost).abs() <= 1e-9 * seq.cost.abs());
+        for (a, b) in two.sums.iter().zip(&seq.sums) {
+            assert!((a - b).abs() <= 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn parallel_small_input_takes_sequential_path() {
+        let (pts, w, ctr) = instance(6, 50, 4, 3);
+        let a = RustBackend.assign(&pts, &w, &ctr);
+        let b = ParallelBackend::new(4).assign(&pts, &w, &ctr);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.kmeans_cost, b.kmeans_cost);
     }
 }

@@ -3,6 +3,7 @@
 //! solve in the stack.
 
 use super::Objective;
+use crate::exec::par_chunks_mut;
 use crate::points::{dist2, Dataset, WeightedSet};
 use crate::rng::Pcg64;
 
@@ -11,6 +12,30 @@ use crate::rng::Pcg64;
 /// `min(k, #distinct-support)` centers — if fewer than `k` points carry
 /// positive selection mass, the seeding degenerates gracefully.
 pub fn seed(set: &WeightedSet, k: usize, obj: Objective, rng: &mut Pcg64) -> Dataset {
+    seed_threads(set, k, obj, rng, 1)
+}
+
+/// [`seed`] with the D² scan — the O(nk) hot loop of the seeding —
+/// parallelized over `threads` workers.
+///
+/// Only the *exact per-point* distance updates and score fills run on
+/// workers (each element written by exactly one thread); the scalar
+/// reduction and every RNG draw stay sequential, so the returned
+/// centers are bit-identical to the single-threaded path for any
+/// thread count.
+pub fn seed_threads(
+    set: &WeightedSet,
+    k: usize,
+    obj: Objective,
+    rng: &mut Pcg64,
+    threads: usize,
+) -> Dataset {
+    // Crate-wide convention: 0 = all available cores.
+    let threads = if threads == 0 {
+        crate::exec::available_threads()
+    } else {
+        threads
+    };
     let n = set.n();
     assert!(n > 0 && k > 0);
     let d = set.d();
@@ -28,29 +53,36 @@ pub fn seed(set: &WeightedSet, k: usize, obj: Objective, rng: &mut Pcg64) -> Dat
     centers.push(set.points.row(first));
 
     // min cost-to-chosen-centers per point, maintained incrementally.
-    let mut min_d2: Vec<f64> = (0..n)
-        .map(|i| set.points.dist2_to(i, centers.row(0)))
-        .collect();
+    let c0 = centers.row(0).to_vec();
+    let mut min_d2 = vec![0.0f64; n];
+    par_chunks_mut(&mut min_d2, threads, |start, chunk| {
+        for (j, m) in chunk.iter_mut().enumerate() {
+            *m = set.points.dist2_to(start + j, &c0);
+        }
+    });
     let mut probs = vec![0.0f64; n];
     while centers.n() < k {
-        let mut total = 0.0;
-        for i in 0..n {
-            let p = set.weights[i].max(0.0) * obj.of_dist2(min_d2[i]);
-            probs[i] = p;
-            total += p;
-        }
+        par_chunks_mut(&mut probs, threads, |start, chunk| {
+            for (j, p) in chunk.iter_mut().enumerate() {
+                let i = start + j;
+                *p = set.weights[i].max(0.0) * obj.of_dist2(min_d2[i]);
+            }
+        });
+        let total: f64 = probs.iter().sum();
         if total <= 0.0 || !total.is_finite() {
             break; // every remaining point coincides with a center
         }
         let next = rng.weighted_index(&probs);
         centers.push(set.points.row(next));
         let c = centers.row(centers.n() - 1).to_vec();
-        for i in 0..n {
-            let d2 = dist2(set.points.row(i), &c);
-            if d2 < min_d2[i] {
-                min_d2[i] = d2;
+        par_chunks_mut(&mut min_d2, threads, |start, chunk| {
+            for (j, m) in chunk.iter_mut().enumerate() {
+                let d2 = dist2(set.points.row(start + j), &c);
+                if d2 < *m {
+                    *m = d2;
+                }
             }
-        }
+        });
     }
     centers
 }
@@ -98,6 +130,22 @@ mod tests {
         }
         let opt_ref = cost_of(&set, &truth, Objective::KMeans);
         assert!(best < 8.0 * opt_ref, "seed cost {best} vs {opt_ref}");
+    }
+
+    #[test]
+    fn seed_threads_bit_identical_across_thread_counts() {
+        let mut rng = Pcg64::seed_from(5);
+        let (data, _) = gaussian_mixture_with_centers(&mut rng, 6_000, 8, 6);
+        let set = WeightedSet::unit(data);
+        let runs: Vec<Dataset> = [1usize, 2, 8]
+            .iter()
+            .map(|&t| {
+                let mut r = Pcg64::seed_from(77);
+                seed_threads(&set, 6, Objective::KMeans, &mut r, t)
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0], runs[2]);
     }
 
     #[test]

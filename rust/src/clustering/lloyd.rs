@@ -1,8 +1,11 @@
 //! Weighted Lloyd's algorithm for k-means, driven through a [`Backend`].
 //!
 //! Each iteration is one `lloyd_step` kernel call (assignment +
-//! accumulation — the AOT Pallas artifact on the XLA backend) followed by
-//! the division and empty-cluster repair, which stay in Rust.
+//! accumulation — the AOT Pallas artifact on the XLA backend, or the
+//! chunk-parallel scan on
+//! [`ParallelBackend`](crate::clustering::backend::ParallelBackend),
+//! which is bit-identical across thread counts) followed by the
+//! division and empty-cluster repair, which stay in Rust.
 
 use super::backend::Backend;
 use super::Solution;

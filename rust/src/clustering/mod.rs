@@ -96,7 +96,9 @@ pub fn approx_solution(
     max_iters: usize,
 ) -> Solution {
     assert!(set.n() > 0, "approx_solution on empty set");
-    let seeds = kmeanspp::seed(set, k, obj, rng);
+    // D² seeding scales its scan to the backend's thread budget; the
+    // result is bit-identical to the sequential scan at any count.
+    let seeds = kmeanspp::seed_threads(set, k, obj, rng, backend.threads());
     match obj {
         Objective::KMeans => lloyd::run(set, seeds, backend, max_iters, 1e-4),
         Objective::KMedian => kmedian::run(set, seeds, backend, max_iters, 1e-4),

@@ -4,9 +4,43 @@
 //! `#` comments — documented in README §Configuration).
 
 use crate::clustering::Objective;
+use crate::exec::ExecPolicy;
 use crate::partition::Scheme;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
+
+/// Which kernel backend executes the hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Portable single-threaded Rust kernels (the oracle).
+    Rust,
+    /// Chunk-parallel Rust kernels over a scoped thread pool.
+    Parallel,
+    /// AOT Pallas/XLA artifacts through PJRT (needs the `xla` feature
+    /// and a built `artifacts/` directory).
+    Xla,
+}
+
+impl BackendSpec {
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendSpec::Rust => "rust",
+            BackendSpec::Parallel => "parallel",
+            BackendSpec::Xla => "xla",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<BackendSpec> {
+        Some(match s {
+            "rust" => BackendSpec::Rust,
+            "parallel" => BackendSpec::Parallel,
+            "xla" => BackendSpec::Xla,
+            _ => return None,
+        })
+    }
+}
 
 /// Which topology to generate.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -137,6 +171,14 @@ pub struct ExperimentSpec {
     pub reps: usize,
     /// Base RNG seed.
     pub seed: u64,
+    /// Kernel backend for the hot path.
+    pub backend: BackendSpec,
+    /// Worker threads for per-site execution and the parallel backend:
+    /// `1` = sequential legacy path (bit-compatible with historical
+    /// seeds), `0` = all available cores, `n` = exactly `n` workers.
+    /// Parallel results are identical for every non-`1` value with the
+    /// same seed.
+    pub threads: usize,
 }
 
 impl Default for ExperimentSpec {
@@ -152,6 +194,8 @@ impl Default for ExperimentSpec {
             objective: Objective::KMeans,
             reps: 10,
             seed: 1,
+            backend: BackendSpec::Rust,
+            threads: 1,
         }
     }
 }
@@ -206,8 +250,18 @@ impl ExperimentSpec {
                 }
                 "reps" => spec.reps = v.parse()?,
                 "seed" => spec.seed = v.parse()?,
+                "backend" => {
+                    spec.backend = BackendSpec::parse(v)
+                        .ok_or_else(|| anyhow!("unknown backend '{v}' (rust|parallel|xla)"))?
+                }
+                "threads" => spec.threads = v.parse()?,
                 other => bail!("unknown config key '{other}'"),
             }
+        }
+        // A parallel backend with the sequential default thread count
+        // would silently run single-threaded; default it to all cores.
+        if spec.backend == BackendSpec::Parallel && !kv.contains_key("threads") {
+            spec.threads = 0;
         }
         spec.topology = match topo_kind.as_str() {
             "random" => TopologySpec::Random { n, p },
@@ -228,6 +282,12 @@ impl ExperimentSpec {
     /// Parse a config file's text.
     pub fn from_config(text: &str) -> Result<ExperimentSpec> {
         Self::from_kv(&parse_kv(text)?)
+    }
+
+    /// The per-site execution policy this spec selects (see
+    /// [`crate::exec`] for the determinism contract).
+    pub fn exec_policy(&self) -> ExecPolicy {
+        ExecPolicy::from_threads(self.threads)
     }
 }
 
@@ -254,6 +314,30 @@ mod tests {
         assert_eq!(spec.partition, Scheme::Weighted);
         assert_eq!(spec.algorithm, Algorithm::Combine);
         assert_eq!(spec.k, 10, "k defaults from dataset spec");
+    }
+
+    #[test]
+    fn backend_and_threads_keys() {
+        let spec =
+            ExperimentSpec::from_config("backend = parallel\nthreads = 4\n").unwrap();
+        assert_eq!(spec.backend, BackendSpec::Parallel);
+        assert_eq!(spec.threads, 4);
+        assert_eq!(spec.exec_policy(), ExecPolicy::Parallel { threads: 4 });
+
+        // `backend = parallel` alone defaults threads to auto (0).
+        let spec = ExperimentSpec::from_config("backend = parallel\n").unwrap();
+        assert_eq!(spec.threads, 0);
+        assert_eq!(spec.exec_policy(), ExecPolicy::Parallel { threads: 0 });
+
+        // Defaults keep the sequential legacy path.
+        let spec = ExperimentSpec::default();
+        assert_eq!(spec.backend, BackendSpec::Rust);
+        assert_eq!(spec.exec_policy(), ExecPolicy::Sequential);
+
+        assert!(ExperimentSpec::from_config("backend = gpu\n").is_err());
+        for b in [BackendSpec::Rust, BackendSpec::Parallel, BackendSpec::Xla] {
+            assert_eq!(BackendSpec::parse(b.name()), Some(b));
+        }
     }
 
     #[test]

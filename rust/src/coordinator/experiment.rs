@@ -97,7 +97,14 @@ pub fn run_once(
                 objective: spec.objective,
                 ..Default::default()
             };
-            protocol::cluster_on_graph(&graph, &locals, &cfg, backend, rng)
+            protocol::cluster_on_graph_exec(
+                &graph,
+                &locals,
+                &cfg,
+                backend,
+                rng,
+                spec.exec_policy(),
+            )
         }
         Algorithm::DistributedTree => {
             let tree = SpanningTree::random_root(&graph, rng);
@@ -107,7 +114,14 @@ pub fn run_once(
                 objective: spec.objective,
                 ..Default::default()
             };
-            protocol::cluster_on_tree(&tree, &locals, &cfg, backend, rng)
+            protocol::cluster_on_tree_exec(
+                &tree,
+                &locals,
+                &cfg,
+                backend,
+                rng,
+                spec.exec_policy(),
+            )
         }
         Algorithm::Combine => {
             let cfg = CombineConfig {
@@ -275,6 +289,7 @@ mod tests {
             objective: Objective::KMeans,
             reps: 2,
             seed: 42,
+            ..Default::default()
         }
     }
 
@@ -304,6 +319,21 @@ mod tests {
         let b = run_experiment(&spec, &RustBackend).unwrap();
         assert_eq!(a.ratio.mean, b.ratio.mean);
         assert_eq!(a.comm.mean, b.comm.mean);
+    }
+
+    #[test]
+    fn parallel_execution_deterministic_across_thread_counts() {
+        let mut spec = small_spec(Algorithm::Distributed);
+        spec.threads = 2;
+        let a = run_experiment(&spec, &RustBackend).unwrap();
+        spec.threads = 8;
+        let b = run_experiment(&spec, &RustBackend).unwrap();
+        spec.threads = 0; // auto
+        let c = run_experiment(&spec, &RustBackend).unwrap();
+        assert_eq!(a.ratio.mean, b.ratio.mean);
+        assert_eq!(a.comm.mean, b.comm.mean);
+        assert_eq!(a.ratio.mean, c.ratio.mean);
+        assert_eq!(a.coreset_size.mean, b.coreset_size.mean);
     }
 
     #[test]

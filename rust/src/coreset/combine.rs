@@ -64,6 +64,7 @@ mod tests {
         let data = gaussian_mixture(&mut rng, 4_000, 4, 4);
         let parts: Vec<WeightedSet> = Scheme::Weighted
             .partition(&data, 4, &mut rng)
+            .unwrap()
             .into_iter()
             .filter(|p| p.n() > 0)
             .map(WeightedSet::unit)
@@ -88,6 +89,7 @@ mod tests {
         let data = gaussian_mixture(&mut rng, 5_000, 5, 4);
         let parts: Vec<WeightedSet> = Scheme::Uniform
             .partition(&data, 5, &mut rng)
+            .unwrap()
             .into_iter()
             .map(WeightedSet::unit)
             .collect();

@@ -16,6 +16,7 @@ use super::sensitivity::{sample_portion, SampleParams};
 use super::Coreset;
 use crate::clustering::backend::{Assignment, Backend};
 use crate::clustering::{approx_solution, Objective, Solution};
+use crate::exec::{map_sites, ExecPolicy};
 use crate::points::WeightedSet;
 use crate::rng::Pcg64;
 
@@ -86,10 +87,20 @@ pub fn local_cost(summary: &LocalSummary, obj: Objective) -> f64 {
 /// Largest-remainder apportionment of the global budget `t` to sites
 /// proportional to their local costs (`t_i = t·cost_i/Σcost_j`, summing
 /// exactly to `t`).
+///
+/// Non-finite local costs (NaN from 0/0 kernels on degenerate sites,
+/// ±∞ from `f32` overflow) must not poison the apportionment: they are
+/// treated as zero, so the remaining sites share the budget. When no
+/// positive finite cost survives — or their sum overflows — the budget
+/// is spread evenly.
 pub fn allocate_budget(t: usize, costs: &[f64]) -> Vec<usize> {
-    let total: f64 = costs.iter().sum();
-    if total <= 0.0 {
-        // Degenerate: all sites have zero cost — spread evenly.
+    let sane: Vec<f64> = costs
+        .iter()
+        .map(|&c| if c.is_finite() && c > 0.0 { c } else { 0.0 })
+        .collect();
+    let total: f64 = sane.iter().sum();
+    if total <= 0.0 || !total.is_finite() {
+        // Degenerate: no usable costs — spread evenly.
         let base = t / costs.len().max(1);
         let mut out = vec![base; costs.len()];
         for item in out.iter_mut().take(t - base * costs.len()) {
@@ -97,16 +108,17 @@ pub fn allocate_budget(t: usize, costs: &[f64]) -> Vec<usize> {
         }
         return out;
     }
-    let shares: Vec<f64> = costs.iter().map(|&c| t as f64 * c / total).collect();
+    let shares: Vec<f64> = sane.iter().map(|&c| t as f64 * c / total).collect();
     let mut out: Vec<usize> = shares.iter().map(|&s| s.floor() as usize).collect();
     let assigned: usize = out.iter().sum();
-    // Distribute the remainder by descending fractional part.
+    // Distribute the remainder by descending fractional part
+    // (`total_cmp` keeps the sort total even if a share degenerates).
     let mut frac: Vec<(usize, f64)> = shares
         .iter()
         .enumerate()
         .map(|(i, &s)| (i, s - s.floor()))
         .collect();
-    frac.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    frac.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     for &(i, _) in frac.iter().take(t - assigned) {
         out[i] += 1;
     }
@@ -140,29 +152,45 @@ pub fn round2(
 /// Run the whole construction in-process (no network simulation): used
 /// for tests, the centralized-coordinator deployment and the benches.
 /// Returns the per-site portions; their union is the coreset.
+///
+/// Sequential legacy path — equivalent to
+/// [`build_portions_exec`] with [`ExecPolicy::Sequential`].
 pub fn build_portions(
     locals: &[WeightedSet],
     cfg: &DistributedConfig,
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> Vec<Coreset> {
+    build_portions_exec(locals, cfg, backend, rng, ExecPolicy::Sequential)
+}
+
+/// [`build_portions`] under an explicit [`ExecPolicy`].
+///
+/// Round 1 (local solves) and Round 2 (local sampling) are
+/// embarrassingly parallel across sites — the only cross-site data is
+/// the scalar cost vector between the rounds, exactly as in the paper.
+/// Under [`ExecPolicy::Parallel`] each site draws from its own RNG
+/// stream split from `rng`, so the portions are identical for any
+/// thread count (see [`crate::exec`] for the contract).
+pub fn build_portions_exec(
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    exec: ExecPolicy,
+) -> Vec<Coreset> {
     assert!(!locals.is_empty());
-    let summaries: Vec<LocalSummary> = locals
-        .iter()
-        .map(|p| round1(p, cfg, backend, rng))
-        .collect();
+    let summaries: Vec<LocalSummary> =
+        map_sites(locals.len(), rng, exec, |i, r| round1(&locals[i], cfg, backend, r));
     let costs: Vec<f64> = summaries
         .iter()
         .map(|s| local_cost(s, cfg.objective))
         .collect();
     let total: f64 = costs.iter().sum();
     let budgets = allocate_budget(cfg.t, &costs);
-    locals
-        .iter()
-        .zip(&summaries)
-        .zip(&budgets)
-        .map(|((p, s), &t_i)| round2(p, s, cfg, t_i, total, rng))
-        .collect()
+    map_sites(locals.len(), rng, exec, |i, r| {
+        round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
+    })
 }
 
 /// Union of portions into the global coreset.
@@ -188,6 +216,7 @@ mod tests {
         let data = gaussian_mixture(&mut rng, n, 6, 4);
         scheme
             .partition(&data, sites, &mut rng)
+            .unwrap()
             .into_iter()
             .filter(|p| p.n() > 0)
             .map(WeightedSet::unit)
@@ -202,6 +231,59 @@ mod tests {
         let alloc = allocate_budget(100, &[5.0, 0.0, 5.0]);
         assert_eq!(alloc[1], 0);
         assert_eq!(alloc.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn budget_allocation_survives_non_finite_costs() {
+        // Regression: NaN fractional parts used to panic in the
+        // largest-remainder sort; ±∞ shares saturated the floor() cast.
+        let alloc = allocate_budget(10, &[f64::NAN, 1.0, 3.0]);
+        assert_eq!(alloc[0], 0, "NaN site gets nothing: {alloc:?}");
+        assert_eq!(alloc.iter().sum::<usize>(), 10);
+
+        let alloc = allocate_budget(9, &[f64::INFINITY, 1.0, f64::NEG_INFINITY]);
+        assert_eq!(alloc, vec![0, 9, 0]);
+
+        // All costs unusable: even split, full budget still assigned.
+        let alloc = allocate_budget(7, &[f64::NAN, f64::INFINITY]);
+        assert_eq!(alloc.iter().sum::<usize>(), 7);
+
+        // Finite sum overflow: falls back to the even split.
+        let alloc = allocate_budget(4, &[f64::MAX, f64::MAX, 1.0]);
+        assert_eq!(alloc.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn parallel_portions_identical_across_thread_counts() {
+        let parts = locals(21, 4_000, 6, Scheme::Weighted);
+        let cfg = DistributedConfig {
+            t: 600,
+            k: 4,
+            ..Default::default()
+        };
+        let runs: Vec<Vec<Coreset>> = [1usize, 2, 8]
+            .iter()
+            .map(|&threads| {
+                let mut rng = Pcg64::seed_from(22);
+                build_portions_exec(
+                    &parts,
+                    &cfg,
+                    &RustBackend,
+                    &mut rng,
+                    ExecPolicy::Parallel { threads },
+                )
+            })
+            .collect();
+        for other in &runs[1..] {
+            assert_eq!(runs[0].len(), other.len());
+            for (a, b) in runs[0].iter().zip(other) {
+                assert_eq!(a.sampled, b.sampled);
+                assert_eq!(a.set, b.set);
+            }
+        }
+        // And the parallel construction is a valid coreset build.
+        let coreset = union(&runs[0]);
+        assert_eq!(coreset.sampled, 600);
     }
 
     #[test]

@@ -116,6 +116,7 @@ mod tests {
         let data = gaussian_mixture(&mut rng, n_points, 5, 4);
         let parts: Vec<WeightedSet> = Scheme::Uniform
             .partition(&data, sites, &mut rng)
+            .unwrap()
             .into_iter()
             .map(WeightedSet::unit)
             .collect();

@@ -1,0 +1,302 @@
+//! The parallel execution engine: how per-site work and chunked kernel
+//! work are scheduled onto OS threads.
+//!
+//! The paper's Algorithm 1 needs only *one scalar per site* of
+//! coordination, so Round 1 (local solves) and Round 2 (local sampling)
+//! are embarrassingly parallel across sites. This module provides the
+//! scheduling primitives the rest of the stack builds on:
+//!
+//! - [`ExecPolicy`] selects between the legacy sequential path (one RNG
+//!   threaded through sites in order — bit-compatible with the original
+//!   implementation) and the parallel path (per-site RNG streams split
+//!   from the master seed, sites executed on a worker pool);
+//! - [`map_sites`] runs one closure per site under a policy;
+//! - [`par_chunks_mut`] splits a mutable slice into contiguous chunks
+//!   processed by scoped worker threads (used by the D²-seeding scan).
+//!
+//! ## Determinism contract
+//!
+//! Under [`ExecPolicy::Parallel`], every site draws from its own
+//! [`Pcg64`] stream derived *up front* from the master generator via
+//! [`Pcg64::split_n`]. A site's result is therefore a pure function of
+//! `(site index, master seed)` — never of thread interleaving — so the
+//! output is identical for 1, 2 or 64 worker threads (pinned by
+//! `tests/parallel_determinism.rs`). The sequential policy instead
+//! shares one generator across sites exactly like the pre-engine code,
+//! which keeps historical seeds reproducible but cannot be parallelized.
+
+use crate::rng::Pcg64;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+thread_local! {
+    /// True on threads spawned by [`map_sites`] when more than one site
+    /// worker is running. Kernel backends consult this to run inline
+    /// instead of nesting a second thread pool (W site workers × T
+    /// kernel threads would oversubscribe the machine multiplicatively).
+    static IN_SITE_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// True when the current thread is one of several parallel site
+/// workers — nested data-parallelism should run inline then.
+pub fn in_site_worker() -> bool {
+    IN_SITE_WORKER.with(|c| c.get())
+}
+
+/// How a batch of per-site jobs executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPolicy {
+    /// One shared RNG threaded through the sites in index order.
+    /// Bit-compatible with the original single-threaded implementation.
+    Sequential,
+    /// Per-site RNG streams split from the master seed; sites run on a
+    /// pool of worker threads. `threads == 0` means "all available
+    /// cores". Results are independent of the thread count.
+    Parallel {
+        /// Worker thread count (0 = all available cores).
+        threads: usize,
+    },
+}
+
+impl ExecPolicy {
+    /// Parallel policy sized to the machine.
+    pub fn auto() -> ExecPolicy {
+        ExecPolicy::Parallel { threads: 0 }
+    }
+
+    /// Map a CLI/config `threads` value to a policy: `1` selects the
+    /// legacy sequential path, anything else (including `0` = auto) the
+    /// parallel path.
+    pub fn from_threads(threads: usize) -> ExecPolicy {
+        if threads == 1 {
+            ExecPolicy::Sequential
+        } else {
+            ExecPolicy::Parallel { threads }
+        }
+    }
+
+    /// Worker threads this policy would spawn for `jobs` jobs.
+    pub fn worker_count(&self, jobs: usize) -> usize {
+        match *self {
+            ExecPolicy::Sequential => 1,
+            ExecPolicy::Parallel { threads } => {
+                let t = if threads == 0 {
+                    available_threads()
+                } else {
+                    threads
+                };
+                t.min(jobs).max(1)
+            }
+        }
+    }
+}
+
+/// Number of hardware threads (1 when the runtime cannot tell).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(site, rng_for_site)` for each of `n` sites under `policy` and
+/// return the results in site order.
+///
+/// Sequential: `f` is called in index order with the master `rng`.
+/// Parallel: the master `rng` is split into `n` independent streams
+/// first (advancing it deterministically), then workers drain a shared
+/// job queue; see the module docs for the determinism contract.
+pub fn map_sites<T, F>(n: usize, rng: &mut Pcg64, policy: ExecPolicy, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut Pcg64) -> T + Sync,
+{
+    let workers = policy.worker_count(n);
+    match policy {
+        ExecPolicy::Sequential => (0..n).map(|i| f(i, &mut *rng)).collect(),
+        ExecPolicy::Parallel { .. } => {
+            // Stack of (site, stream) jobs; popped LIFO, which is fine
+            // because results are keyed by site index afterwards.
+            let jobs: Mutex<Vec<(usize, Pcg64)>> =
+                Mutex::new(rng.split_n(n).into_iter().enumerate().collect());
+            let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| {
+                        // With several site workers, mark the thread so
+                        // kernel backends don't nest their own pools.
+                        // Scheduling only — results are thread-count
+                        // invariant either way.
+                        if workers > 1 {
+                            IN_SITE_WORKER.with(|c| c.set(true));
+                        }
+                        loop {
+                            let job = jobs.lock().unwrap().pop();
+                            match job {
+                                Some((i, mut site_rng)) => {
+                                    let out = f(i, &mut site_rng);
+                                    done.lock().unwrap().push((i, out));
+                                }
+                                None => break,
+                            }
+                        }
+                    });
+                }
+            });
+            let mut done = done.into_inner().unwrap();
+            done.sort_unstable_by_key(|&(i, _)| i);
+            done.into_iter().map(|(_, t)| t).collect()
+        }
+    }
+}
+
+/// Run `f(start, end)` over `n` items in fixed-size chunks on
+/// `workers` threads, returning the per-chunk results in chunk order.
+///
+/// The chunk size — not the worker count — determines the work
+/// decomposition, so the merged result is identical for any `workers`.
+pub fn par_map_chunks<T, F>(n: usize, chunk: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    assert!(chunk > 0);
+    let n_chunks = n.div_ceil(chunk);
+    if workers <= 1 || n_chunks <= 1 {
+        return (0..n_chunks)
+            .map(|c| f(c * chunk, ((c + 1) * chunk).min(n)))
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n_chunks));
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n_chunks) {
+            s.spawn(|| loop {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= n_chunks {
+                    break;
+                }
+                let out = f(c * chunk, ((c + 1) * chunk).min(n));
+                done.lock().unwrap().push((c, out));
+            });
+        }
+    });
+    let mut done = done.into_inner().unwrap();
+    done.sort_unstable_by_key(|&(c, _)| c);
+    done.into_iter().map(|(_, t)| t).collect()
+}
+
+/// Split `data` into `threads` contiguous chunks and run
+/// `f(start_index, chunk)` on scoped worker threads (inline when
+/// `threads <= 1` or the slice is small). Each element is written by
+/// exactly one worker, so the result is identical to the sequential
+/// pass for any thread count.
+pub fn par_chunks_mut<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send + Sync,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if threads <= 1 || n < 2_048 {
+        f(0, data);
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (w, chunk) in data.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || f(w * per, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_sites_orders_results() {
+        let mut rng = Pcg64::seed_from(1);
+        for policy in [ExecPolicy::Sequential, ExecPolicy::Parallel { threads: 3 }] {
+            let out = map_sites(10, &mut rng, policy, |i, _| i * 2);
+            assert_eq!(out, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_results_independent_of_thread_count() {
+        // Each site draws from its stream; outputs must not depend on
+        // how many workers ran them.
+        let runs: Vec<Vec<u64>> = [1usize, 2, 8]
+            .iter()
+            .map(|&t| {
+                let mut rng = Pcg64::seed_from(42);
+                map_sites(16, &mut rng, ExecPolicy::Parallel { threads: t }, |_, r| {
+                    r.next_u64()
+                })
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0], runs[2]);
+    }
+
+    #[test]
+    fn parallel_advances_master_rng_deterministically() {
+        let mut a = Pcg64::seed_from(7);
+        let mut b = Pcg64::seed_from(7);
+        let _ = map_sites(5, &mut a, ExecPolicy::Parallel { threads: 2 }, |i, _| i);
+        let _ = map_sites(5, &mut b, ExecPolicy::Parallel { threads: 4 }, |i, _| i);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn sequential_threads_master_rng_in_order() {
+        let mut a = Pcg64::seed_from(9);
+        let direct: Vec<u64> = (0..6).map(|_| a.next_u64()).collect();
+        let mut b = Pcg64::seed_from(9);
+        let via = map_sites(6, &mut b, ExecPolicy::Sequential, |_, r| r.next_u64());
+        assert_eq!(direct, via);
+    }
+
+    #[test]
+    fn par_map_chunks_covers_all_ranges() {
+        for workers in [1usize, 2, 5] {
+            let parts = par_map_chunks(1_000, 64, workers, |s, e| (s, e));
+            assert_eq!(parts.len(), 16);
+            assert_eq!(parts[0], (0, 64));
+            assert_eq!(parts[15], (960, 1_000));
+            for w in parts.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_touches_every_element_once() {
+        for threads in [1usize, 2, 4] {
+            let mut data = vec![0usize; 10_000];
+            par_chunks_mut(&mut data, threads, |start, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v += start + j + 1;
+                }
+            });
+            assert!(data.iter().enumerate().all(|(i, &v)| v == i + 1));
+        }
+    }
+
+    #[test]
+    fn policy_helpers() {
+        assert_eq!(ExecPolicy::from_threads(1), ExecPolicy::Sequential);
+        assert_eq!(
+            ExecPolicy::from_threads(4),
+            ExecPolicy::Parallel { threads: 4 }
+        );
+        assert_eq!(
+            ExecPolicy::from_threads(0),
+            ExecPolicy::Parallel { threads: 0 }
+        );
+        assert_eq!(ExecPolicy::Sequential.worker_count(100), 1);
+        assert_eq!(ExecPolicy::Parallel { threads: 8 }.worker_count(3), 3);
+        assert!(ExecPolicy::auto().worker_count(64) >= 1);
+    }
+}

@@ -36,6 +36,7 @@
 //! let graph = distclus::topology::generators::grid(4, 4);
 //! let locals: Vec<WeightedSet> = distclus::partition::Scheme::Uniform
 //!     .partition(&data, graph.n(), &mut rng)
+//!     .unwrap()
 //!     .into_iter()
 //!     .map(WeightedSet::unit)
 //!     .collect();
@@ -54,6 +55,7 @@ pub mod config;
 pub mod coordinator;
 pub mod coreset;
 pub mod data;
+pub mod exec;
 pub mod json;
 pub mod metrics;
 pub mod network;
@@ -67,8 +69,9 @@ pub mod topology;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
-    pub use crate::clustering::backend::{Backend, RustBackend};
+    pub use crate::clustering::backend::{Backend, ParallelBackend, RustBackend};
     pub use crate::coreset::{Coreset, DistributedConfig};
+    pub use crate::exec::ExecPolicy;
     pub use crate::points::{Dataset, WeightedSet};
     pub use crate::rng::Pcg64;
     pub use crate::topology::Graph;

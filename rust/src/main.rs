@@ -16,9 +16,9 @@
 //! ```
 
 use anyhow::{anyhow, bail, Result};
-use distclus::clustering::backend::{Backend, RustBackend};
+use distclus::clustering::backend::{Backend, ParallelBackend, RustBackend};
 use distclus::cli::Args;
-use distclus::config::{Algorithm, ExperimentSpec, TopologySpec};
+use distclus::config::{Algorithm, BackendSpec, ExperimentSpec, TopologySpec};
 use distclus::coordinator::{render_report, run_experiment, series_json};
 use distclus::partition::Scheme;
 use distclus::rng::Pcg64;
@@ -33,24 +33,28 @@ fn usage() -> ! {
          \x20          --partition uniform|similarity|weighted|degree\n\
          \x20          --algorithm distributed|distributed-tree|combine|combine-tree|zhang-tree\n\
          \x20          --t N --k K --objective kmeans|kmedian --reps N --seed S\n\
-         \x20          --backend rust|xla --artifacts DIR --config FILE --json OUT.json"
+         \x20          --backend rust|parallel|xla --threads N (0 = all cores, 1 = sequential)\n\
+         \x20          --artifacts DIR --config FILE --json OUT.json"
     );
     std::process::exit(2)
 }
 
-fn build_backend(args: &Args) -> Result<Box<dyn Backend>> {
+fn build_backend(spec: &ExperimentSpec, args: &Args) -> Result<Box<dyn Backend>> {
     let artifacts = args.get_or("artifacts", "artifacts");
-    match args.get_or("backend", "rust").as_str() {
-        "rust" => Ok(Box::new(RustBackend)),
-        "xla" => Ok(Box::new(XlaBackend::load(Path::new(&artifacts))?)),
-        other => bail!("unknown backend '{other}' (rust|xla)"),
-    }
+    Ok(match spec.backend {
+        BackendSpec::Rust => Box::new(RustBackend),
+        BackendSpec::Parallel => Box::new(ParallelBackend::new(spec.threads)),
+        BackendSpec::Xla => Box::new(XlaBackend::load(Path::new(&artifacts))?),
+    })
 }
 
 fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
+    let mut config_has_threads = false;
     let mut spec = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)?;
-        ExperimentSpec::from_config(&text)?
+        let kv = distclus::config::parse_kv(&text)?;
+        config_has_threads = kv.contains_key("threads");
+        ExperimentSpec::from_kv(&kv)?
     } else {
         ExperimentSpec::default()
     };
@@ -94,12 +98,26 @@ fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
     }
     spec.reps = args.get_parse("reps", spec.reps)?;
     spec.seed = args.get_parse("seed", spec.seed)?;
+    if let Some(b) = args.get("backend") {
+        spec.backend =
+            BackendSpec::parse(b).ok_or_else(|| anyhow!("unknown backend '{b}' (rust|parallel|xla)"))?;
+        // `--backend parallel` with no thread count from anywhere (CLI
+        // or config file) means "use the machine" rather than the
+        // sequential default; an explicit `threads` always wins.
+        if spec.backend == BackendSpec::Parallel
+            && args.get("threads").is_none()
+            && !config_has_threads
+        {
+            spec.threads = 0;
+        }
+    }
+    spec.threads = args.get_parse("threads", spec.threads)?;
     Ok(spec)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
     let spec = spec_from_args(args)?;
-    let backend = build_backend(args)?;
+    let backend = build_backend(&spec, args)?;
     eprintln!(
         "running {} on {}/{} partition={} t={} k={} reps={} backend={}",
         spec.algorithm.name(),
@@ -194,7 +212,7 @@ fn cmd_selftest(args: &Args) -> Result<()> {
 /// inspecting what the summary actually contains.
 fn cmd_coreset(args: &Args) -> Result<()> {
     let spec = spec_from_args(args)?;
-    let backend = build_backend(args)?;
+    let backend = build_backend(&spec, args)?;
     let out = args.get_or("out", "coreset.csv");
     args.reject_unknown()?;
     let mut rng = Pcg64::seed_from(spec.seed);

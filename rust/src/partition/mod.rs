@@ -17,6 +17,29 @@
 use crate::points::{dist2, Dataset};
 use crate::rng::Pcg64;
 use crate::topology::Graph;
+use std::fmt;
+
+/// Why a partition request could not be served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionError {
+    /// The scheme weights sites by topology degree, so it needs the
+    /// graph: call [`Scheme::partition_on`] instead.
+    NeedsGraph(Scheme),
+}
+
+impl fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PartitionError::NeedsGraph(s) => write!(
+                f,
+                "partition scheme '{}' needs a graph; use partition_on",
+                s.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
 
 /// Which of the paper's partition methods to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,29 +78,38 @@ impl Scheme {
 
     /// Split `data` into `sites` local datasets.
     ///
-    /// For [`Scheme::Degree`] use [`Scheme::partition_on`] (needs the
-    /// topology); calling `partition` with `Degree` panics.
-    pub fn partition(self, data: &Dataset, sites: usize, rng: &mut Pcg64) -> Vec<Dataset> {
+    /// [`Scheme::Degree`] weights sites by their topology degree, which
+    /// this graph-free entry point cannot know: it returns
+    /// [`PartitionError::NeedsGraph`] (use [`Scheme::partition_on`]).
+    /// No scheme panics through the public API.
+    pub fn partition(
+        self,
+        data: &Dataset,
+        sites: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Dataset>, PartitionError> {
         match self {
-            Scheme::Uniform => uniform(data, sites, rng),
-            Scheme::Similarity => similarity(data, sites, rng),
+            Scheme::Uniform => Ok(uniform(data, sites, rng)),
+            Scheme::Similarity => Ok(similarity(data, sites, rng)),
             Scheme::Weighted => {
                 let w: Vec<f64> = (0..sites).map(|_| rng.normal().abs()).collect();
-                by_site_weight(data, &w, rng)
+                Ok(by_site_weight(data, &w, rng))
             }
-            Scheme::Degree => panic!("Degree partition needs a graph; use partition_on"),
+            Scheme::Degree => Err(PartitionError::NeedsGraph(self)),
         }
     }
 
     /// Split `data` across the nodes of `graph` (any scheme; required for
-    /// [`Scheme::Degree`]).
+    /// [`Scheme::Degree`], infallible for all schemes).
     pub fn partition_on(self, data: &Dataset, graph: &Graph, rng: &mut Pcg64) -> Vec<Dataset> {
         match self {
             Scheme::Degree => {
                 let w: Vec<f64> = (0..graph.n()).map(|v| graph.degree(v) as f64).collect();
                 by_site_weight(data, &w, rng)
             }
-            other => other.partition(data, graph.n(), rng),
+            other => other
+                .partition(data, graph.n(), rng)
+                .expect("graph-free schemes cannot fail"),
         }
     }
 }
@@ -177,7 +209,7 @@ mod tests {
     fn uniform_is_balanced() {
         let mut rng = Pcg64::seed_from(2);
         let data = gaussian_mixture(&mut rng, 10_000, 4, 4);
-        let parts = Scheme::Uniform.partition(&data, 10, &mut rng);
+        let parts = Scheme::Uniform.partition(&data, 10, &mut rng).unwrap();
         for p in &parts {
             assert!((p.n() as f64 - 1_000.0).abs() < 200.0, "n={}", p.n());
         }
@@ -187,7 +219,7 @@ mod tests {
     fn weighted_is_imbalanced() {
         let mut rng = Pcg64::seed_from(3);
         let data = gaussian_mixture(&mut rng, 10_000, 4, 4);
-        let parts = Scheme::Weighted.partition(&data, 10, &mut rng);
+        let parts = Scheme::Weighted.partition(&data, 10, &mut rng).unwrap();
         let max = parts.iter().map(|p| p.n()).max().unwrap();
         let min = parts.iter().map(|p| p.n()).min().unwrap();
         assert!(max > 2 * min.max(1), "max={max} min={min}");
@@ -222,7 +254,7 @@ mod tests {
         // Retry until associated points land in different blobs (random).
         for attempt in 0..20 {
             let mut r2 = Pcg64::seed_from(100 + attempt);
-            let parts = Scheme::Similarity.partition(&data, 2, &mut r2);
+            let parts = Scheme::Similarity.partition(&data, 2, &mut r2).unwrap();
             if parts[0].n() < 10 || parts[1].n() < 10 {
                 continue;
             }
@@ -240,11 +272,12 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "needs a graph")]
-    fn degree_without_graph_panics() {
+    fn degree_without_graph_is_an_error_not_a_panic() {
         let mut rng = Pcg64::seed_from(6);
         let data = gaussian_mixture(&mut rng, 100, 2, 2);
-        Scheme::Degree.partition(&data, 4, &mut rng);
+        let err = Scheme::Degree.partition(&data, 4, &mut rng).unwrap_err();
+        assert_eq!(err, PartitionError::NeedsGraph(Scheme::Degree));
+        assert!(err.to_string().contains("needs a graph"));
     }
 
     #[test]

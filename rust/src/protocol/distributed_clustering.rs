@@ -11,6 +11,7 @@ use crate::coreset::combine::{self, CombineConfig};
 use crate::coreset::distributed::{self, allocate_budget, local_cost, DistributedConfig};
 use crate::coreset::zhang::{self, ZhangConfig};
 use crate::coreset::Coreset;
+use crate::exec::{map_sites, ExecPolicy};
 use crate::network::{Network, Payload};
 use crate::points::{Dataset, WeightedSet};
 use crate::protocol::{broadcast_down, converge_cast, flood};
@@ -48,6 +49,9 @@ fn solve_on(
 /// construction with flooding for both the cost exchange and the coreset
 /// exchange. Every node ends holding the full coreset (as in Algorithm
 /// 2); the solver runs once since all nodes compute identically.
+///
+/// Sequential legacy entry point — see [`cluster_on_graph_exec`] for
+/// the parallel execution engine.
 pub fn cluster_on_graph(
     graph: &Graph,
     locals: &[WeightedSet],
@@ -55,14 +59,28 @@ pub fn cluster_on_graph(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
+    cluster_on_graph_exec(graph, locals, cfg, backend, rng, ExecPolicy::Sequential)
+}
+
+/// [`cluster_on_graph`] under an explicit [`ExecPolicy`]: Round 1 and
+/// Round 2 run per-site on worker threads (the network simulation — a
+/// bookkeeping pass — stays on the caller's thread). Results are
+/// independent of the thread count; see [`crate::exec`].
+pub fn cluster_on_graph_exec(
+    graph: &Graph,
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    exec: ExecPolicy,
+) -> anyhow::Result<RunResult> {
     anyhow::ensure!(graph.n() == locals.len(), "one local set per node");
     let mut net = Network::new(graph.clone()).without_transcript();
 
     // Round 1: local solves; flood the scalar costs.
-    let summaries: Vec<_> = locals
-        .iter()
-        .map(|p| distributed::round1(p, cfg, backend, rng))
-        .collect();
+    let summaries: Vec<_> = map_sites(locals.len(), rng, exec, |i, r| {
+        distributed::round1(&locals[i], cfg, backend, r)
+    });
     let cost_payloads: Vec<Payload> = summaries
         .iter()
         .enumerate()
@@ -85,12 +103,9 @@ pub fn cluster_on_graph(
     let budgets = allocate_budget(cfg.t, &costs);
 
     // Round 2: local portions; flood them so all nodes hold the coreset.
-    let portions: Vec<Coreset> = locals
-        .iter()
-        .zip(&summaries)
-        .zip(&budgets)
-        .map(|((p, s), &t_i)| distributed::round2(p, s, cfg, t_i, total, rng))
-        .collect();
+    let portions: Vec<Coreset> = map_sites(locals.len(), rng, exec, |i, r| {
+        distributed::round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
+    });
     let portion_payloads: Vec<Payload> = portions
         .iter()
         .enumerate()
@@ -116,6 +131,9 @@ pub fn cluster_on_graph(
 /// The paper's algorithm on a rooted tree (Theorem 3): costs converge to
 /// the root, the total broadcasts down, portions converge to the root,
 /// the root solves and broadcasts the centers.
+///
+/// Sequential legacy entry point — see [`cluster_on_tree_exec`] for the
+/// parallel execution engine.
 pub fn cluster_on_tree(
     tree: &SpanningTree,
     locals: &[WeightedSet],
@@ -123,13 +141,25 @@ pub fn cluster_on_tree(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
+    cluster_on_tree_exec(tree, locals, cfg, backend, rng, ExecPolicy::Sequential)
+}
+
+/// [`cluster_on_tree`] under an explicit [`ExecPolicy`] (same contract
+/// as [`cluster_on_graph_exec`]).
+pub fn cluster_on_tree_exec(
+    tree: &SpanningTree,
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    exec: ExecPolicy,
+) -> anyhow::Result<RunResult> {
     anyhow::ensure!(tree.n() == locals.len(), "one local set per node");
     let mut net = Network::new(tree.as_graph()).without_transcript();
 
-    let summaries: Vec<_> = locals
-        .iter()
-        .map(|p| distributed::round1(p, cfg, backend, rng))
-        .collect();
+    let summaries: Vec<_> = map_sites(locals.len(), rng, exec, |i, r| {
+        distributed::round1(&locals[i], cfg, backend, r)
+    });
     let cost_payloads: Vec<Payload> = summaries
         .iter()
         .enumerate()
@@ -150,12 +180,9 @@ pub fn cluster_on_tree(
     broadcast_down(&mut net, tree, &Payload::Scalar(total));
 
     let budgets = allocate_budget(cfg.t, &costs);
-    let portions: Vec<Coreset> = locals
-        .iter()
-        .zip(&summaries)
-        .zip(&budgets)
-        .map(|((p, s), &t_i)| distributed::round2(p, s, cfg, t_i, total, rng))
-        .collect();
+    let portions: Vec<Coreset> = map_sites(locals.len(), rng, exec, |i, r| {
+        distributed::round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
+    });
     let portion_payloads: Vec<Payload> = portions
         .iter()
         .enumerate()

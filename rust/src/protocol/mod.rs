@@ -9,8 +9,8 @@ mod reliable;
 mod tree;
 
 pub use distributed_clustering::{
-    cluster_on_graph, cluster_on_tree, combine_on_graph, combine_on_tree, zhang_on_tree,
-    RunResult,
+    cluster_on_graph, cluster_on_graph_exec, cluster_on_tree, cluster_on_tree_exec,
+    combine_on_graph, combine_on_tree, zhang_on_tree, RunResult,
 };
 pub use flooding::flood;
 pub use reliable::flood_reliable;

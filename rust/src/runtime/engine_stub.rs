@@ -1,0 +1,116 @@
+//! Offline stand-in for the PJRT engine (`engine.rs`).
+//!
+//! The real engine compiles HLO artifacts with the `xla` crate's PJRT
+//! bindings, which are unavailable in the offline build. This stub has
+//! the same public surface but [`Engine::load`] always fails, so
+//! [`super::XlaBackend::load`] returns an error and callers fall back
+//! to the pure-Rust backends. Build with `--features xla` (after adding
+//! the `xla` dependency) to get the real engine.
+
+use super::manifest::Manifest;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Sentinel coordinate for padded center rows (kept in lockstep with
+/// `python/compile/kernels/distance.py::PAD_CENTER`).
+pub const PAD_CENTER: f32 = 1e17;
+
+/// Outputs of one `assign_cost` chunk execution (already unpadded).
+#[derive(Debug)]
+pub struct AssignChunk {
+    /// Nearest-center index per point.
+    pub assign: Vec<i32>,
+    /// `w * d^2` per point.
+    pub kmeans_cost: Vec<f32>,
+    /// `w * d` per point.
+    pub kmedian_cost: Vec<f32>,
+}
+
+/// Outputs of one `lloyd_step` chunk execution (still padded).
+#[derive(Debug)]
+pub struct LloydChunk {
+    /// Weighted coordinate sums, row-major `[k_pad, d_pad]`.
+    pub sums: Vec<f32>,
+    /// Weighted counts per padded center.
+    pub counts: Vec<f32>,
+    /// Chunk's weighted k-means cost.
+    pub cost: f32,
+}
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT engine unavailable: built without the `xla` feature (offline stub)";
+
+/// Stub engine: cannot be constructed, so the accessor methods below
+/// are unreachable in practice but keep the call sites compiling.
+pub struct Engine {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl Engine {
+    /// Always fails in the offline build.
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// The manifest in use (unreachable: no stub engine exists).
+    pub fn manifest(&self) -> &Manifest {
+        match self._unconstructible {}
+    }
+
+    /// No artifact ever fits in the stub.
+    pub fn supports(&self, _entry: &str, _d: usize, _k: usize) -> bool {
+        false
+    }
+
+    /// No artifact, no chunk size.
+    pub fn chunk_n(&self, _entry: &str, _d: usize, _k: usize) -> Option<usize> {
+        None
+    }
+
+    /// Always fails in the offline build.
+    pub fn assign_cost_chunk(
+        &self,
+        _points: &[f32],
+        _weights: &[f32],
+        _centers: &[f32],
+        _d: usize,
+        _k: usize,
+    ) -> Result<AssignChunk> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Always fails in the offline build.
+    pub fn lloyd_step_chunk(
+        &self,
+        _points: &[f32],
+        _weights: &[f32],
+        _centers: &[f32],
+        _d: usize,
+        _k: usize,
+    ) -> Result<(LloydChunk, usize, usize)> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Always fails in the offline build.
+    pub fn total_cost_chunk(
+        &self,
+        _points: &[f32],
+        _weights: &[f32],
+        _centers: &[f32],
+        _d: usize,
+        _k: usize,
+    ) -> Result<(f32, f32)> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = Engine::load(Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

@@ -15,6 +15,15 @@
 //!   squared distance dominates every real distance without overflowing
 //!   `f32`, so they never win the argmin.
 
+// The real engine needs the `xla` crate (PJRT bindings), which the
+// offline build environment cannot fetch: it only compiles under the
+// `xla` feature. The default build uses a stub whose `Engine::load`
+// reports the backend unavailable, so every caller (CLI `--backend
+// xla`, benches, parity tests) falls back or skips gracefully.
+#[cfg(feature = "xla")]
+mod engine;
+#[cfg(not(feature = "xla"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod manifest;
 mod xla_backend;

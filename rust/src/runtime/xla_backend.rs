@@ -53,7 +53,7 @@ impl Backend for XlaBackend {
         let (n, d, k) = (points.n(), points.d, centers.n());
         assert_eq!(weights.len(), n);
         if !self.engine.supports("assign_cost", d, k) {
-            log::warn!("assign: no artifact for d={d} k={k}; pure-Rust fallback");
+            eprintln!("warning: assign: no artifact for d={d} k={k}; pure-Rust fallback");
             return self.fallback.assign(points, weights, centers);
         }
         let chunk = self.engine.chunk_n("assign_cost", d, k).unwrap();
@@ -88,7 +88,7 @@ impl Backend for XlaBackend {
         let (n, d, k) = (points.n(), points.d, centers.n());
         assert_eq!(weights.len(), n);
         if !self.engine.supports("lloyd_step", d, k) {
-            log::warn!("lloyd_step: no artifact for d={d} k={k}; pure-Rust fallback");
+            eprintln!("warning: lloyd_step: no artifact for d={d} k={k}; pure-Rust fallback");
             return self.fallback.lloyd_step(points, weights, centers);
         }
         let chunk = self.engine.chunk_n("lloyd_step", d, k).unwrap();

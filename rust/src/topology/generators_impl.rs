@@ -22,14 +22,34 @@ pub fn erdos_renyi(rng: &mut Pcg64, n: usize, p: f64) -> Graph {
 
 /// Erdős–Rényi conditioned on connectivity: resample until connected
 /// (the paper's experiments require a connected communication graph).
+///
+/// A `p` far below the `ln n / n` connectivity threshold used to abort
+/// the whole figure/bench run; instead the edge probability now
+/// escalates geometrically after every failed batch of draws, so the
+/// call always terminates (at `p = 1` the graph is complete, which is
+/// connected for every `n`). The sequence of draws is a deterministic
+/// function of `rng`, so figures stay reproducible.
 pub fn erdos_renyi_connected(rng: &mut Pcg64, n: usize, p: f64) -> Graph {
-    for _ in 0..10_000 {
-        let g = erdos_renyi(rng, n, p);
-        if connected(&g) {
-            return g;
-        }
+    let requested = p;
+    let mut p = p.clamp(0.0, 1.0);
+    if !p.is_finite() {
+        p = 1.0;
     }
-    panic!("erdos_renyi_connected: p={p} too small for n={n}");
+    loop {
+        const DRAWS_PER_BATCH: usize = 200;
+        for _ in 0..DRAWS_PER_BATCH {
+            let g = erdos_renyi(rng, n, p);
+            if connected(&g) {
+                return g;
+            }
+        }
+        let escalated = (p * 1.5 + 0.05).min(1.0);
+        eprintln!(
+            "erdos_renyi_connected: no connected draw in {DRAWS_PER_BATCH} tries \
+             (n={n}, p={p:.4}, requested {requested:.4}); escalating to p={escalated:.4}"
+        );
+        p = escalated;
+    }
 }
 
 /// 2-D grid (4-neighbor lattice) with `rows x cols` nodes. Node `(r, c)`
@@ -171,6 +191,20 @@ mod tests {
         for _ in 0..5 {
             assert!(connected(&erdos_renyi_connected(&mut rng, 25, 0.3)));
         }
+    }
+
+    #[test]
+    fn er_connected_escalates_p_instead_of_panicking() {
+        // p = 0 can never produce a connected draw for n > 1; the
+        // generator must escalate towards p = 1 and still return.
+        let mut rng = Pcg64::seed_from(7);
+        let g = erdos_renyi_connected(&mut rng, 12, 0.0);
+        assert_eq!(g.n(), 12);
+        assert!(connected(&g));
+        // Deterministic given the seed.
+        let mut rng2 = Pcg64::seed_from(7);
+        let g2 = erdos_renyi_connected(&mut rng2, 12, 0.0);
+        assert_eq!(g.edges(), g2.edges());
     }
 
     #[test]

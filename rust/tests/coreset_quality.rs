@@ -32,6 +32,7 @@ fn gen_instance(rng: &mut Pcg64) -> Instance {
     let scheme = [Scheme::Uniform, Scheme::Similarity, Scheme::Weighted][rng.below(3)];
     let locals: Vec<WeightedSet> = scheme
         .partition(&data, sites, rng)
+        .unwrap()
         .into_iter()
         .filter(|p| p.n() > 0)
         .map(WeightedSet::unit)

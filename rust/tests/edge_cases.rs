@@ -208,6 +208,7 @@ fn one_dimensional_data() {
     let mut r2 = Pcg64::seed_from(8);
     let locals: Vec<WeightedSet> = distclus::partition::Scheme::Uniform
         .partition(&data, 6, &mut r2)
+        .unwrap()
         .into_iter()
         .map(WeightedSet::unit)
         .collect();

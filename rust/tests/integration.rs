@@ -25,6 +25,7 @@ fn spec(alg: Algorithm, partition: Scheme) -> ExperimentSpec {
         objective: Objective::KMeans,
         reps: 2,
         seed: 7,
+        ..Default::default()
     }
 }
 

@@ -1,0 +1,140 @@
+//! Parallel execution engine — end-to-end determinism and regression
+//! coverage for the panics fixed alongside it.
+//!
+//! Contract under test (see `distclus::exec`): with a fixed seed, the
+//! parallel path produces *identical* results for any worker-thread
+//! count, both at the per-site level (round1/round2 on worker threads)
+//! and at the kernel level (chunk-parallel assign/lloyd).
+
+use distclus::clustering::backend::{ParallelBackend, RustBackend};
+use distclus::coreset::distributed::{self, DistributedConfig};
+use distclus::coreset::Coreset;
+use distclus::exec::ExecPolicy;
+use distclus::partition::{PartitionError, Scheme};
+use distclus::points::WeightedSet;
+use distclus::protocol::cluster_on_graph_exec;
+use distclus::rng::Pcg64;
+use distclus::topology::generators;
+
+fn sites(seed: u64, n: usize, count: usize) -> Vec<WeightedSet> {
+    let mut rng = Pcg64::seed_from(seed);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, n, 6, 4);
+    Scheme::Weighted
+        .partition(&data, count, &mut rng)
+        .unwrap()
+        .into_iter()
+        .filter(|p| p.n() > 0)
+        .map(WeightedSet::unit)
+        .collect()
+}
+
+fn portions_at(threads: usize, locals: &[WeightedSet]) -> Vec<Coreset> {
+    let cfg = DistributedConfig {
+        t: 500,
+        k: 4,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(99);
+    distributed::build_portions_exec(
+        locals,
+        &cfg,
+        &RustBackend,
+        &mut rng,
+        ExecPolicy::Parallel { threads },
+    )
+}
+
+#[test]
+fn same_seed_identical_portions_for_1_2_and_8_threads() {
+    let locals = sites(1, 5_000, 6);
+    let one = portions_at(1, &locals);
+    let two = portions_at(2, &locals);
+    let eight = portions_at(8, &locals);
+    assert_eq!(one.len(), two.len());
+    for ((a, b), c) in one.iter().zip(&two).zip(&eight) {
+        assert_eq!(a.sampled, b.sampled);
+        assert_eq!(a.sampled, c.sampled);
+        assert_eq!(a.set, b.set, "portions must be bit-identical");
+        assert_eq!(a.set, c.set, "portions must be bit-identical");
+    }
+}
+
+#[test]
+fn full_protocol_identical_across_thread_counts_and_backends() {
+    // End-to-end Algorithm 1+2 over a graph: per-site parallelism AND
+    // kernel parallelism at once; centers and measured communication
+    // must not depend on either thread count.
+    let locals = sites(2, 4_000, 9);
+    let g = generators::grid(3, 3);
+    let cfg = DistributedConfig {
+        t: 400,
+        k: 4,
+        ..Default::default()
+    };
+    let run = |site_threads: usize, kernel_threads: usize| {
+        let backend = ParallelBackend::new(kernel_threads);
+        let mut rng = Pcg64::seed_from(7);
+        cluster_on_graph_exec(
+            &g,
+            &locals,
+            &cfg,
+            &backend,
+            &mut rng,
+            ExecPolicy::Parallel {
+                threads: site_threads,
+            },
+        )
+        .unwrap()
+    };
+    let a = run(1, 1);
+    let b = run(4, 2);
+    let c = run(8, 8);
+    assert_eq!(a.centers, b.centers);
+    assert_eq!(a.centers, c.centers);
+    assert_eq!(a.comm_points, b.comm_points);
+    assert_eq!(a.comm_points, c.comm_points);
+    assert_eq!(a.coreset.set, b.coreset.set);
+    assert_eq!(a.coreset.set, c.coreset.set);
+}
+
+#[test]
+fn parallel_backend_solution_quality_matches_sequential_setup() {
+    // The parallel engine is not just deterministic — it must still
+    // produce a valid construction (budget fully spent, k centers).
+    let locals = sites(3, 6_000, 5);
+    let portions = portions_at(0, &locals); // auto thread count
+    let coreset = distributed::union(&portions);
+    assert_eq!(coreset.sampled, 500);
+    assert_eq!(coreset.size(), 500 + locals.len() * 4);
+}
+
+#[test]
+fn degree_partition_is_an_error_via_public_api() {
+    let mut rng = Pcg64::seed_from(4);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 200, 3, 2);
+    let err = Scheme::Degree.partition(&data, 4, &mut rng).unwrap_err();
+    assert!(matches!(err, PartitionError::NeedsGraph(Scheme::Degree)));
+    // With the graph it succeeds, as before.
+    let g = generators::star(4);
+    let parts = Scheme::Degree.partition_on(&data, &g, &mut rng);
+    assert_eq!(parts.iter().map(|p| p.n()).sum::<usize>(), 200);
+}
+
+#[test]
+fn allocate_budget_non_finite_regression() {
+    // Used to panic in the largest-remainder sort on NaN local costs.
+    let alloc = distributed::allocate_budget(100, &[f64::NAN, 2.0, f64::INFINITY, 6.0]);
+    assert_eq!(alloc.iter().sum::<usize>(), 100);
+    assert_eq!(alloc[0], 0);
+    assert_eq!(alloc[2], 0);
+    assert_eq!(alloc[1], 25);
+    assert_eq!(alloc[3], 75);
+}
+
+#[test]
+fn erdos_renyi_connected_never_aborts_on_tiny_p() {
+    let mut rng = Pcg64::seed_from(5);
+    let g = generators::erdos_renyi_connected(&mut rng, 20, 1e-6);
+    assert_eq!(g.n(), 20);
+    assert!(distclus::topology::connected(&g));
+}

@@ -1,0 +1,200 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this workspace
+//! vendors the small slice of `anyhow`'s API the codebase actually uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros and the [`Context`] extension trait. Error values carry a
+//! stack of human-readable messages (outermost context first); the `?`
+//! operator converts from any `std::error::Error`.
+//!
+//! Intentionally *not* implemented (unused here): downcasting,
+//! backtraces, `source()` chains as trait objects.
+
+use std::fmt;
+
+/// A type-erased error: a stack of messages, outermost context first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>`, with an overridable error type like the
+/// real crate's alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msgs: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::msg(&err)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msgs[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msgs[0])?;
+        if self.msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &self.msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Construct an [`Error`] from a format string (or anything displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+/// Attach context to errors, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 7;
+        let b = anyhow!("inline {x}");
+        assert_eq!(b.to_string(), "inline 7");
+        let c = anyhow!("fmt {} and {}", 1, "two");
+        assert_eq!(c.to_string(), "fmt 1 and two");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "flag was {fail}");
+            Ok(3)
+        }
+        assert_eq!(f(false).unwrap(), 3);
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+
+        fn g() -> Result<()> {
+            bail!("always {}", "fails")
+        }
+        assert_eq!(g().unwrap_err().to_string(), "always fails");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let e: Result<()> = Err(io_err()).with_context(|| "reading config".to_string());
+        let e = e.unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("missing thing"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+}
