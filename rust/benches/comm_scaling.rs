@@ -1,15 +1,21 @@
 //! Communication-scaling bench (Theorems 2/3): measured cost of the
 //! flooding and tree protocols vs their analytical bounds across
 //! topology families and sizes, including the grid's Ω(√n)-diameter
-//! regime where the paper's approach shines over composition schemes.
+//! regime where the paper's approach shines over composition schemes —
+//! plus paged-vs-monolithic portion exchange, showing the points total
+//! is invariant while rounds stretch and peak receiver memory collapses.
 //!
-//! Run with `cargo bench --bench comm_scaling`.
+//! Run with `cargo bench --bench comm_scaling` (`-- --smoke` for the CI
+//! bitrot check: smallest sizes only).
 
+use distclus::cli::Args;
 use distclus::metrics::Table;
-use distclus::network::{Network, Payload};
-use distclus::protocol::{broadcast_down, converge_cast, flood};
+use distclus::network::{paginate, LinkModel, Network, Payload};
+use distclus::points::WeightedSet;
+use distclus::protocol::{broadcast_down, converge_cast, flood, flood_multi};
 use distclus::rng::Pcg64;
 use distclus::topology::{diameter, generators, SpanningTree};
+use std::sync::Arc;
 
 fn unit_payloads(n: usize) -> Vec<Payload> {
     (0..n)
@@ -20,7 +26,27 @@ fn unit_payloads(n: usize) -> Vec<Payload> {
         .collect()
 }
 
+fn portions(rng: &mut Pcg64, n: usize, points_each: usize) -> Vec<Arc<WeightedSet>> {
+    (0..n)
+        .map(|_| {
+            let mut s = WeightedSet::empty(4);
+            for _ in 0..points_each {
+                let p: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+                s.push(&p, 1.0);
+            }
+            Arc::new(s)
+        })
+        .collect()
+}
+
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let smoke = args.has("smoke");
+    // `cargo bench` appends `--bench` to every harness=false binary.
+    let _ = args.has("bench");
+    args.reject_unknown()?;
+    let sizes: &[usize] = if smoke { &[16] } else { &[16, 36, 64, 100, 196] };
+
     let mut rng = Pcg64::seed_from(41);
     let mut table = Table::new(&[
         "topology",
@@ -34,7 +60,7 @@ fn main() -> anyhow::Result<()> {
         "tree bound n*h",
         "bcast (meas)",
     ]);
-    for n in [16usize, 36, 64, 100, 196] {
+    for &n in sizes {
         let side = (n as f64).sqrt() as usize;
         let graphs = [
             ("grid", generators::grid(side, side)),
@@ -77,6 +103,65 @@ fn main() -> anyhow::Result<()> {
     }
     println!("# comm_scaling (Theorem 2/3 accounting, unit payloads)\n");
     println!("{}", table.render());
+
+    // Paged vs monolithic portion flood: identical points total, rounds
+    // become a transfer time, peak receiver memory collapses.
+    let mut paged_table = Table::new(&[
+        "topology",
+        "n",
+        "exchange",
+        "points",
+        "rounds",
+        "peak (points)",
+        "peak vs mono",
+    ]);
+    let paged_sizes: &[usize] = if smoke { &[16] } else { &[16, 36, 64] };
+    for &n in paged_sizes {
+        let side = (n as f64).sqrt() as usize;
+        for (name, g) in [
+            ("grid", generators::grid(side, side)),
+            ("path", generators::path(n)),
+        ] {
+            let per_site = 64usize; // ≈ t/n at t = 64n
+            let ports = portions(&mut rng, g.n(), per_site);
+            let mut results = Vec::new();
+            for (label, page_points, capacity) in [
+                ("monolithic", 0usize, 0usize),
+                ("paged-16", 16, 16),
+                ("paged-64", 64, 64),
+            ] {
+                let origins: Vec<Vec<Payload>> = ports
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| paginate(i, p.clone(), page_points))
+                    .collect();
+                let mut net = Network::new(g.clone())
+                    .without_transcript()
+                    .with_link_model(LinkModel::capped(capacity));
+                flood_multi(&mut net, origins);
+                results.push((label, net.cost_points(), net.round(), net.peak_points()));
+            }
+            let mono_peak = results[0].3.max(1);
+            for (label, points, rounds, peak) in results {
+                assert_eq!(
+                    points,
+                    2 * g.m() * g.n() * per_site,
+                    "paging must not change the points total"
+                );
+                paged_table.row(vec![
+                    name.into(),
+                    g.n().to_string(),
+                    label.into(),
+                    points.to_string(),
+                    rounds.to_string(),
+                    peak.to_string(),
+                    format!("{:.1}%", 100.0 * peak as f64 / mono_peak as f64),
+                ]);
+            }
+        }
+    }
+    println!("\n# paged vs monolithic portion exchange ({} pts/site)\n", 64);
+    println!("{}", paged_table.render());
     println!("\nall analytical bounds verified exactly (assertions passed)");
     Ok(())
 }

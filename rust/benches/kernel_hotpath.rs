@@ -4,8 +4,10 @@
 //! (when artifacts are present), across the paper's dataset shapes.
 //! This is the §Perf driver for L3 (EXPERIMENTS.md §Perf).
 //!
-//! Run with `cargo bench --bench kernel_hotpath`.
+//! Run with `cargo bench --bench kernel_hotpath` (`-- --smoke` for the
+//! CI bitrot check: one small shape, minimal reps).
 
+use distclus::cli::Args;
 use distclus::clustering::backend::{Backend, ParallelBackend, RustBackend};
 use distclus::metrics::{time_reps, Summary, Table};
 use distclus::points::Dataset;
@@ -59,13 +61,22 @@ fn bench_backend(
 }
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let smoke = args.has("smoke");
+    // `cargo bench` appends `--bench` to every harness=false binary.
+    let _ = args.has("bench");
+    args.reject_unknown()?;
     // Shapes mirroring the paper's datasets (padded-artifact shapes).
-    let shapes = [
-        (10_000usize, 16usize, 10usize), // pendigits
-        (20_000, 16, 10),                // letter
-        (68_040 / 4, 32, 10),            // colorhist/4
-        (20_000, 90, 50),                // msd slice
-    ];
+    let shapes: Vec<(usize, usize, usize)> = if smoke {
+        vec![(2_000, 16, 10)]
+    } else {
+        vec![
+            (10_000, 16, 10),   // pendigits
+            (20_000, 16, 10),   // letter
+            (68_040 / 4, 32, 10), // colorhist/4
+            (20_000, 90, 50),   // msd slice
+        ]
+    };
     let mut table = Table::new(&[
         "backend",
         "shape",

@@ -3,15 +3,21 @@
 //! The paper assumes reliable channels; `protocol::flood_reliable`
 //! recovers Algorithm 3's delivery guarantee with ack+retransmit. This
 //! bench measures the communication overhead factor vs lossless
-//! Algorithm 3 across loss rates and topologies.
+//! Algorithm 3 across loss rates and topologies — including the paged
+//! exchange, where a lost transmission retransmits one *page* instead
+//! of a whole portion, shrinking the recovery unit.
 //!
-//! Run with `cargo bench --bench lossy_network`.
+//! Run with `cargo bench --bench lossy_network` (`-- --smoke` for the
+//! CI bitrot check).
 
+use distclus::cli::Args;
 use distclus::metrics::Table;
-use distclus::network::{Network, Payload};
-use distclus::protocol::{flood, flood_reliable};
+use distclus::network::{paginate, reassemble, Network, Payload};
+use distclus::points::WeightedSet;
+use distclus::protocol::{flood, flood_reliable, flood_reliable_multi};
 use distclus::rng::Pcg64;
 use distclus::topology::generators;
+use std::sync::Arc;
 
 fn unit_payloads(n: usize) -> Vec<Payload> {
     (0..n)
@@ -23,6 +29,12 @@ fn unit_payloads(n: usize) -> Vec<Payload> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let smoke = args.has("smoke");
+    // `cargo bench` appends `--bench` to every harness=false binary.
+    let _ = args.has("bench");
+    args.reject_unknown()?;
+
     let mut rng = Pcg64::seed_from(71);
     let mut table = Table::new(&[
         "topology",
@@ -33,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         "dropped",
         "rounds",
     ]);
+    let losses: &[f64] = if smoke { &[0.0, 0.3] } else { &[0.0, 0.1, 0.3, 0.5] };
     for (name, graph) in [
         ("grid 5x5", generators::grid(5, 5)),
         (
@@ -44,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         let mut plain = Network::new(graph.clone()).without_transcript();
         flood(&mut plain, unit_payloads(graph.n()));
         let base = plain.cost_points();
-        for loss in [0.0, 0.1, 0.3, 0.5] {
+        for &loss in losses {
             let mut net = Network::new(graph.clone())
                 .without_transcript()
                 .with_loss(loss, 1_234);
@@ -62,5 +75,69 @@ fn main() -> anyhow::Result<()> {
     }
     println!("# lossy_network (reliable flooding overhead vs Algorithm 3)\n");
     println!("{}", table.render());
+
+    // Paged vs monolithic portions over lossy links: the retransmission
+    // unit shrinks from the whole portion to one page, so the overhead
+    // factor drops as pages shrink.
+    let mut paged_table = Table::new(&[
+        "topology",
+        "loss",
+        "exchange",
+        "reliable cost",
+        "overhead vs lossless",
+        "rounds",
+    ]);
+    let points_per_site = 32usize;
+    for (name, graph) in [
+        ("grid 3x3", generators::grid(3, 3)),
+        ("path(9)", generators::path(9)),
+    ] {
+        let portions: Vec<Arc<WeightedSet>> = (0..graph.n())
+            .map(|_| {
+                let mut s = WeightedSet::empty(4);
+                for _ in 0..points_per_site {
+                    let p: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+                    s.push(&p, 1.0);
+                }
+                Arc::new(s)
+            })
+            .collect();
+        let paged_losses: &[f64] = if smoke { &[0.2] } else { &[0.1, 0.3] };
+        for &loss in paged_losses {
+            for (label, page_points) in
+                [("monolithic", 0usize), ("paged-8", 8), ("paged-4", 4)]
+            {
+                let origins: Vec<Vec<Payload>> = portions
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| paginate(i, p.clone(), page_points))
+                    .collect();
+                let mut lossless = Network::new(graph.clone()).without_transcript();
+                flood_reliable_multi(&mut lossless, origins.clone(), 100_000);
+                let base = lossless.cost_points();
+                let mut net = Network::new(graph.clone())
+                    .without_transcript()
+                    .with_loss(loss, 4_321);
+                let held = flood_reliable_multi(&mut net, origins, 100_000);
+                // Delivery stays exact: every node reassembles every
+                // portion despite drops.
+                for h in &held {
+                    assert_eq!(reassemble(h).unwrap().len(), graph.n());
+                }
+                paged_table.row(vec![
+                    name.into(),
+                    format!("{loss:.1}"),
+                    label.into(),
+                    net.cost_points().to_string(),
+                    format!("{:.2}x", net.cost_points() as f64 / base as f64),
+                    net.round().to_string(),
+                ]);
+            }
+        }
+    }
+    println!(
+        "\n# paged vs monolithic under loss ({points_per_site} pts/site; retransmit unit = page)\n"
+    );
+    println!("{}", paged_table.render());
     Ok(())
 }

@@ -179,6 +179,15 @@ pub struct ExperimentSpec {
     /// Parallel results are identical for every non-`1` value with the
     /// same seed.
     pub threads: usize,
+    /// Maximum points per coreset-portion page streamed through the
+    /// network (`0` = monolithic portions). Paging never changes results
+    /// or total communication — only message granularity and, with a
+    /// link capacity, peak memory.
+    pub page_points: usize,
+    /// Per-directed-edge delivery capacity in points per round (`0` =
+    /// unlimited). With a finite capacity, `rounds` measures real
+    /// transfer time and peak receiver memory stays bounded.
+    pub link_capacity: usize,
 }
 
 impl Default for ExperimentSpec {
@@ -196,6 +205,8 @@ impl Default for ExperimentSpec {
             seed: 1,
             backend: BackendSpec::Rust,
             threads: 1,
+            page_points: 0,
+            link_capacity: 0,
         }
     }
 }
@@ -255,6 +266,8 @@ impl ExperimentSpec {
                         .ok_or_else(|| anyhow!("unknown backend '{v}' (rust|parallel|xla)"))?
                 }
                 "threads" => spec.threads = v.parse()?,
+                "page_points" => spec.page_points = v.parse()?,
+                "link_capacity" => spec.link_capacity = v.parse()?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -288,6 +301,14 @@ impl ExperimentSpec {
     /// [`crate::exec`] for the determinism contract).
     pub fn exec_policy(&self) -> ExecPolicy {
         ExecPolicy::from_threads(self.threads)
+    }
+
+    /// The paged-exchange channel this spec selects.
+    pub fn channel(&self) -> crate::network::ChannelConfig {
+        crate::network::ChannelConfig {
+            page_points: self.page_points,
+            link_capacity: self.link_capacity,
+        }
     }
 }
 
@@ -338,6 +359,22 @@ mod tests {
         for b in [BackendSpec::Rust, BackendSpec::Parallel, BackendSpec::Xla] {
             assert_eq!(BackendSpec::parse(b.name()), Some(b));
         }
+    }
+
+    #[test]
+    fn channel_keys_parse_and_default_off() {
+        let spec = ExperimentSpec::default();
+        assert_eq!(spec.page_points, 0);
+        assert_eq!(spec.link_capacity, 0);
+        assert_eq!(spec.channel(), crate::network::ChannelConfig::default());
+
+        let spec =
+            ExperimentSpec::from_config("page_points = 64\nlink_capacity = 128\n").unwrap();
+        assert_eq!(spec.page_points, 64);
+        assert_eq!(spec.link_capacity, 128);
+        let ch = spec.channel();
+        assert_eq!(ch.page_points, 64);
+        assert_eq!(ch.link_model().points_per_round, 128);
     }
 
     #[test]

@@ -36,6 +36,8 @@ pub struct ExperimentResult {
     pub ratio: Summary,
     /// Summary of measured communication (points).
     pub comm: Summary,
+    /// Summary of receiver-side peak buffer occupancy (points).
+    pub peak: Summary,
     /// Summary of coreset sizes.
     pub coreset_size: Summary,
     /// Mean wall-clock seconds per repetition.
@@ -89,6 +91,7 @@ pub fn run_once(
     // weight ~0 (cost-neutral, keeps Round 1 well-defined).
     let locals = patch_empty_sites(locals);
 
+    let channel = spec.channel();
     match spec.algorithm {
         Algorithm::Distributed => {
             let cfg = DistributedConfig {
@@ -97,10 +100,11 @@ pub fn run_once(
                 objective: spec.objective,
                 ..Default::default()
             };
-            protocol::cluster_on_graph_exec(
-                &graph,
+            protocol::run_pipeline(
+                protocol::Topology::Graph(&graph),
                 &locals,
-                &cfg,
+                protocol::CoresetPlan::Distributed(&cfg),
+                &channel,
                 backend,
                 rng,
                 spec.exec_policy(),
@@ -114,10 +118,11 @@ pub fn run_once(
                 objective: spec.objective,
                 ..Default::default()
             };
-            protocol::cluster_on_tree_exec(
-                &tree,
+            protocol::run_pipeline(
+                protocol::Topology::Tree(&tree),
                 &locals,
-                &cfg,
+                protocol::CoresetPlan::Distributed(&cfg),
+                &channel,
                 backend,
                 rng,
                 spec.exec_policy(),
@@ -129,7 +134,15 @@ pub fn run_once(
                 k: spec.k,
                 objective: spec.objective,
             };
-            protocol::combine_on_graph(&graph, &locals, &cfg, backend, rng)
+            protocol::run_pipeline(
+                protocol::Topology::Graph(&graph),
+                &locals,
+                protocol::CoresetPlan::Combine(&cfg),
+                &channel,
+                backend,
+                rng,
+                spec.exec_policy(),
+            )
         }
         Algorithm::CombineTree => {
             let tree = SpanningTree::random_root(&graph, rng);
@@ -138,7 +151,15 @@ pub fn run_once(
                 k: spec.k,
                 objective: spec.objective,
             };
-            protocol::combine_on_tree(&tree, &locals, &cfg, backend, rng)
+            protocol::run_pipeline(
+                protocol::Topology::Tree(&tree),
+                &locals,
+                protocol::CoresetPlan::Combine(&cfg),
+                &channel,
+                backend,
+                rng,
+                spec.exec_policy(),
+            )
         }
         Algorithm::ZhangTree => {
             let tree = SpanningTree::random_root(&graph, rng);
@@ -150,7 +171,7 @@ pub fn run_once(
                 k: spec.k,
                 objective: spec.objective,
             };
-            protocol::zhang_on_tree(&tree, &locals, &cfg, backend, rng)
+            protocol::zhang_on_tree_exec(&tree, &locals, &cfg, backend, rng, spec.exec_policy())
         }
     }
 }
@@ -230,6 +251,7 @@ impl Session {
         );
         let mut ratios = Vec::with_capacity(spec.reps);
         let mut comms = Vec::with_capacity(spec.reps);
+        let mut peaks = Vec::with_capacity(spec.reps);
         let mut sizes = Vec::with_capacity(spec.reps);
         let sw = crate::metrics::Stopwatch::start();
         for rep in 0..spec.reps {
@@ -242,6 +264,7 @@ impl Session {
             let q = evaluate_quality(&self.global, &run, spec.objective, baseline);
             ratios.push(q.cost_ratio);
             comms.push(run.comm_points as f64);
+            peaks.push(run.peak_points as f64);
             sizes.push(run.coreset.size() as f64);
         }
         Ok(ExperimentResult {
@@ -254,6 +277,7 @@ impl Session {
             ),
             ratio: Summary::of(&ratios),
             comm: Summary::of(&comms),
+            peak: Summary::of(&peaks),
             coreset_size: Summary::of(&sizes),
             secs_per_rep: sw.secs() / spec.reps as f64,
         })
@@ -334,6 +358,22 @@ mod tests {
         assert_eq!(a.comm.mean, b.comm.mean);
         assert_eq!(a.ratio.mean, c.ratio.mean);
         assert_eq!(a.coreset_size.mean, b.coreset_size.mean);
+    }
+
+    #[test]
+    fn paged_channel_spec_matches_monolithic_results() {
+        // Paging + link capacity are pure simulation knobs: quality,
+        // communication and coreset size must be identical; only the
+        // rounds/peak meters may move.
+        let mut spec = small_spec(Algorithm::Distributed);
+        let mono = run_experiment(&spec, &RustBackend).unwrap();
+        spec.page_points = 64;
+        spec.link_capacity = 64;
+        let paged = run_experiment(&spec, &RustBackend).unwrap();
+        assert_eq!(mono.ratio.mean, paged.ratio.mean);
+        assert_eq!(mono.comm.mean, paged.comm.mean);
+        assert_eq!(mono.coreset_size.mean, paged.coreset_size.mean);
+        assert!(paged.peak.mean <= mono.peak.mean);
     }
 
     #[test]

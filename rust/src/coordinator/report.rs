@@ -12,6 +12,7 @@ pub fn render_report(results: &[ExperimentResult]) -> String {
         "ratio(mean)",
         "ratio(std)",
         "comm(points)",
+        "peak(points)",
         "coreset",
         "s/rep",
     ]);
@@ -21,6 +22,7 @@ pub fn render_report(results: &[ExperimentResult]) -> String {
             format!("{:.4}", r.ratio.mean),
             format!("{:.4}", r.ratio.std),
             format!("{:.0}", r.comm.mean),
+            format!("{:.0}", r.peak.mean),
             format!("{:.0}", r.coreset_size.mean),
             format!("{:.2}", r.secs_per_rep),
         ]);
@@ -40,6 +42,7 @@ pub fn series_json(results: &[ExperimentResult]) -> Value {
                     ("ratio_mean", build::num(r.ratio.mean)),
                     ("ratio_std", build::num(r.ratio.std)),
                     ("comm_points", build::num(r.comm.mean)),
+                    ("peak_points", build::num(r.peak.mean)),
                     ("coreset_size", build::num(r.coreset_size.mean)),
                     ("reps", build::num(r.ratio.n as f64)),
                 ])
@@ -58,6 +61,7 @@ mod tests {
             label: label.into(),
             ratio: Summary::of(&[1.05, 1.10]),
             comm: Summary::of(&[5_000.0]),
+            peak: Summary::of(&[800.0]),
             coreset_size: Summary::of(&[520.0]),
             secs_per_rep: 0.5,
         }

@@ -11,6 +11,7 @@ use super::fl11::{self, Fl11Config};
 use super::Coreset;
 use crate::clustering::backend::Backend;
 use crate::clustering::Objective;
+use crate::exec::{map_sites, ExecPolicy};
 use crate::points::WeightedSet;
 use crate::rng::Pcg64;
 
@@ -26,28 +27,42 @@ pub struct CombineConfig {
 }
 
 /// Build the per-site local coresets (each of sampled size ≈ `t / n`).
+///
+/// Sequential legacy path — equivalent to [`build_portions_exec`] with
+/// [`ExecPolicy::Sequential`].
 pub fn build_portions(
     locals: &[WeightedSet],
     cfg: &CombineConfig,
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> Vec<Coreset> {
+    build_portions_exec(locals, cfg, backend, rng, ExecPolicy::Sequential)
+}
+
+/// [`build_portions`] under an explicit [`ExecPolicy`]: the per-site
+/// FL11 builds are independent, so under [`ExecPolicy::Parallel`] each
+/// site draws from its own RNG stream on a worker pool (results are
+/// identical for any thread count; see [`crate::exec`]).
+pub fn build_portions_exec(
+    locals: &[WeightedSet],
+    cfg: &CombineConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    exec: ExecPolicy,
+) -> Vec<Coreset> {
     let n_sites = locals.len();
     assert!(n_sites > 0);
     // Equal split with largest-remainder so the totals match Algorithm 1
     // at identical t (fair comparison at equal communication).
     let budgets = super::distributed::allocate_budget(cfg.t, &vec![1.0; n_sites]);
-    locals
-        .iter()
-        .zip(&budgets)
-        .map(|(p, &t_i)| {
-            let site_cfg = Fl11Config {
-                t: t_i,
-                ..Fl11Config::new(t_i, cfg.k, cfg.objective)
-            };
-            fl11::build(p, &site_cfg, backend, rng)
-        })
-        .collect()
+    map_sites(n_sites, rng, exec, |i, r| {
+        let t_i = budgets[i];
+        let site_cfg = Fl11Config {
+            t: t_i,
+            ..Fl11Config::new(t_i, cfg.k, cfg.objective)
+        };
+        fl11::build(&locals[i], &site_cfg, backend, r)
+    })
 }
 
 #[cfg(test)]
@@ -81,6 +96,41 @@ mod tests {
         let total = union(&portions);
         assert_eq!(total.sampled, 400);
         assert_eq!(total.size(), 400 + parts.len() * 4);
+    }
+
+    #[test]
+    fn parallel_portions_identical_across_thread_counts() {
+        let mut rng = Pcg64::seed_from(7);
+        let data = gaussian_mixture(&mut rng, 3_000, 4, 4);
+        let parts: Vec<WeightedSet> = Scheme::Uniform
+            .partition(&data, 5, &mut rng)
+            .unwrap()
+            .into_iter()
+            .map(WeightedSet::unit)
+            .collect();
+        let cfg = CombineConfig {
+            t: 300,
+            k: 4,
+            objective: Objective::KMeans,
+        };
+        let runs: Vec<Vec<Coreset>> = [1usize, 2, 8]
+            .iter()
+            .map(|&threads| {
+                let mut r = Pcg64::seed_from(8);
+                build_portions_exec(
+                    &parts,
+                    &cfg,
+                    &RustBackend,
+                    &mut r,
+                    crate::exec::ExecPolicy::Parallel { threads },
+                )
+            })
+            .collect();
+        for other in &runs[1..] {
+            for (a, b) in runs[0].iter().zip(other) {
+                assert_eq!(a.set, b.set, "COMBINE portions must be thread-count invariant");
+            }
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@ use super::fl11::{self, Fl11Config};
 use super::Coreset;
 use crate::clustering::backend::Backend;
 use crate::clustering::Objective;
+use crate::exec::{map_sites, ExecPolicy};
 use crate::points::WeightedSet;
 use crate::rng::Pcg64;
 use crate::topology::SpanningTree;
@@ -40,6 +41,9 @@ pub struct ZhangResult {
 }
 
 /// Run the bottom-up construction over `tree` (children before parents).
+///
+/// Sequential legacy path — equivalent to [`build_on_tree_exec`] with
+/// [`ExecPolicy::Sequential`].
 pub fn build_on_tree(
     locals: &[WeightedSet],
     tree: &SpanningTree,
@@ -47,43 +51,92 @@ pub fn build_on_tree(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> ZhangResult {
+    build_on_tree_exec(locals, tree, cfg, backend, rng, ExecPolicy::Sequential)
+}
+
+/// [`build_on_tree`] under an explicit [`ExecPolicy`].
+///
+/// The tree imposes a level-by-level dependency (a parent consumes its
+/// children's summaries), but nodes *within* one depth level are
+/// independent, so each level runs through [`map_sites`]: under
+/// [`ExecPolicy::Parallel`] a level's nodes execute on worker threads
+/// with per-node RNG streams (identical results for any thread count),
+/// while the sequential policy visits levels deepest-first in ascending
+/// node order — exactly the legacy `bottom_up_order` schedule, so it is
+/// bit-compatible with historical seeds.
+pub fn build_on_tree_exec(
+    locals: &[WeightedSet],
+    tree: &SpanningTree,
+    cfg: &ZhangConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    exec: ExecPolicy,
+) -> ZhangResult {
     let n = locals.len();
     assert_eq!(tree.n(), n);
-    // Coresets received from children, per node.
-    let mut inbox: Vec<Vec<WeightedSet>> = vec![Vec::new(); n];
+    // Summaries forwarded by finished nodes, indexed by child node id.
+    let mut summaries: Vec<Option<WeightedSet>> = vec![None; n];
     let mut sent_points = vec![0usize; n];
     let mut root_coreset: Option<Coreset> = None;
+    // Children sorted ascending so the merge order matches the legacy
+    // processing order (stable bottom-up sort = ascending id per level).
+    let children_sorted: Vec<Vec<usize>> = (0..n)
+        .map(|v| {
+            let mut c = tree.children[v].clone();
+            c.sort_unstable();
+            c
+        })
+        .collect();
 
-    for &v in &tree.bottom_up_order() {
-        // Union of own data and children's summaries.
-        let mut merged = locals[v].clone();
-        for child_cs in inbox[v].drain(..) {
+    for level in (0..=tree.height()).rev() {
+        let idxs: Vec<usize> = (0..n).filter(|&v| tree.depth[v] == level).collect();
+        if idxs.is_empty() {
+            continue;
+        }
+        let outs: Vec<Coreset> = map_sites(idxs.len(), rng, exec, |j, r| {
+            let v = idxs[j];
+            // Union of own data and children's summaries.
+            let mut merged = locals[v].clone();
+            for &c in &children_sorted[v] {
+                let child_cs = summaries[c].as_ref().expect("child level done");
+                if merged.n() == 0 {
+                    merged = child_cs.clone();
+                } else {
+                    merged.extend(child_cs);
+                }
+            }
             if merged.n() == 0 {
-                merged = child_cs;
+                Coreset {
+                    set: WeightedSet::empty(locals[v].d()),
+                    sampled: 0,
+                }
+            } else if merged.n() <= cfg.t_node + cfg.k {
+                // Already small enough: forward as-is (no information loss).
+                Coreset {
+                    sampled: merged.n(),
+                    set: merged,
+                }
             } else {
-                merged.extend(&child_cs);
+                let site_cfg = Fl11Config::new(cfg.t_node, cfg.k, cfg.objective);
+                fl11::build(&merged, &site_cfg, backend, r)
+            }
+        });
+        for (j, summary) in outs.into_iter().enumerate() {
+            let v = idxs[j];
+            if v == tree.root {
+                root_coreset = Some(summary);
+            } else {
+                sent_points[v] = summary.size();
+                summaries[v] = Some(summary.set);
             }
         }
-        let summary = if merged.n() == 0 {
-            Coreset {
-                set: WeightedSet::empty(locals[v].d()),
-                sampled: 0,
+        // Everything one level deeper has been merged into this level's
+        // summaries — free it so peak host memory stays at the frontier,
+        // like the legacy drain-as-consumed inbox.
+        for v in 0..n {
+            if tree.depth[v] == level + 1 {
+                summaries[v] = None;
             }
-        } else if merged.n() <= cfg.t_node + cfg.k {
-            // Already small enough: forward as-is (no information loss).
-            Coreset {
-                sampled: merged.n(),
-                set: merged,
-            }
-        } else {
-            let site_cfg = Fl11Config::new(cfg.t_node, cfg.k, cfg.objective);
-            fl11::build(&merged, &site_cfg, backend, rng)
-        };
-        if v == tree.root {
-            root_coreset = Some(summary);
-        } else {
-            sent_points[v] = summary.size();
-            inbox[tree.parent[v]].push(summary.set);
         }
     }
     ZhangResult {
@@ -142,6 +195,34 @@ mod tests {
             .count();
         assert_eq!(zero_senders, 0);
         assert_eq!(res.sent_points[tree.root], 0);
+    }
+
+    #[test]
+    fn level_parallel_composition_is_thread_count_invariant() {
+        let (parts, _, tree) = setup(2, 4_000, 9);
+        let cfg = ZhangConfig {
+            t_node: 150,
+            k: 4,
+            objective: Objective::KMeans,
+        };
+        let runs: Vec<ZhangResult> = [1usize, 2, 8]
+            .iter()
+            .map(|&threads| {
+                let mut rng = Pcg64::seed_from(33);
+                build_on_tree_exec(
+                    &parts,
+                    &tree,
+                    &cfg,
+                    &RustBackend,
+                    &mut rng,
+                    ExecPolicy::Parallel { threads },
+                )
+            })
+            .collect();
+        for other in &runs[1..] {
+            assert_eq!(runs[0].sent_points, other.sent_points);
+            assert_eq!(runs[0].coreset.set, other.coreset.set);
+        }
     }
 
     #[test]

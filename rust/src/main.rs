@@ -34,6 +34,8 @@ fn usage() -> ! {
          \x20          --algorithm distributed|distributed-tree|combine|combine-tree|zhang-tree\n\
          \x20          --t N --k K --objective kmeans|kmedian --reps N --seed S\n\
          \x20          --backend rust|parallel|xla --threads N (0 = all cores, 1 = sequential)\n\
+         \x20          --page-points N (0 = monolithic portions) --link-capacity N (points\n\
+         \x20          per edge per round, 0 = unlimited)\n\
          \x20          --artifacts DIR --config FILE --json OUT.json"
     );
     std::process::exit(2)
@@ -112,6 +114,8 @@ fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
         }
     }
     spec.threads = args.get_parse("threads", spec.threads)?;
+    spec.page_points = args.get_parse("page-points", spec.page_points)?;
+    spec.link_capacity = args.get_parse("link-capacity", spec.link_capacity)?;
     Ok(spec)
 }
 

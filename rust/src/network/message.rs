@@ -1,14 +1,25 @@
-//! Message payloads and their communication-cost accounting.
+//! Message payloads, paging, and their communication-cost accounting.
 
 use crate::points::{Dataset, WeightedSet};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 use std::sync::Arc;
+
+/// Identity of a floodable payload: `(kind tag, origin site, page index)`.
+///
+/// Flooding dedup, the reliable-delivery ack path and receiver-side
+/// reassembly all key on this triple, so two pages of the same portion
+/// are distinct wire objects while retransmissions of one page are not.
+pub type FloodKey = (u8, usize, u32);
 
 /// What a node can put on the wire.
 ///
 /// The paper measures communication in *points transmitted*; a d-vector
 /// with its weight is one point, and a scalar statistic is charged as one
 /// point as well (this matches the paper's accounting, where broadcasting
-/// one local cost per node over m edges contributes O(mn)).
+/// one local cost per node over m edges contributes O(mn)). Page and
+/// origin metadata ride free, exactly like the weight that accompanies a
+/// point — the metric stays pure points.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// The total cost of a site's local approximate solution
@@ -19,21 +30,37 @@ pub enum Payload {
         /// cost(P_i, B_i) under the active objective.
         cost: f64,
     },
-    /// A local coreset portion `D_i` (Algorithm 2, Round 2) or any other
-    /// weighted point set. `Arc`-wrapped: flooding clones the payload
-    /// once per edge traversal, and a deep copy there would turn the
-    /// O(m·Σ|I_j|) *accounted* communication into O(m·Σ|I_j|) *actual
-    /// memcpy* on the simulator host (see EXPERIMENTS.md §Perf L3).
-    Portion {
+    /// One fixed-size page of a local coreset portion `D_i` (Algorithm 2,
+    /// Round 2). A monolithic exchange is the special case `pages == 1`.
+    /// `Arc`-wrapped: flooding clones the payload once per edge
+    /// traversal, and a deep copy there would turn the O(m·Σ|I_j|)
+    /// *accounted* communication into O(m·Σ|I_j|) *actual memcpy* on the
+    /// simulator host (see EXPERIMENTS.md §Perf L3).
+    PortionPage {
         /// Originating site.
         site: usize,
-        /// The weighted points.
+        /// Page index within the portion, `0..pages`.
+        page: u32,
+        /// Total pages of this portion.
+        pages: u32,
+        /// The weighted points of this page.
         set: Arc<WeightedSet>,
     },
     /// A set of cluster centers (broadcast of the final solution).
-    Centers(Dataset),
+    /// `Arc`-wrapped so the per-child clones of a tree broadcast are O(1).
+    Centers(Arc<Dataset>),
     /// A bare scalar (generic statistic).
     Scalar(f64),
+    /// A metering-only stand-in for `points` points whose coordinates the
+    /// simulator never needs (e.g. the Zhang baseline charges each
+    /// child→parent summary transfer without materializing a zero-filled
+    /// dataset of that size).
+    Opaque {
+        /// Originating site.
+        site: usize,
+        /// Charged size in points.
+        points: usize,
+    },
     /// Acknowledgement of a flooded payload (lossy-link extension; see
     /// [`crate::protocol::flood_reliable`]).
     Ack {
@@ -41,6 +68,8 @@ pub enum Payload {
         kind: u8,
         /// `flood_key().1` (origin site) of the acked payload.
         site: usize,
+        /// `flood_key().2` (page index) of the acked payload.
+        page: u32,
     },
 }
 
@@ -49,26 +78,111 @@ impl Payload {
     pub fn size_points(&self) -> usize {
         match self {
             Payload::LocalCost { .. } | Payload::Scalar(_) | Payload::Ack { .. } => 1,
-            Payload::Portion { set, .. } => set.n(),
+            Payload::PortionPage { set, .. } => set.n(),
             Payload::Centers(c) => c.n(),
+            Payload::Opaque { points, .. } => *points,
         }
     }
 
-    /// Stable identity used by flooding dedup: `(kind_tag, site)`.
-    /// Returns `None` for payloads without an origin (not floodable).
-    pub fn flood_key(&self) -> Option<(u8, usize)> {
+    /// Stable identity used by flooding dedup and reassembly:
+    /// `(kind_tag, site, page)`. Returns `None` for payloads without an
+    /// origin (not floodable).
+    pub fn flood_key(&self) -> Option<FloodKey> {
         match self {
-            Payload::LocalCost { site, .. } => Some((0, *site)),
-            Payload::Portion { site, .. } => Some((1, *site)),
+            Payload::LocalCost { site, .. } => Some((0, *site, 0)),
+            Payload::PortionPage { site, page, .. } => Some((1, *site, *page)),
             _ => None,
         }
     }
 }
 
+/// Cut one site's coreset portion into page payloads of at most
+/// `page_points` points each (`0` = monolithic: one page carrying the
+/// whole portion, zero-copy behind the `Arc`).
+///
+/// Pages partition the portion in order, so the points-transmitted total
+/// of a paged exchange equals the monolithic total exactly; an empty
+/// portion still yields one (empty, zero-cost) page so receivers learn
+/// the site has nothing.
+pub fn paginate(site: usize, set: Arc<WeightedSet>, page_points: usize) -> Vec<Payload> {
+    let n = set.n();
+    if page_points == 0 || n <= page_points {
+        return vec![Payload::PortionPage {
+            site,
+            page: 0,
+            pages: 1,
+            set,
+        }];
+    }
+    let pages = n.div_ceil(page_points);
+    assert!(pages <= u32::MAX as usize, "portion of {n} points: too many pages");
+    (0..pages)
+        .map(|p| Payload::PortionPage {
+            site,
+            page: p as u32,
+            pages: pages as u32,
+            set: Arc::new(set.slice(p * page_points, ((p + 1) * page_points).min(n))),
+        })
+        .collect()
+}
+
+/// Reassemble portions from page payloads received in *any* order, with
+/// duplicates (retransmissions) tolerated. Returns `(site, portion)`
+/// pairs ordered by site id.
+///
+/// Errors on a missing page, an inconsistent page count, or a non-page
+/// payload — a receiver must be able to tell a torn portion from a
+/// complete one.
+pub fn reassemble(pages: &[Payload]) -> Result<Vec<(usize, WeightedSet)>> {
+    let mut by_site: BTreeMap<usize, BTreeMap<u32, &Payload>> = BTreeMap::new();
+    let mut expect: BTreeMap<usize, u32> = BTreeMap::new();
+    for p in pages {
+        match p {
+            Payload::PortionPage { site, page, pages, .. } => {
+                if let Some(&prev) = expect.get(site) {
+                    if prev != *pages {
+                        bail!("site {site}: page-count mismatch ({prev} vs {pages})");
+                    }
+                } else {
+                    expect.insert(*site, *pages);
+                }
+                by_site.entry(*site).or_default().insert(*page, p);
+            }
+            other => bail!("reassemble: not a portion page: {other:?}"),
+        }
+    }
+    let mut out = Vec::with_capacity(by_site.len());
+    for (site, pages_of) in by_site {
+        let want = expect[&site];
+        if pages_of.len() as u32 != want {
+            bail!(
+                "site {site}: {} of {want} pages present",
+                pages_of.len()
+            );
+        }
+        let first = match pages_of.values().next().unwrap() {
+            Payload::PortionPage { set, .. } => set,
+            _ => unreachable!(),
+        };
+        let mut portion = WeightedSet::empty(first.d());
+        for (idx, (page, payload)) in pages_of.iter().enumerate() {
+            if *page != idx as u32 {
+                bail!("site {site}: missing page {idx}");
+            }
+            if let Payload::PortionPage { set, .. } = payload {
+                portion.extend(set);
+            }
+        }
+        out.push((site, portion));
+    }
+    Ok(out)
+}
+
 /// One recorded transmission.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TranscriptEntry {
-    /// Simulation round in which the send happened.
+    /// Simulation round in which the send happened (delivery may land
+    /// later under a capacity-limited [`crate::network::LinkModel`]).
     pub round: usize,
     /// Sender node.
     pub from: usize,
@@ -83,28 +197,106 @@ mod tests {
     use super::*;
     use crate::points::Dataset;
 
+    fn page(site: usize, set: WeightedSet) -> Payload {
+        Payload::PortionPage {
+            site,
+            page: 0,
+            pages: 1,
+            set: Arc::new(set),
+        }
+    }
+
     #[test]
     fn sizes() {
         assert_eq!(Payload::Scalar(1.0).size_points(), 1);
         assert_eq!(Payload::LocalCost { site: 0, cost: 2.0 }.size_points(), 1);
         let set = WeightedSet::unit(Dataset::from_flat(vec![0.0; 6], 2));
-        assert_eq!(Payload::Portion { site: 1, set: std::sync::Arc::new(set) }.size_points(), 3);
+        assert_eq!(page(1, set).size_points(), 3);
         assert_eq!(
-            Payload::Centers(Dataset::from_flat(vec![0.0; 8], 4)).size_points(),
+            Payload::Centers(Arc::new(Dataset::from_flat(vec![0.0; 8], 4))).size_points(),
             2
         );
+        assert_eq!(Payload::Opaque { site: 2, points: 41 }.size_points(), 41);
+        assert_eq!(Payload::Ack { kind: 1, site: 0, page: 3 }.size_points(), 1);
     }
 
     #[test]
-    fn flood_keys_distinguish_kinds_and_sites() {
+    fn flood_keys_distinguish_kinds_sites_and_pages() {
         let a = Payload::LocalCost { site: 3, cost: 0.0 }.flood_key();
-        let b = Payload::Portion {
-            site: 3,
-            set: std::sync::Arc::new(WeightedSet::empty(2)),
-        }
-        .flood_key();
+        let b = page(3, WeightedSet::empty(2)).flood_key();
         assert_ne!(a, b);
-        assert_eq!(a, Some((0, 3)));
+        assert_eq!(a, Some((0, 3, 0)));
+        assert_eq!(b, Some((1, 3, 0)));
+        let c = Payload::PortionPage {
+            site: 3,
+            page: 7,
+            pages: 9,
+            set: Arc::new(WeightedSet::empty(2)),
+        };
+        assert_eq!(c.flood_key(), Some((1, 3, 7)));
         assert_eq!(Payload::Scalar(0.0).flood_key(), None);
+        assert_eq!(Payload::Opaque { site: 1, points: 5 }.flood_key(), None);
+    }
+
+    fn arb_set(n: usize, d: usize, seed: u64) -> WeightedSet {
+        let mut rng = crate::rng::Pcg64::seed_from(seed);
+        let mut out = WeightedSet::empty(d);
+        for _ in 0..n {
+            let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            out.push(&p, rng.uniform() + 0.1);
+        }
+        out
+    }
+
+    #[test]
+    fn paginate_partitions_exactly() {
+        let set = Arc::new(arb_set(103, 3, 1));
+        for page_points in [0usize, 1, 7, 64, 103, 500] {
+            let pages = paginate(5, set.clone(), page_points);
+            let total: usize = pages.iter().map(|p| p.size_points()).sum();
+            assert_eq!(total, 103, "page_points={page_points}");
+            if page_points == 0 || page_points >= 103 {
+                assert_eq!(pages.len(), 1);
+            } else {
+                assert_eq!(pages.len(), 103usize.div_ceil(page_points));
+            }
+            let back = reassemble(&pages).unwrap();
+            assert_eq!(back.len(), 1);
+            assert_eq!(back[0].0, 5);
+            assert_eq!(back[0].1, *set);
+        }
+    }
+
+    #[test]
+    fn paginate_empty_portion_is_one_zero_cost_page() {
+        let pages = paginate(2, Arc::new(WeightedSet::empty(4)), 8);
+        assert_eq!(pages.len(), 1);
+        assert_eq!(pages[0].size_points(), 0);
+        let back = reassemble(&pages).unwrap();
+        assert_eq!(back[0].1.n(), 0);
+    }
+
+    #[test]
+    fn reassemble_tolerates_any_order_and_duplicates() {
+        let a = Arc::new(arb_set(20, 2, 2));
+        let b = Arc::new(arb_set(9, 2, 3));
+        let mut pages = paginate(1, a.clone(), 6);
+        pages.extend(paginate(0, b.clone(), 6));
+        pages.reverse();
+        pages.push(pages[1].clone()); // duplicate retransmission
+        let back = reassemble(&pages).unwrap();
+        assert_eq!(back[0].0, 0);
+        assert_eq!(back[0].1, *b);
+        assert_eq!(back[1].0, 1);
+        assert_eq!(back[1].1, *a);
+    }
+
+    #[test]
+    fn reassemble_rejects_torn_portions() {
+        let set = Arc::new(arb_set(20, 2, 4));
+        let mut pages = paginate(0, set, 6);
+        pages.remove(2);
+        assert!(reassemble(&pages).is_err());
+        assert!(reassemble(&[Payload::Scalar(1.0)]).is_err());
     }
 }

@@ -1,5 +1,5 @@
 //! Simulated message-passing network (the paper's §2 communication
-//! model).
+//! model) with a paged streaming message plane.
 //!
 //! Nodes exchange typed messages strictly along the edges of an
 //! undirected connected graph; the simulator charges every transmission
@@ -7,9 +7,20 @@
 //! a full transcript so tests can assert exact protocol costs (e.g.
 //! flooding a payload of size `|I_j|` from every node costs exactly
 //! `2 m Σ_j |I_j|`, matching the `O(m Σ |I_j|)` bound of Theorem 2).
+//!
+//! Three independent meters describe a run:
+//!
+//! - [`Network::cost_points`] — total points transmitted (Theorem 2's
+//!   quantity; invariant under paging because pages partition portions);
+//! - [`Network::round`] — synchronous rounds, a *measured* transfer time
+//!   once a finite [`LinkModel`] bounds per-edge bandwidth;
+//! - [`Network::peak_points`] — receiver-side buffer high-water mark,
+//!   the memory a real node needs beyond its own data; paging plus a
+//!   link capacity keeps it at `O(pages_in_flight · page_points)`
+//!   instead of `O(t)`.
 
 mod message;
 mod sim;
 
-pub use message::{Payload, TranscriptEntry};
-pub use sim::Network;
+pub use message::{paginate, reassemble, FloodKey, Payload, TranscriptEntry};
+pub use sim::{ChannelConfig, LinkModel, Network};

@@ -1,27 +1,92 @@
 //! The network simulator: edge-restricted delivery, exact cost metering,
-//! full transcript.
+//! link bandwidth modelling, memory-pressure metering, full transcript.
 
 use super::{Payload, TranscriptEntry};
 use crate::topology::Graph;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashSet, VecDeque};
+
+/// Per-link bandwidth model: how many points one *directed* edge can
+/// deliver per synchronous round.
+///
+/// `points_per_round == 0` means unlimited (the paper's §2 model, where
+/// every round delivers everything). With a finite capacity, sends keep
+/// their charge but over-capacity traffic queues at the sender and
+/// drains in FIFO order on later rounds — `rounds` becomes a measured
+/// transfer time instead of the topology diameter. A message larger than
+/// the capacity still ships alone on an otherwise-idle edge, so progress
+/// is always guaranteed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkModel {
+    /// Points one directed edge delivers per round (0 = unlimited).
+    pub points_per_round: usize,
+}
+
+impl LinkModel {
+    /// Unlimited bandwidth (the default).
+    pub fn unlimited() -> Self {
+        LinkModel { points_per_round: 0 }
+    }
+
+    /// Capacity-limited links.
+    pub fn capped(points_per_round: usize) -> Self {
+        LinkModel { points_per_round }
+    }
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
+/// Paged-exchange configuration shared by the protocol drivers: how big
+/// a portion page is and how much a link carries per round.
+///
+/// The two knobs are independent: paging alone bounds the *message*
+/// granularity (loss retransmits one page, not a whole portion), while a
+/// link capacity bounds how many points are in flight per round — and
+/// therefore the receiver-side memory [`Network::peak_points`] meters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChannelConfig {
+    /// Maximum points per portion page (0 = monolithic portions).
+    pub page_points: usize,
+    /// Per-directed-edge delivery capacity in points per round
+    /// (0 = unlimited).
+    pub link_capacity: usize,
+}
+
+impl ChannelConfig {
+    /// The link model this channel selects.
+    pub fn link_model(&self) -> LinkModel {
+        LinkModel::capped(self.link_capacity)
+    }
+}
 
 /// A deterministic, round-based message-passing simulator.
 ///
 /// Protocols call [`Network::send`] (edge-checked, cost-metered) and
 /// [`Network::recv`]; [`Network::step`] advances one synchronous round,
-/// making everything sent in the previous round deliverable. The
+/// making queued traffic deliverable within each link's bandwidth. The
 /// accumulated [`Network::cost_points`] is the paper's communication
-/// metric.
+/// metric; [`Network::peak_points`] meters the worst-case receiver-side
+/// buffer the run ever needed.
 pub struct Network {
     graph: Graph,
-    /// Messages awaiting delivery next round: (from, to, payload).
-    in_flight: Vec<(usize, usize, Payload)>,
+    /// Messages awaiting delivery, FIFO: (from, to, payload). Under an
+    /// unlimited link model everything drains at the next `step`; with a
+    /// capacity, the tail beyond each edge's budget stays queued.
+    queue: VecDeque<(usize, usize, Payload)>,
     /// Per-node inbox for the current round.
     inboxes: Vec<VecDeque<(usize, Payload)>>,
     transcript: Vec<TranscriptEntry>,
     cost_points: usize,
     round: usize,
     record_transcript: bool,
+    link: LinkModel,
+    /// Points currently buffered in inboxes (receiver-side memory).
+    inbox_points: usize,
+    /// High-water mark of `inbox_points` — the bounded-memory meter.
+    peak_points: usize,
     /// Per-transmission drop probability (lossy-link extension).
     loss: f64,
     loss_rng: Option<crate::rng::Pcg64>,
@@ -34,12 +99,15 @@ impl Network {
         let n = graph.n();
         Network {
             graph,
-            in_flight: Vec::new(),
+            queue: VecDeque::new(),
             inboxes: vec![VecDeque::new(); n],
             transcript: Vec::new(),
             cost_points: 0,
             round: 0,
             record_transcript: true,
+            link: LinkModel::unlimited(),
+            inbox_points: 0,
+            peak_points: 0,
             loss: 0.0,
             loss_rng: None,
             dropped: 0,
@@ -55,6 +123,18 @@ impl Network {
         self.loss = p;
         self.loss_rng = Some(crate::rng::Pcg64::seed_from(seed));
         self
+    }
+
+    /// Limit every directed edge to `model.points_per_round` delivered
+    /// points per round (0 = unlimited).
+    pub fn with_link_model(mut self, model: LinkModel) -> Self {
+        self.link = model;
+        self
+    }
+
+    /// The active link bandwidth model.
+    pub fn link_model(&self) -> LinkModel {
+        self.link
     }
 
     /// Transmissions dropped so far (lossy mode).
@@ -84,6 +164,21 @@ impl Network {
         self.cost_points
     }
 
+    /// High-water mark of points simultaneously buffered in node inboxes
+    /// — the receiver-side memory a real deployment must provision
+    /// beyond its own data. Sender-side queued pages are excluded: they
+    /// are `Arc`-views of data the sender already holds, so they cost no
+    /// additional host memory.
+    pub fn peak_points(&self) -> usize {
+        self.peak_points
+    }
+
+    /// Points queued for delivery but not yet admitted by the link model
+    /// (sender-side backlog; 0 whenever the simulator is quiescent).
+    pub fn queued_points(&self) -> usize {
+        self.queue.iter().map(|(_, _, p)| p.size_points()).sum()
+    }
+
     /// Completed synchronous rounds.
     pub fn round(&self) -> usize {
         self.round
@@ -94,7 +189,8 @@ impl Network {
         &self.transcript
     }
 
-    /// Queue a message for delivery in the next round.
+    /// Queue a message for delivery from the next round on (later under
+    /// a saturated [`LinkModel`]).
     ///
     /// Panics if `(from, to)` is not an edge of the topology — protocols
     /// physically cannot cheat the communication graph.
@@ -113,25 +209,48 @@ impl Network {
                 points,
             });
         }
-        self.in_flight.push((from, to, payload));
+        self.queue.push_back((from, to, payload));
     }
 
-    /// Broadcast to every neighbor of `from`.
+    /// Broadcast to every neighbor of `from` (shallow clone per neighbor
+    /// — point-set payloads are `Arc`-backed, so this is O(1) per edge).
     pub fn send_to_neighbors(&mut self, from: usize, payload: &Payload) {
-        // Clone per neighbor; neighbor list copied to appease borrows.
+        // Neighbor list copied to appease borrows.
         let neigh: Vec<usize> = self.graph.neighbors(from).to_vec();
         for to in neigh {
             self.send(from, to, payload.clone());
         }
     }
 
-    /// Advance one synchronous round: everything sent becomes receivable
-    /// (minus lossy drops). Returns the number of messages delivered.
+    /// Advance one synchronous round: queued traffic becomes receivable
+    /// within each directed edge's bandwidth (minus lossy drops), FIFO
+    /// per edge. Returns the number of messages delivered.
     pub fn step(&mut self) -> usize {
         self.round += 1;
+        let cap = self.link.points_per_round;
         let mut delivered = 0;
         let loss = self.loss;
-        for (from, to, payload) in std::mem::take(&mut self.in_flight) {
+        let mut used: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+        let mut blocked: HashSet<(usize, usize)> = HashSet::new();
+        let mut deferred: VecDeque<(usize, usize, Payload)> = VecDeque::new();
+        for (from, to, payload) in std::mem::take(&mut self.queue) {
+            let edge = (from, to);
+            // FIFO per edge: once one message defers, everything behind
+            // it on the same edge defers too.
+            if blocked.contains(&edge) {
+                deferred.push_back((from, to, payload));
+                continue;
+            }
+            let size = payload.size_points();
+            let spent = used.get(&edge).copied().unwrap_or(0);
+            // An oversized message may occupy an otherwise-idle edge for
+            // the round; anything else must fit in the remaining budget.
+            if cap > 0 && spent > 0 && spent + size > cap {
+                blocked.insert(edge);
+                deferred.push_back((from, to, payload));
+                continue;
+            }
+            used.insert(edge, spent + size);
             if loss > 0.0 {
                 let rng = self.loss_rng.as_mut().expect("loss rng");
                 if rng.uniform() < loss {
@@ -139,25 +258,34 @@ impl Network {
                     continue;
                 }
             }
+            self.inbox_points += size;
             self.inboxes[to].push_back((from, payload));
             delivered += 1;
         }
+        self.queue = deferred;
+        self.peak_points = self.peak_points.max(self.inbox_points);
         delivered
     }
 
     /// Pop one pending message for `node`, if any.
     pub fn recv(&mut self, node: usize) -> Option<(usize, Payload)> {
-        self.inboxes[node].pop_front()
+        let msg = self.inboxes[node].pop_front();
+        if let Some((_, p)) = &msg {
+            self.inbox_points -= p.size_points();
+        }
+        msg
     }
 
     /// Drain all pending messages for `node`.
     pub fn recv_all(&mut self, node: usize) -> Vec<(usize, Payload)> {
-        self.inboxes[node].drain(..).collect()
+        let msgs: Vec<(usize, Payload)> = self.inboxes[node].drain(..).collect();
+        self.inbox_points -= msgs.iter().map(|(_, p)| p.size_points()).sum::<usize>();
+        msgs
     }
 
-    /// True when nothing is queued or in flight.
+    /// True when nothing is queued or buffered.
     pub fn quiescent(&self) -> bool {
-        self.in_flight.is_empty() && self.inboxes.iter().all(|q| q.is_empty())
+        self.queue.is_empty() && self.inboxes.iter().all(|q| q.is_empty())
     }
 }
 
@@ -217,5 +345,95 @@ mod tests {
         net.send(0, 1, Payload::Scalar(1.0));
         assert_eq!(net.cost_points(), 1);
         assert!(net.transcript().is_empty());
+    }
+
+    #[test]
+    fn capacity_queues_over_budget_sends_fifo() {
+        let mut net =
+            Network::new(generators::path(2)).with_link_model(LinkModel::capped(2));
+        for i in 0..5 {
+            net.send(0, 1, Payload::Scalar(i as f64));
+        }
+        assert_eq!(net.cost_points(), 5, "charged at send time");
+        // Round 1: two points fit.
+        assert_eq!(net.step(), 2);
+        let got: Vec<_> = net.recv_all(1).into_iter().map(|(_, p)| p).collect();
+        assert_eq!(got, vec![Payload::Scalar(0.0), Payload::Scalar(1.0)]);
+        assert_eq!(net.queued_points(), 3);
+        // Rounds 2..3 drain the rest in order.
+        assert_eq!(net.step(), 2);
+        assert_eq!(net.step(), 1);
+        let rest: Vec<_> = net.recv_all(1).into_iter().map(|(_, p)| p).collect();
+        assert_eq!(rest.len(), 3);
+        assert_eq!(rest[0], Payload::Scalar(2.0));
+        assert!(net.quiescent());
+        assert_eq!(net.round(), 3);
+    }
+
+    #[test]
+    fn oversized_message_ships_on_idle_edge() {
+        let set = crate::points::WeightedSet::unit(crate::points::Dataset::from_flat(
+            vec![0.0; 10],
+            2,
+        ));
+        let big = Payload::PortionPage {
+            site: 0,
+            page: 0,
+            pages: 1,
+            set: std::sync::Arc::new(set),
+        };
+        let mut net =
+            Network::new(generators::path(2)).with_link_model(LinkModel::capped(2));
+        net.send(0, 1, Payload::Scalar(1.0));
+        net.send(0, 1, big.clone());
+        // Round 1: the scalar uses the budget; the 5-point page defers.
+        assert_eq!(net.step(), 1);
+        // Round 2: the edge is idle, so the oversized page ships alone.
+        assert_eq!(net.step(), 1);
+        net.recv_all(1);
+        assert!(net.quiescent());
+    }
+
+    #[test]
+    fn capacity_is_per_directed_edge() {
+        let mut net =
+            Network::new(generators::star(3)).with_link_model(LinkModel::capped(1));
+        net.send(0, 1, Payload::Scalar(1.0));
+        net.send(0, 2, Payload::Scalar(2.0));
+        net.send(1, 0, Payload::Scalar(3.0));
+        // Three distinct directed edges: all deliver in one round.
+        assert_eq!(net.step(), 3);
+    }
+
+    #[test]
+    fn peak_points_tracks_inbox_high_water() {
+        let mut net = Network::new(generators::path(3));
+        net.send(0, 1, Payload::Scalar(1.0));
+        net.send(2, 1, Payload::Scalar(2.0));
+        net.step();
+        assert_eq!(net.peak_points(), 2);
+        net.recv_all(1);
+        net.send(1, 2, Payload::Scalar(3.0));
+        net.step();
+        // One point buffered now; peak stays at the high-water mark.
+        assert_eq!(net.peak_points(), 2);
+    }
+
+    #[test]
+    fn capacity_bounds_peak() {
+        let mut capped =
+            Network::new(generators::path(2)).with_link_model(LinkModel::capped(1));
+        let mut open = Network::new(generators::path(2));
+        for net in [&mut capped, &mut open] {
+            for i in 0..6 {
+                net.send(0, 1, Payload::Scalar(i as f64));
+            }
+            while net.step() > 0 {
+                net.recv_all(1);
+            }
+        }
+        assert_eq!(open.peak_points(), 6);
+        assert_eq!(capped.peak_points(), 1);
+        assert_eq!(capped.cost_points(), open.cost_points());
     }
 }

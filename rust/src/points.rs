@@ -166,6 +166,17 @@ impl WeightedSet {
         self.weights.extend_from_slice(&other.weights);
     }
 
+    /// Copy of the contiguous point range `[a, b)` (used by the paged
+    /// message plane to cut a coreset portion into fixed-size pages).
+    pub fn slice(&self, a: usize, b: usize) -> WeightedSet {
+        assert!(a <= b && b <= self.n(), "slice {a}..{b} of {}", self.n());
+        let d = self.d();
+        WeightedSet {
+            points: Dataset::from_flat(self.points.data[a * d..b * d].to_vec(), d),
+            weights: self.weights[a..b].to_vec(),
+        }
+    }
+
     /// Union of many weighted sets.
     pub fn union<'a>(sets: impl IntoIterator<Item = &'a WeightedSet>) -> WeightedSet {
         let mut iter = sets.into_iter();
@@ -231,6 +242,16 @@ mod tests {
         let u = WeightedSet::union([&a, &b]);
         assert_eq!(u.n(), 3);
         assert!((u.total_weight() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_is_contiguous_copy() {
+        let w = WeightedSet::new(ds(&[&[0.0], &[1.0], &[2.0], &[3.0]]), vec![0.5, 1.5, 2.5, 3.5]);
+        let s = w.slice(1, 3);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.points.row(0), &[1.0]);
+        assert_eq!(s.weights, vec![1.5, 2.5]);
+        assert_eq!(w.slice(4, 4).n(), 0);
     }
 
     #[test]

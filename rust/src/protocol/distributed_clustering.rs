@@ -1,9 +1,13 @@
-//! **Algorithm 2** — end-to-end distributed clustering drivers.
+//! **Algorithm 2** — the end-to-end distributed clustering driver.
 //!
-//! Variants: the paper's algorithm over general graphs (flooding) and
-//! over rooted trees (converge-cast), plus the two baselines wired
-//! through the same network simulator so every figure compares *measured*
-//! communication, not assumed bounds.
+//! One engine, [`run_pipeline`], runs the paper's algorithm and the
+//! COMBINE baseline over either topology (general graph with flooding,
+//! rooted tree with converge-cast), streaming the coreset exchange in
+//! fixed-size pages through the bandwidth-limited network simulator so
+//! every figure compares *measured* communication, rounds and peak
+//! memory, not assumed bounds. The Zhang-et-al. baseline keeps its own
+//! driver (its bottom-up composition is structurally different) but
+//! shares the execution engine and the metering plane.
 
 use crate::clustering::backend::Backend;
 use crate::clustering::{approx_solution, Solution};
@@ -12,11 +16,13 @@ use crate::coreset::distributed::{self, allocate_budget, local_cost, Distributed
 use crate::coreset::zhang::{self, ZhangConfig};
 use crate::coreset::Coreset;
 use crate::exec::{map_sites, ExecPolicy};
-use crate::network::{Network, Payload};
+use crate::network::{paginate, reassemble, ChannelConfig, Network, Payload};
 use crate::points::{Dataset, WeightedSet};
-use crate::protocol::{broadcast_down, converge_cast, flood};
+use crate::protocol::broadcast_down;
+use crate::protocol::session::{drive, PipeMachine};
 use crate::rng::Pcg64;
 use crate::topology::{Graph, SpanningTree};
+use std::sync::Arc;
 
 /// Outcome of one distributed clustering run.
 #[derive(Clone, Debug)]
@@ -29,10 +35,37 @@ pub struct RunResult {
     pub coreset: Coreset,
     /// Total measured communication (points transmitted).
     pub comm_points: usize,
-    /// Synchronous network rounds used.
+    /// Synchronous network rounds used (a real transfer time under a
+    /// finite link capacity; phases overlap, so this is *not* the sum of
+    /// per-primitive round counts).
     pub rounds: usize,
+    /// Receiver-side buffer high-water mark in points (see
+    /// [`Network::peak_points`]).
+    pub peak_points: usize,
     /// Algorithm label for reports.
     pub algorithm: &'static str,
+}
+
+/// Which topology the pipeline runs over.
+#[derive(Clone, Copy)]
+pub enum Topology<'a> {
+    /// General graph: flooding for every exchange; all nodes end holding
+    /// the full coreset and solve identically (no solution broadcast).
+    Graph(&'a Graph),
+    /// Rooted spanning tree (Theorem 3): converge-cast up, broadcast
+    /// down, the root solves.
+    Tree(&'a SpanningTree),
+}
+
+/// Which coreset construction feeds the exchange.
+#[derive(Clone, Copy)]
+pub enum CoresetPlan<'a> {
+    /// The paper's Algorithm 1: cost exchange, proportional budgets,
+    /// sensitivity sampling.
+    Distributed(&'a DistributedConfig),
+    /// COMBINE baseline: equal budgets, local FL11 coresets, no cost
+    /// exchange.
+    Combine(&'a CombineConfig),
 }
 
 fn solve_on(
@@ -45,13 +78,177 @@ fn solve_on(
     approx_solution(&coreset.set, k, cfg_obj, backend, rng, 40)
 }
 
+/// The unified driver: build portions under `plan`, stream them through
+/// the paged message plane over `topology`, solve, and meter everything.
+///
+/// The compute schedule (and therefore every RNG draw) is identical to
+/// the legacy per-algorithm drivers — round 1, round 2, final solve —
+/// so results are bit-compatible with the monolithic exchange for every
+/// `channel` setting: paging and link capacity only reshape *when*
+/// points move, never *which* points. The simulated timeline still
+/// overlaps phases per node (a site starts streaming pages as soon as
+/// its own cost exchange completes), which `rounds` reflects.
+///
+/// Every run verifies the wire view: the pages collected at node 0 (or
+/// the tree root) must reassemble to exactly the portions that were
+/// sent.
+pub fn run_pipeline(
+    topology: Topology<'_>,
+    locals: &[WeightedSet],
+    plan: CoresetPlan<'_>,
+    channel: &ChannelConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    exec: ExecPolicy,
+) -> anyhow::Result<RunResult> {
+    let n = locals.len();
+    let graph = match topology {
+        Topology::Graph(g) => g.clone(),
+        Topology::Tree(t) => t.as_graph(),
+    };
+    anyhow::ensure!(graph.n() == n, "one local set per node");
+    let mut net = Network::new(graph)
+        .without_transcript()
+        .with_link_model(channel.link_model());
+
+    // Host-side compute, in the legacy RNG order (round 1 draws, round 2
+    // draws, final solve draws); the network phase below consumes none.
+    let (portions, costs, k, objective) = match plan {
+        CoresetPlan::Distributed(cfg) => {
+            let summaries: Vec<_> = map_sites(n, rng, exec, |i, r| {
+                distributed::round1(&locals[i], cfg, backend, r)
+            });
+            let costs: Vec<f64> = summaries
+                .iter()
+                .map(|s| local_cost(s, cfg.objective))
+                .collect();
+            let total: f64 = costs.iter().sum();
+            let budgets = allocate_budget(cfg.t, &costs);
+            let portions: Vec<Coreset> = map_sites(n, rng, exec, |i, r| {
+                distributed::round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
+            });
+            (portions, Some(costs), cfg.k, cfg.objective)
+        }
+        CoresetPlan::Combine(cfg) => {
+            let portions = combine::build_portions_exec(locals, cfg, backend, rng, exec);
+            (portions, None, cfg.k, cfg.objective)
+        }
+    };
+    let coreset = distributed::union(&portions);
+    let sol = solve_on(&coreset, k, objective, backend, rng);
+
+    // Wire phase: one session where the cost exchange, the paged portion
+    // streaming and (on trees) the solution broadcast overlap.
+    let pages: Vec<Vec<Payload>> = portions
+        .iter()
+        .enumerate()
+        .map(|(i, c)| paginate(i, Arc::new(c.set.clone()), channel.page_points))
+        .collect();
+    let total_pages: usize = pages.iter().map(|p| p.len()).sum();
+    let cost_payload = |i: usize| {
+        costs.as_ref().map(|c| Payload::LocalCost {
+            site: i,
+            cost: c[i],
+        })
+    };
+
+    let (collector, collected, algorithm) = match topology {
+        Topology::Graph(_) => {
+            let mut nodes: Vec<PipeMachine> = pages
+                .into_iter()
+                .enumerate()
+                .map(|(i, own)| {
+                    PipeMachine::graph(
+                        net.graph().neighbors(i).to_vec(),
+                        cost_payload(i),
+                        own,
+                        n,
+                        total_pages,
+                    )
+                })
+                .collect();
+            drive(&mut net, &mut nodes);
+            for (v, node) in nodes.iter().enumerate() {
+                anyhow::ensure!(
+                    node.held.len() == total_pages,
+                    "node {v} holds {} of {total_pages} pages (disconnected graph?)",
+                    node.held.len()
+                );
+            }
+            let algorithm = match plan {
+                CoresetPlan::Distributed(_) => "distributed-coreset (Alg.1+3)",
+                CoresetPlan::Combine(_) => "combine",
+            };
+            (0usize, std::mem::take(&mut nodes[0].held), algorithm)
+        }
+        Topology::Tree(tree) => {
+            let total_cost: f64 = costs.as_ref().map(|c| c.iter().sum()).unwrap_or(0.0);
+            let centers = Arc::new(sol.centers.clone());
+            let mut nodes: Vec<PipeMachine> = pages
+                .into_iter()
+                .enumerate()
+                .map(|(v, own)| {
+                    let is_root = v == tree.root;
+                    PipeMachine::tree(
+                        (!is_root).then_some(tree.parent[v]),
+                        tree.children[v].clone(),
+                        cost_payload(v),
+                        (is_root && costs.is_some())
+                            .then_some(Payload::Scalar(total_cost)),
+                        own,
+                        if is_root { total_pages } else { usize::MAX },
+                        n,
+                        is_root.then(|| Payload::Centers(centers.clone())),
+                    )
+                })
+                .collect();
+            drive(&mut net, &mut nodes);
+            anyhow::ensure!(
+                nodes[tree.root].held.len() == total_pages,
+                "root holds {} of {total_pages} pages",
+                nodes[tree.root].held.len()
+            );
+            let algorithm = match plan {
+                CoresetPlan::Distributed(_) => "distributed-coreset (tree)",
+                CoresetPlan::Combine(_) => "combine (tree)",
+            };
+            (
+                tree.root,
+                std::mem::take(&mut nodes[tree.root].held),
+                algorithm,
+            )
+        }
+    };
+
+    // The wire view must reconstruct the exact portions — this runs on
+    // every call, so any paging/reassembly regression fails loudly.
+    let rebuilt = reassemble(&collected)?;
+    anyhow::ensure!(rebuilt.len() == n, "collector {collector} missing portions");
+    for (site, set) in &rebuilt {
+        anyhow::ensure!(
+            *set == portions[*site].set,
+            "portion of site {site} corrupted in transit"
+        );
+    }
+
+    Ok(RunResult {
+        centers: sol.centers,
+        coreset_cost: sol.cost,
+        coreset,
+        comm_points: net.cost_points(),
+        rounds: net.round(),
+        peak_points: net.peak_points(),
+        algorithm,
+    })
+}
+
 /// The paper's algorithm on a general graph: distributed coreset
 /// construction with flooding for both the cost exchange and the coreset
 /// exchange. Every node ends holding the full coreset (as in Algorithm
 /// 2); the solver runs once since all nodes compute identically.
 ///
-/// Sequential legacy entry point — see [`cluster_on_graph_exec`] for
-/// the parallel execution engine.
+/// Sequential monolithic-exchange entry point — see [`run_pipeline`]
+/// for paging, link capacity and parallel execution.
 pub fn cluster_on_graph(
     graph: &Graph,
     locals: &[WeightedSet],
@@ -74,66 +271,22 @@ pub fn cluster_on_graph_exec(
     rng: &mut Pcg64,
     exec: ExecPolicy,
 ) -> anyhow::Result<RunResult> {
-    anyhow::ensure!(graph.n() == locals.len(), "one local set per node");
-    let mut net = Network::new(graph.clone()).without_transcript();
-
-    // Round 1: local solves; flood the scalar costs.
-    let summaries: Vec<_> = map_sites(locals.len(), rng, exec, |i, r| {
-        distributed::round1(&locals[i], cfg, backend, r)
-    });
-    let cost_payloads: Vec<Payload> = summaries
-        .iter()
-        .enumerate()
-        .map(|(i, s)| Payload::LocalCost {
-            site: i,
-            cost: local_cost(s, cfg.objective),
-        })
-        .collect();
-    let held = flood(&mut net, cost_payloads);
-
-    // Every node now knows every cost; reconstruct (identically) at node 0.
-    let costs: Vec<f64> = held[0]
-        .iter()
-        .map(|p| match p {
-            Payload::LocalCost { cost, .. } => *cost,
-            _ => unreachable!(),
-        })
-        .collect();
-    let total: f64 = costs.iter().sum();
-    let budgets = allocate_budget(cfg.t, &costs);
-
-    // Round 2: local portions; flood them so all nodes hold the coreset.
-    let portions: Vec<Coreset> = map_sites(locals.len(), rng, exec, |i, r| {
-        distributed::round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
-    });
-    let portion_payloads: Vec<Payload> = portions
-        .iter()
-        .enumerate()
-        .map(|(i, c)| Payload::Portion {
-            site: i,
-            set: std::sync::Arc::new(c.set.clone()),
-        })
-        .collect();
-    flood(&mut net, portion_payloads);
-
-    let coreset = distributed::union(&portions);
-    let sol = solve_on(&coreset, cfg.k, cfg.objective, backend, rng);
-    Ok(RunResult {
-        centers: sol.centers,
-        coreset_cost: sol.cost,
-        coreset,
-        comm_points: net.cost_points(),
-        rounds: net.round(),
-        algorithm: "distributed-coreset (Alg.1+3)",
-    })
+    run_pipeline(
+        Topology::Graph(graph),
+        locals,
+        CoresetPlan::Distributed(cfg),
+        &ChannelConfig::default(),
+        backend,
+        rng,
+        exec,
+    )
 }
 
 /// The paper's algorithm on a rooted tree (Theorem 3): costs converge to
 /// the root, the total broadcasts down, portions converge to the root,
 /// the root solves and broadcasts the centers.
 ///
-/// Sequential legacy entry point — see [`cluster_on_tree_exec`] for the
-/// parallel execution engine.
+/// Sequential monolithic-exchange entry point — see [`run_pipeline`].
 pub fn cluster_on_tree(
     tree: &SpanningTree,
     locals: &[WeightedSet],
@@ -154,56 +307,15 @@ pub fn cluster_on_tree_exec(
     rng: &mut Pcg64,
     exec: ExecPolicy,
 ) -> anyhow::Result<RunResult> {
-    anyhow::ensure!(tree.n() == locals.len(), "one local set per node");
-    let mut net = Network::new(tree.as_graph()).without_transcript();
-
-    let summaries: Vec<_> = map_sites(locals.len(), rng, exec, |i, r| {
-        distributed::round1(&locals[i], cfg, backend, r)
-    });
-    let cost_payloads: Vec<Payload> = summaries
-        .iter()
-        .enumerate()
-        .map(|(i, s)| Payload::LocalCost {
-            site: i,
-            cost: local_cost(s, cfg.objective),
-        })
-        .collect();
-    let at_root = converge_cast(&mut net, tree, cost_payloads);
-    let costs: Vec<f64> = at_root
-        .iter()
-        .map(|p| match p {
-            Payload::LocalCost { cost, .. } => *cost,
-            _ => unreachable!(),
-        })
-        .collect();
-    let total: f64 = costs.iter().sum();
-    broadcast_down(&mut net, tree, &Payload::Scalar(total));
-
-    let budgets = allocate_budget(cfg.t, &costs);
-    let portions: Vec<Coreset> = map_sites(locals.len(), rng, exec, |i, r| {
-        distributed::round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
-    });
-    let portion_payloads: Vec<Payload> = portions
-        .iter()
-        .enumerate()
-        .map(|(i, c)| Payload::Portion {
-            site: i,
-            set: std::sync::Arc::new(c.set.clone()),
-        })
-        .collect();
-    converge_cast(&mut net, tree, portion_payloads);
-
-    let coreset = distributed::union(&portions);
-    let sol = solve_on(&coreset, cfg.k, cfg.objective, backend, rng);
-    broadcast_down(&mut net, tree, &Payload::Centers(sol.centers.clone()));
-    Ok(RunResult {
-        centers: sol.centers,
-        coreset_cost: sol.cost,
-        coreset,
-        comm_points: net.cost_points(),
-        rounds: net.round(),
-        algorithm: "distributed-coreset (tree)",
-    })
+    run_pipeline(
+        Topology::Tree(tree),
+        locals,
+        CoresetPlan::Distributed(cfg),
+        &ChannelConfig::default(),
+        backend,
+        rng,
+        exec,
+    )
 }
 
 /// COMBINE baseline on a general graph: local FL11 coresets flooded to
@@ -215,28 +327,15 @@ pub fn combine_on_graph(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
-    anyhow::ensure!(graph.n() == locals.len());
-    let mut net = Network::new(graph.clone()).without_transcript();
-    let portions = combine::build_portions(locals, cfg, backend, rng);
-    let payloads: Vec<Payload> = portions
-        .iter()
-        .enumerate()
-        .map(|(i, c)| Payload::Portion {
-            site: i,
-            set: std::sync::Arc::new(c.set.clone()),
-        })
-        .collect();
-    flood(&mut net, payloads);
-    let coreset = distributed::union(&portions);
-    let sol = solve_on(&coreset, cfg.k, cfg.objective, backend, rng);
-    Ok(RunResult {
-        centers: sol.centers,
-        coreset_cost: sol.cost,
-        coreset,
-        comm_points: net.cost_points(),
-        rounds: net.round(),
-        algorithm: "combine",
-    })
+    run_pipeline(
+        Topology::Graph(graph),
+        locals,
+        CoresetPlan::Combine(cfg),
+        &ChannelConfig::default(),
+        backend,
+        rng,
+        ExecPolicy::Sequential,
+    )
 }
 
 /// COMBINE baseline on a rooted tree: local coresets converge to the
@@ -248,33 +347,21 @@ pub fn combine_on_tree(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
-    anyhow::ensure!(tree.n() == locals.len());
-    let mut net = Network::new(tree.as_graph()).without_transcript();
-    let portions = combine::build_portions(locals, cfg, backend, rng);
-    let payloads: Vec<Payload> = portions
-        .iter()
-        .enumerate()
-        .map(|(i, c)| Payload::Portion {
-            site: i,
-            set: std::sync::Arc::new(c.set.clone()),
-        })
-        .collect();
-    converge_cast(&mut net, tree, payloads);
-    let coreset = distributed::union(&portions);
-    let sol = solve_on(&coreset, cfg.k, cfg.objective, backend, rng);
-    broadcast_down(&mut net, tree, &Payload::Centers(sol.centers.clone()));
-    Ok(RunResult {
-        centers: sol.centers,
-        coreset_cost: sol.cost,
-        coreset,
-        comm_points: net.cost_points(),
-        rounds: net.round(),
-        algorithm: "combine (tree)",
-    })
+    run_pipeline(
+        Topology::Tree(tree),
+        locals,
+        CoresetPlan::Combine(cfg),
+        &ChannelConfig::default(),
+        backend,
+        rng,
+        ExecPolicy::Sequential,
+    )
 }
 
 /// Zhang-et-al. baseline on a rooted tree: coreset-of-coresets composed
 /// bottom-up, each hop charged through the simulator.
+///
+/// Sequential entry point — see [`zhang_on_tree_exec`].
 pub fn zhang_on_tree(
     tree: &SpanningTree,
     locals: &[WeightedSet],
@@ -282,32 +369,53 @@ pub fn zhang_on_tree(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
+    zhang_on_tree_exec(tree, locals, cfg, backend, rng, ExecPolicy::Sequential)
+}
+
+/// [`zhang_on_tree`] under an explicit [`ExecPolicy`]: the bottom-up
+/// composition runs level-parallel on the execution engine (see
+/// [`zhang::build_on_tree_exec`]).
+pub fn zhang_on_tree_exec(
+    tree: &SpanningTree,
+    locals: &[WeightedSet],
+    cfg: &ZhangConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    exec: ExecPolicy,
+) -> anyhow::Result<RunResult> {
     anyhow::ensure!(tree.n() == locals.len());
     let mut net = Network::new(tree.as_graph()).without_transcript();
-    let result = zhang::build_on_tree(locals, tree, cfg, backend, rng);
-    // Charge each child -> parent summary transfer on the simulator.
+    let result = zhang::build_on_tree_exec(locals, tree, cfg, backend, rng, exec);
+    // Charge each child -> parent summary transfer on the simulator with
+    // a metering-only payload — the simulator never needs the summary's
+    // coordinates, so no stand-in dataset is allocated.
     for v in 0..tree.n() {
         if v != tree.root && result.sent_points[v] > 0 {
-            let set = WeightedSet::new(
-                Dataset::from_flat(
-                    vec![0.0; result.sent_points[v] * locals[v].d().max(1)],
-                    locals[v].d().max(1),
-                ),
-                vec![0.0; result.sent_points[v]],
+            net.send(
+                v,
+                tree.parent[v],
+                Payload::Opaque {
+                    site: v,
+                    points: result.sent_points[v],
+                },
             );
-            net.send(v, tree.parent[v], Payload::Portion { site: v, set: std::sync::Arc::new(set) });
             net.step();
             net.recv_all(tree.parent[v]);
         }
     }
     let sol = solve_on(&result.coreset, cfg.k, cfg.objective, backend, rng);
-    broadcast_down(&mut net, tree, &Payload::Centers(sol.centers.clone()));
+    broadcast_down(
+        &mut net,
+        tree,
+        &Payload::Centers(Arc::new(sol.centers.clone())),
+    );
     Ok(RunResult {
         centers: sol.centers,
         coreset_cost: sol.cost,
         coreset: result.coreset,
         comm_points: net.cost_points(),
         rounds: net.round(),
+        peak_points: net.peak_points(),
         algorithm: "zhang (tree)",
     })
 }
@@ -373,6 +481,76 @@ mod tests {
     }
 
     #[test]
+    fn paged_exchange_charges_exactly_the_monolithic_total() {
+        // Pages partition portions, so the 2m(t + nk) formula holds for
+        // ANY page size — the header metadata rides free, like weights.
+        let (g, locals, _) = setup(4, 6);
+        let cfg = DistributedConfig {
+            t: 300,
+            k: 3,
+            ..Default::default()
+        };
+        let n = g.n();
+        let expected = 2 * g.m() * n + 2 * g.m() * (cfg.t + n * cfg.k);
+        for page_points in [0usize, 17, 64, 4096] {
+            let channel = ChannelConfig {
+                page_points,
+                link_capacity: 0,
+            };
+            let mut rng = Pcg64::seed_from(5);
+            let run = run_pipeline(
+                Topology::Graph(&g),
+                &locals,
+                CoresetPlan::Distributed(&cfg),
+                &channel,
+                &RustBackend,
+                &mut rng,
+                ExecPolicy::Sequential,
+            )
+            .unwrap();
+            assert_eq!(run.comm_points, expected, "page_points={page_points}");
+        }
+    }
+
+    #[test]
+    fn paged_run_is_bit_identical_to_monolithic() {
+        let (g, locals, _) = setup(6, 10);
+        let cfg = DistributedConfig {
+            t: 500,
+            k: 4,
+            ..Default::default()
+        };
+        let run_at = |channel: ChannelConfig| {
+            let mut rng = Pcg64::seed_from(9);
+            run_pipeline(
+                Topology::Graph(&g),
+                &locals,
+                CoresetPlan::Distributed(&cfg),
+                &channel,
+                &RustBackend,
+                &mut rng,
+                ExecPolicy::Sequential,
+            )
+            .unwrap()
+        };
+        let mono = run_at(ChannelConfig::default());
+        let paged = run_at(ChannelConfig {
+            page_points: 32,
+            link_capacity: 32,
+        });
+        assert_eq!(mono.centers, paged.centers, "paging must not change results");
+        assert_eq!(mono.coreset.set, paged.coreset.set);
+        assert_eq!(mono.comm_points, paged.comm_points);
+        assert!(paged.rounds > mono.rounds, "capacity stretches rounds");
+        assert!(
+            paged.peak_points < mono.peak_points,
+            "paged {} !< mono {}",
+            paged.peak_points,
+            mono.peak_points
+        );
+    }
+
+    #[test]
     fn tree_run_cheaper_than_graph_run() {
         let (g, locals, _) = setup(6, 10);
         let cfg = DistributedConfig {
@@ -414,6 +592,38 @@ mod tests {
     }
 
     #[test]
+    fn paged_tree_pipeline_matches_monolithic_cost_accounting() {
+        let (g, locals, _) = setup(8, 6);
+        let cfg = DistributedConfig {
+            t: 400,
+            k: 4,
+            ..Default::default()
+        };
+        let mut rng0 = Pcg64::seed_from(13);
+        let tree = SpanningTree::random_root(&g, &mut rng0);
+        let run_at = |channel: ChannelConfig| {
+            let mut rng = Pcg64::seed_from(14);
+            run_pipeline(
+                Topology::Tree(&tree),
+                &locals,
+                CoresetPlan::Distributed(&cfg),
+                &channel,
+                &RustBackend,
+                &mut rng,
+                ExecPolicy::Sequential,
+            )
+            .unwrap()
+        };
+        let mono = run_at(ChannelConfig::default());
+        let paged = run_at(ChannelConfig {
+            page_points: 16,
+            link_capacity: 16,
+        });
+        assert_eq!(mono.comm_points, paged.comm_points);
+        assert_eq!(mono.centers, paged.centers);
+    }
+
+    #[test]
     fn zhang_runs_and_charges_tree_edges() {
         let (g, locals, global) = setup(10, 9);
         let mut rng = Pcg64::seed_from(11);
@@ -427,5 +637,26 @@ mod tests {
         assert!(run.comm_points > 0);
         let cost = cost_of(&global, &run.centers, Objective::KMeans);
         assert!(cost.is_finite() && cost > 0.0);
+    }
+
+    #[test]
+    fn zhang_opaque_metering_matches_build_accounting() {
+        // The simulator charge must equal the construction's own
+        // sent_points accounting plus the centers broadcast.
+        let (g, locals, _) = setup(10, 9);
+        let mut rng = Pcg64::seed_from(16);
+        let tree = SpanningTree::random_root(&g, &mut rng);
+        let cfg = ZhangConfig {
+            t_node: 90,
+            k: 3,
+            objective: Objective::KMeans,
+        };
+        let mut build_rng = Pcg64::seed_from(17);
+        let built =
+            zhang::build_on_tree(&locals, &tree, &cfg, &RustBackend, &mut build_rng);
+        let mut rng2 = Pcg64::seed_from(17);
+        let run = zhang_on_tree(&tree, &locals, &cfg, &RustBackend, &mut rng2).unwrap();
+        let expected = zhang::communication(&built) + (tree.n() - 1) * run.centers.n();
+        assert_eq!(run.comm_points, expected);
     }
 }

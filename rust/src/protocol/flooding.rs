@@ -1,15 +1,21 @@
 //! **Algorithm 3** — Message-Passing(I_i, N_i).
 //!
-//! Every node starts with a payload `I_i` and sends it to all neighbors;
-//! whenever a node receives a payload it has not seen, it records it and
-//! forwards it to all neighbors. Payloads propagate breadth-first, so
-//! after at most `diameter` rounds every node holds `{I_j : j ∈ [n]}`.
+//! Every node starts with payload(s) `I_i` and sends them to all
+//! neighbors; whenever a node receives a payload it has not seen, it
+//! records it and forwards it to all neighbors. Payloads propagate
+//! breadth-first, so after at most `diameter` rounds (more under a
+//! capacity-limited link model) every node holds `{I_j : j ∈ [n]}`.
 //! Each node sends each payload to its neighbors exactly once, so the
 //! total communication is exactly `Σ_i |N_i| · Σ_j |I_j| = 2m Σ_j |I_j|`
 //! — the `O(m Σ |I_j|)` of Theorem 2, asserted exactly in the tests.
+//! The total is invariant under paging: pages partition a portion, so
+//! `Σ_j |I_j|` counts the same points either way.
+//!
+//! Implemented as [`FloodMachine`]s under the unified
+//! [`session`](super::session) round loop.
 
+use super::session::{drive, FloodMachine};
 use crate::network::{Network, Payload};
-use std::collections::HashSet;
 
 /// Flood one payload per node to every node. `payloads[i]` is node `i`'s
 /// `I_i` (must be floodable, i.e. carry an origin site id).
@@ -19,52 +25,58 @@ use std::collections::HashSet;
 pub fn flood(net: &mut Network, payloads: Vec<Payload>) -> Vec<Vec<Payload>> {
     let n = net.n();
     assert_eq!(payloads.len(), n, "one payload per node");
-    let mut seen: Vec<HashSet<(u8, usize)>> = vec![HashSet::new(); n];
-    let mut held: Vec<Vec<Payload>> = vec![Vec::new(); n];
+    flood_multi(net, payloads.into_iter().map(|p| vec![p]).collect())
+}
 
-    // Initialize: R_i = {I_i}, send I_i to all neighbors.
-    for (i, payload) in payloads.into_iter().enumerate() {
-        let key = payload
-            .flood_key()
-            .expect("flooded payloads must have an origin");
-        assert_eq!(key.1, i, "payload origin must match its node");
-        seen[i].insert(key);
-        net.send_to_neighbors(i, &payload);
-        held[i].push(payload);
-    }
-
-    // Rounds until quiescent. Each delivery of an unseen payload
-    // triggers one forward to all neighbors.
-    while net.step() > 0 {
-        for v in 0..n {
-            for (_, payload) in net.recv_all(v) {
-                let key = payload.flood_key().expect("floodable");
-                if seen[v].insert(key) {
-                    net.send_to_neighbors(v, &payload);
-                    held[v].push(payload);
-                }
+/// Flood any number of payloads per node (e.g. the pages of a coreset
+/// portion) to every node. `origins[i]` are node `i`'s payloads; every
+/// one must carry origin site `i` and a key distinct from its siblings'.
+///
+/// Returns, per node, all `Σ_j |origins[j]|` payloads it ended up
+/// holding, ordered by `(kind, site, page)`.
+pub fn flood_multi(net: &mut Network, origins: Vec<Vec<Payload>>) -> Vec<Vec<Payload>> {
+    let n = net.n();
+    assert_eq!(origins.len(), n, "one origin set per node");
+    let expect: usize = origins.iter().map(|o| o.len()).sum();
+    let mut nodes: Vec<FloodMachine> = origins
+        .into_iter()
+        .enumerate()
+        .map(|(i, own)| {
+            for p in &own {
+                let key = p
+                    .flood_key()
+                    .expect("flooded payloads must have an origin");
+                assert_eq!(key.1, i, "payload origin must match its node");
             }
-        }
-    }
-
-    for (v, h) in held.iter_mut().enumerate() {
-        assert_eq!(
-            h.len(),
-            n,
-            "node {v} only saw {} of {n} payloads (disconnected graph?)",
-            h.len()
-        );
-        h.sort_by_key(|p| p.flood_key().unwrap());
-    }
-    held
+            FloodMachine::new(net.graph().neighbors(i).to_vec(), own)
+        })
+        .collect();
+    drive(net, &mut nodes);
+    nodes
+        .into_iter()
+        .enumerate()
+        .map(|(v, node)| {
+            let mut held = node.held;
+            assert_eq!(
+                held.len(),
+                expect,
+                "node {v} only saw {} of {expect} payloads (disconnected graph?)",
+                held.len()
+            );
+            held.sort_by_key(|p| p.flood_key().unwrap());
+            held
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::Network;
+    use crate::network::{paginate, reassemble, LinkModel, Network};
+    use crate::points::{Dataset, WeightedSet};
     use crate::rng::Pcg64;
     use crate::topology::{diameter, generators};
+    use std::sync::Arc;
 
     fn scalar_payloads(n: usize) -> Vec<Payload> {
         (0..n)
@@ -138,5 +150,103 @@ mod tests {
     fn rejects_unfloodable_payloads() {
         let mut net = Network::new(generators::path(2));
         flood(&mut net, vec![Payload::Scalar(1.0), Payload::Scalar(2.0)]);
+    }
+
+    fn arb_portion(rng: &mut Pcg64, n: usize, d: usize) -> WeightedSet {
+        let mut out = WeightedSet::empty(d);
+        for _ in 0..n {
+            let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            out.push(&p, rng.uniform() + 0.1);
+        }
+        out
+    }
+
+    #[test]
+    fn paged_flood_costs_exactly_what_monolithic_does() {
+        let mut rng = Pcg64::seed_from(9);
+        let g = generators::grid(3, 3);
+        let m = g.m();
+        let portions: Vec<Arc<WeightedSet>> = (0..9)
+            .map(|_| Arc::new(arb_portion(&mut rng, 10 + rng.below(30), 3)))
+            .collect();
+        let total: usize = portions.iter().map(|p| p.n()).sum();
+        let mut costs = Vec::new();
+        for page_points in [0usize, 7, 64] {
+            let origins: Vec<Vec<Payload>> = portions
+                .iter()
+                .enumerate()
+                .map(|(i, p)| paginate(i, p.clone(), page_points))
+                .collect();
+            let mut net = Network::new(g.clone()).without_transcript();
+            let held = flood_multi(&mut net, origins);
+            // Every node reassembles every portion exactly.
+            for h in &held {
+                let back = reassemble(h).unwrap();
+                for (site, set) in back {
+                    assert_eq!(set, *portions[site], "site {site}");
+                }
+            }
+            costs.push(net.cost_points());
+        }
+        assert!(costs.iter().all(|&c| c == 2 * m * total), "{costs:?}");
+    }
+
+    #[test]
+    fn capacity_stretches_rounds_but_not_cost() {
+        let mut rng = Pcg64::seed_from(10);
+        let g = generators::path(5);
+        let portions: Vec<Arc<WeightedSet>> =
+            (0..5).map(|_| Arc::new(arb_portion(&mut rng, 40, 2))).collect();
+        let origins = |pp: usize| -> Vec<Vec<Payload>> {
+            portions
+                .iter()
+                .enumerate()
+                .map(|(i, p)| paginate(i, p.clone(), pp))
+                .collect()
+        };
+        let mut open = Network::new(g.clone()).without_transcript();
+        flood_multi(&mut open, origins(0));
+        let mut capped = Network::new(g.clone())
+            .without_transcript()
+            .with_link_model(LinkModel::capped(8));
+        let held = flood_multi(&mut capped, origins(8));
+        assert_eq!(capped.cost_points(), open.cost_points());
+        assert!(capped.round() > open.round());
+        assert!(capped.peak_points() < open.peak_points());
+        let back = reassemble(&held[0]).unwrap();
+        assert_eq!(back.len(), 5);
+    }
+
+    #[test]
+    fn flood_still_handles_cost_scalars_mixed_with_pages() {
+        // A node may flood its LocalCost and its pages side by side —
+        // the keys are disjoint by kind.
+        let mut rng = Pcg64::seed_from(11);
+        let g = generators::star(4);
+        let origins: Vec<Vec<Payload>> = (0..4)
+            .map(|i| {
+                let mut o = vec![Payload::LocalCost {
+                    site: i,
+                    cost: 1.0,
+                }];
+                o.extend(paginate(
+                    i,
+                    Arc::new(arb_portion(&mut rng, 9, 2)),
+                    4,
+                ));
+                o
+            })
+            .collect();
+        let mut net = Network::new(g);
+        let held = flood_multi(&mut net, origins);
+        for h in &held {
+            assert_eq!(h.len(), 4 * (1 + 3));
+            let pages: Vec<Payload> = h
+                .iter()
+                .filter(|p| matches!(p, Payload::PortionPage { .. }))
+                .cloned()
+                .collect();
+            assert_eq!(reassemble(&pages).unwrap().len(), 4);
+        }
     }
 }

@@ -1,17 +1,25 @@
 //! Distributed protocols (§4): flooding message-passing on general
 //! graphs (Algorithm 3), rooted-tree aggregation (Theorem 3), and the
-//! end-to-end distributed clustering drivers (Algorithm 2) that tie the
-//! coreset construction, the network simulator and the solvers together.
+//! end-to-end distributed clustering driver (Algorithm 2) that ties the
+//! coreset construction, the paged streaming message plane and the
+//! solvers together.
+//!
+//! Every primitive is a per-node state machine under one synchronous
+//! round loop (`session`), so the cost exchange, the paged coreset
+//! streaming and the solution broadcast overlap in simulated time
+//! instead of running as global barriers.
 
 mod distributed_clustering;
 mod flooding;
 mod reliable;
+mod session;
 mod tree;
 
 pub use distributed_clustering::{
     cluster_on_graph, cluster_on_graph_exec, cluster_on_tree, cluster_on_tree_exec,
-    combine_on_graph, combine_on_tree, zhang_on_tree, RunResult,
+    combine_on_graph, combine_on_tree, run_pipeline, zhang_on_tree, zhang_on_tree_exec,
+    CoresetPlan, RunResult, Topology,
 };
-pub use flooding::flood;
-pub use reliable::flood_reliable;
-pub use tree::{broadcast_down, converge_cast};
+pub use flooding::{flood, flood_multi};
+pub use reliable::{flood_reliable, flood_reliable_multi};
+pub use tree::{broadcast_down, converge_cast, converge_cast_multi};

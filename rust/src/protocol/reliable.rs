@@ -8,11 +8,17 @@
 //! neighbor has not yet acked. Acks cost 1 point each (they are on-wire
 //! traffic too), so the measured overhead vs lossless flooding is
 //! `≈ (1 + ack_ratio) / (1 − p)` — quantified in the tests.
+//!
+//! Payloads are identified by their full [`FloodKey`] `(kind, site,
+//! page)`, so a paged coreset exchange retransmits *one lost page*, not
+//! the whole portion — the loss-recovery unit shrinks with the page
+//! size.
 
-use crate::network::{Network, Payload};
+use crate::network::{FloodKey, Network, Payload};
 use std::collections::{HashMap, HashSet};
 
-/// Flood with retransmission until every node holds every payload.
+/// Flood one payload per node with retransmission until every node
+/// holds every payload.
 ///
 /// Returns per-node held payloads (ordered by origin), like
 /// [`crate::protocol::flood`]. Panics if `max_rounds` elapse without
@@ -24,18 +30,36 @@ pub fn flood_reliable(
 ) -> Vec<Vec<Payload>> {
     let n = net.n();
     assert_eq!(payloads.len(), n, "one payload per node");
-    type Key = (u8, usize);
-    let mut seen: Vec<HashMap<Key, Payload>> = vec![HashMap::new(); n];
-    // pending[v]: (key, neighbor) pairs v still needs acked.
-    let mut pending: Vec<HashSet<(Key, usize)>> = vec![HashSet::new(); n];
+    flood_reliable_multi(
+        net,
+        payloads.into_iter().map(|p| vec![p]).collect(),
+        max_rounds,
+    )
+}
 
-    for (i, payload) in payloads.into_iter().enumerate() {
-        let key = payload.flood_key().expect("floodable payload");
-        assert_eq!(key.1, i, "payload origin mismatch");
-        for &nb in net.graph().neighbors(i).to_vec().iter() {
-            pending[i].insert((key, nb));
+/// [`flood_reliable`] with any number of payloads per node (e.g. portion
+/// pages): ack+retransmit per page until every node holds every page.
+pub fn flood_reliable_multi(
+    net: &mut Network,
+    origins: Vec<Vec<Payload>>,
+    max_rounds: usize,
+) -> Vec<Vec<Payload>> {
+    let n = net.n();
+    assert_eq!(origins.len(), n, "one origin set per node");
+    let expect: usize = origins.iter().map(|o| o.len()).sum();
+    let mut seen: Vec<HashMap<FloodKey, Payload>> = vec![HashMap::new(); n];
+    // pending[v]: (key, neighbor) pairs v still needs acked.
+    let mut pending: Vec<HashSet<(FloodKey, usize)>> = vec![HashSet::new(); n];
+
+    for (i, own) in origins.into_iter().enumerate() {
+        for payload in own {
+            let key = payload.flood_key().expect("floodable payload");
+            assert_eq!(key.1, i, "payload origin mismatch");
+            for &nb in net.graph().neighbors(i).to_vec().iter() {
+                pending[i].insert((key, nb));
+            }
+            seen[i].insert(key, payload);
         }
-        seen[i].insert(key, payload);
     }
 
     for round in 0..max_rounds {
@@ -50,12 +74,12 @@ pub fn flood_reliable(
             break;
         }
         // Deliver: record payloads, queue acks; process acks.
-        let mut acks: Vec<(usize, usize, Key)> = Vec::new(); // (from, to, key)
+        let mut acks: Vec<(usize, usize, FloodKey)> = Vec::new(); // (from, to, key)
         for v in 0..n {
             for (from, payload) in net.recv_all(v) {
                 match payload {
-                    Payload::Ack { kind, site } => {
-                        pending[v].remove(&((kind, site), from));
+                    Payload::Ack { kind, site, page } => {
+                        pending[v].remove(&((kind, site, page), from));
                     }
                     other => {
                         let key = other.flood_key().expect("floodable");
@@ -79,6 +103,7 @@ pub fn flood_reliable(
                 Payload::Ack {
                     kind: key.0,
                     site: key.1,
+                    page: key.2,
                 },
             );
         }
@@ -86,12 +111,13 @@ pub fn flood_reliable(
         // Deliver acks immediately (they may also be lost).
         for v in 0..n {
             for (from, payload) in net.recv_all(v) {
-                if let Payload::Ack { kind, site } = payload {
-                    pending[v].remove(&((kind, site), from));
+                if let Payload::Ack { kind, site, page } = payload {
+                    pending[v].remove(&((kind, site, page), from));
                 }
             }
         }
-        let done = seen.iter().all(|s| s.len() == n) && pending.iter().all(|p| p.is_empty());
+        let done =
+            seen.iter().all(|s| s.len() == expect) && pending.iter().all(|p| p.is_empty());
         if done {
             break;
         }
@@ -104,7 +130,7 @@ pub fn flood_reliable(
     seen.into_iter()
         .enumerate()
         .map(|(v, s)| {
-            assert_eq!(s.len(), n, "node {v} missing payloads");
+            assert_eq!(s.len(), expect, "node {v} missing payloads");
             let mut held: Vec<Payload> = s.into_values().collect();
             held.sort_by_key(|p| p.flood_key().unwrap());
             held
@@ -115,9 +141,12 @@ pub fn flood_reliable(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::network::{paginate, reassemble};
+    use crate::points::WeightedSet;
     use crate::protocol::flood;
     use crate::rng::Pcg64;
     use crate::topology::generators;
+    use std::sync::Arc;
 
     fn unit_payloads(n: usize) -> Vec<Payload> {
         (0..n)
@@ -184,5 +213,35 @@ mod tests {
         let g = generators::path(3);
         let mut net = Network::new(g).with_loss(1.0, 1);
         flood_reliable(&mut net, unit_payloads(3), 50);
+    }
+
+    #[test]
+    fn lost_pages_are_retransmitted_individually_and_reassemble() {
+        let mut rng = Pcg64::seed_from(8);
+        let g = generators::grid(2, 3);
+        let portions: Vec<Arc<WeightedSet>> = (0..6)
+            .map(|_| {
+                let mut s = WeightedSet::empty(2);
+                for _ in 0..12 {
+                    s.push(&[rng.normal() as f32, rng.normal() as f32], 1.0);
+                }
+                Arc::new(s)
+            })
+            .collect();
+        let origins: Vec<Vec<Payload>> = portions
+            .iter()
+            .enumerate()
+            .map(|(i, p)| paginate(i, p.clone(), 4))
+            .collect();
+        let mut net = Network::new(g).with_loss(0.25, 42);
+        let held = flood_reliable_multi(&mut net, origins, 10_000);
+        for h in held {
+            let back = reassemble(&h).unwrap();
+            assert_eq!(back.len(), 6);
+            for (site, set) in back {
+                assert_eq!(set, *portions[site], "site {site} torn after loss");
+            }
+        }
+        assert!(net.dropped() > 0, "loss must have bitten for this test to mean anything");
     }
 }

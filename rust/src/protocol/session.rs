@@ -1,0 +1,500 @@
+//! The unified protocol engine: per-node state machines driven by one
+//! synchronous round loop.
+//!
+//! Every protocol primitive (flooding, converge-cast, broadcast) and the
+//! end-to-end clustering pipeline are expressed as [`NodeMachine`]s: a
+//! machine reacts to delivered messages and to the start of each round,
+//! and queues sends through an [`Outbox`]. [`drive`] owns the loop —
+//! tick every node, advance the simulator one round, deliver — so
+//! *phases overlap naturally*: a site whose inputs arrived early starts
+//! its next phase while slower parts of the network are still busy
+//! (e.g. Round-2 portion pages enter the network while the Round-1 cost
+//! flood is still propagating elsewhere), and a capacity-limited
+//! [`LinkModel`](crate::network::LinkModel) back-pressures everything
+//! without any machine having to know about it.
+//!
+//! All machine logic runs on the driver thread and is a pure function of
+//! the message history, so `rounds`, `cost_points` and `peak_points` are
+//! bit-identical for any worker-thread count of the compute layer.
+
+use crate::network::{FloodKey, Network, Payload};
+use std::collections::HashSet;
+
+/// Sends queued by a machine during one callback: `(to, payload)`.
+#[derive(Default)]
+pub(crate) struct Outbox {
+    pub(crate) sends: Vec<(usize, Payload)>,
+}
+
+impl Outbox {
+    /// Queue one send.
+    pub(crate) fn send(&mut self, to: usize, payload: Payload) {
+        self.sends.push((to, payload));
+    }
+
+    /// Queue a clone per neighbor (payloads are `Arc`-backed: O(1) each).
+    pub(crate) fn broadcast(&mut self, neigh: &[usize], payload: &Payload) {
+        for &to in neigh {
+            self.sends.push((to, payload.clone()));
+        }
+    }
+}
+
+/// One node's protocol logic.
+pub(crate) trait NodeMachine {
+    /// Start-of-round hook. First invocation doubles as initialization
+    /// (machines drain their origin payloads then); later invocations
+    /// flush whatever earlier deliveries made sendable.
+    fn tick(&mut self, out: &mut Outbox);
+
+    /// One message delivered to this node in the round just stepped.
+    fn on_msg(&mut self, from: usize, msg: Payload, out: &mut Outbox);
+}
+
+/// Run machines to quiescence: tick all nodes, advance one synchronous
+/// round, deliver. Terminates when a round moves no messages — by then
+/// no machine has pending sends (ticks already ran) and the simulator is
+/// drained.
+pub(crate) fn drive<M: NodeMachine>(net: &mut Network, nodes: &mut [M]) {
+    let n = nodes.len();
+    assert_eq!(net.n(), n, "one machine per node");
+    loop {
+        for v in 0..n {
+            let mut out = Outbox::default();
+            nodes[v].tick(&mut out);
+            for (to, p) in out.sends {
+                net.send(v, to, p);
+            }
+        }
+        if net.step() == 0 {
+            break;
+        }
+        for v in 0..n {
+            for (from, p) in net.recv_all(v) {
+                let mut out = Outbox::default();
+                nodes[v].on_msg(from, p, &mut out);
+                for (to, q) in out.sends {
+                    net.send(v, to, q);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Primitive machines
+// ---------------------------------------------------------------------
+
+/// Algorithm 3 flooding: originate payloads, forward each distinct key
+/// to every neighbor exactly once.
+pub(crate) struct FloodMachine {
+    neigh: Vec<usize>,
+    origin: Vec<Payload>,
+    seen: HashSet<FloodKey>,
+    /// Every payload this node ended up holding (its own included).
+    pub(crate) held: Vec<Payload>,
+}
+
+impl FloodMachine {
+    pub(crate) fn new(neigh: Vec<usize>, origin: Vec<Payload>) -> Self {
+        FloodMachine {
+            neigh,
+            origin,
+            seen: HashSet::new(),
+            held: Vec::new(),
+        }
+    }
+}
+
+impl NodeMachine for FloodMachine {
+    fn tick(&mut self, out: &mut Outbox) {
+        for p in self.origin.drain(..) {
+            let key = p.flood_key().expect("flooded payloads must have an origin");
+            self.seen.insert(key);
+            out.broadcast(&self.neigh, &p);
+            self.held.push(p);
+        }
+    }
+
+    fn on_msg(&mut self, _from: usize, msg: Payload, out: &mut Outbox) {
+        let key = msg.flood_key().expect("floodable");
+        if self.seen.insert(key) {
+            out.broadcast(&self.neigh, &msg);
+            self.held.push(msg);
+        }
+    }
+}
+
+/// Theorem 3 converge-cast: relay every payload one hop toward the root
+/// per round.
+pub(crate) struct ConvergeMachine {
+    /// `None` at the root.
+    parent: Option<usize>,
+    relay: Vec<Payload>,
+    /// Root only: everything that arrived (its own payloads included).
+    pub(crate) collected: Vec<Payload>,
+}
+
+impl ConvergeMachine {
+    pub(crate) fn new(parent: Option<usize>, own: Vec<Payload>) -> Self {
+        let (relay, collected) = if parent.is_some() {
+            (own, Vec::new())
+        } else {
+            (Vec::new(), own)
+        };
+        ConvergeMachine {
+            parent,
+            relay,
+            collected,
+        }
+    }
+}
+
+impl NodeMachine for ConvergeMachine {
+    fn tick(&mut self, out: &mut Outbox) {
+        if let Some(parent) = self.parent {
+            for p in self.relay.drain(..) {
+                out.send(parent, p);
+            }
+        }
+    }
+
+    fn on_msg(&mut self, _from: usize, msg: Payload, _out: &mut Outbox) {
+        if self.parent.is_none() {
+            self.collected.push(msg);
+        } else {
+            self.relay.push(msg);
+        }
+    }
+}
+
+/// Root-to-leaves broadcast: each tree edge carries the payload once.
+pub(crate) struct BroadcastMachine {
+    children: Vec<usize>,
+    /// Root's payload, emitted on the first tick.
+    origin: Option<Payload>,
+    /// Set once the payload reached this node (true at the root).
+    pub(crate) received: bool,
+}
+
+impl BroadcastMachine {
+    pub(crate) fn new(children: Vec<usize>, origin: Option<Payload>) -> Self {
+        let received = origin.is_some();
+        BroadcastMachine {
+            children,
+            origin,
+            received,
+        }
+    }
+}
+
+impl NodeMachine for BroadcastMachine {
+    fn tick(&mut self, out: &mut Outbox) {
+        if let Some(p) = self.origin.take() {
+            for &c in &self.children {
+                out.send(c, p.clone());
+            }
+        }
+    }
+
+    fn on_msg(&mut self, _from: usize, msg: Payload, out: &mut Outbox) {
+        self.received = true;
+        for &c in &self.children {
+            out.send(c, msg.clone());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end pipeline machine (Algorithm 2 over either topology)
+// ---------------------------------------------------------------------
+
+/// How a pipeline node is wired into the topology.
+pub(crate) enum PipeRole {
+    /// General graph: flood everything to everyone.
+    Graph {
+        /// Neighbor list.
+        neigh: Vec<usize>,
+    },
+    /// Rooted spanning tree: converge up, broadcast down.
+    Tree {
+        /// `None` at the root.
+        parent: Option<usize>,
+        /// Children, ascending node id.
+        children: Vec<usize>,
+    },
+}
+
+/// Per-node state machine of the unified clustering pipeline.
+///
+/// Phases per node — each entered as soon as *this node's* inputs are
+/// complete, regardless of global progress:
+///
+/// 1. cost exchange (optional; the paper's Round 1 scalar): graph nodes
+///    flood their `LocalCost`, tree nodes relay costs to the root, which
+///    answers with the `Scalar` total;
+/// 2. portion streaming: once *ready* (all costs seen on a graph / total
+///    received on a tree / immediately when the plan needs no cost
+///    exchange), the node emits its portion pages — overlapping with
+///    cost traffic still propagating elsewhere;
+/// 3. solution broadcast (tree only): when the root holds every page it
+///    broadcasts the precomputed `Centers` down.
+pub(crate) struct PipeMachine {
+    role: PipeRole,
+    /// Own `LocalCost`, emitted on the first tick (None: no cost phase).
+    cost: Option<Payload>,
+    /// Distinct cost keys seen (graph: dedup+count; tree root: count).
+    costs_seen: HashSet<FloodKey>,
+    /// Cost keys required before this node/root proceeds (0 = no cost
+    /// phase).
+    costs_expected: usize,
+    /// Tree: payloads waiting to move one hop toward the root.
+    relay_up: Vec<Payload>,
+    /// Tree root: `Scalar` budget total, broadcast when costs complete.
+    total: Option<Payload>,
+    /// This node may emit its own pages.
+    ready: bool,
+    launched: bool,
+    /// Own portion pages.
+    pages: Vec<Payload>,
+    /// Graph: distinct page keys seen (flooding dedup).
+    pages_seen: HashSet<FloodKey>,
+    /// Collected pages (every node on a graph; the root on a tree).
+    pub(crate) held: Vec<Payload>,
+    /// Pages that complete the collection (`usize::MAX`: not a
+    /// collector).
+    pages_expected: usize,
+    /// Tree root: precomputed final solution, broadcast when all pages
+    /// arrived.
+    centers: Option<Payload>,
+}
+
+impl PipeMachine {
+    /// Graph-mode node. `cost` is `None` for plans without a cost
+    /// exchange (then the node is ready immediately).
+    pub(crate) fn graph(
+        neigh: Vec<usize>,
+        cost: Option<Payload>,
+        pages: Vec<Payload>,
+        n_nodes: usize,
+        pages_expected: usize,
+    ) -> Self {
+        let has_cost = cost.is_some();
+        PipeMachine {
+            role: PipeRole::Graph { neigh },
+            cost,
+            costs_seen: HashSet::new(),
+            costs_expected: if has_cost { n_nodes } else { 0 },
+            relay_up: Vec::new(),
+            total: None,
+            ready: !has_cost,
+            launched: false,
+            pages,
+            pages_seen: HashSet::new(),
+            held: Vec::new(),
+            pages_expected,
+            centers: None,
+        }
+    }
+
+    /// Tree-mode node. Only the root takes `total`/`centers` and a
+    /// nonzero `costs_expected`/finite `pages_expected`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn tree(
+        parent: Option<usize>,
+        children: Vec<usize>,
+        cost: Option<Payload>,
+        total: Option<Payload>,
+        pages: Vec<Payload>,
+        pages_expected: usize,
+        n_nodes: usize,
+        centers: Option<Payload>,
+    ) -> Self {
+        let has_cost = cost.is_some();
+        let is_root = parent.is_none();
+        PipeMachine {
+            role: PipeRole::Tree { parent, children },
+            cost,
+            costs_seen: HashSet::new(),
+            costs_expected: if has_cost && is_root { n_nodes } else { 0 },
+            relay_up: Vec::new(),
+            total,
+            // Roots without a cost phase are ready at once; non-roots
+            // without a cost phase likewise. With a cost phase everyone
+            // waits (the root for the full count, others for the total).
+            ready: !has_cost,
+            launched: false,
+            pages,
+            pages_seen: HashSet::new(),
+            held: Vec::new(),
+            pages_expected,
+            centers,
+        }
+    }
+
+    fn launch(&mut self, out: &mut Outbox) {
+        self.launched = true;
+        match &self.role {
+            PipeRole::Graph { neigh } => {
+                for p in std::mem::take(&mut self.pages) {
+                    self.pages_seen
+                        .insert(p.flood_key().expect("page key"));
+                    out.broadcast(neigh, &p);
+                    self.held.push(p);
+                }
+            }
+            PipeRole::Tree { parent, .. } => {
+                if parent.is_none() {
+                    // The root keeps its own pages; nothing to send.
+                    self.held.append(&mut self.pages);
+                } else {
+                    self.relay_up.append(&mut self.pages);
+                }
+            }
+        }
+    }
+}
+
+impl NodeMachine for PipeMachine {
+    fn tick(&mut self, out: &mut Outbox) {
+        // First tick: emit the own cost scalar.
+        if let Some(c) = self.cost.take() {
+            match &self.role {
+                PipeRole::Graph { neigh } => {
+                    self.costs_seen.insert(c.flood_key().expect("cost key"));
+                    out.broadcast(neigh, &c);
+                }
+                PipeRole::Tree { parent, .. } => {
+                    if parent.is_none() {
+                        self.costs_seen.insert(c.flood_key().expect("cost key"));
+                    } else {
+                        self.relay_up.push(c);
+                    }
+                }
+            }
+        }
+        // Cost phase completion.
+        if !self.ready && self.costs_expected > 0 && self.costs_seen.len() == self.costs_expected
+        {
+            self.ready = true;
+            // Tree root: answer with the budget total.
+            if let (PipeRole::Tree { children, .. }, Some(t)) = (&self.role, self.total.take())
+            {
+                for &c in children {
+                    out.send(c, t.clone());
+                }
+            }
+        }
+        // Page streaming starts as soon as this node is ready.
+        if self.ready && !self.launched {
+            self.launch(out);
+        }
+        // Tree root: final solution once every page arrived.
+        if self.launched && self.held.len() == self.pages_expected {
+            if let (PipeRole::Tree { children, .. }, Some(c)) = (&self.role, self.centers.take())
+            {
+                for &child in children {
+                    out.send(child, c.clone());
+                }
+            }
+        }
+        // Tree: move relayed payloads one hop up.
+        if let PipeRole::Tree {
+            parent: Some(parent),
+            ..
+        } = self.role
+        {
+            for p in self.relay_up.drain(..) {
+                out.send(parent, p);
+            }
+        }
+    }
+
+    fn on_msg(&mut self, _from: usize, msg: Payload, out: &mut Outbox) {
+        match (&self.role, msg) {
+            (PipeRole::Graph { neigh }, msg @ Payload::LocalCost { .. }) => {
+                let key = msg.flood_key().expect("cost key");
+                if self.costs_seen.insert(key) {
+                    out.broadcast(neigh, &msg);
+                }
+            }
+            (PipeRole::Graph { neigh }, msg @ Payload::PortionPage { .. }) => {
+                let key = msg.flood_key().expect("page key");
+                if self.pages_seen.insert(key) {
+                    out.broadcast(neigh, &msg);
+                    self.held.push(msg);
+                }
+            }
+            (PipeRole::Tree { parent, .. }, msg @ Payload::LocalCost { .. }) => {
+                if parent.is_none() {
+                    self.costs_seen
+                        .insert(msg.flood_key().expect("cost key"));
+                } else {
+                    self.relay_up.push(msg);
+                }
+            }
+            (PipeRole::Tree { parent, .. }, msg @ Payload::PortionPage { .. }) => {
+                if parent.is_none() {
+                    self.held.push(msg);
+                } else {
+                    self.relay_up.push(msg);
+                }
+            }
+            (PipeRole::Tree { children, .. }, msg @ Payload::Scalar(_)) => {
+                self.ready = true;
+                for &c in children {
+                    out.send(c, msg.clone());
+                }
+            }
+            (PipeRole::Tree { children, .. }, msg @ Payload::Centers(_)) => {
+                for &c in children {
+                    out.send(c, msg.clone());
+                }
+            }
+            (_, other) => unreachable!("pipeline: unexpected payload {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators;
+
+    #[test]
+    fn drive_terminates_on_silent_machines() {
+        struct Quiet;
+        impl NodeMachine for Quiet {
+            fn tick(&mut self, _out: &mut Outbox) {}
+            fn on_msg(&mut self, _from: usize, _msg: Payload, _out: &mut Outbox) {}
+        }
+        let mut net = Network::new(generators::path(3));
+        let mut nodes = vec![Quiet, Quiet, Quiet];
+        drive(&mut net, &mut nodes);
+        assert_eq!(net.cost_points(), 0);
+        assert_eq!(net.round(), 1, "one empty round detects quiescence");
+    }
+
+    #[test]
+    fn flood_machines_deliver_and_meter_like_algorithm_3() {
+        let g = generators::grid(3, 3);
+        let (n, m) = (g.n(), g.m());
+        let mut net = Network::new(g.clone());
+        let mut nodes: Vec<FloodMachine> = (0..n)
+            .map(|i| {
+                FloodMachine::new(
+                    g.neighbors(i).to_vec(),
+                    vec![Payload::LocalCost {
+                        site: i,
+                        cost: i as f64,
+                    }],
+                )
+            })
+            .collect();
+        drive(&mut net, &mut nodes);
+        for node in &nodes {
+            assert_eq!(node.held.len(), n);
+        }
+        assert_eq!(net.cost_points(), 2 * m * n);
+    }
+}

@@ -1,8 +1,12 @@
 //! Rooted-tree communication primitives (Theorem 3): converge-cast
-//! (leaves → root, accumulating payload sets hop by hop) and broadcast
+//! (leaves → root, payloads moving one hop per round) and broadcast
 //! (root → leaves). Every hop moves through the [`Network`] simulator so
 //! the `O(h · Σ|D_i|)` communication accounting is measured, not assumed.
+//!
+//! Implemented as [`ConvergeMachine`]/[`BroadcastMachine`] state
+//! machines under the unified [`session`](super::session) round loop.
 
+use super::session::{drive, BroadcastMachine, ConvergeMachine};
 use crate::network::{Network, Payload};
 use crate::topology::SpanningTree;
 
@@ -12,74 +16,65 @@ use crate::topology::SpanningTree;
 ///
 /// Returns the payloads collected at the root, ordered by origin where
 /// the payload carries one.
-pub fn converge_cast(net: &mut Network, tree: &SpanningTree, payloads: Vec<Payload>) -> Vec<Payload> {
+pub fn converge_cast(
+    net: &mut Network,
+    tree: &SpanningTree,
+    payloads: Vec<Payload>,
+) -> Vec<Payload> {
     let n = net.n();
     assert_eq!(payloads.len(), n);
     assert_eq!(tree.n(), n);
-    // relay[v]: payloads waiting at v to move one hop up.
-    let mut relay: Vec<Vec<Payload>> = payloads.into_iter().map(|p| vec![p]).collect();
-    let mut at_root: Vec<Payload> = Vec::new();
-    at_root.append(&mut relay[tree.root]);
+    converge_cast_multi(net, tree, payloads.into_iter().map(|p| vec![p]).collect())
+}
 
-    loop {
-        let mut sent_any = false;
-        for v in 0..n {
-            if v == tree.root || relay[v].is_empty() {
-                continue;
-            }
-            let parent = tree.parent[v];
-            for p in relay[v].drain(..) {
-                net.send(v, parent, p);
-                sent_any = true;
-            }
-        }
-        if !sent_any {
-            break;
-        }
-        net.step();
-        for v in 0..n {
-            for (_, p) in net.recv_all(v) {
-                if v == tree.root {
-                    at_root.push(p);
-                } else {
-                    relay[v].push(p);
-                }
-            }
-        }
-    }
+/// [`converge_cast`] with any number of payloads per node (e.g. portion
+/// pages). Total cost `Σ_i depth_i · |origins[i]|` in points.
+pub fn converge_cast_multi(
+    net: &mut Network,
+    tree: &SpanningTree,
+    origins: Vec<Vec<Payload>>,
+) -> Vec<Payload> {
+    let n = net.n();
+    assert_eq!(origins.len(), n);
+    assert_eq!(tree.n(), n);
+    let mut nodes: Vec<ConvergeMachine> = origins
+        .into_iter()
+        .enumerate()
+        .map(|(v, own)| {
+            let parent = (v != tree.root).then_some(tree.parent[v]);
+            ConvergeMachine::new(parent, own)
+        })
+        .collect();
+    drive(net, &mut nodes);
+    let mut at_root = std::mem::take(&mut nodes[tree.root].collected);
     at_root.sort_by_key(|p| p.flood_key().map(|k| k.1).unwrap_or(usize::MAX));
     at_root
 }
 
-/// Broadcast one payload from the root to every node (each edge carries
-/// it exactly once: cost `(n-1) · |payload|`). Returns nothing; every
-/// node is assumed to record it on receipt (the drivers do).
+/// Broadcast one payload from the root to every node (each tree edge
+/// carries it exactly once: cost `(n-1) · |payload|`). Returns nothing;
+/// every node is assumed to record it on receipt (the drivers do).
 pub fn broadcast_down(net: &mut Network, tree: &SpanningTree, payload: &Payload) {
-    // BFS order: parents before children, so one pass per depth level.
-    let mut order: Vec<usize> = (0..tree.n()).collect();
-    order.sort_by_key(|&v| tree.depth[v]);
-    let mut pending = vec![false; tree.n()];
-    pending[tree.root] = true;
-    for &v in &order {
-        if !pending[v] {
-            continue;
-        }
-        for &c in &tree.children[v] {
-            net.send(v, c, payload.clone());
-            pending[c] = true;
-        }
-        net.step();
-        // Drain inboxes (delivery only; content is `payload` everywhere).
-        for u in 0..tree.n() {
-            net.recv_all(u);
-        }
-    }
+    let n = tree.n();
+    assert_eq!(net.n(), n);
+    let mut nodes: Vec<BroadcastMachine> = (0..n)
+        .map(|v| {
+            let origin = (v == tree.root).then(|| payload.clone());
+            BroadcastMachine::new(tree.children[v].clone(), origin)
+        })
+        .collect();
+    drive(net, &mut nodes);
+    debug_assert!(nodes.iter().all(|m| m.received), "broadcast incomplete");
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::network::{paginate, reassemble, LinkModel};
+    use crate::points::WeightedSet;
+    use crate::rng::Pcg64;
     use crate::topology::generators;
+    use std::sync::Arc;
 
     fn tree_over(g: crate::topology::Graph, root: usize) -> SpanningTree {
         SpanningTree::bfs(&g, root)
@@ -140,5 +135,38 @@ mod tests {
         let t = net.transcript();
         assert!(t.iter().any(|e| e.from == 4 && e.to == 5));
         assert_eq!(t.len(), 5);
+    }
+
+    #[test]
+    fn paged_converge_cast_reassembles_at_root() {
+        let mut rng = Pcg64::seed_from(3);
+        let g = generators::grid(3, 3);
+        let tree = tree_over(g.clone(), 4);
+        let portions: Vec<Arc<WeightedSet>> = (0..9)
+            .map(|_| {
+                let mut s = WeightedSet::empty(2);
+                for _ in 0..(5 + rng.below(20)) {
+                    s.push(&[rng.normal() as f32, rng.normal() as f32], 1.0);
+                }
+                Arc::new(s)
+            })
+            .collect();
+        let origins: Vec<Vec<Payload>> = portions
+            .iter()
+            .enumerate()
+            .map(|(i, p)| paginate(i, p.clone(), 4))
+            .collect();
+        let mut net = Network::new(tree.as_graph())
+            .without_transcript()
+            .with_link_model(LinkModel::capped(4));
+        let at_root = converge_cast_multi(&mut net, &tree, origins);
+        let back = reassemble(&at_root).unwrap();
+        assert_eq!(back.len(), 9);
+        for (site, set) in back {
+            assert_eq!(set, *portions[site]);
+        }
+        // Cost: each page crosses depth(origin) edges.
+        let expect: usize = (0..9).map(|v| tree.depth[v] * portions[v].n()).sum();
+        assert_eq!(net.cost_points(), expect);
     }
 }

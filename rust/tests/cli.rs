@@ -90,6 +90,43 @@ fn run_writes_json_series() {
 }
 
 #[test]
+fn paged_channel_flags_accepted() {
+    let out = distclus()
+        .args([
+            "run",
+            "--dataset",
+            "synthetic",
+            "--scale",
+            "0.01",
+            "--topology",
+            "star",
+            "--sites",
+            "4",
+            "--algorithm",
+            "distributed",
+            "--t",
+            "100",
+            "--reps",
+            "1",
+            "--seed",
+            "3",
+            "--page-points",
+            "16",
+            "--link-capacity",
+            "16",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("peak(points)"), "report: {text}");
+}
+
+#[test]
 fn rejects_unknown_flags_and_values() {
     let out = distclus()
         .args(["run", "--bogus-flag", "1"])

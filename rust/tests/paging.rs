@@ -1,0 +1,291 @@
+//! Paged streaming message plane — property tests and the
+//! bounded-memory acceptance criteria.
+//!
+//! Properties pinned here:
+//! 1. paged flood reassembly is order-invariant (pages interleave across
+//!    sites and rounds, portions reconstruct bit-exactly);
+//! 2. reassembly is loss-retry-invariant (reliable flooding under loss
+//!    retransmits individual pages; portions still reconstruct);
+//! 3. paging never changes the points-transmitted total;
+//! 4. with a link capacity, `peak_points` of the paged exchange is
+//!    strictly below the monolithic peak at `t ≥ 4 · page_points`, and
+//!    ≤ 25% of it at the acceptance operating point
+//!    (`page_points = 64`, `t = 2048`);
+//! 5. final centers are bit-identical to the unpaged run at any thread
+//!    count.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::coreset::DistributedConfig;
+use distclus::exec::ExecPolicy;
+use distclus::network::{paginate, reassemble, ChannelConfig, LinkModel, Network, Payload};
+use distclus::partition::Scheme;
+use distclus::points::WeightedSet;
+use distclus::prop_assert;
+use distclus::protocol::{
+    flood_multi, flood_reliable_multi, run_pipeline, CoresetPlan, RunResult, Topology,
+};
+use distclus::rng::Pcg64;
+use distclus::testutil::{arb_connected_graph, for_all};
+use std::sync::Arc;
+
+fn arb_portion(rng: &mut Pcg64, max_n: usize, d: usize) -> Arc<WeightedSet> {
+    let n = 1 + rng.below(max_n);
+    let mut out = WeightedSet::empty(d);
+    for _ in 0..n {
+        let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        out.push(&p, rng.uniform() + 0.1);
+    }
+    Arc::new(out)
+}
+
+#[test]
+fn prop_paged_flood_reassembly_is_order_invariant() {
+    for_all(
+        25,
+        71,
+        |rng| {
+            let g = arb_connected_graph(rng, 12);
+            let portions: Vec<Arc<WeightedSet>> =
+                (0..g.n()).map(|_| arb_portion(rng, 40, 3)).collect();
+            let page_points = 1 + rng.below(16);
+            let capacity = if rng.below(2) == 0 { 0 } else { 1 + rng.below(24) };
+            (g, portions, page_points, capacity)
+        },
+        |(g, portions, page_points, capacity)| {
+            let origins: Vec<Vec<Payload>> = portions
+                .iter()
+                .enumerate()
+                .map(|(i, p)| paginate(i, p.clone(), *page_points))
+                .collect();
+            let mut net = Network::new(g.clone())
+                .without_transcript()
+                .with_link_model(LinkModel::capped(*capacity));
+            let held = flood_multi(&mut net, origins);
+            let total: usize = portions.iter().map(|p| p.n()).sum();
+            prop_assert!(
+                net.cost_points() == 2 * g.m() * total,
+                "paged flood cost {} != 2m·Σ|D| = {}",
+                net.cost_points(),
+                2 * g.m() * total
+            );
+            // Every node — wherever it sits, however pages interleaved —
+            // reconstructs every portion bit-exactly.
+            for (v, h) in held.iter().enumerate() {
+                let back = reassemble(h).map_err(|e| format!("node {v}: {e}"))?;
+                prop_assert!(back.len() == g.n(), "node {v} missing portions");
+                for (site, set) in back {
+                    prop_assert!(
+                        set == *portions[site],
+                        "node {v}: portion {site} corrupted"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_paged_reassembly_is_loss_retry_invariant() {
+    for_all(
+        12,
+        72,
+        |rng| {
+            let g = arb_connected_graph(rng, 9);
+            let portions: Vec<Arc<WeightedSet>> =
+                (0..g.n()).map(|_| arb_portion(rng, 24, 2)).collect();
+            let page_points = 1 + rng.below(8);
+            let loss = 0.1 + 0.2 * rng.uniform();
+            let seed = rng.next_u64();
+            (g, portions, page_points, loss, seed)
+        },
+        |(g, portions, page_points, loss, seed)| {
+            let origins: Vec<Vec<Payload>> = portions
+                .iter()
+                .enumerate()
+                .map(|(i, p)| paginate(i, p.clone(), *page_points))
+                .collect();
+            let mut net = Network::new(g.clone())
+                .without_transcript()
+                .with_loss(*loss, *seed);
+            let held = flood_reliable_multi(&mut net, origins, 100_000);
+            for (v, h) in held.iter().enumerate() {
+                let back = reassemble(h).map_err(|e| format!("node {v}: {e}"))?;
+                for (site, set) in back {
+                    prop_assert!(
+                        set == *portions[site],
+                        "node {v}: portion {site} torn after retransmission"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn pipeline_sites(seed: u64, sites: usize, points: usize) -> Vec<WeightedSet> {
+    let mut rng = Pcg64::seed_from(seed);
+    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, points, 4, 4);
+    Scheme::Uniform
+        .partition(&data, sites, &mut rng)
+        .unwrap()
+        .into_iter()
+        .map(WeightedSet::unit)
+        .collect()
+}
+
+fn graph_run(
+    g: &distclus::topology::Graph,
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    channel: ChannelConfig,
+    exec: ExecPolicy,
+) -> RunResult {
+    let mut rng = Pcg64::seed_from(1234);
+    run_pipeline(
+        Topology::Graph(g),
+        locals,
+        CoresetPlan::Distributed(cfg),
+        &channel,
+        &RustBackend,
+        &mut rng,
+        exec,
+    )
+    .unwrap()
+}
+
+#[test]
+fn paged_peak_strictly_below_monolithic_at_4x_page_boundary() {
+    // The satellite bound at its weakest point: t exactly 4·page_points.
+    // On a star the monolithic exchange funnels every portion through
+    // the hub's inbox (and back out), so the memory gap is structural.
+    let page = 32;
+    let locals = pipeline_sites(5, 5, 2_000);
+    let g = distclus::topology::generators::star(5);
+    let cfg = DistributedConfig {
+        t: 4 * page,
+        k: 4,
+        ..Default::default()
+    };
+    let mono = graph_run(&g, &locals, &cfg, ChannelConfig::default(), ExecPolicy::Sequential);
+    let paged = graph_run(
+        &g,
+        &locals,
+        &cfg,
+        ChannelConfig {
+            page_points: page,
+            link_capacity: page,
+        },
+        ExecPolicy::Sequential,
+    );
+    assert_eq!(mono.comm_points, paged.comm_points);
+    assert_eq!(mono.centers, paged.centers);
+    assert!(
+        paged.peak_points < mono.peak_points,
+        "paged {} !< mono {}",
+        paged.peak_points,
+        mono.peak_points
+    );
+}
+
+#[test]
+fn acceptance_paged_peak_quarter_of_monolithic_at_t2048() {
+    // The PR acceptance criterion: page_points = 64, t = 2048 — the
+    // paged exchange must hold peak receiver memory at ≤ 25% of the
+    // monolithic exchange on the same seed/topology, at identical total
+    // communication (the exact 2m(t + nk) formula; page metadata rides
+    // free so there is no header term) and bit-identical centers at any
+    // thread count.
+    let locals = pipeline_sites(8, 5, 4_000);
+    let g = distclus::topology::generators::complete(5);
+    let cfg = DistributedConfig {
+        t: 2048,
+        k: 4,
+        ..Default::default()
+    };
+    let channel = ChannelConfig {
+        page_points: 64,
+        link_capacity: 64,
+    };
+    let mono = graph_run(&g, &locals, &cfg, ChannelConfig::default(), ExecPolicy::Sequential);
+    let paged = graph_run(&g, &locals, &cfg, channel, ExecPolicy::Sequential);
+
+    // Exact Theorem-2 communication, invariant under paging.
+    let expected = 2 * g.m() * g.n() + 2 * g.m() * (cfg.t + g.n() * cfg.k);
+    assert_eq!(mono.comm_points, expected);
+    assert_eq!(paged.comm_points, expected);
+
+    // Bounded memory: ≤ 25% of the monolithic peak.
+    assert!(
+        4 * paged.peak_points <= mono.peak_points,
+        "paged peak {} > 25% of monolithic peak {}",
+        paged.peak_points,
+        mono.peak_points
+    );
+
+    // Bit-identical results at any thread count, paged or not. (The
+    // sequential policy has its own RNG stream structure, so cross-policy
+    // equality is not expected — invariance holds across parallel
+    // worker counts.)
+    assert_eq!(mono.coreset.set, paged.coreset.set);
+    assert_eq!(mono.centers, paged.centers);
+    let p2 = graph_run(&g, &locals, &cfg, channel, ExecPolicy::Parallel { threads: 2 });
+    let m2 = graph_run(
+        &g,
+        &locals,
+        &cfg,
+        ChannelConfig::default(),
+        ExecPolicy::Parallel { threads: 2 },
+    );
+    let p8 = graph_run(&g, &locals, &cfg, channel, ExecPolicy::Parallel { threads: 8 });
+    assert_eq!(p2.centers, m2.centers, "paged == monolithic at 2 threads");
+    assert_eq!(p2.coreset.set, m2.coreset.set);
+    assert_eq!(p2.comm_points, expected);
+    assert_eq!(p2.centers, p8.centers, "thread-count invariance");
+    assert_eq!(p2.coreset.set, p8.coreset.set);
+    assert_eq!(p2.rounds, p8.rounds, "rounds thread-invariant");
+    assert_eq!(p2.peak_points, p8.peak_points, "peak thread-invariant");
+    assert!(
+        4 * p2.peak_points <= m2.peak_points,
+        "≤25% bound must hold under the parallel engine too"
+    );
+}
+
+#[test]
+fn paged_tree_pipeline_bounds_peak_too() {
+    let locals = pipeline_sites(9, 6, 3_000);
+    let g = distclus::topology::generators::path(6);
+    let tree = distclus::topology::SpanningTree::bfs(&g, 0);
+    let cfg = DistributedConfig {
+        t: 1024,
+        k: 4,
+        ..Default::default()
+    };
+    let run_at = |channel: ChannelConfig| {
+        let mut rng = Pcg64::seed_from(77);
+        run_pipeline(
+            Topology::Tree(&tree),
+            &locals,
+            CoresetPlan::Distributed(&cfg),
+            &channel,
+            &RustBackend,
+            &mut rng,
+            ExecPolicy::Sequential,
+        )
+        .unwrap()
+    };
+    let mono = run_at(ChannelConfig::default());
+    let paged = run_at(ChannelConfig {
+        page_points: 32,
+        link_capacity: 32,
+    });
+    assert_eq!(mono.comm_points, paged.comm_points);
+    assert_eq!(mono.centers, paged.centers);
+    assert!(
+        paged.peak_points < mono.peak_points,
+        "tree paged {} !< mono {}",
+        paged.peak_points,
+        mono.peak_points
+    );
+    assert!(paged.rounds > mono.rounds);
+}

@@ -10,9 +10,10 @@ use distclus::clustering::backend::{ParallelBackend, RustBackend};
 use distclus::coreset::distributed::{self, DistributedConfig};
 use distclus::coreset::Coreset;
 use distclus::exec::ExecPolicy;
+use distclus::network::ChannelConfig;
 use distclus::partition::{PartitionError, Scheme};
 use distclus::points::WeightedSet;
-use distclus::protocol::cluster_on_graph_exec;
+use distclus::protocol::{cluster_on_graph_exec, run_pipeline, CoresetPlan, Topology};
 use distclus::rng::Pcg64;
 use distclus::topology::generators;
 
@@ -95,6 +96,55 @@ fn full_protocol_identical_across_thread_counts_and_backends() {
     assert_eq!(a.comm_points, c.comm_points);
     assert_eq!(a.coreset.set, b.coreset.set);
     assert_eq!(a.coreset.set, c.coreset.set);
+    // The new meters are simulation-side quantities: they must be as
+    // thread-count invariant as everything else.
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.rounds, c.rounds);
+    assert_eq!(a.peak_points, b.peak_points);
+    assert_eq!(a.peak_points, c.peak_points);
+}
+
+#[test]
+fn paged_pipeline_meters_are_thread_count_invariant() {
+    // With paging + a finite link capacity the simulated timeline is
+    // richer (readiness-gated launches, capacity queuing) — rounds and
+    // peak_points must still be a pure function of the seed.
+    let locals = sites(5, 4_000, 8);
+    let g = generators::path(locals.len());
+    let cfg = DistributedConfig {
+        t: 512,
+        k: 4,
+        ..Default::default()
+    };
+    let channel = ChannelConfig {
+        page_points: 32,
+        link_capacity: 32,
+    };
+    let run = |site_threads: usize| {
+        let mut rng = Pcg64::seed_from(21);
+        run_pipeline(
+            Topology::Graph(&g),
+            &locals,
+            CoresetPlan::Distributed(&cfg),
+            &channel,
+            &RustBackend,
+            &mut rng,
+            ExecPolicy::Parallel {
+                threads: site_threads,
+            },
+        )
+        .unwrap()
+    };
+    let a = run(1);
+    let b = run(3);
+    let c = run(8);
+    assert_eq!(a.centers, b.centers);
+    assert_eq!(a.centers, c.centers);
+    assert_eq!(a.comm_points, b.comm_points);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.rounds, c.rounds);
+    assert_eq!(a.peak_points, b.peak_points);
+    assert_eq!(a.peak_points, c.peak_points);
 }
 
 #[test]

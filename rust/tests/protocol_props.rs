@@ -32,8 +32,10 @@ fn prop_flooding_delivers_everything_at_exact_cost() {
                             cost: 1.0,
                         }
                     } else {
-                        Payload::Portion {
+                        Payload::PortionPage {
                             site: i,
+                            page: 0,
+                            pages: 1,
                             set: std::sync::Arc::new(WeightedSet::unit(
                                 Dataset::from_flat(vec![0.0; s * 2], 2),
                             )),
