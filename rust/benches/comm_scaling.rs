@@ -14,6 +14,7 @@ use distclus::network::{paginate, LinkModel, Network, Payload};
 use distclus::points::WeightedSet;
 use distclus::protocol::{broadcast_down, converge_cast, flood, flood_multi};
 use distclus::rng::Pcg64;
+use distclus::testutil::unit_portion;
 use distclus::topology::{diameter, generators, SpanningTree};
 use std::sync::Arc;
 
@@ -27,16 +28,7 @@ fn unit_payloads(n: usize) -> Vec<Payload> {
 }
 
 fn portions(rng: &mut Pcg64, n: usize, points_each: usize) -> Vec<Arc<WeightedSet>> {
-    (0..n)
-        .map(|_| {
-            let mut s = WeightedSet::empty(4);
-            for _ in 0..points_each {
-                let p: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
-                s.push(&p, 1.0);
-            }
-            Arc::new(s)
-        })
-        .collect()
+    (0..n).map(|_| unit_portion(rng, points_each, 4)).collect()
 }
 
 fn main() -> anyhow::Result<()> {

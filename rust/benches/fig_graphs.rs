@@ -12,6 +12,10 @@ use distclus::metrics::{Summary, Table};
 use distclus::partition::Scheme;
 
 fn main() -> anyhow::Result<()> {
+    let args = distclus::cli::Args::from_env()?;
+    // `cargo bench` appends `--bench` to every harness=false binary.
+    let _ = args.has("bench");
+    args.reject_unknown()?;
     let backend = RustBackend;
     let ds = distclus::data::by_name("synthetic").unwrap();
     let mut table = Table::new(&[

@@ -16,6 +16,10 @@ use distclus::rng::Pcg64;
 use distclus::topology::{generators, SpanningTree};
 
 fn main() -> anyhow::Result<()> {
+    let args = distclus::cli::Args::from_env()?;
+    // `cargo bench` appends `--bench` to every harness=false binary.
+    let _ = args.has("bench");
+    args.reject_unknown()?;
     let backend = RustBackend;
     let mut rng = Pcg64::seed_from(29);
     let data = distclus::data::synthetic::gaussian_mixture(&mut rng, 25_000, 8, 5);

@@ -66,15 +66,21 @@ fn main() -> anyhow::Result<()> {
     // `cargo bench` appends `--bench` to every harness=false binary.
     let _ = args.has("bench");
     args.reject_unknown()?;
-    // Shapes mirroring the paper's datasets (padded-artifact shapes).
+    // Shapes mirroring the paper's datasets (padded-artifact shapes),
+    // plus large-k rows where the center set blows past L1 and the
+    // center-blocked scan earns its keep.
     let shapes: Vec<(usize, usize, usize)> = if smoke {
-        vec![(2_000, 16, 10)]
+        // (2000, 32, 192): center_block(32, 192) = 128 < 192, so the
+        // smoke row genuinely exercises the multi-block center scan.
+        vec![(2_000, 16, 10), (2_000, 32, 192)]
     } else {
         vec![
             (10_000, 16, 10),   // pendigits
             (20_000, 16, 10),   // letter
             (68_040 / 4, 32, 10), // colorhist/4
             (20_000, 90, 50),   // msd slice
+            (20_000, 32, 256),  // large-k: centers ~32 KB, blocked scan
+            (10_000, 16, 512),  // larger-k: centers ~32 KB at low d
         ]
     };
     let mut table = Table::new(&[

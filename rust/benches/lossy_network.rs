@@ -11,11 +11,19 @@
 //! CI bitrot check).
 
 use distclus::cli::Args;
+use distclus::clustering::backend::RustBackend;
+use distclus::coreset::DistributedConfig;
+use distclus::exec::ExecPolicy;
 use distclus::metrics::Table;
-use distclus::network::{paginate, reassemble, Network, Payload};
+use distclus::network::{paginate, reassemble, ChannelConfig, Network, Payload};
+use distclus::partition::Scheme;
 use distclus::points::WeightedSet;
-use distclus::protocol::{flood, flood_reliable, flood_reliable_multi};
+use distclus::protocol::{
+    flood, flood_reliable, flood_reliable_multi, run_pipeline, CoresetPlan, Topology,
+};
 use distclus::rng::Pcg64;
+use distclus::sketch::{SketchMode, SketchPlan};
+use distclus::testutil::mixture_sites;
 use distclus::topology::generators;
 use std::sync::Arc;
 
@@ -33,6 +41,14 @@ fn main() -> anyhow::Result<()> {
     let smoke = args.has("smoke");
     // `cargo bench` appends `--bench` to every harness=false binary.
     let _ = args.has("bench");
+    // Collector-folding plan for the bounded-memory section (the CI
+    // smoke job runs this bench with `--sketch merge-reduce`).
+    let sketch_name = args.get_or("sketch", "merge-reduce");
+    let sketch_plan = SketchPlan {
+        mode: SketchMode::parse(&sketch_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown sketch '{sketch_name}'"))?,
+        bucket_points: args.get_parse("bucket-points", 256usize)?,
+    };
     args.reject_unknown()?;
 
     let mut rng = Pcg64::seed_from(71);
@@ -93,14 +109,7 @@ fn main() -> anyhow::Result<()> {
         ("path(9)", generators::path(9)),
     ] {
         let portions: Vec<Arc<WeightedSet>> = (0..graph.n())
-            .map(|_| {
-                let mut s = WeightedSet::empty(4);
-                for _ in 0..points_per_site {
-                    let p: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
-                    s.push(&p, 1.0);
-                }
-                Arc::new(s)
-            })
+            .map(|_| distclus::testutil::unit_portion(&mut rng, points_per_site, 4))
             .collect();
         let paged_losses: &[f64] = if smoke { &[0.2] } else { &[0.1, 0.3] };
         for &loss in paged_losses {
@@ -139,5 +148,70 @@ fn main() -> anyhow::Result<()> {
         "\n# paged vs monolithic under loss ({points_per_site} pts/site; retransmit unit = page)\n"
     );
     println!("{}", paged_table.render());
+
+    // Bounded-memory collector: fold the paged exchange through the
+    // selected sketch and compare the collector's host-side peak with
+    // exact (materializing) folding at identical wire totals.
+    let t = if smoke { 512 } else { 2_048 };
+    let locals = mixture_sites(71, if smoke { 2_000 } else { 8_000 }, 4, 4, 5, Scheme::Uniform, false);
+    let g = generators::star(5);
+    let cfg = DistributedConfig {
+        t,
+        k: 4,
+        ..Default::default()
+    };
+    let channel = ChannelConfig {
+        page_points: 64,
+        link_capacity: 64,
+    };
+    let mut sketch_table = Table::new(&[
+        "sketch",
+        "comm (points)",
+        "wire peak",
+        "collector peak",
+        "coreset",
+        "rounds",
+    ]);
+    let mut peaks = Vec::new();
+    for plan in [SketchPlan::exact(), sketch_plan] {
+        let mut rng = Pcg64::seed_from(72);
+        let run = run_pipeline(
+            Topology::Graph(&g),
+            &locals,
+            CoresetPlan::Distributed(&cfg),
+            &channel,
+            &plan,
+            &RustBackend,
+            &mut rng,
+            ExecPolicy::Sequential,
+        )?;
+        peaks.push((plan.mode, run.comm_points, run.collector_peak));
+        sketch_table.row(vec![
+            run.sketch.into(),
+            run.comm_points.to_string(),
+            run.peak_points.to_string(),
+            run.collector_peak.to_string(),
+            run.coreset.size().to_string(),
+            run.rounds.to_string(),
+        ]);
+    }
+    if let [(_, comm_exact, peak_exact), (mode, comm_sel, peak_sel)] = peaks[..] {
+        // Graph folding is solve-side only: wire totals must agree, and
+        // the merge-and-reduce collector must beat the materialized one.
+        assert_eq!(comm_exact, comm_sel, "sketch must not change graph wire totals");
+        if mode == SketchMode::MergeReduce {
+            // `<=` not `<`: a bucket larger than the whole stream
+            // legitimately performs no reductions and ties the exact
+            // peak (e.g. `--bucket-points 4096` at t=2048).
+            assert!(
+                peak_sel <= peak_exact,
+                "merge-reduce collector {peak_sel} > exact {peak_exact}"
+            );
+        }
+    }
+    println!(
+        "\n# collector folding (star(5), page=64, t={t}; selected sketch vs exact)\n"
+    );
+    println!("{}", sketch_table.render());
     Ok(())
 }

@@ -139,15 +139,62 @@ fn check_shapes(points: &Dataset, weights: &[f64], centers: &Dataset) {
     assert!(centers.n() > 0, "assign with zero centers");
 }
 
+/// Bytes of center rows one cache block may hold: sized so a block
+/// stays L1-resident while a tile of points streams against it. At
+/// small `k` the whole center set is one block and the loop degenerates
+/// to the classic point-major scan.
+const CENTER_BLOCK_BYTES: usize = 16 * 1024;
+
+/// Points per tile of the center-blocked scan: small enough that the
+/// tile's running-best state (8 B/point) lives in L1 next to the center
+/// block, large enough to amortize re-streaming the centers.
+const POINT_TILE: usize = 512;
+
+/// Centers per cache block for dimensionality `d` (at least 8, and
+/// never more than `k` — one block — which recovers the unblocked scan).
+fn center_block(d: usize, k: usize) -> usize {
+    (CENTER_BLOCK_BYTES / (4 * d.max(1))).clamp(8, k.max(8))
+}
+
 /// Nearest-center assignment of points `start..end` (indices absolute,
 /// output vectors local to the range). The shared inner loop of both
-/// CPU backends.
+/// CPU backends, cache-blocked over *centers as well as points*: for
+/// large `k` the center set no longer fits L1/L2, so the scan walks
+/// center blocks in the outer loop and streams a tile of points against
+/// each block, carrying per-point running bests across blocks.
+///
+/// Bit-identical to the classic point-major scan for every block size:
+/// each point still visits the centers in ascending index order with
+/// the same running-best threshold, so the argmin (ties break to the
+/// lowest index via the strict `<`), the winning distance and the early
+/// abandonment cutoffs are all unchanged — only the memory access order
+/// moves. Pinned by the block-size invariance test below.
 fn assign_range(
     points: &Dataset,
     weights: &[f64],
     centers: &Dataset,
     start: usize,
     end: usize,
+) -> Assignment {
+    assign_range_blocked(
+        points,
+        weights,
+        centers,
+        start,
+        end,
+        center_block(points.d, centers.n()),
+    )
+}
+
+/// [`assign_range`] with an explicit center-block size (separate so the
+/// tests can pin invariance across block sizes).
+fn assign_range_blocked(
+    points: &Dataset,
+    weights: &[f64],
+    centers: &Dataset,
+    start: usize,
+    end: usize,
+    block: usize,
 ) -> Assignment {
     let d = points.d;
     let k = centers.n();
@@ -156,22 +203,42 @@ fn assign_range(
         kmeans_cost: Vec::with_capacity(end - start),
         kmedian_cost: Vec::with_capacity(end - start),
     };
-    for i in start..end {
-        let p = &points.data[i * d..(i + 1) * d];
-        let mut best = f32::INFINITY;
-        let mut best_c = 0u32;
-        for c in 0..k {
-            let crow = &centers.data[c * d..(c + 1) * d];
-            let d2 = dist2_early(p, crow, best);
-            if d2 < best {
-                best = d2;
-                best_c = c as u32;
+    let tile_cap = POINT_TILE.min((end - start).max(1));
+    let mut best = vec![f32::INFINITY; tile_cap];
+    let mut best_c = vec![0u32; tile_cap];
+    let mut t0 = start;
+    while t0 < end {
+        let t1 = (t0 + POINT_TILE).min(end);
+        let tile = t1 - t0;
+        best[..tile].fill(f32::INFINITY);
+        best_c[..tile].fill(0);
+        let mut c0 = 0;
+        while c0 < k {
+            let c1 = (c0 + block).min(k);
+            for j in 0..tile {
+                let p = &points.data[(t0 + j) * d..(t0 + j + 1) * d];
+                let mut b = best[j];
+                let mut bc = best_c[j];
+                for c in c0..c1 {
+                    let crow = &centers.data[c * d..(c + 1) * d];
+                    let d2 = dist2_early(p, crow, b);
+                    if d2 < b {
+                        b = d2;
+                        bc = c as u32;
+                    }
+                }
+                best[j] = b;
+                best_c[j] = bc;
             }
+            c0 = c1;
         }
-        let best = best.max(0.0) as f64;
-        out.assign.push(best_c);
-        out.kmeans_cost.push(weights[i] * best);
-        out.kmedian_cost.push(weights[i] * best.sqrt());
+        for j in 0..tile {
+            let b = best[j].max(0.0) as f64;
+            out.assign.push(best_c[j]);
+            out.kmeans_cost.push(weights[t0 + j] * b);
+            out.kmedian_cost.push(weights[t0 + j] * b.sqrt());
+        }
+        t0 = t1;
     }
     out
 }
@@ -418,6 +485,47 @@ mod tests {
         assert!((two.cost - seq.cost).abs() <= 1e-9 * seq.cost.abs());
         for (a, b) in two.sums.iter().zip(&seq.sums) {
             assert!((a - b).abs() <= 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn center_blocked_assign_invariant_across_block_sizes() {
+        // The cache-blocked scan must be a pure layout optimization:
+        // any block size (1 center per block, odd sizes, one big block)
+        // yields bit-identical assignments, costs and cutoff behavior.
+        let (pts, w, ctr) = instance(7, 3_000, 24, 96);
+        let one_block = assign_range_blocked(&pts, &w, &ctr, 0, pts.n(), 96);
+        for block in [1usize, 7, 8, 33, 64, 200] {
+            let b = assign_range_blocked(&pts, &w, &ctr, 0, pts.n(), block);
+            assert_eq!(one_block.assign, b.assign, "block={block}");
+            assert_eq!(one_block.kmeans_cost, b.kmeans_cost, "block={block}");
+            assert_eq!(one_block.kmedian_cost, b.kmedian_cost, "block={block}");
+        }
+        // And the public path (auto block) matches too.
+        let auto = RustBackend.assign(&pts, &w, &ctr);
+        assert_eq!(one_block.assign, auto.assign);
+        assert_eq!(one_block.kmeans_cost, auto.kmeans_cost);
+    }
+
+    #[test]
+    fn large_k_assign_agrees_across_backends_and_semantics() {
+        // Large k engages the center-blocked path in every backend;
+        // parallel chunking must stay bit-identical, and the argmin must
+        // be a true nearest center under the f64 oracle distance.
+        let (pts, w, ctr) = instance(8, 6_000, 32, 256);
+        let a = RustBackend.assign(&pts, &w, &ctr);
+        let b = ParallelBackend::new(4).assign(&pts, &w, &ctr);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.kmeans_cost, b.kmeans_cost);
+        for i in (0..pts.n()).step_by(97) {
+            let chosen = pts.dist2_to(i, ctr.row(a.assign[i] as usize));
+            let true_min = (0..ctr.n())
+                .map(|c| pts.dist2_to(i, ctr.row(c)))
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                chosen <= true_min + 1e-3 * (1.0 + true_min),
+                "point {i}: chose {chosen}, best {true_min}"
+            );
         }
     }
 

@@ -6,6 +6,7 @@
 use crate::clustering::Objective;
 use crate::exec::ExecPolicy;
 use crate::partition::Scheme;
+use crate::sketch::{SketchMode, SketchPlan};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
@@ -188,6 +189,14 @@ pub struct ExperimentSpec {
     /// unlimited). With a finite capacity, `rounds` measures real
     /// transfer time and peak receiver memory stays bounded.
     pub link_capacity: usize,
+    /// How collecting nodes fold the coreset stream: `exact` (default;
+    /// bit-compatible plain accumulation) or `merge-reduce` (bounded
+    /// memory at the collector, in-network reduction at tree relays —
+    /// see [`crate::sketch`]).
+    pub sketch: SketchMode,
+    /// Bucket capacity of the merge-and-reduce sketch in points (`0` =
+    /// auto; ignored in exact mode).
+    pub bucket_points: usize,
 }
 
 impl Default for ExperimentSpec {
@@ -207,6 +216,8 @@ impl Default for ExperimentSpec {
             threads: 1,
             page_points: 0,
             link_capacity: 0,
+            sketch: SketchMode::Exact,
+            bucket_points: 0,
         }
     }
 }
@@ -268,6 +279,11 @@ impl ExperimentSpec {
                 "threads" => spec.threads = v.parse()?,
                 "page_points" => spec.page_points = v.parse()?,
                 "link_capacity" => spec.link_capacity = v.parse()?,
+                "sketch" => {
+                    spec.sketch = SketchMode::parse(v)
+                        .ok_or_else(|| anyhow!("unknown sketch '{v}' (exact|merge-reduce)"))?
+                }
+                "bucket_points" => spec.bucket_points = v.parse()?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -308,6 +324,15 @@ impl ExperimentSpec {
         crate::network::ChannelConfig {
             page_points: self.page_points,
             link_capacity: self.link_capacity,
+        }
+    }
+
+    /// The collector-side sketch plan this spec selects (see
+    /// [`crate::sketch`]).
+    pub fn sketch_plan(&self) -> SketchPlan {
+        SketchPlan {
+            mode: self.sketch,
+            bucket_points: self.bucket_points,
         }
     }
 }
@@ -375,6 +400,24 @@ mod tests {
         let ch = spec.channel();
         assert_eq!(ch.page_points, 64);
         assert_eq!(ch.link_model().points_per_round, 128);
+    }
+
+    #[test]
+    fn sketch_keys_parse_and_default_exact() {
+        let spec = ExperimentSpec::default();
+        assert_eq!(spec.sketch, SketchMode::Exact);
+        assert_eq!(spec.bucket_points, 0);
+        assert_eq!(spec.sketch_plan(), SketchPlan::exact());
+
+        let spec = ExperimentSpec::from_config(
+            "sketch = merge-reduce\nbucket_points = 256\n",
+        )
+        .unwrap();
+        assert_eq!(spec.sketch, SketchMode::MergeReduce);
+        assert_eq!(spec.bucket_points, 256);
+        assert_eq!(spec.sketch_plan(), SketchPlan::merge_reduce(256));
+
+        assert!(ExperimentSpec::from_config("sketch = lossy\n").is_err());
     }
 
     #[test]

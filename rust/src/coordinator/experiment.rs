@@ -38,6 +38,11 @@ pub struct ExperimentResult {
     pub comm: Summary,
     /// Summary of receiver-side peak buffer occupancy (points).
     pub peak: Summary,
+    /// Summary of the collector's host-side buffer peak (sketch
+    /// residency — see `RunResult::collector_peak`).
+    pub node_peak: Summary,
+    /// Which sketch folded the stream (`exact` / `merge-reduce`).
+    pub sketch: &'static str,
     /// Summary of coreset sizes.
     pub coreset_size: Summary,
     /// Mean wall-clock seconds per repetition.
@@ -92,6 +97,7 @@ pub fn run_once(
     let locals = patch_empty_sites(locals);
 
     let channel = spec.channel();
+    let sketch = spec.sketch_plan();
     match spec.algorithm {
         Algorithm::Distributed => {
             let cfg = DistributedConfig {
@@ -105,6 +111,7 @@ pub fn run_once(
                 &locals,
                 protocol::CoresetPlan::Distributed(&cfg),
                 &channel,
+                &sketch,
                 backend,
                 rng,
                 spec.exec_policy(),
@@ -123,6 +130,7 @@ pub fn run_once(
                 &locals,
                 protocol::CoresetPlan::Distributed(&cfg),
                 &channel,
+                &sketch,
                 backend,
                 rng,
                 spec.exec_policy(),
@@ -139,6 +147,7 @@ pub fn run_once(
                 &locals,
                 protocol::CoresetPlan::Combine(&cfg),
                 &channel,
+                &sketch,
                 backend,
                 rng,
                 spec.exec_policy(),
@@ -156,12 +165,23 @@ pub fn run_once(
                 &locals,
                 protocol::CoresetPlan::Combine(&cfg),
                 &channel,
+                &sketch,
                 backend,
                 rng,
                 spec.exec_policy(),
             )
         }
         Algorithm::ZhangTree => {
+            // Zhang's bottom-up composition is already a
+            // coreset-of-coresets; the collector sketch options don't
+            // apply. Fail loudly instead of silently dropping either.
+            anyhow::ensure!(
+                spec.sketch == crate::sketch::SketchMode::Exact
+                    && spec.bucket_points == 0,
+                "sketch options (--sketch {} / --bucket-points {}) are not supported by zhang-tree",
+                spec.sketch.name(),
+                spec.bucket_points
+            );
             let tree = SpanningTree::random_root(&graph, rng);
             // Same *total* sampled budget as the other algorithms:
             // (n-1) node summaries cross one edge each.
@@ -252,7 +272,9 @@ impl Session {
         let mut ratios = Vec::with_capacity(spec.reps);
         let mut comms = Vec::with_capacity(spec.reps);
         let mut peaks = Vec::with_capacity(spec.reps);
+        let mut node_peaks = Vec::with_capacity(spec.reps);
         let mut sizes = Vec::with_capacity(spec.reps);
+        let mut sketch = crate::sketch::SketchMode::Exact.name();
         let sw = crate::metrics::Stopwatch::start();
         for rep in 0..spec.reps {
             let rep_seed = spec.seed.wrapping_add(1_000_003 * (rep as u64 + 1));
@@ -265,7 +287,9 @@ impl Session {
             ratios.push(q.cost_ratio);
             comms.push(run.comm_points as f64);
             peaks.push(run.peak_points as f64);
+            node_peaks.push(run.collector_peak as f64);
             sizes.push(run.coreset.size() as f64);
+            sketch = run.sketch;
         }
         Ok(ExperimentResult {
             label: format!(
@@ -278,6 +302,8 @@ impl Session {
             ratio: Summary::of(&ratios),
             comm: Summary::of(&comms),
             peak: Summary::of(&peaks),
+            node_peak: Summary::of(&node_peaks),
+            sketch,
             coreset_size: Summary::of(&sizes),
             secs_per_rep: sw.secs() / spec.reps as f64,
         })
@@ -374,6 +400,41 @@ mod tests {
         assert_eq!(mono.comm.mean, paged.comm.mean);
         assert_eq!(mono.coreset_size.mean, paged.coreset_size.mean);
         assert!(paged.peak.mean <= mono.peak.mean);
+    }
+
+    #[test]
+    fn merge_reduce_spec_bounds_collector_peak() {
+        // The sketch is a solve-side knob: quality stays close, the
+        // collector's host-side peak drops below the materialized
+        // coreset, and the wire accounting is untouched on a graph.
+        let mut spec = small_spec(Algorithm::Distributed);
+        let exact = run_experiment(&spec, &RustBackend).unwrap();
+        assert_eq!(exact.sketch, "exact");
+        spec.sketch = crate::sketch::SketchMode::MergeReduce;
+        spec.bucket_points = 64;
+        let mr = run_experiment(&spec, &RustBackend).unwrap();
+        assert_eq!(mr.sketch, "merge-reduce");
+        assert_eq!(mr.comm.mean, exact.comm.mean, "graph wire totals unchanged");
+        assert!(
+            mr.node_peak.mean < exact.node_peak.mean,
+            "sketch peak {} !< materialized {}",
+            mr.node_peak.mean,
+            exact.node_peak.mean
+        );
+        assert!(mr.ratio.mean < 2.0, "ratio {}", mr.ratio.mean);
+    }
+
+    #[test]
+    fn zhang_rejects_sketch_options() {
+        let mut spec = small_spec(Algorithm::ZhangTree);
+        spec.sketch = crate::sketch::SketchMode::MergeReduce;
+        let err = run_experiment(&spec, &RustBackend).unwrap_err();
+        assert!(err.to_string().contains("merge-reduce"), "{err}");
+
+        let mut spec = small_spec(Algorithm::ZhangTree);
+        spec.bucket_points = 512;
+        let err = run_experiment(&spec, &RustBackend).unwrap_err();
+        assert!(err.to_string().contains("bucket-points 512"), "{err}");
     }
 
     #[test]

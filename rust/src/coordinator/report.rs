@@ -13,6 +13,8 @@ pub fn render_report(results: &[ExperimentResult]) -> String {
         "ratio(std)",
         "comm(points)",
         "peak(points)",
+        "node-peak",
+        "sketch",
         "coreset",
         "s/rep",
     ]);
@@ -23,6 +25,8 @@ pub fn render_report(results: &[ExperimentResult]) -> String {
             format!("{:.4}", r.ratio.std),
             format!("{:.0}", r.comm.mean),
             format!("{:.0}", r.peak.mean),
+            format!("{:.0}", r.node_peak.mean),
+            r.sketch.to_string(),
             format!("{:.0}", r.coreset_size.mean),
             format!("{:.2}", r.secs_per_rep),
         ]);
@@ -43,6 +47,8 @@ pub fn series_json(results: &[ExperimentResult]) -> Value {
                     ("ratio_std", build::num(r.ratio.std)),
                     ("comm_points", build::num(r.comm.mean)),
                     ("peak_points", build::num(r.peak.mean)),
+                    ("node_peak_points", build::num(r.node_peak.mean)),
+                    ("sketch", build::s(r.sketch.to_string())),
                     ("coreset_size", build::num(r.coreset_size.mean)),
                     ("reps", build::num(r.ratio.n as f64)),
                 ])
@@ -62,6 +68,8 @@ mod tests {
             ratio: Summary::of(&[1.05, 1.10]),
             comm: Summary::of(&[5_000.0]),
             peak: Summary::of(&[800.0]),
+            node_peak: Summary::of(&[520.0]),
+            sketch: "exact",
             coreset_size: Summary::of(&[520.0]),
             secs_per_rep: 0.5,
         }

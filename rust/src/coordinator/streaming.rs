@@ -23,6 +23,7 @@ use crate::coreset::distributed::{self, DistributedConfig, LocalSummary};
 use crate::coreset::Coreset;
 use crate::points::{Dataset, WeightedSet};
 use crate::rng::Pcg64;
+use crate::sketch::{SketchMode, SketchPlan};
 
 /// One site's streaming state.
 struct SiteState {
@@ -44,6 +45,10 @@ pub struct EpochReport {
     pub comm_points: usize,
     /// Relative cost drift that triggered (or didn't) the rebuild.
     pub drift: f64,
+    /// Peak points resident in the coordinator's fold during this
+    /// epoch's rebuild (0 on skip epochs) — the full coreset under the
+    /// exact plan, `O(levels · bucket_points)` under merge-and-reduce.
+    pub sketch_peak: usize,
 }
 
 /// Streaming maintenance driver over `n` sites.
@@ -59,6 +64,10 @@ pub struct StreamingCoordinator {
     pub threshold: f64,
     /// Per-point hop multiplier for communication accounting.
     pub hops: usize,
+    /// How rebuilds fold the fresh portions (exact by default; the
+    /// merge-and-reduce plan keeps the coordinator's resident set
+    /// bounded instead of materializing the full coreset).
+    sketch: SketchPlan,
     coreset: Option<Coreset>,
     epochs: usize,
     rebuilds: usize,
@@ -79,10 +88,18 @@ impl StreamingCoordinator {
             cfg,
             threshold,
             hops: 1,
+            sketch: SketchPlan::exact(),
             coreset: None,
             epochs: 0,
             rebuilds: 0,
         }
+    }
+
+    /// Rebuild into the given sketch plan instead of materializing the
+    /// union (builder-style).
+    pub fn with_sketch(mut self, sketch: SketchPlan) -> Self {
+        self.sketch = sketch;
+        self
     }
 
     /// Append new points to a site (weight 1 each).
@@ -138,6 +155,7 @@ impl StreamingCoordinator {
         // distributed: each site contributes one number).
         let mut comm = self.sites.len() * self.hops;
         let rebuilt = drift > self.threshold;
+        let mut sketch_peak = 0;
         if rebuilt {
             self.rebuilds += 1;
             let locals: Vec<WeightedSet> =
@@ -145,7 +163,27 @@ impl StreamingCoordinator {
             let portions =
                 distributed::build_portions(&locals, &self.cfg, backend, rng);
             comm += portions.iter().map(|p| p.size()).sum::<usize>() * self.hops;
-            self.coreset = Some(distributed::union(&portions));
+            // Fold arriving portions through the sketch plan. Exact mode
+            // reproduces `distributed::union` byte for byte and draws
+            // nothing from `rng`; merge-and-reduce re-solves use a
+            // dedicated split stream.
+            let sketch_rng = if self.sketch.mode == SketchMode::MergeReduce {
+                rng.split()
+            } else {
+                Pcg64::seed_from(0)
+            };
+            let (coreset, peak) = self
+                .sketch
+                .fold_portions(
+                    &portions,
+                    self.cfg.k,
+                    self.cfg.objective,
+                    backend,
+                    sketch_rng,
+                )
+                .expect("single-page portions cannot tear");
+            sketch_peak = peak;
+            self.coreset = Some(coreset);
             for s in self.sites.iter_mut() {
                 // Freeze: recompute the summary for future drift checks.
                 let summary = distributed::round1(&s.data, &self.cfg, backend, rng);
@@ -158,6 +196,7 @@ impl StreamingCoordinator {
             rebuilt,
             comm_points: comm,
             drift: if drift.is_finite() { drift } else { 1.0 },
+            sketch_peak,
         }
     }
 }
@@ -275,6 +314,33 @@ mod tests {
             comm_lazy < comm_eager / 2,
             "lazy {comm_lazy} !<< eager {comm_eager}"
         );
+    }
+
+    #[test]
+    fn merge_reduce_rebuild_bounds_coordinator_memory() {
+        let mut rng = Pcg64::seed_from(6);
+        let mut exact = StreamingCoordinator::new(4, 5, cfg(), 0.2);
+        let mut bounded = StreamingCoordinator::new(4, 5, cfg(), 0.2)
+            .with_sketch(SketchPlan::merge_reduce(96));
+        let mut rng2 = rng.split();
+        feed(&mut exact, &mut rng, 600, 0.0);
+        feed(&mut bounded, &mut rng2, 600, 0.0);
+        let r_exact = exact.epoch(&RustBackend, &mut rng);
+        let r_bounded = bounded.epoch(&RustBackend, &mut rng2);
+        assert!(r_exact.rebuilt && r_bounded.rebuilt);
+        // Exact folds the full coreset; the sketch stays bucket-bounded.
+        assert_eq!(r_exact.sketch_peak, exact.coreset().unwrap().size());
+        assert!(
+            r_bounded.sketch_peak < r_exact.sketch_peak,
+            "bounded {} !< exact {}",
+            r_bounded.sketch_peak,
+            r_exact.sketch_peak
+        );
+        // The bounded coreset still summarizes the stream usefully.
+        let coreset = bounded.coreset().unwrap();
+        let global = WeightedSet::union(bounded.sites.iter().map(|s| &s.data));
+        let ratio = coreset.set.total_weight() / global.total_weight();
+        assert!((ratio - 1.0).abs() < 0.3, "mass ratio {ratio}");
     }
 
     #[test]

@@ -64,6 +64,7 @@ pub mod points;
 pub mod protocol;
 pub mod rng;
 pub mod runtime;
+pub mod sketch;
 pub mod testutil;
 pub mod topology;
 
@@ -74,5 +75,6 @@ pub mod prelude {
     pub use crate::exec::ExecPolicy;
     pub use crate::points::{Dataset, WeightedSet};
     pub use crate::rng::Pcg64;
+    pub use crate::sketch::{SketchMode, SketchPlan};
     pub use crate::topology::Graph;
 }

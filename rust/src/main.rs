@@ -36,6 +36,8 @@ fn usage() -> ! {
          \x20          --backend rust|parallel|xla --threads N (0 = all cores, 1 = sequential)\n\
          \x20          --page-points N (0 = monolithic portions) --link-capacity N (points\n\
          \x20          per edge per round, 0 = unlimited)\n\
+         \x20          --sketch exact|merge-reduce (collector folding; merge-reduce bounds\n\
+         \x20          collector memory and reduces at tree relays) --bucket-points N (0 = auto)\n\
          \x20          --artifacts DIR --config FILE --json OUT.json"
     );
     std::process::exit(2)
@@ -116,6 +118,11 @@ fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
     spec.threads = args.get_parse("threads", spec.threads)?;
     spec.page_points = args.get_parse("page-points", spec.page_points)?;
     spec.link_capacity = args.get_parse("link-capacity", spec.link_capacity)?;
+    if let Some(s) = args.get("sketch") {
+        spec.sketch = distclus::sketch::SketchMode::parse(s)
+            .ok_or_else(|| anyhow!("unknown sketch '{s}' (exact|merge-reduce)"))?;
+    }
+    spec.bucket_points = args.get_parse("bucket-points", spec.bucket_points)?;
     Ok(spec)
 }
 

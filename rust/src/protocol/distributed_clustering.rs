@@ -5,9 +5,14 @@
 //! rooted tree with converge-cast), streaming the coreset exchange in
 //! fixed-size pages through the bandwidth-limited network simulator so
 //! every figure compares *measured* communication, rounds and peak
-//! memory, not assumed bounds. The Zhang-et-al. baseline keeps its own
-//! driver (its bottom-up composition is structurally different) but
-//! shares the execution engine and the metering plane.
+//! memory, not assumed bounds. Arriving pages fold into a mergeable
+//! sketch ([`crate::sketch`]) at every collecting node — the collector
+//! solves on `finish()` instead of reassembling the full coreset, and
+//! in merge-and-reduce mode tree relays reduce their children's streams
+//! in-network before forwarding. The Zhang-et-al. baseline keeps its own
+//! construction (its bottom-up composition is structurally different)
+//! but shares the execution engine, the session-driven metering plane
+//! and the report surface.
 
 use crate::clustering::backend::Backend;
 use crate::clustering::{approx_solution, Solution};
@@ -16,13 +21,18 @@ use crate::coreset::distributed::{self, allocate_budget, local_cost, Distributed
 use crate::coreset::zhang::{self, ZhangConfig};
 use crate::coreset::Coreset;
 use crate::exec::{map_sites, ExecPolicy};
-use crate::network::{paginate, reassemble, ChannelConfig, Network, Payload};
+use crate::network::{paginate, ChannelConfig, Network, Payload};
 use crate::points::{Dataset, WeightedSet};
 use crate::protocol::broadcast_down;
-use crate::protocol::session::{drive, PipeMachine};
+use crate::protocol::session::{drive, PipeMachine, Solver, ZhangMachine};
 use crate::rng::Pcg64;
+use crate::sketch::{SketchMode, SketchPlan};
 use crate::topology::{Graph, SpanningTree};
 use std::sync::Arc;
+
+/// Refinement iterations of the final coreset solve (matches the
+/// experiment driver's baseline solves).
+const FINAL_SOLVE_ITERS: usize = 40;
 
 /// Outcome of one distributed clustering run.
 #[derive(Clone, Debug)]
@@ -31,7 +41,9 @@ pub struct RunResult {
     pub centers: Dataset,
     /// Cost of the solution *on the coreset* (the solver's view).
     pub coreset_cost: f64,
-    /// The global coreset the solution was computed on.
+    /// The global coreset the solution was computed on (the collector's
+    /// finished sketch; in exact mode, byte-identical to the union of
+    /// the portions).
     pub coreset: Coreset,
     /// Total measured communication (points transmitted).
     pub comm_points: usize,
@@ -39,9 +51,21 @@ pub struct RunResult {
     /// finite link capacity; phases overlap, so this is *not* the sum of
     /// per-primitive round counts).
     pub rounds: usize,
-    /// Receiver-side buffer high-water mark in points (see
+    /// Receiver-side *wire* buffer high-water mark in points (see
     /// [`Network::peak_points`]).
     pub peak_points: usize,
+    /// Per-node *host* buffer high-water marks in points (sketch
+    /// residency + relay backlog) — the node-side memory breakdown the
+    /// wire meter cannot see. Indexed by node id. On a graph in
+    /// merge-reduce mode only the collector materializes a sketch
+    /// (other nodes forward and drop; a real deployment node running
+    /// the same fold would obey the collector's bound).
+    pub node_peaks: Vec<usize>,
+    /// `node_peaks` at the collecting node — the memory the solve-side
+    /// of the pipeline had to provision.
+    pub collector_peak: usize,
+    /// Which sketch folded the stream (`"exact"` / `"merge-reduce"`).
+    pub sketch: &'static str,
     /// Algorithm label for reports.
     pub algorithm: &'static str,
 }
@@ -75,28 +99,34 @@ fn solve_on(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> Solution {
-    approx_solution(&coreset.set, k, cfg_obj, backend, rng, 40)
+    approx_solution(&coreset.set, k, cfg_obj, backend, rng, FINAL_SOLVE_ITERS)
 }
 
 /// The unified driver: build portions under `plan`, stream them through
-/// the paged message plane over `topology`, solve, and meter everything.
+/// the paged message plane over `topology`, fold them into `sketch` at
+/// every collecting node, solve at the collector, and meter everything.
 ///
-/// The compute schedule (and therefore every RNG draw) is identical to
-/// the legacy per-algorithm drivers — round 1, round 2, final solve —
-/// so results are bit-compatible with the monolithic exchange for every
-/// `channel` setting: paging and link capacity only reshape *when*
-/// points move, never *which* points. The simulated timeline still
-/// overlaps phases per node (a site starts streaming pages as soon as
-/// its own cost exchange completes), which `rounds` reflects.
-///
-/// Every run verifies the wire view: the pages collected at node 0 (or
-/// the tree root) must reassemble to exactly the portions that were
-/// sent.
+/// Under the default exact sketch the compute schedule (and therefore
+/// every RNG draw) is identical to the materialized drivers — round 1,
+/// round 2, final solve — so results are bit-compatible with the
+/// monolithic exchange for every `channel` setting: paging, link
+/// capacity and exact folding only reshape *when* points move and *how*
+/// they are buffered, never *which* points feed the solve (verified on
+/// every run: the collector's finished fold must reproduce the union of
+/// the sent portions byte for byte). The merge-and-reduce sketch instead
+/// trades a bounded accuracy loss for bounded memory — the collector
+/// holds `O(levels · bucket_points)` instead of the full `t + nk`
+/// coreset, and on a tree every relay reduces its subtree's stream
+/// before forwarding, which *reduces total communication* as well.
+/// Merge-and-reduce re-solves draw from dedicated per-node RNG streams,
+/// never from the pipeline generator.
+#[allow(clippy::too_many_arguments)]
 pub fn run_pipeline(
     topology: Topology<'_>,
     locals: &[WeightedSet],
     plan: CoresetPlan<'_>,
     channel: &ChannelConfig,
+    sketch: &SketchPlan,
     backend: &dyn Backend,
     rng: &mut Pcg64,
     exec: ExecPolicy,
@@ -112,7 +142,9 @@ pub fn run_pipeline(
         .with_link_model(channel.link_model());
 
     // Host-side compute, in the legacy RNG order (round 1 draws, round 2
-    // draws, final solve draws); the network phase below consumes none.
+    // draws); the final solve runs at the collector when its fold
+    // completes, which consumes the same stream next — the wire phase
+    // itself draws nothing.
     let (portions, costs, k, objective) = match plan {
         CoresetPlan::Distributed(cfg) => {
             let summaries: Vec<_> = map_sites(n, rng, exec, |i, r| {
@@ -134,11 +166,31 @@ pub fn run_pipeline(
             (portions, None, cfg.k, cfg.objective)
         }
     };
-    let coreset = distributed::union(&portions);
-    let sol = solve_on(&coreset, k, objective, backend, rng);
+
+    // Dedicated per-node streams for merge-and-reduce re-solves (exact
+    // mode takes none, leaving the pipeline generator untouched — the
+    // bit-compatibility contract).
+    let merge_reduce = sketch.mode == SketchMode::MergeReduce;
+    let mut sketch_streams: std::vec::IntoIter<Pcg64> = if merge_reduce {
+        let mut master = rng.split();
+        master.split_n(n).into_iter()
+    } else {
+        Vec::new().into_iter()
+    };
+    let mut node_sketch = |node_needs_fold: bool| {
+        node_needs_fold.then(|| {
+            let stream = if merge_reduce {
+                sketch_streams.next().expect("one stream per node")
+            } else {
+                Pcg64::seed_from(0) // exact sketches draw nothing
+            };
+            sketch.build(k, objective, backend, stream)
+        })
+    };
 
     // Wire phase: one session where the cost exchange, the paged portion
-    // streaming and (on trees) the solution broadcast overlap.
+    // streaming, in-network folding and (on trees) the solution
+    // broadcast overlap.
     let pages: Vec<Vec<Payload>> = portions
         .iter()
         .enumerate()
@@ -151,86 +203,138 @@ pub fn run_pipeline(
             cost: c[i],
         })
     };
+    let mut solver = Some(Solver {
+        backend,
+        rng: &mut *rng,
+        k,
+        objective,
+        iters: FINAL_SOLVE_ITERS,
+    });
 
-    let (collector, collected, algorithm) = match topology {
+    let (collector, algorithm, mut nodes) = match topology {
         Topology::Graph(_) => {
-            let mut nodes: Vec<PipeMachine> = pages
+            let nodes: Vec<PipeMachine> = pages
                 .into_iter()
                 .enumerate()
                 .map(|(i, own)| {
+                    // Exact mode: every node keeps the flooded stream
+                    // (Arc views — Algorithm 2's all-nodes-hold
+                    // semantics, metered per node). Merge-reduce: only
+                    // the collector materializes a sketch — any node
+                    // *could* run the identical bounded fold, but
+                    // simulating n copies of the bucket re-solves would
+                    // multiply wall-clock for no additional output.
+                    let fold = if merge_reduce && i != 0 {
+                        None
+                    } else {
+                        node_sketch(true)
+                    };
                     PipeMachine::graph(
+                        i,
                         net.graph().neighbors(i).to_vec(),
                         cost_payload(i),
                         own,
                         n,
                         total_pages,
+                        fold,
+                        if i == 0 { solver.take() } else { None },
                     )
                 })
                 .collect();
-            drive(&mut net, &mut nodes);
-            for (v, node) in nodes.iter().enumerate() {
-                anyhow::ensure!(
-                    node.held.len() == total_pages,
-                    "node {v} holds {} of {total_pages} pages (disconnected graph?)",
-                    node.held.len()
-                );
-            }
             let algorithm = match plan {
                 CoresetPlan::Distributed(_) => "distributed-coreset (Alg.1+3)",
                 CoresetPlan::Combine(_) => "combine",
             };
-            (0usize, std::mem::take(&mut nodes[0].held), algorithm)
+            (0usize, algorithm, nodes)
         }
         Topology::Tree(tree) => {
             let total_cost: f64 = costs.as_ref().map(|c| c.iter().sum()).unwrap_or(0.0);
-            let centers = Arc::new(sol.centers.clone());
-            let mut nodes: Vec<PipeMachine> = pages
+            let nodes: Vec<PipeMachine> = pages
                 .into_iter()
                 .enumerate()
                 .map(|(v, own)| {
                     let is_root = v == tree.root;
+                    // Exact: only the root folds (count-based); others
+                    // relay verbatim. Merge-reduce: every node folds its
+                    // subtree (site-based) and non-roots forward the
+                    // reduced stream.
+                    let (fold, pages_expected, sites_expected, reduce_relay) = if merge_reduce
+                    {
+                        (
+                            node_sketch(true),
+                            usize::MAX,
+                            tree.children[v].len() + 1,
+                            !is_root,
+                        )
+                    } else {
+                        (
+                            node_sketch(is_root),
+                            if is_root { total_pages } else { usize::MAX },
+                            0,
+                            false,
+                        )
+                    };
                     PipeMachine::tree(
+                        v,
                         (!is_root).then_some(tree.parent[v]),
                         tree.children[v].clone(),
                         cost_payload(v),
                         (is_root && costs.is_some())
                             .then_some(Payload::Scalar(total_cost)),
                         own,
-                        if is_root { total_pages } else { usize::MAX },
                         n,
-                        is_root.then(|| Payload::Centers(centers.clone())),
+                        fold,
+                        pages_expected,
+                        sites_expected,
+                        reduce_relay,
+                        channel.page_points,
+                        is_root.then(|| solver.take().expect("one solver")),
                     )
                 })
                 .collect();
-            drive(&mut net, &mut nodes);
-            anyhow::ensure!(
-                nodes[tree.root].held.len() == total_pages,
-                "root holds {} of {total_pages} pages",
-                nodes[tree.root].held.len()
-            );
             let algorithm = match plan {
                 CoresetPlan::Distributed(_) => "distributed-coreset (tree)",
                 CoresetPlan::Combine(_) => "combine (tree)",
             };
-            (
-                tree.root,
-                std::mem::take(&mut nodes[tree.root].held),
-                algorithm,
-            )
+            (tree.root, algorithm, nodes)
         }
     };
+    drive(&mut net, &mut nodes);
 
-    // The wire view must reconstruct the exact portions — this runs on
-    // every call, so any paging/reassembly regression fails loudly.
-    let rebuilt = reassemble(&collected)?;
-    anyhow::ensure!(rebuilt.len() == n, "collector {collector} missing portions");
-    for (site, set) in &rebuilt {
+    // Delivery checks: on a graph every node must have folded the whole
+    // stream; on a tree the root must have completed its collection.
+    if matches!(topology, Topology::Graph(_)) {
+        for (v, node) in nodes.iter().enumerate() {
+            anyhow::ensure!(
+                node.pages_collected() == total_pages,
+                "node {v} folded {} of {total_pages} pages (disconnected graph?)",
+                node.pages_collected()
+            );
+        }
+    }
+    let (solution, finished) = {
+        let node = &mut nodes[collector];
+        (node.solution.take(), node.finished.take())
+    };
+    let (sol, mut coreset) = match (solution, finished) {
+        (Some(s), Some(c)) => (s, c),
+        _ => anyhow::bail!("collector {collector} never completed its collection"),
+    };
+
+    // Exact mode must reproduce the materialized exchange byte for byte
+    // — this runs on every call, so any paging/folding regression fails
+    // loudly.
+    if !merge_reduce {
+        let expected = distributed::union(&portions);
         anyhow::ensure!(
-            *set == portions[*site].set,
-            "portion of site {site} corrupted in transit"
+            coreset.set == expected.set,
+            "collector {collector}: folded stream does not reproduce the sent portions"
         );
+        coreset.sampled = expected.sampled;
     }
 
+    let node_peaks: Vec<usize> = nodes.iter().map(|m| m.node_peak).collect();
+    let collector_peak = node_peaks[collector];
     Ok(RunResult {
         centers: sol.centers,
         coreset_cost: sol.cost,
@@ -238,6 +342,9 @@ pub fn run_pipeline(
         comm_points: net.cost_points(),
         rounds: net.round(),
         peak_points: net.peak_points(),
+        node_peaks,
+        collector_peak,
+        sketch: sketch.mode.name(),
         algorithm,
     })
 }
@@ -248,7 +355,7 @@ pub fn run_pipeline(
 /// 2); the solver runs once since all nodes compute identically.
 ///
 /// Sequential monolithic-exchange entry point — see [`run_pipeline`]
-/// for paging, link capacity and parallel execution.
+/// for paging, link capacity, sketched folding and parallel execution.
 pub fn cluster_on_graph(
     graph: &Graph,
     locals: &[WeightedSet],
@@ -276,6 +383,7 @@ pub fn cluster_on_graph_exec(
         locals,
         CoresetPlan::Distributed(cfg),
         &ChannelConfig::default(),
+        &SketchPlan::exact(),
         backend,
         rng,
         exec,
@@ -312,6 +420,7 @@ pub fn cluster_on_tree_exec(
         locals,
         CoresetPlan::Distributed(cfg),
         &ChannelConfig::default(),
+        &SketchPlan::exact(),
         backend,
         rng,
         exec,
@@ -332,6 +441,7 @@ pub fn combine_on_graph(
         locals,
         CoresetPlan::Combine(cfg),
         &ChannelConfig::default(),
+        &SketchPlan::exact(),
         backend,
         rng,
         ExecPolicy::Sequential,
@@ -352,6 +462,7 @@ pub fn combine_on_tree(
         locals,
         CoresetPlan::Combine(cfg),
         &ChannelConfig::default(),
+        &SketchPlan::exact(),
         backend,
         rng,
         ExecPolicy::Sequential,
@@ -374,7 +485,10 @@ pub fn zhang_on_tree(
 
 /// [`zhang_on_tree`] under an explicit [`ExecPolicy`]: the bottom-up
 /// composition runs level-parallel on the execution engine (see
-/// [`zhang::build_on_tree_exec`]).
+/// [`zhang::build_on_tree_exec`]) and the summary transfers run through
+/// the session engine, so `rounds` reflects *pipelined tree levels* —
+/// all nodes of one depth transfer concurrently — instead of one
+/// synchronous step per edge.
 pub fn zhang_on_tree_exec(
     tree: &SpanningTree,
     locals: &[WeightedSet],
@@ -386,29 +500,47 @@ pub fn zhang_on_tree_exec(
     anyhow::ensure!(tree.n() == locals.len());
     let mut net = Network::new(tree.as_graph()).without_transcript();
     let result = zhang::build_on_tree_exec(locals, tree, cfg, backend, rng, exec);
-    // Charge each child -> parent summary transfer on the simulator with
-    // a metering-only payload — the simulator never needs the summary's
-    // coordinates, so no stand-in dataset is allocated.
-    for v in 0..tree.n() {
-        if v != tree.root && result.sent_points[v] > 0 {
-            net.send(
-                v,
-                tree.parent[v],
-                Payload::Opaque {
+    // Charge each child -> parent summary transfer with a metering-only
+    // payload (the simulator never needs the summary's coordinates).
+    // Every node waits for its children before emitting, so one session
+    // moves whole tree levels per round. A node with nothing to send
+    // still emits a zero-point payload — its parent must learn the
+    // subtree is drained.
+    let mut machines: Vec<ZhangMachine> = (0..tree.n())
+        .map(|v| {
+            let is_root = v == tree.root;
+            ZhangMachine::new(
+                (!is_root).then_some(tree.parent[v]),
+                tree.children[v].len(),
+                (!is_root).then_some(Payload::Opaque {
                     site: v,
                     points: result.sent_points[v],
-                },
-            );
-            net.step();
-            net.recv_all(tree.parent[v]);
-        }
-    }
+                }),
+            )
+        })
+        .collect();
+    drive(&mut net, &mut machines);
     let sol = solve_on(&result.coreset, cfg.k, cfg.objective, backend, rng);
     broadcast_down(
         &mut net,
         tree,
         &Payload::Centers(Arc::new(sol.centers.clone())),
     );
+    // Per-node host buffers, analogous to the pipeline's fold meter:
+    // each node holds its own outgoing summary plus its children's
+    // summaries until it has composed them; the root additionally holds
+    // the final coreset.
+    let mut node_peaks: Vec<usize> = (0..tree.n())
+        .map(|v| {
+            result.sent_points[v]
+                + tree.children[v]
+                    .iter()
+                    .map(|&c| result.sent_points[c])
+                    .sum::<usize>()
+        })
+        .collect();
+    node_peaks[tree.root] = node_peaks[tree.root].max(result.coreset.size());
+    let collector_peak = node_peaks[tree.root];
     Ok(RunResult {
         centers: sol.centers,
         coreset_cost: sol.cost,
@@ -416,6 +548,9 @@ pub fn zhang_on_tree_exec(
         comm_points: net.cost_points(),
         rounds: net.round(),
         peak_points: net.peak_points(),
+        node_peaks,
+        collector_peak,
+        sketch: SketchMode::Exact.name(),
         algorithm: "zhang (tree)",
     })
 }
@@ -454,6 +589,11 @@ mod tests {
         let run = cluster_on_graph(&g, &locals, &cfg, &RustBackend, &mut rng).unwrap();
         assert_eq!(run.centers.n(), 4);
         assert!(run.comm_points > 0);
+        assert_eq!(run.sketch, "exact");
+        assert_eq!(run.node_peaks.len(), g.n());
+        assert_eq!(run.collector_peak, run.node_peaks[0]);
+        // Exact folding holds the full coreset at the collector.
+        assert_eq!(run.collector_peak, run.coreset.size());
 
         // Solution quality on the *global* data vs direct clustering.
         let mut rng2 = Pcg64::seed_from(3);
@@ -503,6 +643,7 @@ mod tests {
                 &locals,
                 CoresetPlan::Distributed(&cfg),
                 &channel,
+                &SketchPlan::exact(),
                 &RustBackend,
                 &mut rng,
                 ExecPolicy::Sequential,
@@ -527,6 +668,7 @@ mod tests {
                 &locals,
                 CoresetPlan::Distributed(&cfg),
                 &channel,
+                &SketchPlan::exact(),
                 &RustBackend,
                 &mut rng,
                 ExecPolicy::Sequential,
@@ -548,6 +690,8 @@ mod tests {
             paged.peak_points,
             mono.peak_points
         );
+        // The *host-side* fold is the same either way in exact mode.
+        assert_eq!(mono.collector_peak, paged.collector_peak);
     }
 
     #[test]
@@ -608,6 +752,7 @@ mod tests {
                 &locals,
                 CoresetPlan::Distributed(&cfg),
                 &channel,
+                &SketchPlan::exact(),
                 &RustBackend,
                 &mut rng,
                 ExecPolicy::Sequential,
@@ -621,6 +766,70 @@ mod tests {
         });
         assert_eq!(mono.comm_points, paged.comm_points);
         assert_eq!(mono.centers, paged.centers);
+    }
+
+    #[test]
+    fn merge_reduce_tree_cuts_relay_traffic() {
+        // On a path every non-root node relays its whole subtree in
+        // exact mode; in merge-and-reduce mode it forwards a reduced
+        // stream instead, so total points transmitted must drop.
+        let mut rng0 = Pcg64::seed_from(31);
+        let data = gaussian_mixture(&mut rng0, 6_000, 4, 4);
+        let locals: Vec<WeightedSet> = Scheme::Uniform
+            .partition(&data, 6, &mut rng0)
+            .unwrap()
+            .into_iter()
+            .map(WeightedSet::unit)
+            .collect();
+        let g = generators::path(6);
+        let tree = SpanningTree::bfs(&g, 0);
+        let cfg = DistributedConfig {
+            t: 1_024,
+            k: 4,
+            ..Default::default()
+        };
+        let channel = ChannelConfig {
+            page_points: 64,
+            link_capacity: 0,
+        };
+        let run_at = |plan: SketchPlan| {
+            let mut rng = Pcg64::seed_from(32);
+            run_pipeline(
+                Topology::Tree(&tree),
+                &locals,
+                CoresetPlan::Distributed(&cfg),
+                &channel,
+                &plan,
+                &RustBackend,
+                &mut rng,
+                ExecPolicy::Sequential,
+            )
+            .unwrap()
+        };
+        let exact = run_at(SketchPlan::exact());
+        let reduced = run_at(SketchPlan::merge_reduce(128));
+        assert_eq!(reduced.sketch, "merge-reduce");
+        assert!(
+            reduced.comm_points < exact.comm_points,
+            "in-network reduction must cut traffic: {} !< {}",
+            reduced.comm_points,
+            exact.comm_points
+        );
+        assert!(
+            reduced.collector_peak < exact.collector_peak,
+            "root sketch {} !< materialized {}",
+            reduced.collector_peak,
+            exact.collector_peak
+        );
+        assert_eq!(reduced.centers.n(), 4);
+        // The reduced solution still clusters the data sensibly.
+        let global = WeightedSet::union(locals.iter());
+        let c_exact = cost_of(&global, &exact.centers, Objective::KMeans);
+        let c_reduced = cost_of(&global, &reduced.centers, Objective::KMeans);
+        assert!(
+            c_reduced < 2.0 * c_exact,
+            "reduced {c_reduced} vs exact {c_exact}"
+        );
     }
 
     #[test]
@@ -658,5 +867,44 @@ mod tests {
         let run = zhang_on_tree(&tree, &locals, &cfg, &RustBackend, &mut rng2).unwrap();
         let expected = zhang::communication(&built) + (tree.n() - 1) * run.centers.n();
         assert_eq!(run.comm_points, expected);
+    }
+
+    #[test]
+    fn zhang_rounds_reflect_pipelined_levels() {
+        // Star rooted at the hub: 8 summaries move in ONE round through
+        // the session engine (plus quiescence detection and the centers
+        // broadcast) — the legacy per-edge metering took a step per
+        // child. A path still needs one round per level.
+        let mut rng0 = Pcg64::seed_from(19);
+        let data = gaussian_mixture(&mut rng0, 2_000, 3, 3);
+        let locals: Vec<WeightedSet> = Scheme::Uniform
+            .partition(&data, 9, &mut rng0)
+            .unwrap()
+            .into_iter()
+            .map(WeightedSet::unit)
+            .collect();
+        let cfg = ZhangConfig {
+            t_node: 60,
+            k: 3,
+            objective: Objective::KMeans,
+        };
+        let star_tree = SpanningTree::bfs(&generators::star(9), 0);
+        let mut rng = Pcg64::seed_from(20);
+        let run = zhang_on_tree(&star_tree, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        assert!(
+            run.rounds <= 4,
+            "star summaries must pipeline into O(1) rounds, got {}",
+            run.rounds
+        );
+
+        let path_tree = SpanningTree::bfs(&generators::path(9), 0);
+        let mut rng = Pcg64::seed_from(21);
+        let run = zhang_on_tree(&path_tree, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        assert!(
+            run.rounds >= path_tree.height(),
+            "a path cannot beat one round per level: {} < {}",
+            run.rounds,
+            path_tree.height()
+        );
     }
 }

@@ -13,12 +13,29 @@
 //! [`LinkModel`](crate::network::LinkModel) back-pressures everything
 //! without any machine having to know about it.
 //!
+//! Collector-side buffering goes through the mergeable-sketch subsystem
+//! ([`crate::sketch`]): a [`PipeMachine`] folds arriving portion pages
+//! into its [`Sketch`] the moment they land and solves on `finish()`,
+//! so the collector never materializes more than the sketch's resident
+//! set — and, in merge-and-reduce mode on a tree, relay nodes reduce
+//! their children's streams *in-network* before forwarding, shrinking
+//! both upstream traffic and per-node peaks. Each machine meters its own
+//! buffer high-water mark ([`PipeMachine::node_peak`]) — the host-side
+//! counterpart of the wire-side
+//! [`Network::peak_points`](crate::network::Network::peak_points).
+//!
 //! All machine logic runs on the driver thread and is a pure function of
 //! the message history, so `rounds`, `cost_points` and `peak_points` are
 //! bit-identical for any worker-thread count of the compute layer.
 
-use crate::network::{FloodKey, Network, Payload};
+use crate::clustering::backend::Backend;
+use crate::clustering::{approx_solution, Objective, Solution};
+use crate::coreset::Coreset;
+use crate::network::{paginate, FloodKey, Network, Payload};
+use crate::rng::Pcg64;
+use crate::sketch::Sketch;
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// Sends queued by a machine during one callback: `(to, payload)`.
 #[derive(Default)]
@@ -205,6 +222,55 @@ impl NodeMachine for BroadcastMachine {
     }
 }
 
+/// Zhang-et-al. summary converge-cast: every node waits until each of
+/// its children's (already size-accounted) summaries arrived, then emits
+/// its own toward the root — so nodes at the same depth transfer
+/// *concurrently* and `rounds` reflects pipelined tree levels, not one
+/// synchronous step per edge.
+pub(crate) struct ZhangMachine {
+    /// `None` at the root.
+    parent: Option<usize>,
+    /// Child summaries still outstanding.
+    pending_children: usize,
+    /// This node's metering payload (`None` at the root).
+    summary: Option<Payload>,
+    sent: bool,
+}
+
+impl ZhangMachine {
+    pub(crate) fn new(
+        parent: Option<usize>,
+        n_children: usize,
+        summary: Option<Payload>,
+    ) -> Self {
+        ZhangMachine {
+            parent,
+            pending_children: n_children,
+            summary,
+            sent: false,
+        }
+    }
+}
+
+impl NodeMachine for ZhangMachine {
+    fn tick(&mut self, out: &mut Outbox) {
+        if !self.sent && self.pending_children == 0 {
+            self.sent = true;
+            if let (Some(parent), Some(p)) = (self.parent, self.summary.take()) {
+                out.send(parent, p);
+            }
+        }
+    }
+
+    fn on_msg(&mut self, _from: usize, msg: Payload, _out: &mut Outbox) {
+        debug_assert!(
+            matches!(msg, Payload::Opaque { .. }),
+            "zhang converge-cast carries metering payloads only"
+        );
+        self.pending_children -= 1;
+    }
+}
+
 // ---------------------------------------------------------------------
 // End-to-end pipeline machine (Algorithm 2 over either topology)
 // ---------------------------------------------------------------------
@@ -225,6 +291,18 @@ pub(crate) enum PipeRole {
     },
 }
 
+/// The final-solve hook a collector machine runs when its fold
+/// completes: the backend and (mutably borrowed) pipeline RNG, so the
+/// solve consumes exactly the draws the materialized driver consumed —
+/// bit-compatibility of exact mode hinges on this.
+pub(crate) struct Solver<'a> {
+    pub(crate) backend: &'a dyn Backend,
+    pub(crate) rng: &'a mut Pcg64,
+    pub(crate) k: usize,
+    pub(crate) objective: Objective,
+    pub(crate) iters: usize,
+}
+
 /// Per-node state machine of the unified clustering pipeline.
 ///
 /// Phases per node — each entered as soon as *this node's* inputs are
@@ -236,10 +314,17 @@ pub(crate) enum PipeRole {
 /// 2. portion streaming: once *ready* (all costs seen on a graph / total
 ///    received on a tree / immediately when the plan needs no cost
 ///    exchange), the node emits its portion pages — overlapping with
-///    cost traffic still propagating elsewhere;
-/// 3. solution broadcast (tree only): when the root holds every page it
-///    broadcasts the precomputed `Centers` down.
-pub(crate) struct PipeMachine {
+///    cost traffic still propagating elsewhere. Folding nodes insert
+///    every page (their own included) into their [`Sketch`] on arrival;
+/// 3. completion: a *reducing relay* (tree, merge-and-reduce mode)
+///    finishes its sketch once its own portion and every child's stream
+///    are complete, re-paginates the reduced set under its own site id
+///    and sends it upstream; the *collector* finishes its sketch, runs
+///    the final solve ([`Solver`]) and — on a tree — broadcasts the
+///    `Centers` down.
+pub(crate) struct PipeMachine<'a> {
+    /// This node's id (site id of re-paginated reduced streams).
+    id: usize,
     role: PipeRole,
     /// Own `LocalCost`, emitted on the first tick (None: no cost phase).
     cost: Option<Payload>,
@@ -250,6 +335,8 @@ pub(crate) struct PipeMachine {
     costs_expected: usize,
     /// Tree: payloads waiting to move one hop toward the root.
     relay_up: Vec<Payload>,
+    /// Points currently buffered in `relay_up`.
+    relay_points: usize,
     /// Tree root: `Scalar` budget total, broadcast when costs complete.
     total: Option<Payload>,
     /// This node may emit its own pages.
@@ -259,65 +346,112 @@ pub(crate) struct PipeMachine {
     pages: Vec<Payload>,
     /// Graph: distinct page keys seen (flooding dedup).
     pages_seen: HashSet<FloodKey>,
-    /// Collected pages (every node on a graph; the root on a tree).
-    pub(crate) held: Vec<Payload>,
-    /// Pages that complete the collection (`usize::MAX`: not a
-    /// collector).
+    /// Where pages land on folding nodes (None: verbatim relay).
+    fold: Option<Sketch<'a>>,
+    /// Distinct pages folded so far.
+    pages_folded: usize,
+    /// Count-based completion: pages that complete the collection
+    /// (`usize::MAX`: completion is site-based or this node never
+    /// completes).
     pages_expected: usize,
-    /// Tree root: precomputed final solution, broadcast when all pages
-    /// arrived.
-    centers: Option<Payload>,
+    /// Site-based completion (tree merge-and-reduce): own portion plus
+    /// one reduced portion per child (0 = not site-based).
+    sites_expected: usize,
+    /// Tree non-root in merge-and-reduce mode: on completion, finish the
+    /// sketch and send the reduced stream to the parent.
+    reduce_relay: bool,
+    /// Page size for re-paginated reduced streams.
+    page_points: usize,
+    /// Collector only: the final-solve hook.
+    solver: Option<Solver<'a>>,
+    /// Completion actions have run.
+    done: bool,
+    /// Collector output, readable after [`drive`] returns.
+    pub(crate) solution: Option<Solution>,
+    /// Collector's finished fold, readable after [`drive`] returns.
+    pub(crate) finished: Option<Coreset>,
+    /// High-water mark of points buffered in this machine (sketch
+    /// residency + relay backlog) — the node-side memory meter.
+    pub(crate) node_peak: usize,
 }
 
-impl PipeMachine {
+impl<'a> PipeMachine<'a> {
     /// Graph-mode node. `cost` is `None` for plans without a cost
-    /// exchange (then the node is ready immediately).
+    /// exchange (then the node is ready immediately). A graph node with
+    /// `fold` collects the full flooded stream into its sketch
+    /// (Algorithm 2: any node could); one without only dedups and
+    /// forwards, counting the distinct pages it observed. `solver` is
+    /// set on the collector only.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn graph(
+        id: usize,
         neigh: Vec<usize>,
         cost: Option<Payload>,
         pages: Vec<Payload>,
         n_nodes: usize,
         pages_expected: usize,
+        fold: Option<Sketch<'a>>,
+        solver: Option<Solver<'a>>,
     ) -> Self {
         let has_cost = cost.is_some();
         PipeMachine {
+            id,
             role: PipeRole::Graph { neigh },
             cost,
             costs_seen: HashSet::new(),
             costs_expected: if has_cost { n_nodes } else { 0 },
             relay_up: Vec::new(),
+            relay_points: 0,
             total: None,
             ready: !has_cost,
             launched: false,
             pages,
             pages_seen: HashSet::new(),
-            held: Vec::new(),
+            fold,
+            pages_folded: 0,
             pages_expected,
-            centers: None,
+            sites_expected: 0,
+            reduce_relay: false,
+            page_points: 0,
+            solver,
+            done: false,
+            solution: None,
+            finished: None,
+            node_peak: 0,
         }
     }
 
-    /// Tree-mode node. Only the root takes `total`/`centers` and a
-    /// nonzero `costs_expected`/finite `pages_expected`.
+    /// Tree-mode node. Only the root takes `total`, a `solver` and a
+    /// nonzero `costs_expected`. `fold`/`sites_expected`/`reduce_relay`
+    /// select between verbatim relaying (exact mode, non-root), folding
+    /// with count-based completion (exact root) and folding with
+    /// site-based completion plus upstream reduction (merge-and-reduce).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn tree(
+        id: usize,
         parent: Option<usize>,
         children: Vec<usize>,
         cost: Option<Payload>,
         total: Option<Payload>,
         pages: Vec<Payload>,
-        pages_expected: usize,
         n_nodes: usize,
-        centers: Option<Payload>,
+        fold: Option<Sketch<'a>>,
+        pages_expected: usize,
+        sites_expected: usize,
+        reduce_relay: bool,
+        page_points: usize,
+        solver: Option<Solver<'a>>,
     ) -> Self {
         let has_cost = cost.is_some();
         let is_root = parent.is_none();
         PipeMachine {
+            id,
             role: PipeRole::Tree { parent, children },
             cost,
             costs_seen: HashSet::new(),
             costs_expected: if has_cost && is_root { n_nodes } else { 0 },
             relay_up: Vec::new(),
+            relay_points: 0,
             total,
             // Roots without a cost phase are ready at once; non-roots
             // without a cost phase likewise. With a cost phase everyone
@@ -326,36 +460,154 @@ impl PipeMachine {
             launched: false,
             pages,
             pages_seen: HashSet::new(),
-            held: Vec::new(),
+            fold,
+            pages_folded: 0,
             pages_expected,
-            centers,
+            sites_expected,
+            reduce_relay,
+            page_points,
+            solver,
+            done: false,
+            solution: None,
+            finished: None,
+            node_peak: 0,
+        }
+    }
+
+    /// Distinct portion pages this node folded (graph nodes fold the
+    /// whole flooded stream; the driver checks everyone saw everything).
+    pub(crate) fn pages_collected(&self) -> usize {
+        self.pages_folded
+    }
+
+    fn bump_peak(&mut self) {
+        // The sketch meters its own transient high-water mark (a carry
+        // briefly holds a merged bucket before reducing it), so the node
+        // peak is the max of the buffer view and the sketch's internal
+        // peak.
+        let fold_now = self.fold.as_ref().map_or(0, |f| f.points_held());
+        let fold_peak = self.fold.as_ref().map_or(0, |f| f.peak_points());
+        self.node_peak = self
+            .node_peak
+            .max(self.relay_points + fold_now)
+            .max(fold_peak);
+    }
+
+    fn collection_complete(&self) -> bool {
+        if self.pages_expected != usize::MAX {
+            self.pages_folded == self.pages_expected
+        } else if self.sites_expected > 0 {
+            self.fold
+                .as_ref()
+                .is_some_and(|f| f.complete_sites() == self.sites_expected)
+        } else {
+            false // pure relay: nothing to complete
         }
     }
 
     fn launch(&mut self, out: &mut Outbox) {
         self.launched = true;
-        match &self.role {
-            PipeRole::Graph { neigh } => {
-                for p in std::mem::take(&mut self.pages) {
-                    self.pages_seen
-                        .insert(p.flood_key().expect("page key"));
-                    out.broadcast(neigh, &p);
-                    self.held.push(p);
+        let pages = std::mem::take(&mut self.pages);
+        if let PipeRole::Graph { neigh } = &self.role {
+            for p in pages {
+                self.pages_seen.insert(p.flood_key().expect("page key"));
+                out.broadcast(neigh, &p);
+                fold_page(&mut self.fold, &mut self.pages_folded, &p);
+            }
+        } else if self.fold.is_some() {
+            // Folding tree node (root, or reducing relay): own pages go
+            // straight into the sketch.
+            for p in pages {
+                fold_page(&mut self.fold, &mut self.pages_folded, &p);
+            }
+        } else {
+            // Verbatim relay: own pages head for the root.
+            for p in pages {
+                self.relay_points += p.size_points();
+                self.relay_up.push(p);
+            }
+        }
+        self.bump_peak();
+    }
+
+    /// Completion actions: reducing relays ship their finished sketch
+    /// upstream; the collector solves and (on a tree) broadcasts.
+    fn on_complete(&mut self, out: &mut Outbox) {
+        self.bump_peak(); // capture the fold's peak before consuming it
+        if self.reduce_relay {
+            let sketch = self.fold.take().expect("reducing relay folds");
+            let reduced = sketch
+                .finish()
+                .expect("site-based completion implies untorn portions");
+            if let PipeRole::Tree {
+                parent: Some(parent),
+                ..
+            } = self.role
+            {
+                for p in paginate(self.id, Arc::new(reduced), self.page_points) {
+                    out.send(parent, p);
                 }
             }
-            PipeRole::Tree { parent, .. } => {
-                if parent.is_none() {
-                    // The root keeps its own pages; nothing to send.
-                    self.held.append(&mut self.pages);
-                } else {
-                    self.relay_up.append(&mut self.pages);
+            return;
+        }
+        if let Some(solver) = self.solver.take() {
+            let sketch = self.fold.take().expect("collector folds");
+            let set = sketch
+                .finish()
+                .expect("completed collection implies untorn portions");
+            let coreset = Coreset {
+                sampled: set.n(),
+                set,
+            };
+            let sol = approx_solution(
+                &coreset.set,
+                solver.k,
+                solver.objective,
+                solver.backend,
+                solver.rng,
+                solver.iters,
+            );
+            if let PipeRole::Tree { children, .. } = &self.role {
+                let payload = Payload::Centers(Arc::new(sol.centers.clone()));
+                for &c in children {
+                    out.send(c, payload.clone());
                 }
             }
+            self.solution = Some(sol);
+            self.finished = Some(coreset);
         }
     }
 }
 
-impl NodeMachine for PipeMachine {
+/// Fold one portion page into a node's sketch (free function so match
+/// arms holding a borrow of `role` can still fold). Duplicate
+/// deliveries (the sketch's tracker rejects them) are not counted, so
+/// count-based completion stays correct under any retransmitting
+/// delivery layer. A node without a fold (graph forwarder whose sketch
+/// was elided) still counts the page — its caller already deduped it —
+/// so the driver's everyone-saw-everything check keeps working.
+fn fold_page(fold: &mut Option<Sketch<'_>>, pages_folded: &mut usize, p: &Payload) {
+    if let Payload::PortionPage {
+        site,
+        page,
+        pages,
+        set,
+    } = p
+    {
+        match fold.as_mut() {
+            Some(f) => {
+                if f.insert_page(*site, *page, *pages, set) {
+                    *pages_folded += 1;
+                }
+            }
+            None => *pages_folded += 1,
+        }
+    } else {
+        unreachable!("fold_page on non-page payload");
+    }
+}
+
+impl NodeMachine for PipeMachine<'_> {
     fn tick(&mut self, out: &mut Outbox) {
         // First tick: emit the own cost scalar.
         if let Some(c) = self.cost.take() {
@@ -368,6 +620,7 @@ impl NodeMachine for PipeMachine {
                     if parent.is_none() {
                         self.costs_seen.insert(c.flood_key().expect("cost key"));
                     } else {
+                        self.relay_points += c.size_points();
                         self.relay_up.push(c);
                     }
                 }
@@ -389,14 +642,10 @@ impl NodeMachine for PipeMachine {
         if self.ready && !self.launched {
             self.launch(out);
         }
-        // Tree root: final solution once every page arrived.
-        if self.launched && self.held.len() == self.pages_expected {
-            if let (PipeRole::Tree { children, .. }, Some(c)) = (&self.role, self.centers.take())
-            {
-                for &child in children {
-                    out.send(child, c.clone());
-                }
-            }
+        // Completion: reduce-and-forward, or solve-and-broadcast.
+        if self.launched && !self.done && self.collection_complete() {
+            self.done = true;
+            self.on_complete(out);
         }
         // Tree: move relayed payloads one hop up.
         if let PipeRole::Tree {
@@ -407,6 +656,7 @@ impl NodeMachine for PipeMachine {
             for p in self.relay_up.drain(..) {
                 out.send(parent, p);
             }
+            self.relay_points = 0;
         }
     }
 
@@ -422,7 +672,7 @@ impl NodeMachine for PipeMachine {
                 let key = msg.flood_key().expect("page key");
                 if self.pages_seen.insert(key) {
                     out.broadcast(neigh, &msg);
-                    self.held.push(msg);
+                    fold_page(&mut self.fold, &mut self.pages_folded, &msg);
                 }
             }
             (PipeRole::Tree { parent, .. }, msg @ Payload::LocalCost { .. }) => {
@@ -430,13 +680,16 @@ impl NodeMachine for PipeMachine {
                     self.costs_seen
                         .insert(msg.flood_key().expect("cost key"));
                 } else {
+                    self.relay_points += msg.size_points();
                     self.relay_up.push(msg);
                 }
             }
-            (PipeRole::Tree { parent, .. }, msg @ Payload::PortionPage { .. }) => {
-                if parent.is_none() {
-                    self.held.push(msg);
+            (PipeRole::Tree { .. }, msg @ Payload::PortionPage { .. }) => {
+                if self.fold.is_some() {
+                    // Folding node (root, or reducing relay).
+                    fold_page(&mut self.fold, &mut self.pages_folded, &msg);
                 } else {
+                    self.relay_points += msg.size_points();
                     self.relay_up.push(msg);
                 }
             }
@@ -453,6 +706,7 @@ impl NodeMachine for PipeMachine {
             }
             (_, other) => unreachable!("pipeline: unexpected payload {other:?}"),
         }
+        self.bump_peak();
     }
 }
 
@@ -496,5 +750,32 @@ mod tests {
             assert_eq!(node.held.len(), n);
         }
         assert_eq!(net.cost_points(), 2 * m * n);
+    }
+
+    #[test]
+    fn zhang_machines_pipeline_tree_levels() {
+        // A star rooted at the hub: every leaf's summary moves in the
+        // same round, so the whole converge-cast takes O(1) rounds
+        // instead of one synchronous step per edge.
+        let g = generators::star(9);
+        let tree = crate::topology::SpanningTree::bfs(&g, 0);
+        let mut net = Network::new(tree.as_graph()).without_transcript();
+        let mut nodes: Vec<ZhangMachine> = (0..9)
+            .map(|v| {
+                let is_root = v == tree.root;
+                ZhangMachine::new(
+                    (!is_root).then_some(tree.parent[v]),
+                    tree.children[v].len(),
+                    (!is_root).then_some(Payload::Opaque { site: v, points: 10 }),
+                )
+            })
+            .collect();
+        drive(&mut net, &mut nodes);
+        assert_eq!(net.cost_points(), 8 * 10);
+        assert!(
+            net.round() <= 3,
+            "star converge-cast must pipeline: {} rounds",
+            net.round()
+        );
     }
 }

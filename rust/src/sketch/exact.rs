@@ -1,0 +1,153 @@
+//! Plain-accumulation sketch: holds every folded page and reproduces
+//! the materialized union byte for byte.
+
+use super::{MergeableSketch, PageTracker};
+use crate::points::WeightedSet;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// The identity sketch: pages are kept (as `Arc` views — no copy) and
+/// concatenated in `(site, page)` order on finish, which is exactly the
+/// order [`crate::coreset::distributed::union`] produces for portions
+/// paginated in order. Memory is the full stream — this is the PR 2
+/// collector behavior, kept as the bit-compatible default.
+#[derive(Default)]
+pub struct ExactSketch {
+    tracker: PageTracker,
+    pages: BTreeMap<(usize, u32), Arc<WeightedSet>>,
+    points: usize,
+    peak: usize,
+}
+
+impl ExactSketch {
+    /// New empty sketch.
+    pub fn new() -> ExactSketch {
+        ExactSketch::default()
+    }
+}
+
+impl MergeableSketch for ExactSketch {
+    fn insert_page(
+        &mut self,
+        site: usize,
+        page: u32,
+        pages: u32,
+        set: &Arc<WeightedSet>,
+    ) -> bool {
+        if !self.tracker.note(site, page, pages) {
+            return false; // duplicate delivery
+        }
+        self.points += set.n();
+        self.peak = self.peak.max(self.points);
+        self.pages.insert((site, page), set.clone());
+        true
+    }
+
+    fn merge(&mut self, other: ExactSketch) {
+        for ((site, page), set) in other.pages {
+            let pages = other.tracker.pages_of(site);
+            self.insert_page(site, page, pages, &set);
+        }
+    }
+
+    fn finish(self) -> Result<WeightedSet> {
+        self.tracker.ensure_complete()?;
+        let d = self
+            .pages
+            .values()
+            .map(|s| s.d())
+            .find(|&d| d > 0)
+            .unwrap_or(1);
+        let mut out = WeightedSet::empty(d);
+        for set in self.pages.values() {
+            if set.n() > 0 {
+                out.extend(set);
+            }
+        }
+        Ok(out)
+    }
+
+    fn points_held(&self) -> usize {
+        self.points
+    }
+
+    fn peak_points(&self) -> usize {
+        self.peak
+    }
+
+    fn complete_sites(&self) -> usize {
+        self.tracker.complete_sites()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{paginate, Payload};
+    use crate::rng::Pcg64;
+    use crate::testutil::arb_portion;
+
+    fn fold_pages(sketch: &mut ExactSketch, pages: &[Payload]) {
+        for p in pages {
+            if let Payload::PortionPage { site, page, pages, set } = p {
+                sketch.insert_page(*site, *page, *pages, set);
+            }
+        }
+    }
+
+    #[test]
+    fn finish_matches_union_order_for_any_arrival_order() {
+        let mut rng = Pcg64::seed_from(5);
+        let portions: Vec<_> = (0..4).map(|_| arb_portion(&mut rng, 30, 3)).collect();
+        let mut pages: Vec<Payload> = portions
+            .iter()
+            .enumerate()
+            .flat_map(|(i, p)| paginate(i, p.clone(), 7))
+            .collect();
+        rng.shuffle(&mut pages);
+        pages.push(pages[0].clone()); // duplicate retransmission
+
+        let mut sketch = ExactSketch::new();
+        fold_pages(&mut sketch, &pages);
+        assert_eq!(sketch.complete_sites(), 4);
+        let total: usize = portions.iter().map(|p| p.n()).sum();
+        assert_eq!(sketch.points_held(), total);
+        assert_eq!(sketch.peak_points(), total);
+
+        let got = sketch.finish().unwrap();
+        let mut want = WeightedSet::empty(3);
+        for p in &portions {
+            want.extend(p);
+        }
+        assert_eq!(got, want, "finish must reproduce the site-order union");
+    }
+
+    #[test]
+    fn finish_rejects_torn_portions() {
+        let mut rng = Pcg64::seed_from(6);
+        let portion = arb_portion(&mut rng, 30, 2);
+        let mut pages = paginate(0, portion, 5);
+        pages.remove(1);
+        let mut sketch = ExactSketch::new();
+        fold_pages(&mut sketch, &pages);
+        assert!(sketch.finish().is_err());
+    }
+
+    #[test]
+    fn merge_combines_streams() {
+        let mut rng = Pcg64::seed_from(7);
+        let a = arb_portion(&mut rng, 20, 2);
+        let b = arb_portion(&mut rng, 20, 2);
+        let mut left = ExactSketch::new();
+        fold_pages(&mut left, &paginate(0, a.clone(), 6));
+        let mut right = ExactSketch::new();
+        fold_pages(&mut right, &paginate(1, b.clone(), 6));
+        left.merge(right);
+        assert_eq!(left.complete_sites(), 2);
+        let got = left.finish().unwrap();
+        let mut want = (*a).clone();
+        want.extend(&b);
+        assert_eq!(got, want);
+    }
+}

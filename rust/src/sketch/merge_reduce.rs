@@ -1,0 +1,405 @@
+//! Bucketed merge-and-reduce sketch: bounded-memory coreset folding.
+//!
+//! Incoming points accumulate in a level-0 bucket of capacity
+//! `bucket_points`. When it fills, its content is *reduced* — re-sketched
+//! with the sensitivity sampler against a fresh local approximate
+//! solution — to at most `bucket_points / 2` points and carried into a
+//! tower of levels like a binary counter: an empty level stores the
+//! carry, an occupied one merges with it and the merged bucket reduces
+//! again, carrying one level up. At any instant the sketch holds at most
+//!
+//! ```text
+//! points_held ≤ levels() · bucket_points
+//! ```
+//!
+//! (level 0 holds ≤ `bucket_points`, every higher level ≤
+//! `bucket_points / 2`, and the transient merge buffer ≤ `bucket_points`
+//! while its source level sits empty) — independent of how many points
+//! stream through. Each reduction composes the coreset property: the
+//! result is a coreset of a coreset, trading a controlled accuracy loss
+//! per level for O(log(stream / bucket)) resident buckets.
+
+use super::{MergeableSketch, PageTracker};
+use crate::clustering::backend::Backend;
+use crate::clustering::{approx_solution, Objective};
+use crate::coreset::sensitivity::{sample_portion, SampleParams};
+use crate::points::WeightedSet;
+use crate::rng::Pcg64;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Lloyd/k-median refinement iterations per bucket re-solve — buckets
+/// are small (≤ `bucket_points`), so a short refinement suffices.
+const REDUCE_SOLVER_ITERS: usize = 10;
+
+/// The merge-and-reduce sketch. See the module docs for the memory
+/// model; construction parameters are the clustering `(k, objective)`
+/// the re-sketches preserve cost for, the bucket capacity, the kernel
+/// backend and a *dedicated* RNG stream (so folding never perturbs the
+/// pipeline's main generator).
+pub struct MergeReduceSketch<'a> {
+    backend: &'a dyn Backend,
+    rng: Pcg64,
+    k: usize,
+    objective: Objective,
+    bucket_points: usize,
+    /// Every reduction outputs at most this many points
+    /// (= `bucket_points / 2`, samples + the k solution centers).
+    reduce_target: usize,
+    tracker: PageTracker,
+    /// Level-0 accumulator, capped at `bucket_points` (`None` until the
+    /// first non-empty insert fixes the dimensionality).
+    level0: Option<WeightedSet>,
+    /// Binary-counter tower: each occupied level holds one reduced
+    /// bucket of ≤ `reduce_target` points.
+    levels: Vec<Option<WeightedSet>>,
+    points: usize,
+    peak: usize,
+    reductions: usize,
+}
+
+impl<'a> MergeReduceSketch<'a> {
+    /// New sketch. `bucket_points == 0` selects the auto capacity
+    /// `max(256, 8(k+1))`; any explicit value is clamped to at least
+    /// `4(k+1)` so a reduction (which always emits the `k` solution
+    /// centers) actually shrinks its bucket.
+    pub fn new(
+        bucket_points: usize,
+        k: usize,
+        objective: Objective,
+        backend: &'a dyn Backend,
+        rng: Pcg64,
+    ) -> MergeReduceSketch<'a> {
+        let auto = (8 * (k + 1)).max(256);
+        let bucket_points = if bucket_points == 0 {
+            auto
+        } else {
+            bucket_points.max(4 * (k + 1))
+        };
+        MergeReduceSketch {
+            backend,
+            rng,
+            k,
+            objective,
+            bucket_points,
+            reduce_target: bucket_points / 2,
+            tracker: PageTracker::default(),
+            level0: None,
+            levels: Vec::new(),
+            points: 0,
+            peak: 0,
+            reductions: 0,
+        }
+    }
+
+    /// Effective bucket capacity in points.
+    pub fn bucket_points(&self) -> usize {
+        self.bucket_points
+    }
+
+    /// Resident buckets: the allocated carry levels plus the level-0
+    /// accumulator. `points_held() ≤ levels() · bucket_points()` at all
+    /// times (the memory bound the property tests pin).
+    pub fn levels(&self) -> usize {
+        self.levels.len() + 1
+    }
+
+    /// Bucket reductions performed so far.
+    pub fn reductions(&self) -> usize {
+        self.reductions
+    }
+
+    /// Fold a weighted set, chunked so level 0 never exceeds the bucket
+    /// capacity even for inputs far larger than one bucket.
+    pub fn insert_set(&mut self, set: &WeightedSet) {
+        if set.n() == 0 {
+            return;
+        }
+        let d = set.d();
+        let mut start = 0;
+        while start < set.n() {
+            let level0 = self.level0.get_or_insert_with(|| WeightedSet::empty(d));
+            assert_eq!(level0.d(), d, "sketch dimensionality mismatch");
+            let room = self.bucket_points - level0.n();
+            let end = (start + room).min(set.n());
+            level0.extend(&set.slice(start, end));
+            self.points += end - start;
+            self.peak = self.peak.max(self.points);
+            start = end;
+            if self.level0.as_ref().unwrap().n() >= self.bucket_points {
+                self.carry();
+            }
+        }
+    }
+
+    /// Reduce the full level-0 bucket and carry it up the tower.
+    fn carry(&mut self) {
+        let full = self.level0.take().expect("carry of empty level 0");
+        let mut carry = self.reduce(full);
+        let mut lvl = 0;
+        loop {
+            if lvl == self.levels.len() {
+                self.levels.push(None);
+            }
+            match self.levels[lvl].take() {
+                None => {
+                    self.levels[lvl] = Some(carry);
+                    break;
+                }
+                Some(mut occupied) => {
+                    occupied.extend(&carry);
+                    carry = self.reduce(occupied);
+                    lvl += 1;
+                }
+            }
+        }
+    }
+
+    /// Re-sketch one bucket with the sensitivity sampler: local
+    /// approximate solution, per-point costs as sensitivities, sample
+    /// `reduce_target − k` points, append the k solution centers with
+    /// residual weights. Inputs already at or under the target pass
+    /// through unchanged (no information loss, no RNG draws).
+    fn reduce(&mut self, set: WeightedSet) -> WeightedSet {
+        if set.n() <= self.reduce_target {
+            return set;
+        }
+        // The sampler needs non-negative masses; coreset streams built
+        // with `clamp_center_weights = false` can carry negative center
+        // weights, which we clamp here (the standard practical choice).
+        let set = if set.weights.iter().any(|&w| w < 0.0) {
+            WeightedSet {
+                points: set.points.clone(),
+                weights: set.weights.iter().map(|&w| w.max(0.0)).collect(),
+            }
+        } else {
+            set
+        };
+        if set.total_weight() <= 0.0 {
+            // Mass-free bucket: nothing the sampler can preserve.
+            // Keep the first `reduce_target` points as-is.
+            let kept = set.slice(0, self.reduce_target);
+            self.points -= set.n();
+            self.points += kept.n();
+            return kept;
+        }
+        let sol = approx_solution(
+            &set,
+            self.k,
+            self.objective,
+            self.backend,
+            &mut self.rng,
+            REDUCE_SOLVER_ITERS,
+        );
+        let asg = self
+            .backend
+            .assign(&set.points, &set.weights, &sol.centers);
+        let total = asg.total(self.objective);
+        let t_local = self.reduce_target.saturating_sub(sol.centers.n()).max(1);
+        let reduced = sample_portion(
+            &set,
+            &sol.centers,
+            &asg,
+            self.objective,
+            &SampleParams {
+                t_local,
+                t_global: t_local,
+                total_sensitivity: total,
+                clamp_center_weights: true,
+            },
+            &mut self.rng,
+        );
+        self.reductions += 1;
+        self.points -= set.n();
+        self.points += reduced.set.n();
+        reduced.set
+    }
+}
+
+impl MergeableSketch for MergeReduceSketch<'_> {
+    fn insert_page(
+        &mut self,
+        site: usize,
+        page: u32,
+        pages: u32,
+        set: &Arc<WeightedSet>,
+    ) -> bool {
+        if !self.tracker.note(site, page, pages) {
+            return false; // duplicate delivery
+        }
+        self.insert_set(set);
+        true
+    }
+
+    fn merge(&mut self, other: MergeReduceSketch<'_>) {
+        // Carry the other sketch's history: the merged meter must not
+        // under-report memory the process actually held, and reduction
+        // counts accumulate.
+        self.peak = self.peak.max(other.peak);
+        self.reductions += other.reductions;
+        self.tracker.merge(other.tracker);
+        if let Some(l0) = other.level0 {
+            self.insert_set(&l0);
+        }
+        for level in other.levels.into_iter().flatten() {
+            self.insert_set(&level);
+        }
+    }
+
+    fn finish(self) -> Result<WeightedSet> {
+        self.tracker.ensure_complete()?;
+        let d = self
+            .levels
+            .iter()
+            .flatten()
+            .chain(self.level0.iter())
+            .map(|s| s.d())
+            .next()
+            .unwrap_or(1);
+        let mut out = WeightedSet::empty(d);
+        // Deepest (oldest) buckets first, the level-0 tail last — a
+        // fixed, deterministic order.
+        for level in self.levels.iter().rev().flatten() {
+            out.extend(level);
+        }
+        if let Some(l0) = &self.level0 {
+            out.extend(l0);
+        }
+        Ok(out)
+    }
+
+    fn points_held(&self) -> usize {
+        self.points
+    }
+
+    fn peak_points(&self) -> usize {
+        self.peak
+    }
+
+    fn complete_sites(&self) -> usize {
+        self.tracker.complete_sites()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::clustering::cost_of;
+    use crate::data::synthetic::gaussian_mixture;
+    use crate::points::Dataset;
+
+    fn sketch(bucket: usize, k: usize) -> MergeReduceSketch<'static> {
+        MergeReduceSketch::new(
+            bucket,
+            k,
+            Objective::KMeans,
+            &RustBackend,
+            Pcg64::seed_from(99),
+        )
+    }
+
+    #[test]
+    fn bucket_capacity_resolution() {
+        assert_eq!(sketch(0, 4).bucket_points(), 256);
+        assert_eq!(sketch(0, 100).bucket_points(), 808);
+        assert_eq!(sketch(64, 4).bucket_points(), 64);
+        assert_eq!(sketch(8, 4).bucket_points(), 20, "clamped to 4(k+1)");
+    }
+
+    #[test]
+    fn peak_stays_within_levels_times_bucket() {
+        let mut rng = Pcg64::seed_from(1);
+        let data = gaussian_mixture(&mut rng, 6_000, 4, 5);
+        let set = WeightedSet::unit(data);
+        let mut s = sketch(128, 4);
+        // Stream in uneven slices, including one far larger than a
+        // bucket (the chunked insert must keep level 0 capped).
+        let cuts = [0usize, 700, 713, 2_900, 2_903, 6_000];
+        for w in cuts.windows(2) {
+            s.insert_set(&set.slice(w[0], w[1]));
+            assert!(
+                s.points_held() <= s.levels() * s.bucket_points(),
+                "held {} > {} levels x {}",
+                s.points_held(),
+                s.levels(),
+                s.bucket_points()
+            );
+        }
+        assert!(s.reductions() > 0, "6k points must trigger reductions");
+        assert!(
+            s.peak_points() <= s.levels() * s.bucket_points(),
+            "peak {} > {} levels x {}",
+            s.peak_points(),
+            s.levels(),
+            s.bucket_points()
+        );
+        let out = s.finish().unwrap();
+        assert!(out.n() < 6_000, "stream must have been compressed");
+    }
+
+    #[test]
+    fn mass_is_approximately_preserved() {
+        let mut rng = Pcg64::seed_from(2);
+        let data = gaussian_mixture(&mut rng, 5_000, 5, 4);
+        let set = WeightedSet::unit(data);
+        let mut s = sketch(256, 4);
+        s.insert_set(&set);
+        let out = s.finish().unwrap();
+        let ratio = out.total_weight() / set.total_weight();
+        assert!((ratio - 1.0).abs() < 0.35, "mass ratio {ratio}");
+    }
+
+    #[test]
+    fn sketched_stream_preserves_cost_on_probe_centers() {
+        let mut rng = Pcg64::seed_from(3);
+        let data = gaussian_mixture(&mut rng, 8_000, 5, 4);
+        let set = WeightedSet::unit(data);
+        let mut s = sketch(512, 4);
+        s.insert_set(&set);
+        let out = s.finish().unwrap();
+        for _ in 0..5 {
+            let mut probe = Dataset::with_capacity(4, 5);
+            for _ in 0..4 {
+                let c: Vec<f32> = (0..5).map(|_| 2.0 * rng.normal() as f32).collect();
+                probe.push(&c);
+            }
+            let truth = cost_of(&set, &probe, Objective::KMeans);
+            let approx = cost_of(&out, &probe, Objective::KMeans);
+            let err = (approx - truth).abs() / truth;
+            assert!(err < 0.3, "distortion {err}");
+        }
+    }
+
+    #[test]
+    fn merge_composes_two_streams() {
+        let mut rng = Pcg64::seed_from(4);
+        let a = WeightedSet::unit(gaussian_mixture(&mut rng, 3_000, 4, 3));
+        let b = WeightedSet::unit(gaussian_mixture(&mut rng, 3_000, 4, 3));
+        let mut left = sketch(128, 3);
+        left.insert_set(&a);
+        let mut right = sketch(128, 3);
+        right.insert_set(&b);
+        let right_peak = right.peak_points();
+        let right_reductions = right.reductions();
+        left.merge(right);
+        assert!(left.points_held() <= left.levels() * left.bucket_points());
+        // Merge carries history: the merged meter covers both sketches.
+        assert!(left.peak_points() >= right_peak);
+        assert!(left.reductions() >= right_reductions);
+        let out = left.finish().unwrap();
+        let total = a.total_weight() + b.total_weight();
+        assert!((out.total_weight() / total - 1.0).abs() < 0.35);
+    }
+
+    #[test]
+    fn small_stream_passes_through_unchanged() {
+        let mut rng = Pcg64::seed_from(5);
+        let data = gaussian_mixture(&mut rng, 60, 3, 2);
+        let set = WeightedSet::unit(data);
+        let mut s = sketch(128, 3);
+        s.insert_set(&set);
+        assert_eq!(s.reductions(), 0);
+        assert_eq!(s.finish().unwrap(), set, "under one bucket: identity");
+    }
+}

@@ -1,0 +1,377 @@
+//! Mergeable coreset sketches — the bounded-memory *solve* side of the
+//! streaming story.
+//!
+//! PR 2 made the *wire* bounded (paged portions + link capacity keep the
+//! receiver inbox at `O(pages_in_flight · page_points)`), but a
+//! collector still had to materialize the full `t + nk`-point coreset
+//! before solving. Coresets compose: the union of two coresets is a
+//! coreset of the union, and *re-sketching* that union is again a
+//! coreset (the merge-and-reduce principle behind streaming and
+//! MapReduce coreset constructions). A node can therefore fold arriving
+//! pages into a [`MergeableSketch`] the moment they land and never hold
+//! more than a bounded working set:
+//!
+//! - [`ExactSketch`] — plain accumulation keyed by `(site, page)`. Its
+//!   [`finish`](MergeableSketch::finish) reproduces the union of the
+//!   portions in site order **byte for byte**, so the default pipeline
+//!   stays bit-compatible with the materialized exchange.
+//! - [`MergeReduceSketch`] — bucketed merge-and-reduce: pages accumulate
+//!   in a level-0 bucket of at most `bucket_points` points; a full
+//!   bucket is re-sketched with the sensitivity sampler
+//!   ([`crate::coreset::sensitivity`]) down to `bucket_points / 2`
+//!   points and carried into a binary-counter tower of levels, so the
+//!   resident set is at most `levels() · bucket_points` regardless of
+//!   how many points stream through.
+//!
+//! The protocol engine holds one sketch per folding node: the collector
+//! on any topology; every node on a graph in exact mode (flooding hands
+//! everyone the full stream — Algorithm 2's all-nodes-hold semantics,
+//! metered per node; in merge-reduce mode the simulator elides the
+//! non-collector copies, which would be bit-identical folds, to avoid
+//! n× bucket re-solves); and every relay on a tree in merge-reduce
+//! mode, where the relay forwards its *reduced* stream upstream —
+//! in-network reduction. [`SketchPlan`] selects the implementation and
+//! is plumbed from the CLI/config down to
+//! [`crate::protocol::run_pipeline`] and the lazy streaming
+//! coordinator.
+
+mod exact;
+mod merge_reduce;
+
+pub use exact::ExactSketch;
+pub use merge_reduce::MergeReduceSketch;
+
+use crate::clustering::backend::Backend;
+use crate::clustering::Objective;
+use crate::coreset::Coreset;
+use crate::points::WeightedSet;
+use crate::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Which sketch implementation folds the coreset stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SketchMode {
+    /// Plain accumulation: byte-for-byte the materialized exchange.
+    #[default]
+    Exact,
+    /// Bucketed merge-and-reduce: memory bounded by
+    /// `levels · bucket_points` at every folding node.
+    MergeReduce,
+}
+
+impl SketchMode {
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SketchMode::Exact => "exact",
+            SketchMode::MergeReduce => "merge-reduce",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<SketchMode> {
+        Some(match s {
+            "exact" => SketchMode::Exact,
+            "merge-reduce" => SketchMode::MergeReduce,
+            _ => return None,
+        })
+    }
+}
+
+/// How the pipeline folds arriving coreset pages: which sketch, and how
+/// big its buckets are.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SketchPlan {
+    /// Sketch implementation.
+    pub mode: SketchMode,
+    /// Bucket capacity of the merge-and-reduce sketch in points
+    /// (`0` = auto: `max(256, 8(k+1))`; ignored in exact mode).
+    pub bucket_points: usize,
+}
+
+impl SketchPlan {
+    /// An exact (bit-compatible) plan — the default.
+    pub fn exact() -> SketchPlan {
+        SketchPlan::default()
+    }
+
+    /// A merge-and-reduce plan with the given bucket capacity
+    /// (`0` = auto).
+    pub fn merge_reduce(bucket_points: usize) -> SketchPlan {
+        SketchPlan {
+            mode: SketchMode::MergeReduce,
+            bucket_points,
+        }
+    }
+
+    /// Build one sketch instance for a folding node. `rng` is the
+    /// node's dedicated stream (merge-and-reduce re-solves draw from it;
+    /// the exact sketch ignores it), so the main pipeline RNG is never
+    /// perturbed and exact mode stays bit-compatible.
+    pub fn build<'a>(
+        &self,
+        k: usize,
+        objective: Objective,
+        backend: &'a dyn Backend,
+        rng: Pcg64,
+    ) -> Sketch<'a> {
+        match self.mode {
+            SketchMode::Exact => Sketch::Exact(ExactSketch::new()),
+            SketchMode::MergeReduce => Sketch::MergeReduce(MergeReduceSketch::new(
+                self.bucket_points,
+                k,
+                objective,
+                backend,
+                rng,
+            )),
+        }
+    }
+
+    /// Fold already-built portions (one page per site) and finish — the
+    /// host-side path used by the lazy streaming coordinator. Exact mode
+    /// reproduces [`crate::coreset::distributed::union`] byte for byte.
+    pub fn fold_portions<'a>(
+        &self,
+        portions: &[Coreset],
+        k: usize,
+        objective: Objective,
+        backend: &'a dyn Backend,
+        rng: Pcg64,
+    ) -> Result<(Coreset, usize)> {
+        if self.mode == SketchMode::Exact {
+            // Fast path: the exact fold of whole portions IS the union
+            // (same site order), so skip the page interface and its
+            // extra copy; the peak equals the materialized size, as the
+            // exact sketch would report.
+            let coreset = crate::coreset::distributed::union(portions);
+            let peak = coreset.set.n();
+            return Ok((coreset, peak));
+        }
+        // Merge-and-reduce: fold the portion sets directly — no page
+        // wrapper, so nothing is copied beyond the bucket inserts.
+        let mut sketch =
+            MergeReduceSketch::new(self.bucket_points, k, objective, backend, rng);
+        for portion in portions {
+            sketch.insert_set(&portion.set);
+        }
+        let peak = sketch.peak_points();
+        let set = sketch.finish()?;
+        let sampled = set.n();
+        Ok((Coreset { set, sampled }, peak))
+    }
+}
+
+/// A sketch that folds an incoming stream of coreset-portion pages and
+/// can merge with another sketch of the same kind.
+///
+/// Contract: pages of one site may arrive in any order and interleaved
+/// across sites; re-inserting a `(site, page)` pair already folded is a
+/// no-op (so receivers don't have to dedup retransmissions themselves);
+/// [`finish`](Self::finish) errors on a torn portion (some page of a
+/// site missing).
+pub trait MergeableSketch {
+    /// Fold one page of site `site` (`page` of `pages` total).
+    /// Returns `false` when this exact `(site, page)` pair was already
+    /// folded (duplicate delivery — a no-op).
+    fn insert_page(&mut self, site: usize, page: u32, pages: u32, set: &Arc<WeightedSet>)
+        -> bool;
+
+    /// Fold everything `other` holds into `self`.
+    fn merge(&mut self, other: Self)
+    where
+        Self: Sized;
+
+    /// Consume the sketch and produce the folded weighted set.
+    fn finish(self) -> Result<WeightedSet>;
+
+    /// Points currently resident in the sketch's buffers.
+    fn points_held(&self) -> usize;
+
+    /// High-water mark of [`points_held`](Self::points_held) — the
+    /// node-side memory meter.
+    fn peak_points(&self) -> usize;
+
+    /// Number of sites whose every page has been folded.
+    fn complete_sites(&self) -> usize;
+}
+
+/// Static dispatch over the two sketch implementations (the protocol
+/// machines hold one per folding node).
+// One sketch per node, held behind an Option in the machine — the size
+// difference between the two variants is irrelevant at that count.
+#[allow(clippy::large_enum_variant)]
+pub enum Sketch<'a> {
+    /// Plain accumulation.
+    Exact(ExactSketch),
+    /// Bucketed merge-and-reduce.
+    MergeReduce(MergeReduceSketch<'a>),
+}
+
+impl Sketch<'_> {
+    /// See [`MergeableSketch::insert_page`].
+    pub fn insert_page(
+        &mut self,
+        site: usize,
+        page: u32,
+        pages: u32,
+        set: &Arc<WeightedSet>,
+    ) -> bool {
+        match self {
+            Sketch::Exact(s) => s.insert_page(site, page, pages, set),
+            Sketch::MergeReduce(s) => s.insert_page(site, page, pages, set),
+        }
+    }
+
+    /// See [`MergeableSketch::finish`].
+    pub fn finish(self) -> Result<WeightedSet> {
+        match self {
+            Sketch::Exact(s) => s.finish(),
+            Sketch::MergeReduce(s) => s.finish(),
+        }
+    }
+
+    /// See [`MergeableSketch::points_held`].
+    pub fn points_held(&self) -> usize {
+        match self {
+            Sketch::Exact(s) => s.points_held(),
+            Sketch::MergeReduce(s) => s.points_held(),
+        }
+    }
+
+    /// See [`MergeableSketch::peak_points`].
+    pub fn peak_points(&self) -> usize {
+        match self {
+            Sketch::Exact(s) => s.peak_points(),
+            Sketch::MergeReduce(s) => s.peak_points(),
+        }
+    }
+
+    /// See [`MergeableSketch::complete_sites`].
+    pub fn complete_sites(&self) -> usize {
+        match self {
+            Sketch::Exact(s) => s.complete_sites(),
+            Sketch::MergeReduce(s) => s.complete_sites(),
+        }
+    }
+}
+
+/// Per-site page-completion bookkeeping shared by both sketch
+/// implementations: which pages of which site have been folded, dedup
+/// of retransmitted pages, and torn-portion detection.
+#[derive(Debug, Default)]
+pub(crate) struct PageTracker {
+    sites: BTreeMap<usize, SitePages>,
+    complete: usize,
+}
+
+#[derive(Debug)]
+struct SitePages {
+    got: Vec<bool>,
+    remaining: usize,
+}
+
+impl PageTracker {
+    /// Record page `page` of `pages` for `site`. Returns `false` when
+    /// this exact page was already recorded (duplicate delivery — the
+    /// caller must skip folding it). Panics on an inconsistent `pages`
+    /// count for a site: that is a protocol bug, not a network artifact.
+    pub(crate) fn note(&mut self, site: usize, page: u32, pages: u32) -> bool {
+        assert!(page < pages, "page {page} of {pages}");
+        let entry = self.sites.entry(site).or_insert_with(|| SitePages {
+            got: vec![false; pages as usize],
+            remaining: pages as usize,
+        });
+        assert_eq!(
+            entry.got.len(),
+            pages as usize,
+            "site {site}: page-count mismatch"
+        );
+        if entry.got[page as usize] {
+            return false;
+        }
+        entry.got[page as usize] = true;
+        entry.remaining -= 1;
+        if entry.remaining == 0 {
+            self.complete += 1;
+        }
+        true
+    }
+
+    /// Total pages recorded so far for `site` (0 when unseen), plus the
+    /// expected count, for merge replay.
+    pub(crate) fn pages_of(&self, site: usize) -> u32 {
+        self.sites.get(&site).map_or(0, |s| s.got.len() as u32)
+    }
+
+    /// Number of sites whose every page arrived.
+    pub(crate) fn complete_sites(&self) -> usize {
+        self.complete
+    }
+
+    /// Fold another tracker's bookkeeping into this one (sketch merge).
+    /// Panics on a page-count mismatch for a shared site, like
+    /// [`note`](Self::note).
+    pub(crate) fn merge(&mut self, other: PageTracker) {
+        for (site, pages) in other.sites {
+            let want = pages.got.len() as u32;
+            for (page, got) in pages.got.iter().enumerate() {
+                if *got {
+                    self.note(site, page as u32, want);
+                }
+            }
+        }
+    }
+
+    /// Error if any site is torn (pages missing).
+    pub(crate) fn ensure_complete(&self) -> Result<()> {
+        for (site, pages) in &self.sites {
+            if pages.remaining > 0 {
+                bail!(
+                    "site {site}: {} of {} pages missing",
+                    pages.remaining,
+                    pages.got.len()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in [SketchMode::Exact, SketchMode::MergeReduce] {
+            assert_eq!(SketchMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SketchMode::parse("fancy"), None);
+        assert_eq!(SketchMode::default(), SketchMode::Exact);
+        assert_eq!(SketchPlan::default().mode, SketchMode::Exact);
+    }
+
+    #[test]
+    fn page_tracker_counts_and_dedups() {
+        let mut t = PageTracker::default();
+        assert!(t.note(3, 0, 2));
+        assert_eq!(t.complete_sites(), 0);
+        assert!(t.ensure_complete().is_err());
+        assert!(!t.note(3, 0, 2), "duplicate page must be rejected");
+        assert!(t.note(3, 1, 2));
+        assert_eq!(t.complete_sites(), 1);
+        assert!(t.ensure_complete().is_ok());
+        assert_eq!(t.pages_of(3), 2);
+        assert_eq!(t.pages_of(9), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "page-count mismatch")]
+    fn page_tracker_rejects_inconsistent_counts() {
+        let mut t = PageTracker::default();
+        t.note(1, 0, 2);
+        t.note(1, 0, 3);
+    }
+}

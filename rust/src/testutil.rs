@@ -2,9 +2,11 @@
 //! seeded random-instance generators + a `for_all` driver that reports
 //! the failing seed so any counterexample reproduces deterministically.
 
+use crate::partition::Scheme;
 use crate::points::{Dataset, WeightedSet};
 use crate::rng::Pcg64;
 use crate::topology::{generators, Graph};
+use std::sync::Arc;
 
 /// Run `prop` over `cases` generated instances; panics with the seed of
 /// the first failing case (re-run with that seed to debug).
@@ -63,6 +65,56 @@ pub fn arb_weighted_set(rng: &mut Pcg64, max_n: usize, max_d: usize) -> Weighted
     WeightedSet::new(data, weights)
 }
 
+/// A random coreset-portion stand-in of 1..=`max_n` normal points with
+/// weights in (0.1, 1.1], `Arc`-wrapped like a page payload — the
+/// shared generator behind the paging/sketch property tests and the
+/// message-plane benches.
+pub fn arb_portion(rng: &mut Pcg64, max_n: usize, d: usize) -> Arc<WeightedSet> {
+    let n = 1 + rng.below(max_n);
+    let mut out = WeightedSet::empty(d);
+    for _ in 0..n {
+        let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        out.push(&p, rng.uniform() + 0.1);
+    }
+    Arc::new(out)
+}
+
+/// A unit-weight portion of exactly `n` normal points (the fixed-size
+/// variant the comm benches table over).
+pub fn unit_portion(rng: &mut Pcg64, n: usize, d: usize) -> Arc<WeightedSet> {
+    let mut out = WeightedSet::empty(d);
+    for _ in 0..n {
+        let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        out.push(&p, 1.0);
+    }
+    Arc::new(out)
+}
+
+/// Per-site local sets for pipeline tests: a Gaussian mixture of
+/// `points` points in `R^d` with `modes` modes, partitioned over
+/// `sites` sites under `scheme`. `drop_empty` removes empty sites
+/// (required before local solves without the empty-site patching the
+/// experiment driver applies).
+pub fn mixture_sites(
+    seed: u64,
+    points: usize,
+    d: usize,
+    modes: usize,
+    sites: usize,
+    scheme: Scheme,
+    drop_empty: bool,
+) -> Vec<WeightedSet> {
+    let mut rng = Pcg64::seed_from(seed);
+    let data = crate::data::synthetic::gaussian_mixture(&mut rng, points, d, modes);
+    scheme
+        .partition(&data, sites, &mut rng)
+        .expect("scheme needs no graph")
+        .into_iter()
+        .filter(|p| !drop_empty || p.n() > 0)
+        .map(WeightedSet::unit)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +143,21 @@ mod tests {
             prop_assert!(connected(g), "disconnected graph n={}", g.n());
             Ok(())
         });
+    }
+
+    #[test]
+    fn portion_generators_shapes() {
+        let mut rng = Pcg64::seed_from(5);
+        let p = arb_portion(&mut rng, 50, 3);
+        assert!(p.n() >= 1 && p.n() <= 50);
+        assert_eq!(p.d(), 3);
+        assert!(p.weights.iter().all(|&w| w > 0.0));
+        let u = unit_portion(&mut rng, 7, 2);
+        assert_eq!(u.n(), 7);
+        assert!(u.weights.iter().all(|&w| w == 1.0));
+        let sites = mixture_sites(1, 500, 4, 3, 5, Scheme::Uniform, false);
+        assert_eq!(sites.len(), 5);
+        assert!(sites.iter().map(|s| s.n()).sum::<usize>() >= 500);
     }
 
     #[test]

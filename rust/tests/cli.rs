@@ -127,6 +127,53 @@ fn paged_channel_flags_accepted() {
 }
 
 #[test]
+fn sketch_flags_accepted_and_reported() {
+    let out = distclus()
+        .args([
+            "run",
+            "--dataset",
+            "synthetic",
+            "--scale",
+            "0.01",
+            "--topology",
+            "star",
+            "--sites",
+            "4",
+            "--algorithm",
+            "distributed",
+            "--t",
+            "200",
+            "--reps",
+            "1",
+            "--seed",
+            "3",
+            "--page-points",
+            "16",
+            "--sketch",
+            "merge-reduce",
+            "--bucket-points",
+            "64",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("node-peak"), "report: {text}");
+    assert!(text.contains("merge-reduce"), "report: {text}");
+
+    let out = distclus()
+        .args(["run", "--sketch", "lossy"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("lossy"));
+}
+
+#[test]
 fn rejects_unknown_flags_and_values() {
     let out = distclus()
         .args(["run", "--bogus-flag", "1"])

@@ -25,18 +25,9 @@ use distclus::protocol::{
     flood_multi, flood_reliable_multi, run_pipeline, CoresetPlan, RunResult, Topology,
 };
 use distclus::rng::Pcg64;
-use distclus::testutil::{arb_connected_graph, for_all};
+use distclus::sketch::SketchPlan;
+use distclus::testutil::{arb_connected_graph, arb_portion, for_all, mixture_sites};
 use std::sync::Arc;
-
-fn arb_portion(rng: &mut Pcg64, max_n: usize, d: usize) -> Arc<WeightedSet> {
-    let n = 1 + rng.below(max_n);
-    let mut out = WeightedSet::empty(d);
-    for _ in 0..n {
-        let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-        out.push(&p, rng.uniform() + 0.1);
-    }
-    Arc::new(out)
-}
 
 #[test]
 fn prop_paged_flood_reassembly_is_order_invariant() {
@@ -124,14 +115,7 @@ fn prop_paged_reassembly_is_loss_retry_invariant() {
 }
 
 fn pipeline_sites(seed: u64, sites: usize, points: usize) -> Vec<WeightedSet> {
-    let mut rng = Pcg64::seed_from(seed);
-    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, points, 4, 4);
-    Scheme::Uniform
-        .partition(&data, sites, &mut rng)
-        .unwrap()
-        .into_iter()
-        .map(WeightedSet::unit)
-        .collect()
+    mixture_sites(seed, points, 4, 4, sites, Scheme::Uniform, false)
 }
 
 fn graph_run(
@@ -147,6 +131,7 @@ fn graph_run(
         locals,
         CoresetPlan::Distributed(cfg),
         &channel,
+        &SketchPlan::exact(),
         &RustBackend,
         &mut rng,
         exec,
@@ -268,6 +253,7 @@ fn paged_tree_pipeline_bounds_peak_too() {
             &locals,
             CoresetPlan::Distributed(&cfg),
             &channel,
+            &SketchPlan::exact(),
             &RustBackend,
             &mut rng,
             ExecPolicy::Sequential,

@@ -15,18 +15,12 @@ use distclus::partition::{PartitionError, Scheme};
 use distclus::points::WeightedSet;
 use distclus::protocol::{cluster_on_graph_exec, run_pipeline, CoresetPlan, Topology};
 use distclus::rng::Pcg64;
+use distclus::sketch::SketchPlan;
+use distclus::testutil::mixture_sites;
 use distclus::topology::generators;
 
 fn sites(seed: u64, n: usize, count: usize) -> Vec<WeightedSet> {
-    let mut rng = Pcg64::seed_from(seed);
-    let data = distclus::data::synthetic::gaussian_mixture(&mut rng, n, 6, 4);
-    Scheme::Weighted
-        .partition(&data, count, &mut rng)
-        .unwrap()
-        .into_iter()
-        .filter(|p| p.n() > 0)
-        .map(WeightedSet::unit)
-        .collect()
+    mixture_sites(seed, n, 6, 4, count, Scheme::Weighted, true)
 }
 
 fn portions_at(threads: usize, locals: &[WeightedSet]) -> Vec<Coreset> {
@@ -127,6 +121,7 @@ fn paged_pipeline_meters_are_thread_count_invariant() {
             &locals,
             CoresetPlan::Distributed(&cfg),
             &channel,
+            &SketchPlan::exact(),
             &RustBackend,
             &mut rng,
             ExecPolicy::Parallel {
@@ -145,6 +140,9 @@ fn paged_pipeline_meters_are_thread_count_invariant() {
     assert_eq!(a.rounds, c.rounds);
     assert_eq!(a.peak_points, b.peak_points);
     assert_eq!(a.peak_points, c.peak_points);
+    // The node-side fold meter is simulation state like the rest.
+    assert_eq!(a.collector_peak, b.collector_peak);
+    assert_eq!(a.node_peaks, c.node_peaks);
 }
 
 #[test]

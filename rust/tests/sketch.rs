@@ -1,0 +1,406 @@
+//! Mergeable-sketch subsystem — property tests and the bounded-memory
+//! acceptance criteria of the streaming-solve PR.
+//!
+//! Pinned here:
+//! 1. the merge-and-reduce sketch's resident set stays within
+//!    `levels() · bucket_points` for *any* page arrival order, page
+//!    size and interleaving (property test);
+//! 2. `--sketch exact` is bit-compatible with the materialized
+//!    construction — the pipeline's centers and coreset equal the
+//!    host-side `build_portions → union → solve` chain at 1/2/8 worker
+//!    threads, paged or monolithic;
+//! 3. the merge-and-reduce solve stays within 10% of the materialized
+//!    solve on the standard mixture workloads (drift test);
+//! 4. acceptance (star, `page_points = 64`, `t = 2048`): collector
+//!    memory under merge-reduce is strictly below the exact (PR 2)
+//!    collector peak and within the levels·bucket bound, at unchanged
+//!    wire totals on a graph — while on a tree, in-network reduction
+//!    cuts the wire total too.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::{approx_solution, cost_of, Objective};
+use distclus::coreset::distributed::{self, DistributedConfig};
+use distclus::exec::ExecPolicy;
+use distclus::network::{paginate, ChannelConfig, Payload};
+use distclus::partition::Scheme;
+use distclus::points::WeightedSet;
+use distclus::prop_assert;
+use distclus::protocol::{run_pipeline, CoresetPlan, RunResult, Topology};
+use distclus::rng::Pcg64;
+use distclus::sketch::{MergeReduceSketch, MergeableSketch, SketchPlan};
+use distclus::testutil::{arb_portion, for_all, mixture_sites};
+
+#[test]
+fn prop_merge_reduce_peak_bounded_under_random_arrival() {
+    for_all(
+        20,
+        81,
+        |rng| {
+            let sites = 2 + rng.below(5);
+            let portions: Vec<_> = (0..sites).map(|_| arb_portion(rng, 600, 3)).collect();
+            let bucket = 64 + rng.below(128);
+            let page_points = 1 + rng.below(96); // pages may exceed the bucket
+            let seed = rng.next_u64();
+            (portions, bucket, page_points, seed)
+        },
+        |(portions, bucket, page_points, seed)| {
+            let mut rng = Pcg64::seed_from(*seed);
+            let mut pages: Vec<Payload> = portions
+                .iter()
+                .enumerate()
+                .flat_map(|(i, p)| paginate(i, p.clone(), *page_points))
+                .collect();
+            rng.shuffle(&mut pages);
+            let mut sketch = MergeReduceSketch::new(
+                *bucket,
+                3,
+                Objective::KMeans,
+                &RustBackend,
+                rng.split(),
+            );
+            for p in &pages {
+                if let Payload::PortionPage { site, page, pages, set } = p {
+                    sketch.insert_page(*site, *page, *pages, set);
+                }
+                prop_assert!(
+                    sketch.points_held() <= sketch.levels() * sketch.bucket_points(),
+                    "held {} > {} levels x {} bucket",
+                    sketch.points_held(),
+                    sketch.levels(),
+                    sketch.bucket_points()
+                );
+            }
+            let bound = sketch.levels() * sketch.bucket_points();
+            prop_assert!(
+                sketch.peak_points() <= bound,
+                "peak {} > bound {}",
+                sketch.peak_points(),
+                bound
+            );
+            prop_assert!(
+                sketch.complete_sites() == portions.len(),
+                "only {} of {} sites complete",
+                sketch.complete_sites(),
+                portions.len()
+            );
+            let total_mass: f64 = portions.iter().map(|p| p.total_weight()).sum();
+            let out = sketch.finish().map_err(|e| e.to_string())?;
+            // Mass sanity only — small buckets compound sampling noise
+            // over many levels; the tight mass checks live in the
+            // sketch's unit tests at realistic bucket sizes.
+            let ratio = out.total_weight() / total_mass;
+            prop_assert!(ratio > 0.3 && ratio < 2.0, "mass ratio {ratio}");
+            Ok(())
+        },
+    );
+}
+
+fn star_locals(seed: u64, sites: usize, points: usize) -> Vec<WeightedSet> {
+    mixture_sites(seed, points, 4, 4, sites, Scheme::Uniform, false)
+}
+
+fn run(
+    topology: Topology<'_>,
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    channel: ChannelConfig,
+    sketch: SketchPlan,
+    exec: ExecPolicy,
+    seed: u64,
+) -> RunResult {
+    let mut rng = Pcg64::seed_from(seed);
+    run_pipeline(
+        topology,
+        locals,
+        CoresetPlan::Distributed(cfg),
+        &channel,
+        &sketch,
+        &RustBackend,
+        &mut rng,
+        exec,
+    )
+    .unwrap()
+}
+
+/// The materialized (PR 2) construction, reproduced host-side: round 1,
+/// round 2, union, solve — the exact pipeline must match it bit for bit.
+fn materialized(
+    locals: &[WeightedSet],
+    cfg: &DistributedConfig,
+    exec: ExecPolicy,
+    seed: u64,
+) -> (WeightedSet, distclus::points::Dataset) {
+    let mut rng = Pcg64::seed_from(seed);
+    let portions = distributed::build_portions_exec(locals, cfg, &RustBackend, &mut rng, exec);
+    let coreset = distributed::union(&portions);
+    let sol = approx_solution(
+        &coreset.set,
+        cfg.k,
+        cfg.objective,
+        &RustBackend,
+        &mut rng,
+        40,
+    );
+    (coreset.set, sol.centers)
+}
+
+#[test]
+fn exact_mode_is_bit_identical_to_materialized_construction() {
+    // The bit-compatibility contract behind `--sketch exact`: folding
+    // pages through the sketch and solving on finish() consumes exactly
+    // the RNG draws of the materialized chain, so centers and coreset
+    // agree byte for byte — at every worker-thread count, paged or not.
+    let locals = star_locals(17, 5, 3_000);
+    let g = distclus::topology::generators::star(5);
+    let cfg = DistributedConfig {
+        t: 512,
+        k: 4,
+        ..Default::default()
+    };
+    for threads in [1usize, 2, 8] {
+        let exec = ExecPolicy::Parallel { threads };
+        let (want_set, want_centers) = materialized(&locals, &cfg, exec, 23);
+        for channel in [
+            ChannelConfig::default(),
+            ChannelConfig {
+                page_points: 64,
+                link_capacity: 64,
+            },
+        ] {
+            let got = run(
+                Topology::Graph(&g),
+                &locals,
+                &cfg,
+                channel,
+                SketchPlan::exact(),
+                exec,
+                23,
+            );
+            assert_eq!(got.coreset.set, want_set, "threads={threads}");
+            assert_eq!(got.centers, want_centers, "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn merge_reduce_solve_cost_within_ten_percent_of_materialized() {
+    // Drift test: folding through the merge-and-reduce tower loses a
+    // bounded amount of coreset fidelity per level; at a sane bucket
+    // size the final solve must stay within 10% of the materialized
+    // solve on the standard mixture workloads.
+    for (seed, objective) in [(41u64, Objective::KMeans), (43, Objective::KMedian)] {
+        let locals = mixture_sites(seed, 8_000, 6, 4, 5, Scheme::Uniform, false);
+        let global = WeightedSet::union(locals.iter());
+        let g = distclus::topology::generators::star(5);
+        let cfg = DistributedConfig {
+            t: 1_024,
+            k: 4,
+            objective,
+            ..Default::default()
+        };
+        let channel = ChannelConfig {
+            page_points: 64,
+            link_capacity: 0,
+        };
+        let exact = run(
+            Topology::Graph(&g),
+            &locals,
+            &cfg,
+            channel,
+            SketchPlan::exact(),
+            ExecPolicy::Sequential,
+            seed + 1,
+        );
+        let reduced = run(
+            Topology::Graph(&g),
+            &locals,
+            &cfg,
+            channel,
+            SketchPlan::merge_reduce(512),
+            ExecPolicy::Sequential,
+            seed + 1,
+        );
+        let c_exact = cost_of(&global, &exact.centers, objective);
+        let c_reduced = cost_of(&global, &reduced.centers, objective);
+        let drift = (c_reduced - c_exact).abs() / c_exact;
+        assert!(
+            drift < 0.10,
+            "{objective:?}: merge-reduce solve drifted {drift:.3} (exact {c_exact}, reduced {c_reduced})"
+        );
+    }
+}
+
+#[test]
+fn acceptance_star_page64_t2048_collector_memory() {
+    // The PR acceptance point: star topology, page_points = 64,
+    // t = 2048. Exact folding materializes the full t + nk coreset at
+    // the collector; the merge-and-reduce sketch must hold strictly
+    // less, within its levels·bucket bound, at identical wire totals
+    // (a graph sketch is solve-side only) — and exact mode reproduces
+    // the materialized centers bit-identically at 1/2/8 threads.
+    let locals = star_locals(29, 5, 4_000);
+    let g = distclus::topology::generators::star(5);
+    let cfg = DistributedConfig {
+        t: 2_048,
+        k: 4,
+        ..Default::default()
+    };
+    let channel = ChannelConfig {
+        page_points: 64,
+        link_capacity: 64,
+    };
+    let bucket = 256usize;
+
+    let exact = run(
+        Topology::Graph(&g),
+        &locals,
+        &cfg,
+        channel,
+        SketchPlan::exact(),
+        ExecPolicy::Sequential,
+        31,
+    );
+    let reduced = run(
+        Topology::Graph(&g),
+        &locals,
+        &cfg,
+        channel,
+        SketchPlan::merge_reduce(bucket),
+        ExecPolicy::Sequential,
+        31,
+    );
+
+    // Wire accounting is untouched by the sketch choice on a graph:
+    // the exact 2m(n + t + nk) formula in both modes.
+    let expected = 2 * g.m() * g.n() + 2 * g.m() * (cfg.t + g.n() * cfg.k);
+    assert_eq!(exact.comm_points, expected);
+    assert_eq!(reduced.comm_points, expected);
+
+    // Exact materializes the whole coreset at the collector.
+    let full = cfg.t + g.n() * cfg.k;
+    assert_eq!(exact.collector_peak, full);
+
+    // Merge-reduce: strictly below the PR 2 collector peak, and within
+    // the merge-and-reduce memory model — a binary-counter tower over
+    // `full / bucket` carries has ~log2 levels plus the accumulator.
+    assert!(
+        reduced.collector_peak < exact.collector_peak,
+        "sketch {} !< materialized {}",
+        reduced.collector_peak,
+        exact.collector_peak
+    );
+    let levels = (full as f64 / bucket as f64).log2().ceil() as usize + 2;
+    assert!(
+        reduced.collector_peak <= levels * bucket,
+        "sketch peak {} > {levels} levels x {bucket}",
+        reduced.collector_peak
+    );
+    // Non-collector graph nodes forward and drop in merge-reduce mode,
+    // so every node's host buffer obeys the same bound.
+    for (v, &peak) in reduced.node_peaks.iter().enumerate() {
+        assert!(peak <= levels * bucket, "node {v}: {peak}");
+    }
+
+    // Bit-identical exact centers across thread counts, and against the
+    // materialized chain.
+    let p1 = run(
+        Topology::Graph(&g),
+        &locals,
+        &cfg,
+        channel,
+        SketchPlan::exact(),
+        ExecPolicy::Parallel { threads: 1 },
+        31,
+    );
+    let p2 = run(
+        Topology::Graph(&g),
+        &locals,
+        &cfg,
+        channel,
+        SketchPlan::exact(),
+        ExecPolicy::Parallel { threads: 2 },
+        31,
+    );
+    let p8 = run(
+        Topology::Graph(&g),
+        &locals,
+        &cfg,
+        channel,
+        SketchPlan::exact(),
+        ExecPolicy::Parallel { threads: 8 },
+        31,
+    );
+    assert_eq!(p1.centers, p2.centers);
+    assert_eq!(p2.centers, p8.centers);
+    assert_eq!(p2.coreset.set, p8.coreset.set);
+    let (want_set, want_centers) =
+        materialized(&locals, &cfg, ExecPolicy::Parallel { threads: 2 }, 31);
+    assert_eq!(p2.coreset.set, want_set);
+    assert_eq!(p2.centers, want_centers);
+}
+
+#[test]
+fn merge_reduce_tree_reduces_in_network() {
+    // Tree converge-cast with in-network reduction: every relay folds
+    // its subtree and forwards the reduced stream, so the wire total
+    // drops below exact mode and every node's fold stays bounded.
+    let locals = mixture_sites(37, 6_000, 4, 4, 9, Scheme::Uniform, false);
+    let g = distclus::topology::generators::grid(3, 3);
+    let tree = distclus::topology::SpanningTree::bfs(&g, 0);
+    let cfg = DistributedConfig {
+        t: 2_048,
+        k: 4,
+        ..Default::default()
+    };
+    let channel = ChannelConfig {
+        page_points: 64,
+        link_capacity: 0,
+    };
+    let bucket = 256usize;
+    let exact = run(
+        Topology::Tree(&tree),
+        &locals,
+        &cfg,
+        channel,
+        SketchPlan::exact(),
+        ExecPolicy::Sequential,
+        39,
+    );
+    let reduced = run(
+        Topology::Tree(&tree),
+        &locals,
+        &cfg,
+        channel,
+        SketchPlan::merge_reduce(bucket),
+        ExecPolicy::Sequential,
+        39,
+    );
+    assert!(
+        reduced.comm_points < exact.comm_points,
+        "in-network reduction must cut traffic: {} !< {}",
+        reduced.comm_points,
+        exact.comm_points
+    );
+    assert!(
+        reduced.collector_peak < exact.collector_peak,
+        "root sketch {} !< materialized {}",
+        reduced.collector_peak,
+        exact.collector_peak
+    );
+    let full = cfg.t + g.n() * cfg.k;
+    let levels = (full as f64 / bucket as f64).log2().ceil() as usize + 2;
+    for (v, &peak) in reduced.node_peaks.iter().enumerate() {
+        assert!(
+            peak <= levels * bucket,
+            "relay {v} peak {peak} > {levels} x {bucket}"
+        );
+    }
+    // Quality stays usable after per-relay recompression.
+    let global = WeightedSet::union(locals.iter());
+    let c_exact = cost_of(&global, &exact.centers, Objective::KMeans);
+    let c_reduced = cost_of(&global, &reduced.centers, Objective::KMeans);
+    assert!(
+        (c_reduced - c_exact).abs() / c_exact < 0.25,
+        "tree drift too large: exact {c_exact}, reduced {c_reduced}"
+    );
+}
