@@ -1,6 +1,8 @@
 //! Bench harness for the graph-setting figures (Fig. 2 / 4 / 5):
 //! regenerates the cost-ratio-vs-communication series (ours vs COMBINE)
 //! at bench scale and times one full experiment repetition per cell.
+//! Spec-driven: every cell resolves to a `Scenario` through
+//! `ExperimentSpec::scenario`, the same surface the CLI uses.
 //!
 //! Run with `cargo bench --bench fig_graphs` (or `make bench`).
 

@@ -11,8 +11,8 @@ use distclus::coreset::DistributedConfig;
 use distclus::metrics::Table;
 use distclus::partition::Scheme;
 use distclus::points::WeightedSet;
-use distclus::protocol::{cluster_on_tree, zhang_on_tree};
 use distclus::rng::Pcg64;
+use distclus::scenario::{Distributed, Scenario, Zhang};
 use distclus::topology::{generators, SpanningTree};
 
 fn main() -> anyhow::Result<()> {
@@ -59,27 +59,25 @@ fn main() -> anyhow::Result<()> {
         let tree = SpanningTree::bfs(&graph, 0);
 
         let sw = distclus::metrics::Stopwatch::start();
-        let ours = cluster_on_tree(
-            &tree,
-            &locals,
-            &DistributedConfig {
+        let ours = Scenario::on_tree(tree.clone()).run_with_rng(
+            &Distributed(DistributedConfig {
                 t: 1_000,
                 k: 5,
                 ..Default::default()
-            },
+            }),
+            &locals,
             &backend,
             &mut rng,
         )?;
         let t_ours = sw.secs();
         let sw = distclus::metrics::Stopwatch::start();
-        let zhang = zhang_on_tree(
-            &tree,
-            &locals,
-            &ZhangConfig {
+        let zhang = Scenario::on_tree(tree.clone()).run_with_rng(
+            &Zhang(ZhangConfig {
                 t_node: 1_000 / graph.n(),
                 k: 5,
                 objective: Objective::KMeans,
-            },
+            }),
+            &locals,
             &backend,
             &mut rng,
         )?;

@@ -13,15 +13,13 @@
 use distclus::cli::Args;
 use distclus::clustering::backend::RustBackend;
 use distclus::coreset::DistributedConfig;
-use distclus::exec::ExecPolicy;
 use distclus::metrics::Table;
 use distclus::network::{paginate, reassemble, ChannelConfig, Network, Payload};
 use distclus::partition::Scheme;
 use distclus::points::WeightedSet;
-use distclus::protocol::{
-    flood, flood_reliable, flood_reliable_multi, run_pipeline, CoresetPlan, Topology,
-};
+use distclus::protocol::{flood, flood_reliable, flood_reliable_multi};
 use distclus::rng::Pcg64;
+use distclus::scenario::{Distributed, Scenario};
 use distclus::sketch::{SketchMode, SketchPlan};
 use distclus::testutil::mixture_sites;
 use distclus::topology::generators;
@@ -160,37 +158,30 @@ fn main() -> anyhow::Result<()> {
         k: 4,
         ..Default::default()
     };
-    let channel = ChannelConfig {
-        page_points: 64,
-        link_capacity: 64,
-    };
+    let channel = ChannelConfig::uniform(64, 64);
     let mut sketch_table = Table::new(&[
         "sketch",
         "comm (points)",
         "wire peak",
         "collector peak",
+        "err-factor",
         "coreset",
         "rounds",
     ]);
     let mut peaks = Vec::new();
     for plan in [SketchPlan::exact(), sketch_plan] {
-        let mut rng = Pcg64::seed_from(72);
-        let run = run_pipeline(
-            Topology::Graph(&g),
-            &locals,
-            CoresetPlan::Distributed(&cfg),
-            &channel,
-            &plan,
-            &RustBackend,
-            &mut rng,
-            ExecPolicy::Sequential,
-        )?;
+        let run = Scenario::on_graph(g.clone())
+            .channel(channel.clone())
+            .sketch(plan)
+            .seed(72)
+            .run(&Distributed(cfg), &locals, &RustBackend)?;
         peaks.push((plan.mode, run.comm_points, run.collector_peak));
         sketch_table.row(vec![
             run.sketch.into(),
             run.comm_points.to_string(),
             run.peak_points.to_string(),
             run.collector_peak.to_string(),
+            format!("{:.4}", run.error_factor()),
             run.coreset.size().to_string(),
             run.rounds.to_string(),
         ]);

@@ -12,8 +12,8 @@ use distclus::coreset::DistributedConfig;
 use distclus::metrics::{Summary, Table};
 use distclus::partition::Scheme;
 use distclus::points::WeightedSet;
-use distclus::protocol::{cluster_on_tree, zhang_on_tree};
 use distclus::rng::Pcg64;
+use distclus::scenario::{Distributed, Scenario, Zhang};
 use distclus::topology::{generators, SpanningTree};
 
 fn main() -> anyhow::Result<()> {
@@ -70,28 +70,26 @@ fn main() -> anyhow::Result<()> {
             let mut zhang_ratios = Vec::new();
             for tree in &trees {
                 heights.push(tree.height() as f64);
-                let ours = cluster_on_tree(
-                    tree,
-                    &locals,
-                    &DistributedConfig {
+                let ours = Scenario::on_tree(tree.clone()).run_with_rng(
+                    &Distributed(DistributedConfig {
                         t: 1_000,
                         k: 5,
                         ..Default::default()
-                    },
+                    }),
+                    &locals,
                     &backend,
                     &mut rng,
                 )?;
                 comms.push(ours.comm_points as f64);
                 ours_ratios
                     .push(cost_of(&global, &ours.centers, Objective::KMeans) / direct.cost);
-                let zh = zhang_on_tree(
-                    tree,
-                    &locals,
-                    &ZhangConfig {
+                let zh = Scenario::on_tree(tree.clone()).run_with_rng(
+                    &Zhang(ZhangConfig {
                         t_node: 1_000 / graph.n(),
                         k: 5,
                         objective: Objective::KMeans,
-                    },
+                    }),
+                    &locals,
                     &backend,
                     &mut rng,
                 )?;

@@ -29,6 +29,7 @@ use distclus::partition::Scheme;
 use distclus::points::{Dataset, WeightedSet};
 use distclus::rng::Pcg64;
 use distclus::runtime::XlaBackend;
+use distclus::scenario::{Distributed as DistributedAlgo, Scenario};
 use distclus::topology::{diameter, generators, SpanningTree};
 use std::path::Path;
 
@@ -312,18 +313,16 @@ fn comm_scaling(ctx: &Ctx) -> Result<()> {
                 k: 5,
                 ..Default::default()
             };
-            let run = distclus::protocol::cluster_on_graph(
-                &graph,
+            let run = Scenario::on_graph(graph.clone()).run_with_rng(
+                &DistributedAlgo(cfg),
                 &locals,
-                &cfg,
                 ctx.backend.as_ref(),
                 &mut rng,
             )?;
             let tree = SpanningTree::random_root(&graph, &mut rng);
-            let run_t = distclus::protocol::cluster_on_tree(
-                &tree,
+            let run_t = Scenario::on_tree(tree.clone()).run_with_rng(
+                &DistributedAlgo(cfg),
                 &locals,
-                &cfg,
                 ctx.backend.as_ref(),
                 &mut rng,
             )?;

@@ -4,8 +4,12 @@
 //! `#` comments — documented in README §Configuration).
 
 use crate::clustering::Objective;
+use crate::coreset::combine::CombineConfig;
+use crate::coreset::zhang::ZhangConfig;
+use crate::coreset::DistributedConfig;
 use crate::exec::ExecPolicy;
 use crate::partition::Scheme;
+use crate::scenario::{self, CoresetAlgorithm, Scenario};
 use crate::sketch::{SketchMode, SketchPlan};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -146,6 +150,15 @@ impl Algorithm {
             "zhang-tree" => Algorithm::ZhangTree,
             _ => return None,
         })
+    }
+
+    /// Whether this variant runs over a spanning tree drawn from the
+    /// topology (the `*-tree` family) rather than the graph itself.
+    pub fn on_tree(self) -> bool {
+        matches!(
+            self,
+            Algorithm::DistributedTree | Algorithm::CombineTree | Algorithm::ZhangTree
+        )
     }
 }
 
@@ -319,12 +332,11 @@ impl ExperimentSpec {
         ExecPolicy::from_threads(self.threads)
     }
 
-    /// The paged-exchange channel this spec selects.
+    /// The paged-exchange channel this spec selects (flat config keys
+    /// describe one uniform capacity; per-edge link profiles are built
+    /// directly on [`Scenario`]).
     pub fn channel(&self) -> crate::network::ChannelConfig {
-        crate::network::ChannelConfig {
-            page_points: self.page_points,
-            link_capacity: self.link_capacity,
-        }
+        crate::network::ChannelConfig::uniform(self.page_points, self.link_capacity)
     }
 
     /// The collector-side sketch plan this spec selects (see
@@ -334,6 +346,66 @@ impl ExperimentSpec {
             mode: self.sketch,
             bucket_points: self.bucket_points,
         }
+    }
+
+    /// The typed [`Scenario`] this spec describes over an already-built
+    /// `graph` — every spec-driven caller (CLI, experiment driver,
+    /// benches) constructs runs through this one surface.
+    ///
+    /// The scenario's `seed` axis carries `self.seed` for standalone
+    /// `Scenario::run` use, but note the experiment driver does *not*
+    /// reproduce through that path: `run_once` derives per-repetition
+    /// seeds and consumes RNG draws (topology build, partitioning)
+    /// before handing its generator to `run_with_rng`, which ignores
+    /// the seed axis. To reproduce a reported experiment, go through
+    /// [`crate::coordinator::run_experiment`] with the same spec.
+    pub fn scenario(&self, graph: crate::topology::Graph) -> Scenario {
+        let base = if self.algorithm.on_tree() {
+            Scenario::on_spanning_tree_of(graph)
+        } else {
+            Scenario::on_graph(graph)
+        };
+        base.channel(self.channel())
+            .sketch(self.sketch_plan())
+            .exec(self.exec_policy())
+            .seed(self.seed)
+    }
+
+    /// The algorithm implementation this spec selects — table-driven
+    /// dispatch onto the [`CoresetAlgorithm`] trait. `sites` fixes
+    /// Zhang's per-node budget so the *total* sampled budget matches
+    /// the other algorithms ((n−1) node summaries cross one edge each).
+    pub fn algorithm_impl(&self, sites: usize) -> Box<dyn CoresetAlgorithm> {
+        match self.algorithm {
+            Algorithm::Distributed | Algorithm::DistributedTree => {
+                Box::new(scenario::Distributed(DistributedConfig {
+                    t: self.t,
+                    k: self.k,
+                    objective: self.objective,
+                    ..Default::default()
+                }))
+            }
+            Algorithm::Combine | Algorithm::CombineTree => {
+                Box::new(scenario::Combine(CombineConfig {
+                    t: self.t,
+                    k: self.k,
+                    objective: self.objective,
+                }))
+            }
+            Algorithm::ZhangTree => Box::new(scenario::Zhang(ZhangConfig {
+                t_node: self.zhang_t_node(sites),
+                k: self.k,
+                objective: self.objective,
+            })),
+        }
+    }
+
+    /// Zhang's per-node budget: the global `t` split evenly across
+    /// `sites` so the *total* sampled budget matches the other
+    /// algorithms ((n−1) node summaries cross one edge each), floored
+    /// at 1 so a site always samples something.
+    fn zhang_t_node(&self, sites: usize) -> usize {
+        (self.t / sites.max(1)).max(1)
     }
 }
 
@@ -399,7 +471,8 @@ mod tests {
         assert_eq!(spec.link_capacity, 128);
         let ch = spec.channel();
         assert_eq!(ch.page_points, 64);
-        assert_eq!(ch.link_model().points_per_round, 128);
+        assert_eq!(ch.link_model().capacity(0, 1), 128);
+        assert_eq!(ch.link_model().default_capacity(), 128);
     }
 
     #[test]
@@ -453,5 +526,49 @@ mod tests {
         ] {
             assert_eq!(Algorithm::parse(a.name()), Some(a));
         }
+        assert!(!Algorithm::Distributed.on_tree());
+        assert!(!Algorithm::Combine.on_tree());
+        assert!(Algorithm::DistributedTree.on_tree());
+        assert!(Algorithm::CombineTree.on_tree());
+        assert!(Algorithm::ZhangTree.on_tree());
+    }
+
+    #[test]
+    fn spec_dispatches_algorithm_table_driven() {
+        let mut spec = ExperimentSpec {
+            t: 120,
+            k: 3,
+            ..Default::default()
+        };
+        // Labels come from the trait impls — the table is exhaustive.
+        let cases = [
+            (Algorithm::Distributed, false, "distributed-coreset (Alg.1+3)"),
+            (Algorithm::DistributedTree, true, "distributed-coreset (tree)"),
+            (Algorithm::Combine, false, "combine"),
+            (Algorithm::CombineTree, true, "combine (tree)"),
+            (Algorithm::ZhangTree, true, "zhang (tree)"),
+        ];
+        for (alg, tree, label) in cases {
+            spec.algorithm = alg;
+            let implementation = spec.algorithm_impl(6);
+            assert_eq!(implementation.label(tree), label);
+            assert_eq!(implementation.k(), 3);
+        }
+    }
+
+    #[test]
+    fn zhang_budget_splits_t_across_sites() {
+        let spec = ExperimentSpec {
+            t: 120,
+            ..Default::default()
+        };
+        assert_eq!(spec.zhang_t_node(6), 20, "even split");
+        assert_eq!(spec.zhang_t_node(0), 120, "no sites: keep t");
+        assert_eq!(spec.zhang_t_node(7), 17, "integer division");
+        let tiny = ExperimentSpec {
+            t: 3,
+            ..Default::default()
+        };
+        assert_eq!(tiny.zhang_t_node(6), 1, "floored at one sample");
     }
 }

@@ -3,15 +3,11 @@
 
 use crate::clustering::backend::Backend;
 use crate::clustering::{approx_solution, cost_of, Objective};
-use crate::config::{Algorithm, ExperimentSpec};
-use crate::coreset::combine::CombineConfig;
-use crate::coreset::zhang::ZhangConfig;
-use crate::coreset::DistributedConfig;
+use crate::config::ExperimentSpec;
 use crate::metrics::Summary;
 use crate::points::{Dataset, WeightedSet};
-use crate::protocol::{self, RunResult};
+use crate::protocol::RunResult;
 use crate::rng::Pcg64;
-use crate::topology::SpanningTree;
 use anyhow::{anyhow, Result};
 
 /// Quality of one run, measured as the paper does: cluster the coreset
@@ -41,6 +37,10 @@ pub struct ExperimentResult {
     /// Summary of the collector's host-side buffer peak (sketch
     /// residency — see `RunResult::collector_peak`).
     pub node_peak: Summary,
+    /// Summary of the measured composed merge-and-reduce error factor
+    /// (`1.0` per repetition in exact mode — see
+    /// [`RunResult::error_factor`]).
+    pub error_factor: Summary,
     /// Which sketch folded the stream (`exact` / `merge-reduce`).
     pub sketch: &'static str,
     /// Summary of coreset sizes.
@@ -77,7 +77,11 @@ pub fn evaluate_quality(
     }
 }
 
-/// One repetition: build topology, partition, run the algorithm.
+/// One repetition: build topology, partition, run the algorithm — the
+/// spec resolves to a [`crate::scenario::Scenario`] plus a boxed
+/// [`crate::scenario::CoresetAlgorithm`], so every algorithm × topology
+/// × channel × sketch combination goes through the same typed surface
+/// (axis validation, e.g. zhang × merge-reduce, fails loudly there).
 pub fn run_once(
     spec: &ExperimentSpec,
     data: &Dataset,
@@ -96,104 +100,9 @@ pub fn run_once(
     // weight ~0 (cost-neutral, keeps Round 1 well-defined).
     let locals = patch_empty_sites(locals);
 
-    let channel = spec.channel();
-    let sketch = spec.sketch_plan();
-    match spec.algorithm {
-        Algorithm::Distributed => {
-            let cfg = DistributedConfig {
-                t: spec.t,
-                k: spec.k,
-                objective: spec.objective,
-                ..Default::default()
-            };
-            protocol::run_pipeline(
-                protocol::Topology::Graph(&graph),
-                &locals,
-                protocol::CoresetPlan::Distributed(&cfg),
-                &channel,
-                &sketch,
-                backend,
-                rng,
-                spec.exec_policy(),
-            )
-        }
-        Algorithm::DistributedTree => {
-            let tree = SpanningTree::random_root(&graph, rng);
-            let cfg = DistributedConfig {
-                t: spec.t,
-                k: spec.k,
-                objective: spec.objective,
-                ..Default::default()
-            };
-            protocol::run_pipeline(
-                protocol::Topology::Tree(&tree),
-                &locals,
-                protocol::CoresetPlan::Distributed(&cfg),
-                &channel,
-                &sketch,
-                backend,
-                rng,
-                spec.exec_policy(),
-            )
-        }
-        Algorithm::Combine => {
-            let cfg = CombineConfig {
-                t: spec.t,
-                k: spec.k,
-                objective: spec.objective,
-            };
-            protocol::run_pipeline(
-                protocol::Topology::Graph(&graph),
-                &locals,
-                protocol::CoresetPlan::Combine(&cfg),
-                &channel,
-                &sketch,
-                backend,
-                rng,
-                spec.exec_policy(),
-            )
-        }
-        Algorithm::CombineTree => {
-            let tree = SpanningTree::random_root(&graph, rng);
-            let cfg = CombineConfig {
-                t: spec.t,
-                k: spec.k,
-                objective: spec.objective,
-            };
-            protocol::run_pipeline(
-                protocol::Topology::Tree(&tree),
-                &locals,
-                protocol::CoresetPlan::Combine(&cfg),
-                &channel,
-                &sketch,
-                backend,
-                rng,
-                spec.exec_policy(),
-            )
-        }
-        Algorithm::ZhangTree => {
-            // Zhang's bottom-up composition is already a
-            // coreset-of-coresets; the collector sketch options don't
-            // apply. Fail loudly instead of silently dropping either.
-            anyhow::ensure!(
-                spec.sketch == crate::sketch::SketchMode::Exact
-                    && spec.bucket_points == 0,
-                "sketch options (--sketch {} / --bucket-points {}) are not supported by zhang-tree",
-                spec.sketch.name(),
-                spec.bucket_points
-            );
-            let tree = SpanningTree::random_root(&graph, rng);
-            // Same *total* sampled budget as the other algorithms:
-            // (n-1) node summaries cross one edge each.
-            let t_node = (spec.t / graph.n().max(1)).max(1);
-            let cfg = ZhangConfig {
-                t_node,
-                k: spec.k,
-                objective: spec.objective,
-            };
-            protocol::zhang_on_tree_exec(&tree, &locals, &cfg, backend, rng, spec.exec_policy())
-        }
-    }
+    let algorithm = spec.algorithm_impl(graph.n());
+    spec.scenario(graph)
+        .run_with_rng(algorithm.as_ref(), &locals, backend, rng)
 }
 
 fn patch_empty_sites(mut locals: Vec<WeightedSet>) -> Vec<WeightedSet> {
@@ -273,6 +182,7 @@ impl Session {
         let mut comms = Vec::with_capacity(spec.reps);
         let mut peaks = Vec::with_capacity(spec.reps);
         let mut node_peaks = Vec::with_capacity(spec.reps);
+        let mut error_factors = Vec::with_capacity(spec.reps);
         let mut sizes = Vec::with_capacity(spec.reps);
         let mut sketch = crate::sketch::SketchMode::Exact.name();
         let sw = crate::metrics::Stopwatch::start();
@@ -288,6 +198,7 @@ impl Session {
             comms.push(run.comm_points as f64);
             peaks.push(run.peak_points as f64);
             node_peaks.push(run.collector_peak as f64);
+            error_factors.push(run.error_factor());
             sizes.push(run.coreset.size() as f64);
             sketch = run.sketch;
         }
@@ -303,6 +214,7 @@ impl Session {
             comm: Summary::of(&comms),
             peak: Summary::of(&peaks),
             node_peak: Summary::of(&node_peaks),
+            error_factor: Summary::of(&error_factors),
             sketch,
             coreset_size: Summary::of(&sizes),
             secs_per_rep: sw.secs() / spec.reps as f64,
@@ -324,7 +236,7 @@ pub fn run_experiment(
 mod tests {
     use super::*;
     use crate::clustering::backend::RustBackend;
-    use crate::config::TopologySpec;
+    use crate::config::{Algorithm, TopologySpec};
     use crate::partition::Scheme;
 
     fn small_spec(algorithm: Algorithm) -> ExperimentSpec {
@@ -422,6 +334,14 @@ mod tests {
             exact.node_peak.mean
         );
         assert!(mr.ratio.mean < 2.0, "ratio {}", mr.ratio.mean);
+        // Error accounting rides along: exact is lossless by
+        // definition, merge-reduce reports its measured composition.
+        assert_eq!(exact.error_factor.mean, 1.0);
+        assert!(
+            mr.error_factor.mean > 1.0,
+            "composed factor {} must register the reductions",
+            mr.error_factor.mean
+        );
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub fn render_report(results: &[ExperimentResult]) -> String {
         "experiment",
         "ratio(mean)",
         "ratio(std)",
+        "err-factor",
         "comm(points)",
         "peak(points)",
         "node-peak",
@@ -23,6 +24,7 @@ pub fn render_report(results: &[ExperimentResult]) -> String {
             r.label.clone(),
             format!("{:.4}", r.ratio.mean),
             format!("{:.4}", r.ratio.std),
+            format!("{:.4}", r.error_factor.mean),
             format!("{:.0}", r.comm.mean),
             format!("{:.0}", r.peak.mean),
             format!("{:.0}", r.node_peak.mean),
@@ -45,6 +47,7 @@ pub fn series_json(results: &[ExperimentResult]) -> Value {
                     ("experiment", build::s(r.label.clone())),
                     ("ratio_mean", build::num(r.ratio.mean)),
                     ("ratio_std", build::num(r.ratio.std)),
+                    ("error_factor", build::num(r.error_factor.mean)),
                     ("comm_points", build::num(r.comm.mean)),
                     ("peak_points", build::num(r.peak.mean)),
                     ("node_peak_points", build::num(r.node_peak.mean)),
@@ -69,6 +72,7 @@ mod tests {
             comm: Summary::of(&[5_000.0]),
             peak: Summary::of(&[800.0]),
             node_peak: Summary::of(&[520.0]),
+            error_factor: Summary::of(&[1.25]),
             sketch: "exact",
             coreset_size: Summary::of(&[520.0]),
             secs_per_rep: 0.5,
@@ -80,6 +84,8 @@ mod tests {
         let out = render_report(&[fake("a/b-c/d"), fake("x/y-z/w")]);
         assert!(out.contains("a/b-c/d"));
         assert!(out.contains("1.0750"));
+        assert!(out.contains("err-factor"));
+        assert!(out.contains("1.2500"));
         assert_eq!(out.lines().count(), 4);
     }
 
@@ -91,5 +97,6 @@ mod tests {
         let arr = parsed.as_arr().unwrap();
         assert_eq!(arr[0].get("experiment").unwrap().as_str(), Some("exp"));
         assert_eq!(arr[0].get("reps").unwrap().as_usize(), Some(2));
+        assert_eq!(arr[0].get("error_factor").unwrap().as_f64(), Some(1.25));
     }
 }

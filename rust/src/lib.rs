@@ -64,6 +64,7 @@ pub mod points;
 pub mod protocol;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod sketch;
 pub mod testutil;
 pub mod topology;
@@ -73,8 +74,10 @@ pub mod prelude {
     pub use crate::clustering::backend::{Backend, ParallelBackend, RustBackend};
     pub use crate::coreset::{Coreset, DistributedConfig};
     pub use crate::exec::ExecPolicy;
+    pub use crate::network::{ChannelConfig, LinkModel};
     pub use crate::points::{Dataset, WeightedSet};
     pub use crate::rng::Pcg64;
+    pub use crate::scenario::{CoresetAlgorithm, Scenario};
     pub use crate::sketch::{SketchMode, SketchPlan};
     pub use crate::topology::Graph;
 }

@@ -5,60 +5,122 @@ use super::{Payload, TranscriptEntry};
 use crate::topology::Graph;
 use std::collections::{BTreeMap, HashSet, VecDeque};
 
-/// Per-link bandwidth model: how many points one *directed* edge can
+/// Per-link bandwidth model: how many points each *directed* edge can
 /// deliver per synchronous round.
 ///
-/// `points_per_round == 0` means unlimited (the paper's §2 model, where
-/// every round delivers everything). With a finite capacity, sends keep
-/// their charge but over-capacity traffic queues at the sender and
-/// drains in FIFO order on later rounds — `rounds` becomes a measured
-/// transfer time instead of the topology diameter. A message larger than
-/// the capacity still ships alone on an otherwise-idle edge, so progress
-/// is always guaranteed.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// A capacity of `0` means unlimited (the paper's §2 model, where every
+/// round delivers everything). With a finite capacity, sends keep their
+/// charge but over-capacity traffic queues at the sender and drains in
+/// FIFO order on later rounds — `rounds` becomes a measured transfer
+/// time instead of the topology diameter. A message larger than the
+/// capacity still ships alone on an otherwise-idle edge, so progress is
+/// always guaranteed.
+///
+/// Capacities are *per directed edge*: a uniform default plus any number
+/// of per-edge overrides, built fluently —
+///
+/// ```
+/// use distclus::network::LinkModel;
+///
+/// let uniform = LinkModel::capped(64);
+/// // One congested backhaul link, both directions:
+/// let degraded = LinkModel::capped(64).with_link(0, 1, 4);
+/// assert_eq!(degraded.capacity(1, 0), 4);
+/// assert_eq!(degraded.capacity(1, 2), 64);
+/// assert_eq!(uniform.capacity(0, 1), 64);
+/// ```
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct LinkModel {
-    /// Points one directed edge delivers per round (0 = unlimited).
-    pub points_per_round: usize,
+    /// Capacity of every edge without an override (0 = unlimited).
+    default_cap: usize,
+    /// Per-directed-edge overrides, keyed by `(from, to)` (a `0`
+    /// override makes that one edge unlimited).
+    overrides: BTreeMap<(usize, usize), usize>,
 }
 
 impl LinkModel {
-    /// Unlimited bandwidth (the default).
+    /// Unlimited bandwidth on every edge (the default).
     pub fn unlimited() -> Self {
-        LinkModel { points_per_round: 0 }
+        LinkModel::default()
     }
 
-    /// Capacity-limited links.
+    /// Uniform capacity-limited links (0 = unlimited).
     pub fn capped(points_per_round: usize) -> Self {
-        LinkModel { points_per_round }
+        LinkModel {
+            default_cap: points_per_round,
+            overrides: BTreeMap::new(),
+        }
     }
-}
 
-impl Default for LinkModel {
-    fn default() -> Self {
-        Self::unlimited()
+    /// Override one *directed* edge's capacity (builder).
+    pub fn with_edge(mut self, from: usize, to: usize, points_per_round: usize) -> Self {
+        self.overrides.insert((from, to), points_per_round);
+        self
+    }
+
+    /// Override one undirected link — both directions (builder).
+    pub fn with_link(self, a: usize, b: usize, points_per_round: usize) -> Self {
+        self.with_edge(a, b, points_per_round)
+            .with_edge(b, a, points_per_round)
+    }
+
+    /// Degrade a subset of links (both directions each) to one shared
+    /// capacity — the asymmetric-deployment profile (builder).
+    pub fn degraded(mut self, links: &[(usize, usize)], points_per_round: usize) -> Self {
+        for &(a, b) in links {
+            self = self.with_link(a, b, points_per_round);
+        }
+        self
+    }
+
+    /// Delivery capacity of the directed edge `(from, to)` in points per
+    /// round (0 = unlimited).
+    pub fn capacity(&self, from: usize, to: usize) -> usize {
+        self.overrides
+            .get(&(from, to))
+            .copied()
+            .unwrap_or(self.default_cap)
+    }
+
+    /// The uniform capacity edges without an override get.
+    pub fn default_capacity(&self) -> usize {
+        self.default_cap
+    }
+
+    /// True when no edge is bandwidth-limited.
+    pub fn is_unlimited(&self) -> bool {
+        self.default_cap == 0 && self.overrides.values().all(|&c| c == 0)
     }
 }
 
 /// Paged-exchange configuration shared by the protocol drivers: how big
-/// a portion page is and how much a link carries per round.
+/// a portion page is and what each link carries per round.
 ///
 /// The two knobs are independent: paging alone bounds the *message*
 /// granularity (loss retransmits one page, not a whole portion), while a
 /// link capacity bounds how many points are in flight per round — and
 /// therefore the receiver-side memory [`Network::peak_points`] meters.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ChannelConfig {
     /// Maximum points per portion page (0 = monolithic portions).
     pub page_points: usize,
-    /// Per-directed-edge delivery capacity in points per round
-    /// (0 = unlimited).
-    pub link_capacity: usize,
+    /// Per-directed-edge delivery capacities (see [`LinkModel`]).
+    pub link: LinkModel,
 }
 
 impl ChannelConfig {
+    /// The classic two-knob channel: one page size, one uniform
+    /// capacity shared by every directed edge (both 0 = off).
+    pub fn uniform(page_points: usize, link_capacity: usize) -> ChannelConfig {
+        ChannelConfig {
+            page_points,
+            link: LinkModel::capped(link_capacity),
+        }
+    }
+
     /// The link model this channel selects.
     pub fn link_model(&self) -> LinkModel {
-        LinkModel::capped(self.link_capacity)
+        self.link.clone()
     }
 }
 
@@ -125,16 +187,16 @@ impl Network {
         self
     }
 
-    /// Limit every directed edge to `model.points_per_round` delivered
-    /// points per round (0 = unlimited).
+    /// Limit each directed edge to its [`LinkModel`] capacity in
+    /// delivered points per round (unlimited edges drain every round).
     pub fn with_link_model(mut self, model: LinkModel) -> Self {
         self.link = model;
         self
     }
 
     /// The active link bandwidth model.
-    pub fn link_model(&self) -> LinkModel {
-        self.link
+    pub fn link_model(&self) -> &LinkModel {
+        &self.link
     }
 
     /// Transmissions dropped so far (lossy mode).
@@ -227,7 +289,6 @@ impl Network {
     /// per edge. Returns the number of messages delivered.
     pub fn step(&mut self) -> usize {
         self.round += 1;
-        let cap = self.link.points_per_round;
         let mut delivered = 0;
         let loss = self.loss;
         let mut used: BTreeMap<(usize, usize), usize> = BTreeMap::new();
@@ -241,6 +302,7 @@ impl Network {
                 deferred.push_back((from, to, payload));
                 continue;
             }
+            let cap = self.link.capacity(from, to);
             let size = payload.size_points();
             let spent = used.get(&edge).copied().unwrap_or(0);
             // An oversized message may occupy an otherwise-idle edge for
@@ -403,6 +465,51 @@ mod tests {
         net.send(1, 0, Payload::Scalar(3.0));
         // Three distinct directed edges: all deliver in one round.
         assert_eq!(net.step(), 3);
+    }
+
+    #[test]
+    fn per_edge_override_throttles_one_edge_only() {
+        // Star hub 0: edge (1,0) throttled to 1 point/round, the rest
+        // keep the uniform capacity of 4.
+        let model = LinkModel::capped(4).with_edge(1, 0, 1);
+        let mut net = Network::new(generators::star(3)).with_link_model(model);
+        for i in 0..3 {
+            net.send(1, 0, Payload::Scalar(i as f64));
+            net.send(2, 0, Payload::Scalar(i as f64));
+        }
+        // Round 1: the healthy edge delivers all 3, the throttled one 1.
+        assert_eq!(net.step(), 4);
+        assert_eq!(net.recv_all(0).len(), 4);
+        // Rounds 2..3 drain the throttled edge one point at a time.
+        assert_eq!(net.step(), 1);
+        assert_eq!(net.step(), 1);
+        net.recv_all(0);
+        assert!(net.quiescent());
+        assert_eq!(net.round(), 3);
+    }
+
+    #[test]
+    fn degraded_builder_covers_both_directions() {
+        let model = LinkModel::capped(8).degraded(&[(0, 1)], 2);
+        assert_eq!(model.capacity(0, 1), 2);
+        assert_eq!(model.capacity(1, 0), 2);
+        assert_eq!(model.capacity(1, 2), 8);
+        assert_eq!(model.default_capacity(), 8);
+        assert!(!model.is_unlimited());
+        // A zero override frees one edge while the rest stay capped.
+        let freed = LinkModel::capped(8).with_edge(0, 1, 0);
+        assert_eq!(freed.capacity(0, 1), 0);
+        assert!(!freed.is_unlimited());
+        assert!(LinkModel::unlimited().is_unlimited());
+        assert!(LinkModel::capped(0).is_unlimited());
+    }
+
+    #[test]
+    fn channel_config_uniform_constructor() {
+        let ch = ChannelConfig::uniform(64, 16);
+        assert_eq!(ch.page_points, 64);
+        assert_eq!(ch.link_model().capacity(0, 9), 16);
+        assert_eq!(ChannelConfig::default(), ChannelConfig::uniform(0, 0));
     }
 
     #[test]

@@ -1,7 +1,7 @@
-//! **Algorithm 2** — the end-to-end distributed clustering driver.
+//! **Algorithm 2** — the end-to-end distributed clustering engine.
 //!
-//! One engine, [`run_pipeline`], runs the paper's algorithm and the
-//! COMBINE baseline over either topology (general graph with flooding,
+//! One wire engine, [`stream_exchange`], runs any portion-producing
+//! construction over either topology (general graph with flooding,
 //! rooted tree with converge-cast), streaming the coreset exchange in
 //! fixed-size pages through the bandwidth-limited network simulator so
 //! every figure compares *measured* communication, rounds and peak
@@ -9,18 +9,21 @@
 //! sketch ([`crate::sketch`]) at every collecting node — the collector
 //! solves on `finish()` instead of reassembling the full coreset, and
 //! in merge-and-reduce mode tree relays reduce their children's streams
-//! in-network before forwarding. The Zhang-et-al. baseline keeps its own
-//! construction (its bottom-up composition is structurally different)
-//! but shares the execution engine, the session-driven metering plane
-//! and the report surface.
+//! in-network before forwarding. Bottom-up compositions (the
+//! Zhang-et-al. baseline) share the session-driven metering plane
+//! through [`run_composed`].
+//!
+//! Both engines are private details of [`crate::scenario::Scenario`] —
+//! the typed builder is the one public run surface; the historical
+//! `cluster_on_*` / `combine_on_*` / `zhang_on_tree*` entry points kept
+//! here are thin shims over it (RNG draw order preserved, results
+//! bit-identical — asserted by `tests/scenario_api.rs`).
 
 use crate::clustering::backend::Backend;
-use crate::clustering::{approx_solution, Solution};
-use crate::coreset::combine::{self, CombineConfig};
-use crate::coreset::distributed::{self, allocate_budget, local_cost, DistributedConfig};
-use crate::coreset::zhang::{self, ZhangConfig};
+use crate::clustering::{approx_solution, Objective, Solution};
+use crate::coreset::distributed;
 use crate::coreset::Coreset;
-use crate::exec::{map_sites, ExecPolicy};
+use crate::exec::ExecPolicy;
 use crate::network::{paginate, ChannelConfig, Network, Payload};
 use crate::points::{Dataset, WeightedSet};
 use crate::protocol::broadcast_down;
@@ -28,6 +31,7 @@ use crate::protocol::session::{drive, PipeMachine, Solver, ZhangMachine};
 use crate::rng::Pcg64;
 use crate::sketch::{SketchMode, SketchPlan};
 use crate::topology::{Graph, SpanningTree};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Refinement iterations of the final coreset solve (matches the
@@ -68,6 +72,23 @@ pub struct RunResult {
     pub sketch: &'static str,
     /// Algorithm label for reports.
     pub algorithm: &'static str,
+    /// Extensible named meters, so future instrumentation stops forcing
+    /// signature churn. Current keys (merge-and-reduce runs only):
+    /// `mr_error_ppm` — the measured composed `(1+ε)^levels` error
+    /// factor of the worst reduction chain feeding the collector, as
+    /// parts-per-million above 1 (see [`RunResult::error_factor`]);
+    /// `mr_reductions` — total bucket reductions across all folding
+    /// nodes.
+    pub meters: BTreeMap<&'static str, u64>,
+}
+
+impl RunResult {
+    /// The composed merge-and-reduce error factor `Π(1 + ε_r)` measured
+    /// over the worst reduction chain of this run — `1.0` for exact
+    /// (lossless) folds. Decoded from the `mr_error_ppm` meter.
+    pub fn error_factor(&self) -> f64 {
+        1.0 + self.meters.get("mr_error_ppm").copied().unwrap_or(0) as f64 / 1e6
+    }
 }
 
 /// Which topology the pipeline runs over.
@@ -81,34 +102,40 @@ pub enum Topology<'a> {
     Tree(&'a SpanningTree),
 }
 
-/// Which coreset construction feeds the exchange.
-#[derive(Clone, Copy)]
-pub enum CoresetPlan<'a> {
-    /// The paper's Algorithm 1: cost exchange, proportional budgets,
-    /// sensitivity sampling.
-    Distributed(&'a DistributedConfig),
-    /// COMBINE baseline: equal budgets, local FL11 coresets, no cost
-    /// exchange.
-    Combine(&'a CombineConfig),
-}
-
 fn solve_on(
     coreset: &Coreset,
     k: usize,
-    cfg_obj: crate::clustering::Objective,
+    cfg_obj: Objective,
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> Solution {
     approx_solution(&coreset.set, k, cfg_obj, backend, rng, FINAL_SOLVE_ITERS)
 }
 
-/// The unified driver: build portions under `plan`, stream them through
-/// the paged message plane over `topology`, fold them into `sketch` at
+/// Worst leaf→root composition of per-node sketch error factors: every
+/// reducing relay re-sketches what flows through it, so the stream
+/// reaching the root through the loosest chain carries the product of
+/// the factors along its path.
+fn composed_error_factor(tree: &SpanningTree, factors: &[f64]) -> f64 {
+    fn walk(tree: &SpanningTree, factors: &[f64], v: usize) -> f64 {
+        let through_children = tree.children[v]
+            .iter()
+            .map(|&c| walk(tree, factors, c))
+            .fold(1.0_f64, f64::max);
+        factors[v] * through_children
+    }
+    walk(tree, factors, tree.root)
+}
+
+/// The unified wire engine: stream already-built portions through the
+/// paged message plane over `topology`, fold them into `sketch` at
 /// every collecting node, solve at the collector, and meter everything.
 ///
 /// Under the default exact sketch the compute schedule (and therefore
-/// every RNG draw) is identical to the materialized drivers — round 1,
-/// round 2, final solve — so results are bit-compatible with the
+/// every RNG draw) is identical to the materialized drivers — the
+/// construction drew round 1 then round 2 before this engine runs, and
+/// the final solve consumes the same stream next; the wire phase itself
+/// draws nothing. Results are therefore bit-compatible with the
 /// monolithic exchange for every `channel` setting: paging, link
 /// capacity and exact folding only reshape *when* points move and *how*
 /// they are buffered, never *which* points feed the solve (verified on
@@ -119,19 +146,23 @@ fn solve_on(
 /// coreset, and on a tree every relay reduces its subtree's stream
 /// before forwarding, which *reduces total communication* as well.
 /// Merge-and-reduce re-solves draw from dedicated per-node RNG streams,
-/// never from the pipeline generator.
+/// never from the pipeline generator, and meter their measured composed
+/// error factor into `RunResult::meters`.
 #[allow(clippy::too_many_arguments)]
-pub fn run_pipeline(
+pub(crate) fn stream_exchange(
     topology: Topology<'_>,
-    locals: &[WeightedSet],
-    plan: CoresetPlan<'_>,
+    n: usize,
+    portions: Vec<Coreset>,
+    costs: Option<Vec<f64>>,
+    k: usize,
+    objective: Objective,
+    algorithm: &'static str,
     channel: &ChannelConfig,
     sketch: &SketchPlan,
     backend: &dyn Backend,
     rng: &mut Pcg64,
-    exec: ExecPolicy,
 ) -> anyhow::Result<RunResult> {
-    let n = locals.len();
+    anyhow::ensure!(portions.len() == n, "one portion per site");
     let graph = match topology {
         Topology::Graph(g) => g.clone(),
         Topology::Tree(t) => t.as_graph(),
@@ -140,32 +171,6 @@ pub fn run_pipeline(
     let mut net = Network::new(graph)
         .without_transcript()
         .with_link_model(channel.link_model());
-
-    // Host-side compute, in the legacy RNG order (round 1 draws, round 2
-    // draws); the final solve runs at the collector when its fold
-    // completes, which consumes the same stream next — the wire phase
-    // itself draws nothing.
-    let (portions, costs, k, objective) = match plan {
-        CoresetPlan::Distributed(cfg) => {
-            let summaries: Vec<_> = map_sites(n, rng, exec, |i, r| {
-                distributed::round1(&locals[i], cfg, backend, r)
-            });
-            let costs: Vec<f64> = summaries
-                .iter()
-                .map(|s| local_cost(s, cfg.objective))
-                .collect();
-            let total: f64 = costs.iter().sum();
-            let budgets = allocate_budget(cfg.t, &costs);
-            let portions: Vec<Coreset> = map_sites(n, rng, exec, |i, r| {
-                distributed::round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
-            });
-            (portions, Some(costs), cfg.k, cfg.objective)
-        }
-        CoresetPlan::Combine(cfg) => {
-            let portions = combine::build_portions_exec(locals, cfg, backend, rng, exec);
-            (portions, None, cfg.k, cfg.objective)
-        }
-    };
 
     // Dedicated per-node streams for merge-and-reduce re-solves (exact
     // mode takes none, leaving the pipeline generator untouched — the
@@ -211,7 +216,7 @@ pub fn run_pipeline(
         iters: FINAL_SOLVE_ITERS,
     });
 
-    let (collector, algorithm, mut nodes) = match topology {
+    let (collector, mut nodes) = match topology {
         Topology::Graph(_) => {
             let nodes: Vec<PipeMachine> = pages
                 .into_iter()
@@ -241,11 +246,7 @@ pub fn run_pipeline(
                     )
                 })
                 .collect();
-            let algorithm = match plan {
-                CoresetPlan::Distributed(_) => "distributed-coreset (Alg.1+3)",
-                CoresetPlan::Combine(_) => "combine",
-            };
-            (0usize, algorithm, nodes)
+            (0usize, nodes)
         }
         Topology::Tree(tree) => {
             let total_cost: f64 = costs.as_ref().map(|c| c.iter().sum()).unwrap_or(0.0);
@@ -292,11 +293,7 @@ pub fn run_pipeline(
                     )
                 })
                 .collect();
-            let algorithm = match plan {
-                CoresetPlan::Distributed(_) => "distributed-coreset (tree)",
-                CoresetPlan::Combine(_) => "combine (tree)",
-            };
-            (tree.root, algorithm, nodes)
+            (tree.root, nodes)
         }
     };
     drive(&mut net, &mut nodes);
@@ -335,6 +332,22 @@ pub fn run_pipeline(
 
     let node_peaks: Vec<usize> = nodes.iter().map(|m| m.node_peak).collect();
     let collector_peak = node_peaks[collector];
+    let mut meters = BTreeMap::new();
+    if merge_reduce {
+        let factors: Vec<f64> = nodes.iter().map(|m| m.sketch_error_factor).collect();
+        let composed = match topology {
+            Topology::Graph(_) => factors[collector],
+            Topology::Tree(tree) => composed_error_factor(tree, &factors),
+        };
+        meters.insert(
+            "mr_error_ppm",
+            ((composed - 1.0).max(0.0) * 1e6).round() as u64,
+        );
+        meters.insert(
+            "mr_reductions",
+            nodes.iter().map(|m| m.sketch_reductions).sum::<usize>() as u64,
+        );
+    }
     Ok(RunResult {
         centers: sol.centers,
         coreset_cost: sol.cost,
@@ -346,16 +359,105 @@ pub fn run_pipeline(
         collector_peak,
         sketch: sketch.mode.name(),
         algorithm,
+        meters,
     })
 }
+
+/// The composed-exchange wire engine (Zhang-et-al. shape): the coreset
+/// was already built host-side bottom-up; charge each child → parent
+/// summary transfer through the simulator under the channel's link
+/// model, solve at the root, broadcast the centers down, and report the
+/// per-node host buffers the composition needed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_composed(
+    tree: &SpanningTree,
+    coreset: Coreset,
+    sent_points: Vec<usize>,
+    k: usize,
+    objective: Objective,
+    algorithm: &'static str,
+    channel: &ChannelConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+) -> anyhow::Result<RunResult> {
+    anyhow::ensure!(tree.n() == sent_points.len(), "one summary per node");
+    let mut net = Network::new(tree.as_graph())
+        .without_transcript()
+        .with_link_model(channel.link_model());
+    // Charge each child -> parent summary transfer with a metering-only
+    // payload (the simulator never needs the summary's coordinates).
+    // Every node waits for its children before emitting, so one session
+    // moves whole tree levels per round. A node with nothing to send
+    // still emits a zero-point payload — its parent must learn the
+    // subtree is drained.
+    let mut machines: Vec<ZhangMachine> = (0..tree.n())
+        .map(|v| {
+            let is_root = v == tree.root;
+            ZhangMachine::new(
+                (!is_root).then_some(tree.parent[v]),
+                tree.children[v].len(),
+                (!is_root).then_some(Payload::Opaque {
+                    site: v,
+                    points: sent_points[v],
+                }),
+            )
+        })
+        .collect();
+    drive(&mut net, &mut machines);
+    let sol = solve_on(&coreset, k, objective, backend, rng);
+    broadcast_down(
+        &mut net,
+        tree,
+        &Payload::Centers(Arc::new(sol.centers.clone())),
+    );
+    // Per-node host buffers, analogous to the pipeline's fold meter:
+    // each node holds its own outgoing summary plus its children's
+    // summaries until it has composed them; the root additionally holds
+    // the final coreset.
+    let mut node_peaks: Vec<usize> = (0..tree.n())
+        .map(|v| {
+            sent_points[v]
+                + tree.children[v]
+                    .iter()
+                    .map(|&c| sent_points[c])
+                    .sum::<usize>()
+        })
+        .collect();
+    node_peaks[tree.root] = node_peaks[tree.root].max(coreset.size());
+    let collector_peak = node_peaks[tree.root];
+    Ok(RunResult {
+        centers: sol.centers,
+        coreset_cost: sol.cost,
+        coreset,
+        comm_points: net.cost_points(),
+        rounds: net.round(),
+        peak_points: net.peak_points(),
+        node_peaks,
+        collector_peak,
+        sketch: SketchMode::Exact.name(),
+        algorithm,
+        meters: BTreeMap::new(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Legacy entry points — thin shims over the Scenario builder.
+// ---------------------------------------------------------------------
+
+use crate::coreset::combine::CombineConfig;
+use crate::coreset::distributed::DistributedConfig;
+use crate::coreset::zhang::ZhangConfig;
+use crate::scenario::{
+    Combine as CombineAlgo, Distributed as DistributedAlgo, Scenario, Zhang as ZhangAlgo,
+};
 
 /// The paper's algorithm on a general graph: distributed coreset
 /// construction with flooding for both the cost exchange and the coreset
 /// exchange. Every node ends holding the full coreset (as in Algorithm
 /// 2); the solver runs once since all nodes compute identically.
 ///
-/// Sequential monolithic-exchange entry point — see [`run_pipeline`]
-/// for paging, link capacity, sketched folding and parallel execution.
+/// Sequential monolithic-exchange shim — see [`crate::scenario::Scenario`]
+/// for paging, link models, sketched folding and parallel execution.
 pub fn cluster_on_graph(
     graph: &Graph,
     locals: &[WeightedSet],
@@ -378,23 +480,16 @@ pub fn cluster_on_graph_exec(
     rng: &mut Pcg64,
     exec: ExecPolicy,
 ) -> anyhow::Result<RunResult> {
-    run_pipeline(
-        Topology::Graph(graph),
-        locals,
-        CoresetPlan::Distributed(cfg),
-        &ChannelConfig::default(),
-        &SketchPlan::exact(),
-        backend,
-        rng,
-        exec,
-    )
+    Scenario::on_graph(graph.clone())
+        .exec(exec)
+        .run_with_rng(&DistributedAlgo(*cfg), locals, backend, rng)
 }
 
 /// The paper's algorithm on a rooted tree (Theorem 3): costs converge to
 /// the root, the total broadcasts down, portions converge to the root,
 /// the root solves and broadcasts the centers.
 ///
-/// Sequential monolithic-exchange entry point — see [`run_pipeline`].
+/// Sequential monolithic-exchange shim — see [`crate::scenario::Scenario`].
 pub fn cluster_on_tree(
     tree: &SpanningTree,
     locals: &[WeightedSet],
@@ -415,20 +510,13 @@ pub fn cluster_on_tree_exec(
     rng: &mut Pcg64,
     exec: ExecPolicy,
 ) -> anyhow::Result<RunResult> {
-    run_pipeline(
-        Topology::Tree(tree),
-        locals,
-        CoresetPlan::Distributed(cfg),
-        &ChannelConfig::default(),
-        &SketchPlan::exact(),
-        backend,
-        rng,
-        exec,
-    )
+    Scenario::on_tree(tree.clone())
+        .exec(exec)
+        .run_with_rng(&DistributedAlgo(*cfg), locals, backend, rng)
 }
 
 /// COMBINE baseline on a general graph: local FL11 coresets flooded to
-/// every node.
+/// every node. Shim over [`crate::scenario::Scenario`].
 pub fn combine_on_graph(
     graph: &Graph,
     locals: &[WeightedSet],
@@ -436,20 +524,12 @@ pub fn combine_on_graph(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
-    run_pipeline(
-        Topology::Graph(graph),
-        locals,
-        CoresetPlan::Combine(cfg),
-        &ChannelConfig::default(),
-        &SketchPlan::exact(),
-        backend,
-        rng,
-        ExecPolicy::Sequential,
-    )
+    Scenario::on_graph(graph.clone()).run_with_rng(&CombineAlgo(*cfg), locals, backend, rng)
 }
 
 /// COMBINE baseline on a rooted tree: local coresets converge to the
-/// root, which solves and broadcasts.
+/// root, which solves and broadcasts. Shim over
+/// [`crate::scenario::Scenario`].
 pub fn combine_on_tree(
     tree: &SpanningTree,
     locals: &[WeightedSet],
@@ -457,22 +537,13 @@ pub fn combine_on_tree(
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
-    run_pipeline(
-        Topology::Tree(tree),
-        locals,
-        CoresetPlan::Combine(cfg),
-        &ChannelConfig::default(),
-        &SketchPlan::exact(),
-        backend,
-        rng,
-        ExecPolicy::Sequential,
-    )
+    Scenario::on_tree(tree.clone()).run_with_rng(&CombineAlgo(*cfg), locals, backend, rng)
 }
 
 /// Zhang-et-al. baseline on a rooted tree: coreset-of-coresets composed
 /// bottom-up, each hop charged through the simulator.
 ///
-/// Sequential entry point — see [`zhang_on_tree_exec`].
+/// Sequential shim — see [`zhang_on_tree_exec`].
 pub fn zhang_on_tree(
     tree: &SpanningTree,
     locals: &[WeightedSet],
@@ -485,10 +556,11 @@ pub fn zhang_on_tree(
 
 /// [`zhang_on_tree`] under an explicit [`ExecPolicy`]: the bottom-up
 /// composition runs level-parallel on the execution engine (see
-/// [`zhang::build_on_tree_exec`]) and the summary transfers run through
-/// the session engine, so `rounds` reflects *pipelined tree levels* —
-/// all nodes of one depth transfer concurrently — instead of one
-/// synchronous step per edge.
+/// [`crate::coreset::zhang::build_on_tree_exec`]) and the summary
+/// transfers run through the session engine, so `rounds` reflects
+/// *pipelined tree levels* — all nodes of one depth transfer
+/// concurrently — instead of one synchronous step per edge. Shim over
+/// [`crate::scenario::Scenario`].
 pub fn zhang_on_tree_exec(
     tree: &SpanningTree,
     locals: &[WeightedSet],
@@ -497,62 +569,9 @@ pub fn zhang_on_tree_exec(
     rng: &mut Pcg64,
     exec: ExecPolicy,
 ) -> anyhow::Result<RunResult> {
-    anyhow::ensure!(tree.n() == locals.len());
-    let mut net = Network::new(tree.as_graph()).without_transcript();
-    let result = zhang::build_on_tree_exec(locals, tree, cfg, backend, rng, exec);
-    // Charge each child -> parent summary transfer with a metering-only
-    // payload (the simulator never needs the summary's coordinates).
-    // Every node waits for its children before emitting, so one session
-    // moves whole tree levels per round. A node with nothing to send
-    // still emits a zero-point payload — its parent must learn the
-    // subtree is drained.
-    let mut machines: Vec<ZhangMachine> = (0..tree.n())
-        .map(|v| {
-            let is_root = v == tree.root;
-            ZhangMachine::new(
-                (!is_root).then_some(tree.parent[v]),
-                tree.children[v].len(),
-                (!is_root).then_some(Payload::Opaque {
-                    site: v,
-                    points: result.sent_points[v],
-                }),
-            )
-        })
-        .collect();
-    drive(&mut net, &mut machines);
-    let sol = solve_on(&result.coreset, cfg.k, cfg.objective, backend, rng);
-    broadcast_down(
-        &mut net,
-        tree,
-        &Payload::Centers(Arc::new(sol.centers.clone())),
-    );
-    // Per-node host buffers, analogous to the pipeline's fold meter:
-    // each node holds its own outgoing summary plus its children's
-    // summaries until it has composed them; the root additionally holds
-    // the final coreset.
-    let mut node_peaks: Vec<usize> = (0..tree.n())
-        .map(|v| {
-            result.sent_points[v]
-                + tree.children[v]
-                    .iter()
-                    .map(|&c| result.sent_points[c])
-                    .sum::<usize>()
-        })
-        .collect();
-    node_peaks[tree.root] = node_peaks[tree.root].max(result.coreset.size());
-    let collector_peak = node_peaks[tree.root];
-    Ok(RunResult {
-        centers: sol.centers,
-        coreset_cost: sol.cost,
-        coreset: result.coreset,
-        comm_points: net.cost_points(),
-        rounds: net.round(),
-        peak_points: net.peak_points(),
-        node_peaks,
-        collector_peak,
-        sketch: SketchMode::Exact.name(),
-        algorithm: "zhang (tree)",
-    })
+    Scenario::on_tree(tree.clone())
+        .exec(exec)
+        .run_with_rng(&ZhangAlgo(*cfg), locals, backend, rng)
 }
 
 #[cfg(test)]
@@ -560,6 +579,7 @@ mod tests {
     use super::*;
     use crate::clustering::backend::RustBackend;
     use crate::clustering::{cost_of, Objective};
+    use crate::coreset::zhang;
     use crate::data::synthetic::gaussian_mixture;
     use crate::partition::Scheme;
     use crate::topology::generators;
@@ -594,6 +614,9 @@ mod tests {
         assert_eq!(run.collector_peak, run.node_peaks[0]);
         // Exact folding holds the full coreset at the collector.
         assert_eq!(run.collector_peak, run.coreset.size());
+        // Exact folds carry no error-accounting meters: factor 1.
+        assert!(run.meters.is_empty());
+        assert_eq!(run.error_factor(), 1.0);
 
         // Solution quality on the *global* data vs direct clustering.
         let mut rng2 = Pcg64::seed_from(3);
@@ -633,22 +656,11 @@ mod tests {
         let n = g.n();
         let expected = 2 * g.m() * n + 2 * g.m() * (cfg.t + n * cfg.k);
         for page_points in [0usize, 17, 64, 4096] {
-            let channel = ChannelConfig {
-                page_points,
-                link_capacity: 0,
-            };
-            let mut rng = Pcg64::seed_from(5);
-            let run = run_pipeline(
-                Topology::Graph(&g),
-                &locals,
-                CoresetPlan::Distributed(&cfg),
-                &channel,
-                &SketchPlan::exact(),
-                &RustBackend,
-                &mut rng,
-                ExecPolicy::Sequential,
-            )
-            .unwrap();
+            let run = Scenario::on_graph(g.clone())
+                .channel(ChannelConfig::uniform(page_points, 0))
+                .seed(5)
+                .run(&DistributedAlgo(cfg), &locals, &RustBackend)
+                .unwrap();
             assert_eq!(run.comm_points, expected, "page_points={page_points}");
         }
     }
@@ -662,24 +674,14 @@ mod tests {
             ..Default::default()
         };
         let run_at = |channel: ChannelConfig| {
-            let mut rng = Pcg64::seed_from(9);
-            run_pipeline(
-                Topology::Graph(&g),
-                &locals,
-                CoresetPlan::Distributed(&cfg),
-                &channel,
-                &SketchPlan::exact(),
-                &RustBackend,
-                &mut rng,
-                ExecPolicy::Sequential,
-            )
-            .unwrap()
+            Scenario::on_graph(g.clone())
+                .channel(channel)
+                .seed(9)
+                .run(&DistributedAlgo(cfg), &locals, &RustBackend)
+                .unwrap()
         };
         let mono = run_at(ChannelConfig::default());
-        let paged = run_at(ChannelConfig {
-            page_points: 32,
-            link_capacity: 32,
-        });
+        let paged = run_at(ChannelConfig::uniform(32, 32));
         assert_eq!(mono.centers, paged.centers, "paging must not change results");
         assert_eq!(mono.coreset.set, paged.coreset.set);
         assert_eq!(mono.comm_points, paged.comm_points);
@@ -729,6 +731,8 @@ mod tests {
         let tree = SpanningTree::random_root(&g, &mut rng);
         let a = combine_on_graph(&g, &locals, &cfg, &RustBackend, &mut rng).unwrap();
         let b = combine_on_tree(&tree, &locals, &cfg, &RustBackend, &mut rng).unwrap();
+        assert_eq!(a.algorithm, "combine");
+        assert_eq!(b.algorithm, "combine (tree)");
         for run in [&a, &b] {
             let cost = cost_of(&global, &run.centers, Objective::KMeans);
             assert!(cost.is_finite() && cost > 0.0);
@@ -746,24 +750,14 @@ mod tests {
         let mut rng0 = Pcg64::seed_from(13);
         let tree = SpanningTree::random_root(&g, &mut rng0);
         let run_at = |channel: ChannelConfig| {
-            let mut rng = Pcg64::seed_from(14);
-            run_pipeline(
-                Topology::Tree(&tree),
-                &locals,
-                CoresetPlan::Distributed(&cfg),
-                &channel,
-                &SketchPlan::exact(),
-                &RustBackend,
-                &mut rng,
-                ExecPolicy::Sequential,
-            )
-            .unwrap()
+            Scenario::on_tree(tree.clone())
+                .channel(channel)
+                .seed(14)
+                .run(&DistributedAlgo(cfg), &locals, &RustBackend)
+                .unwrap()
         };
         let mono = run_at(ChannelConfig::default());
-        let paged = run_at(ChannelConfig {
-            page_points: 16,
-            link_capacity: 16,
-        });
+        let paged = run_at(ChannelConfig::uniform(16, 16));
         assert_eq!(mono.comm_points, paged.comm_points);
         assert_eq!(mono.centers, paged.centers);
     }
@@ -788,23 +782,13 @@ mod tests {
             k: 4,
             ..Default::default()
         };
-        let channel = ChannelConfig {
-            page_points: 64,
-            link_capacity: 0,
-        };
         let run_at = |plan: SketchPlan| {
-            let mut rng = Pcg64::seed_from(32);
-            run_pipeline(
-                Topology::Tree(&tree),
-                &locals,
-                CoresetPlan::Distributed(&cfg),
-                &channel,
-                &plan,
-                &RustBackend,
-                &mut rng,
-                ExecPolicy::Sequential,
-            )
-            .unwrap()
+            Scenario::on_tree(tree.clone())
+                .channel(ChannelConfig::uniform(64, 0))
+                .sketch(plan)
+                .seed(32)
+                .run(&DistributedAlgo(cfg), &locals, &RustBackend)
+                .unwrap()
         };
         let exact = run_at(SketchPlan::exact());
         let reduced = run_at(SketchPlan::merge_reduce(128));
@@ -822,6 +806,10 @@ mod tests {
             exact.collector_peak
         );
         assert_eq!(reduced.centers.n(), 4);
+        // Error accounting: relays re-sketch in-network, so the run's
+        // composed factor covers the worst relay→root chain.
+        assert!(reduced.error_factor() > 1.0, "reductions must be metered");
+        assert!(reduced.meters["mr_reductions"] > 0);
         // The reduced solution still clusters the data sensibly.
         let global = WeightedSet::union(locals.iter());
         let c_exact = cost_of(&global, &exact.centers, Objective::KMeans);

@@ -1,6 +1,6 @@
 //! Distributed protocols (§4): flooding message-passing on general
 //! graphs (Algorithm 3), rooted-tree aggregation (Theorem 3), and the
-//! end-to-end distributed clustering driver (Algorithm 2) that ties the
+//! end-to-end distributed clustering engine (Algorithm 2) that ties the
 //! coreset construction, the paged streaming message plane and the
 //! solvers together.
 //!
@@ -8,6 +8,10 @@
 //! round loop (`session`), so the cost exchange, the paged coreset
 //! streaming and the solution broadcast overlap in simulated time
 //! instead of running as global barriers.
+//!
+//! Runs are constructed through the typed
+//! [`Scenario`](crate::scenario::Scenario) builder; the `cluster_on_*`
+//! family kept here are bit-compatible shims over it.
 
 mod distributed_clustering;
 mod flooding;
@@ -17,9 +21,9 @@ mod tree;
 
 pub use distributed_clustering::{
     cluster_on_graph, cluster_on_graph_exec, cluster_on_tree, cluster_on_tree_exec,
-    combine_on_graph, combine_on_tree, run_pipeline, zhang_on_tree, zhang_on_tree_exec,
-    CoresetPlan, RunResult, Topology,
+    combine_on_graph, combine_on_tree, zhang_on_tree, zhang_on_tree_exec, RunResult, Topology,
 };
+pub(crate) use distributed_clustering::{run_composed, stream_exchange};
 pub use flooding::{flood, flood_multi};
 pub use reliable::{flood_reliable, flood_reliable_multi};
 pub use tree::{broadcast_down, converge_cast, converge_cast_multi};

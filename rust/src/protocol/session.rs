@@ -373,6 +373,11 @@ pub(crate) struct PipeMachine<'a> {
     /// High-water mark of points buffered in this machine (sketch
     /// residency + relay backlog) — the node-side memory meter.
     pub(crate) node_peak: usize,
+    /// This node's sketch's measured composed error factor, captured
+    /// when its fold completes (1.0 for exact folds and pure relays).
+    pub(crate) sketch_error_factor: f64,
+    /// Bucket reductions this node's sketch performed.
+    pub(crate) sketch_reductions: usize,
 }
 
 impl<'a> PipeMachine<'a> {
@@ -418,6 +423,8 @@ impl<'a> PipeMachine<'a> {
             solution: None,
             finished: None,
             node_peak: 0,
+            sketch_error_factor: 1.0,
+            sketch_reductions: 0,
         }
     }
 
@@ -471,6 +478,8 @@ impl<'a> PipeMachine<'a> {
             solution: None,
             finished: None,
             node_peak: 0,
+            sketch_error_factor: 1.0,
+            sketch_reductions: 0,
         }
     }
 
@@ -534,6 +543,13 @@ impl<'a> PipeMachine<'a> {
     /// upstream; the collector solves and (on a tree) broadcasts.
     fn on_complete(&mut self, out: &mut Outbox) {
         self.bump_peak(); // capture the fold's peak before consuming it
+        if let Some(fold) = &self.fold {
+            // Error accounting, captured before the fold is consumed:
+            // the driver composes these per-node factors along the
+            // relay chains into the run-level meter.
+            self.sketch_error_factor = fold.error_factor();
+            self.sketch_reductions = fold.reductions();
+        }
         if self.reduce_relay {
             let sketch = self.fold.take().expect("reducing relay folds");
             let reduced = sketch

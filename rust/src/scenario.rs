@@ -1,0 +1,607 @@
+//! The typed run surface: one [`Scenario`] builder for every
+//! algorithm × topology × channel × sketch combination.
+//!
+//! The paper's core claim is that one coreset protocol works *over
+//! general communication topologies*. This module makes that the shape
+//! of the API: a [`Scenario`] owns the orthogonal axes of a run and an
+//! object-safe [`CoresetAlgorithm`] supplies the construction, so every
+//! caller — CLI, config files, the experiment driver, benches, tests —
+//! builds runs through the same surface, and a new knob lands in exactly
+//! one place instead of another positional parameter on every driver.
+//!
+//! | axis       | values                                            | builder |
+//! |------------|---------------------------------------------------|---------|
+//! | topology   | graph (flooding) / rooted tree (converge-cast) / spanning tree drawn from a graph | [`Scenario::on_graph`] / [`Scenario::on_tree`] / [`Scenario::on_spanning_tree_of`] |
+//! | channel    | page size + per-directed-edge [`LinkModel`] capacities (uniform / per-edge / degraded subsets) | [`Scenario::channel`], [`Scenario::page_points`], [`Scenario::links`] |
+//! | sketch     | exact (bit-compatible) / merge-and-reduce (bounded memory, error-accounted) | [`Scenario::sketch`] |
+//! | exec       | sequential / parallel per-site workers            | [`Scenario::exec`], [`Scenario::threads`] |
+//! | seed       | the run RNG for [`Scenario::run`]                 | [`Scenario::seed`] |
+//!
+//! The five classic entry points (`distributed`, `distributed-tree`,
+//! `combine`, `combine-tree`, `zhang-tree`) are the three
+//! [`CoresetAlgorithm`] implementations in this module crossed with the
+//! topology axis. The legacy `protocol::cluster_on_*` / `combine_on_*` /
+//! `zhang_on_tree*` functions survive as thin shims over `Scenario`
+//! with RNG draw order preserved, so their results are bit-identical to
+//! the builder path (asserted by `tests/scenario_api.rs`).
+//!
+//! ```
+//! use distclus::network::LinkModel;
+//! use distclus::prelude::*;
+//! use distclus::scenario::{Distributed, Scenario};
+//!
+//! // Five sites of mixture data on a star; hub link (0,1) is degraded.
+//! let locals = distclus::testutil::mixture_sites(
+//!     7, 600, 3, 3, 5, distclus::partition::Scheme::Uniform, false);
+//! let graph = distclus::topology::generators::star(5);
+//!
+//! let cfg = DistributedConfig { t: 96, k: 3, ..Default::default() };
+//! let run = Scenario::on_graph(graph)
+//!     .page_points(16)
+//!     .links(LinkModel::capped(64).with_link(0, 1, 4)) // one slow edge
+//!     .seed(11)
+//!     .run(&Distributed(cfg), &locals, &RustBackend)
+//!     .unwrap();
+//! assert_eq!(run.centers.n(), 3);
+//! assert!(run.comm_points > 0 && run.rounds > 0);
+//! ```
+
+use crate::clustering::backend::Backend;
+use crate::clustering::Objective;
+use crate::coreset::combine::{self, CombineConfig};
+use crate::coreset::distributed::{self, allocate_budget, local_cost, DistributedConfig};
+use crate::coreset::zhang::{self, ZhangConfig};
+use crate::coreset::Coreset;
+use crate::exec::{map_sites, ExecPolicy};
+use crate::network::{ChannelConfig, LinkModel};
+use crate::points::WeightedSet;
+use crate::protocol::{run_composed, stream_exchange};
+pub use crate::protocol::{RunResult, Topology};
+use crate::rng::Pcg64;
+use crate::sketch::{SketchMode, SketchPlan};
+use crate::topology::{Graph, SpanningTree};
+use anyhow::Result;
+
+/// The topology axis of a [`Scenario`]: which communication structure
+/// the exchange runs over, owned so scenarios are self-contained values.
+#[derive(Clone, Debug)]
+pub enum ScenarioTopology {
+    /// General graph: flooding for every exchange (Algorithm 3).
+    Graph(Graph),
+    /// An explicit rooted spanning tree: converge-cast up, broadcast
+    /// down (Theorem 3).
+    Tree(SpanningTree),
+    /// A spanning tree drawn from the graph at run time with a random
+    /// root (the experiment driver's `*-tree` behaviour; the draw
+    /// consumes the run RNG first, so results are reproducible).
+    SpanningTreeOf(Graph),
+}
+
+impl ScenarioTopology {
+    /// Number of sites this topology hosts.
+    pub fn sites(&self) -> usize {
+        match self {
+            ScenarioTopology::Graph(g) | ScenarioTopology::SpanningTreeOf(g) => g.n(),
+            ScenarioTopology::Tree(t) => t.n(),
+        }
+    }
+}
+
+/// What a [`CoresetAlgorithm`] hands the wire phase: either per-site
+/// portions for the unified paged pipeline, or an already-composed
+/// coreset with per-node transfer sizes (bottom-up constructions).
+pub enum Exchange {
+    /// Portions streamed through the paged pipeline; when `costs` is
+    /// present the paper's Round-1 scalar cost exchange runs first and
+    /// gates each site's portion streaming.
+    Portions {
+        /// One coreset portion per site.
+        portions: Vec<Coreset>,
+        /// Per-site local costs (`None` for equal-budget baselines).
+        costs: Option<Vec<f64>>,
+    },
+    /// A pre-composed coreset (built host-side, e.g. Zhang's bottom-up
+    /// coreset-of-coresets); the wire phase meters the per-node summary
+    /// transfers instead of streaming portions.
+    Composed {
+        /// The final coreset at the collection point.
+        coreset: Coreset,
+        /// Points each node sends to its parent, indexed by node id
+        /// (0 at the root).
+        sent_points: Vec<usize>,
+    },
+}
+
+/// Everything an algorithm sees while building its [`Exchange`]: the
+/// per-site data, the resolved topology, the kernel backend, the
+/// execution policy and the run RNG (draws happen in a fixed order, so
+/// results are reproducible and thread-count invariant).
+pub struct BuildCtx<'a, 'r> {
+    /// One local weighted set per site.
+    pub locals: &'a [WeightedSet],
+    /// The resolved topology (spanning-tree draws already performed).
+    pub topology: Topology<'a>,
+    /// Kernel backend for local solves.
+    pub backend: &'a dyn Backend,
+    /// Per-site execution policy.
+    pub exec: ExecPolicy,
+    /// The run RNG.
+    pub rng: &'r mut Pcg64,
+}
+
+/// A coreset-construction algorithm runnable under any [`Scenario`].
+///
+/// Object-safe on purpose: the experiment driver dispatches
+/// `Box<dyn CoresetAlgorithm>` from a table instead of matching on an
+/// enum, and downstream users can add constructions without touching
+/// this crate's drivers.
+pub trait CoresetAlgorithm {
+    /// Number of centers of the final solve.
+    fn k(&self) -> usize;
+
+    /// Objective of the final solve.
+    fn objective(&self) -> Objective;
+
+    /// Report label over the given topology shape (kept identical to
+    /// the historical driver labels).
+    fn label(&self, tree: bool) -> &'static str;
+
+    /// Whether the algorithm runs over a general graph (`false`:
+    /// [`Scenario::run`] rejects graph topologies loudly).
+    fn supports_graph(&self) -> bool {
+        true
+    }
+
+    /// Whether the collector-sketch axis applies (`false`: any
+    /// non-default [`SketchPlan`] is rejected loudly).
+    fn supports_sketch(&self) -> bool {
+        true
+    }
+
+    /// Whether the paging knob applies (`false`: a nonzero
+    /// `page_points` is rejected loudly — composed exchanges ship
+    /// metering-only summaries that are never paginated, and silently
+    /// ignoring the knob would fake a paged measurement). The link
+    /// capacity axis applies to every algorithm.
+    fn supports_paging(&self) -> bool {
+        true
+    }
+
+    /// Build this algorithm's [`Exchange`] over the prepared context.
+    fn build(&self, ctx: BuildCtx<'_, '_>) -> Result<Exchange>;
+}
+
+/// The paper's Algorithm 1: local solves, proportional budget
+/// allocation from the global cost exchange, sensitivity sampling.
+pub struct Distributed(pub DistributedConfig);
+
+impl CoresetAlgorithm for Distributed {
+    fn k(&self) -> usize {
+        self.0.k
+    }
+
+    fn objective(&self) -> Objective {
+        self.0.objective
+    }
+
+    fn label(&self, tree: bool) -> &'static str {
+        if tree {
+            "distributed-coreset (tree)"
+        } else {
+            "distributed-coreset (Alg.1+3)"
+        }
+    }
+
+    fn build(&self, ctx: BuildCtx<'_, '_>) -> Result<Exchange> {
+        let BuildCtx {
+            locals,
+            backend,
+            exec,
+            rng,
+            ..
+        } = ctx;
+        let cfg = &self.0;
+        let n = locals.len();
+        // Round 1 and Round 2 in the historical RNG order — the
+        // bit-compatibility contract of the legacy shims.
+        let summaries: Vec<_> = map_sites(n, rng, exec, |i, r| {
+            distributed::round1(&locals[i], cfg, backend, r)
+        });
+        let costs: Vec<f64> = summaries
+            .iter()
+            .map(|s| local_cost(s, cfg.objective))
+            .collect();
+        let total: f64 = costs.iter().sum();
+        let budgets = allocate_budget(cfg.t, &costs);
+        let portions: Vec<Coreset> = map_sites(n, rng, exec, |i, r| {
+            distributed::round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
+        });
+        Ok(Exchange::Portions {
+            portions,
+            costs: Some(costs),
+        })
+    }
+}
+
+/// COMBINE baseline: equal budgets, local FL11 coresets, no cost
+/// exchange.
+pub struct Combine(pub CombineConfig);
+
+impl CoresetAlgorithm for Combine {
+    fn k(&self) -> usize {
+        self.0.k
+    }
+
+    fn objective(&self) -> Objective {
+        self.0.objective
+    }
+
+    fn label(&self, tree: bool) -> &'static str {
+        if tree {
+            "combine (tree)"
+        } else {
+            "combine"
+        }
+    }
+
+    fn build(&self, ctx: BuildCtx<'_, '_>) -> Result<Exchange> {
+        let BuildCtx {
+            locals,
+            backend,
+            exec,
+            rng,
+            ..
+        } = ctx;
+        let portions = combine::build_portions_exec(locals, &self.0, backend, rng, exec);
+        Ok(Exchange::Portions {
+            portions,
+            costs: None,
+        })
+    }
+}
+
+/// Zhang-et-al. baseline: coreset-of-coresets composed bottom-up along
+/// the tree. Tree-only, and structurally incompatible with the
+/// collector-sketch axis (it *is* already a composition).
+pub struct Zhang(pub ZhangConfig);
+
+impl CoresetAlgorithm for Zhang {
+    fn k(&self) -> usize {
+        self.0.k
+    }
+
+    fn objective(&self) -> Objective {
+        self.0.objective
+    }
+
+    fn label(&self, _tree: bool) -> &'static str {
+        "zhang (tree)"
+    }
+
+    fn supports_graph(&self) -> bool {
+        false
+    }
+
+    fn supports_sketch(&self) -> bool {
+        false
+    }
+
+    fn supports_paging(&self) -> bool {
+        false
+    }
+
+    fn build(&self, ctx: BuildCtx<'_, '_>) -> Result<Exchange> {
+        let Topology::Tree(tree) = ctx.topology else {
+            anyhow::bail!("zhang requires a tree topology");
+        };
+        let result =
+            zhang::build_on_tree_exec(ctx.locals, tree, &self.0, ctx.backend, ctx.rng, ctx.exec);
+        Ok(Exchange::Composed {
+            coreset: result.coreset,
+            sent_points: result.sent_points,
+        })
+    }
+}
+
+/// A complete run description: topology × channel × sketch × exec ×
+/// seed, consumed by [`Scenario::run`] with any [`CoresetAlgorithm`].
+///
+/// See the [module docs](self) for the axis table and a runnable
+/// example.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    topology: ScenarioTopology,
+    channel: ChannelConfig,
+    sketch: SketchPlan,
+    exec: ExecPolicy,
+    seed: u64,
+}
+
+impl Scenario {
+    /// A scenario over an explicit topology axis (the `on_*`
+    /// constructors are usually more convenient).
+    pub fn new(topology: ScenarioTopology) -> Scenario {
+        Scenario {
+            topology,
+            channel: ChannelConfig::default(),
+            sketch: SketchPlan::exact(),
+            exec: ExecPolicy::Sequential,
+            seed: 0,
+        }
+    }
+
+    /// Flooding over a general graph (every node ends holding the full
+    /// coreset; the collector solves once).
+    pub fn on_graph(graph: Graph) -> Scenario {
+        Scenario::new(ScenarioTopology::Graph(graph))
+    }
+
+    /// Converge-cast over an explicit rooted spanning tree; the root
+    /// solves and broadcasts the centers.
+    pub fn on_tree(tree: SpanningTree) -> Scenario {
+        Scenario::new(ScenarioTopology::Tree(tree))
+    }
+
+    /// Converge-cast over a random-root spanning tree drawn from
+    /// `graph` when the run starts (the draw consumes the run RNG
+    /// first, exactly like the historical experiment driver).
+    pub fn on_spanning_tree_of(graph: Graph) -> Scenario {
+        Scenario::new(ScenarioTopology::SpanningTreeOf(graph))
+    }
+
+    /// Set the whole channel axis at once (page size + link model).
+    pub fn channel(mut self, channel: ChannelConfig) -> Scenario {
+        self.channel = channel;
+        self
+    }
+
+    /// Maximum points per streamed portion page (0 = monolithic).
+    pub fn page_points(mut self, page_points: usize) -> Scenario {
+        self.channel.page_points = page_points;
+        self
+    }
+
+    /// Per-directed-edge bandwidth model (uniform, per-edge overrides,
+    /// or degraded subsets — see [`LinkModel`]).
+    pub fn links(mut self, link: LinkModel) -> Scenario {
+        self.channel.link = link;
+        self
+    }
+
+    /// How collecting nodes fold the stream (exact / merge-and-reduce).
+    pub fn sketch(mut self, sketch: SketchPlan) -> Scenario {
+        self.sketch = sketch;
+        self
+    }
+
+    /// Per-site execution policy for the compute phases.
+    pub fn exec(mut self, exec: ExecPolicy) -> Scenario {
+        self.exec = exec;
+        self
+    }
+
+    /// Shorthand for [`Scenario::exec`] from a thread count (`1` =
+    /// sequential legacy path, `0` = all cores).
+    pub fn threads(self, threads: usize) -> Scenario {
+        let exec = ExecPolicy::from_threads(threads);
+        self.exec(exec)
+    }
+
+    /// RNG seed used by [`Scenario::run`].
+    pub fn seed(mut self, seed: u64) -> Scenario {
+        self.seed = seed;
+        self
+    }
+
+    /// Number of sites the topology axis hosts (= required `locals`
+    /// length).
+    pub fn sites(&self) -> usize {
+        self.topology.sites()
+    }
+
+    /// Run `algo` under this scenario with a fresh RNG from the
+    /// [`seed`](Scenario::seed) axis.
+    pub fn run(
+        &self,
+        algo: &dyn CoresetAlgorithm,
+        locals: &[WeightedSet],
+        backend: &dyn Backend,
+    ) -> Result<RunResult> {
+        let mut rng = Pcg64::seed_from(self.seed);
+        self.run_with_rng(algo, locals, backend, &mut rng)
+    }
+
+    /// Run `algo` under this scenario drawing from an existing RNG —
+    /// the entry point of the legacy shims and the experiment driver,
+    /// whose callers own the generator. The [`seed`](Scenario::seed)
+    /// axis is ignored on this path.
+    pub fn run_with_rng(
+        &self,
+        algo: &dyn CoresetAlgorithm,
+        locals: &[WeightedSet],
+        backend: &dyn Backend,
+        rng: &mut Pcg64,
+    ) -> Result<RunResult> {
+        // Axis validation — loud and early, before any compute.
+        if !algo.supports_sketch()
+            && (self.sketch.mode != SketchMode::Exact || self.sketch.bucket_points != 0)
+        {
+            anyhow::bail!(
+                "sketch options (--sketch {} / --bucket-points {}) are not supported by {}",
+                self.sketch.mode.name(),
+                self.sketch.bucket_points,
+                algo.label(true),
+            );
+        }
+        if !algo.supports_paging() && self.channel.page_points != 0 {
+            anyhow::bail!(
+                "page-points {} is not supported by {} (its summaries are \
+                 metering-only and never paginated)",
+                self.channel.page_points,
+                algo.label(true),
+            );
+        }
+        if matches!(self.topology, ScenarioTopology::Graph(_)) && !algo.supports_graph() {
+            anyhow::bail!("{} requires a tree topology", algo.label(true));
+        }
+        anyhow::ensure!(
+            self.topology.sites() == locals.len(),
+            "topology hosts {} sites but {} local sets were given",
+            self.topology.sites(),
+            locals.len()
+        );
+        let drawn_tree;
+        let topology: Topology<'_> = match &self.topology {
+            ScenarioTopology::Graph(g) => Topology::Graph(g),
+            ScenarioTopology::Tree(t) => Topology::Tree(t),
+            ScenarioTopology::SpanningTreeOf(g) => {
+                drawn_tree = SpanningTree::random_root(g, rng);
+                Topology::Tree(&drawn_tree)
+            }
+        };
+        let is_tree = matches!(topology, Topology::Tree(_));
+        let exchange = algo.build(BuildCtx {
+            locals,
+            topology,
+            backend,
+            exec: self.exec,
+            rng: &mut *rng,
+        })?;
+        match exchange {
+            Exchange::Portions { portions, costs } => stream_exchange(
+                topology,
+                locals.len(),
+                portions,
+                costs,
+                algo.k(),
+                algo.objective(),
+                algo.label(is_tree),
+                &self.channel,
+                &self.sketch,
+                backend,
+                rng,
+            ),
+            Exchange::Composed {
+                coreset,
+                sent_points,
+            } => {
+                let Topology::Tree(tree) = topology else {
+                    anyhow::bail!("{}: composed exchanges need a tree", algo.label(is_tree));
+                };
+                run_composed(
+                    tree,
+                    coreset,
+                    sent_points,
+                    algo.k(),
+                    algo.objective(),
+                    algo.label(true),
+                    &self.channel,
+                    backend,
+                    rng,
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::partition::Scheme;
+    use crate::testutil::mixture_sites;
+    use crate::topology::generators;
+
+    fn cfg() -> DistributedConfig {
+        DistributedConfig {
+            t: 256,
+            k: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builder_axes_default_off() {
+        let s = Scenario::on_graph(generators::star(4));
+        assert_eq!(s.sites(), 4);
+        assert_eq!(s.channel, ChannelConfig::default());
+        assert_eq!(s.sketch, SketchPlan::exact());
+        assert_eq!(s.exec, ExecPolicy::Sequential);
+        let s = s.page_points(16).threads(4).seed(9);
+        assert_eq!(s.channel.page_points, 16);
+        assert_eq!(s.exec, ExecPolicy::Parallel { threads: 4 });
+        assert_eq!(s.seed, 9);
+    }
+
+    #[test]
+    fn seeded_runs_are_reproducible() {
+        let locals = mixture_sites(3, 1_500, 4, 4, 5, Scheme::Uniform, false);
+        let s = Scenario::on_graph(generators::star(5)).seed(8);
+        let a = s.run(&Distributed(cfg()), &locals, &RustBackend).unwrap();
+        let b = s.run(&Distributed(cfg()), &locals, &RustBackend).unwrap();
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.comm_points, b.comm_points);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.algorithm, "distributed-coreset (Alg.1+3)");
+    }
+
+    #[test]
+    fn spanning_tree_axis_draws_from_the_run_rng() {
+        let locals = mixture_sites(4, 1_500, 4, 4, 6, Scheme::Uniform, false);
+        let mut rng0 = Pcg64::seed_from(2);
+        let g = generators::erdos_renyi_connected(&mut rng0, 6, 0.5);
+        // Scenario-drawn tree == manual random_root + explicit tree at
+        // the same RNG position: the draw-order contract of run_once.
+        let mut rng = Pcg64::seed_from(13);
+        let a = Scenario::on_spanning_tree_of(g.clone())
+            .run_with_rng(&Distributed(cfg()), &locals, &RustBackend, &mut rng)
+            .unwrap();
+        let mut rng = Pcg64::seed_from(13);
+        let tree = SpanningTree::random_root(&g, &mut rng);
+        let b = Scenario::on_tree(tree)
+            .run_with_rng(&Distributed(cfg()), &locals, &RustBackend, &mut rng)
+            .unwrap();
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.comm_points, b.comm_points);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.algorithm, "distributed-coreset (tree)");
+    }
+
+    #[test]
+    fn zhang_rejects_graphs_and_sketches() {
+        let locals = mixture_sites(5, 800, 3, 3, 4, Scheme::Uniform, false);
+        let z = Zhang(ZhangConfig {
+            t_node: 40,
+            k: 3,
+            objective: Objective::KMeans,
+        });
+        let err = Scenario::on_graph(generators::star(4))
+            .run(&z, &locals, &RustBackend)
+            .unwrap_err();
+        assert!(err.to_string().contains("tree topology"), "{err}");
+
+        let tree = SpanningTree::bfs(&generators::star(4), 0);
+        let err = Scenario::on_tree(tree.clone())
+            .sketch(SketchPlan::merge_reduce(128))
+            .run(&z, &locals, &RustBackend)
+            .unwrap_err();
+        assert!(err.to_string().contains("merge-reduce"), "{err}");
+
+        // Paging is a silent no-op for metering-only summaries — the
+        // axis must be rejected, not ignored.
+        let err = Scenario::on_tree(tree)
+            .page_points(16)
+            .run(&z, &locals, &RustBackend)
+            .unwrap_err();
+        assert!(err.to_string().contains("page-points 16"), "{err}");
+    }
+
+    #[test]
+    fn site_count_mismatch_is_loud() {
+        let locals = mixture_sites(6, 500, 3, 3, 3, Scheme::Uniform, false);
+        let err = Scenario::on_graph(generators::star(5))
+            .run(&Distributed(cfg()), &locals, &RustBackend)
+            .unwrap_err();
+        assert!(err.to_string().contains("5 sites"), "{err}");
+    }
+}

@@ -18,6 +18,13 @@
 //! stream through. Each reduction composes the coreset property: the
 //! result is a coreset of a coreset, trading a controlled accuracy loss
 //! per level for O(log(stream / bucket)) resident buckets.
+//!
+//! The accuracy loss is *accounted*, not just assumed: every reduction
+//! measures its own relative cost distortion at the bucket's solution
+//! centers and multiplies it into the bucket's composed factor, so
+//! [`MergeReduceSketch::error_factor`] reports the measured
+//! `Π(1 + ε_r)` — the empirical counterpart of the theoretical
+//! `(1 + ε)^levels` bound — over the worst reduction chain.
 
 use super::{MergeableSketch, PageTracker};
 use crate::clustering::backend::Backend;
@@ -50,12 +57,19 @@ pub struct MergeReduceSketch<'a> {
     /// Level-0 accumulator, capped at `bucket_points` (`None` until the
     /// first non-empty insert fixes the dimensionality).
     level0: Option<WeightedSet>,
+    /// Worst composed error factor of anything sitting in level 0 (1.0
+    /// while it holds only raw stream points; merged-in reduced buckets
+    /// raise it).
+    level0_factor: f64,
     /// Binary-counter tower: each occupied level holds one reduced
-    /// bucket of ≤ `reduce_target` points.
-    levels: Vec<Option<WeightedSet>>,
+    /// bucket of ≤ `reduce_target` points plus its composed factor.
+    levels: Vec<Option<(WeightedSet, f64)>>,
     points: usize,
     peak: usize,
     reductions: usize,
+    /// Monotone high-water mark of the composed factor across every
+    /// bucket this sketch (and anything merged into it) ever built.
+    worst_factor: f64,
 }
 
 impl<'a> MergeReduceSketch<'a> {
@@ -85,10 +99,12 @@ impl<'a> MergeReduceSketch<'a> {
             reduce_target: bucket_points / 2,
             tracker: PageTracker::default(),
             level0: None,
+            level0_factor: 1.0,
             levels: Vec::new(),
             points: 0,
             peak: 0,
             reductions: 0,
+            worst_factor: 1.0,
         }
     }
 
@@ -109,17 +125,37 @@ impl<'a> MergeReduceSketch<'a> {
         self.reductions
     }
 
-    /// Fold a weighted set, chunked so level 0 never exceeds the bucket
-    /// capacity even for inputs far larger than one bucket.
+    /// The measured composed error factor `Π(1 + ε_r)` over the worst
+    /// reduction chain this sketch (or anything merged into it) ever
+    /// built — `1.0` until the first reduction. Each `ε_r` is the
+    /// observed relative cost distortion of one bucket re-sketch at
+    /// that bucket's own solution centers, so the product is the
+    /// empirical `(1 + ε)^levels` composition the merge-and-reduce
+    /// theory bounds.
+    pub fn error_factor(&self) -> f64 {
+        self.worst_factor
+    }
+
+    /// Fold a weighted set of raw stream points, chunked so level 0
+    /// never exceeds the bucket capacity even for inputs far larger
+    /// than one bucket.
     pub fn insert_set(&mut self, set: &WeightedSet) {
+        self.insert_weighted(set, 1.0);
+    }
+
+    /// Fold a set whose content already carries a composed error factor
+    /// (merged-in buckets from another sketch).
+    fn insert_weighted(&mut self, set: &WeightedSet, factor: f64) {
         if set.n() == 0 {
             return;
         }
+        self.worst_factor = self.worst_factor.max(factor);
         let d = set.d();
         let mut start = 0;
         while start < set.n() {
             let level0 = self.level0.get_or_insert_with(|| WeightedSet::empty(d));
             assert_eq!(level0.d(), d, "sketch dimensionality mismatch");
+            self.level0_factor = self.level0_factor.max(factor);
             let room = self.bucket_points - level0.n();
             let end = (start + room).min(set.n());
             level0.extend(&set.slice(start, end));
@@ -135,7 +171,8 @@ impl<'a> MergeReduceSketch<'a> {
     /// Reduce the full level-0 bucket and carry it up the tower.
     fn carry(&mut self) {
         let full = self.level0.take().expect("carry of empty level 0");
-        let mut carry = self.reduce(full);
+        let full_factor = std::mem::replace(&mut self.level0_factor, 1.0);
+        let (mut carry, mut carry_factor) = self.reduce(full, full_factor);
         let mut lvl = 0;
         loop {
             if lvl == self.levels.len() {
@@ -143,12 +180,15 @@ impl<'a> MergeReduceSketch<'a> {
             }
             match self.levels[lvl].take() {
                 None => {
-                    self.levels[lvl] = Some(carry);
+                    self.levels[lvl] = Some((carry, carry_factor));
                     break;
                 }
-                Some(mut occupied) => {
+                Some((mut occupied, occupied_factor)) => {
                     occupied.extend(&carry);
-                    carry = self.reduce(occupied);
+                    let merged =
+                        self.reduce(occupied, occupied_factor.max(carry_factor));
+                    carry = merged.0;
+                    carry_factor = merged.1;
                     lvl += 1;
                 }
             }
@@ -159,10 +199,12 @@ impl<'a> MergeReduceSketch<'a> {
     /// approximate solution, per-point costs as sensitivities, sample
     /// `reduce_target − k` points, append the k solution centers with
     /// residual weights. Inputs already at or under the target pass
-    /// through unchanged (no information loss, no RNG draws).
-    fn reduce(&mut self, set: WeightedSet) -> WeightedSet {
+    /// through unchanged (no information loss, no RNG draws, factor
+    /// untouched). A real reduction measures its cost distortion and
+    /// composes it into the returned factor.
+    fn reduce(&mut self, set: WeightedSet, factor: f64) -> (WeightedSet, f64) {
         if set.n() <= self.reduce_target {
-            return set;
+            return (set, factor);
         }
         // The sampler needs non-negative masses; coreset streams built
         // with `clamp_center_weights = false` can carry negative center
@@ -176,12 +218,13 @@ impl<'a> MergeReduceSketch<'a> {
             set
         };
         if set.total_weight() <= 0.0 {
-            // Mass-free bucket: nothing the sampler can preserve.
-            // Keep the first `reduce_target` points as-is.
+            // Mass-free bucket: nothing the sampler can preserve (and
+            // no cost mass to distort). Keep the first `reduce_target`
+            // points as-is.
             let kept = set.slice(0, self.reduce_target);
             self.points -= set.n();
             self.points += kept.n();
-            return kept;
+            return (kept, factor);
         }
         let sol = approx_solution(
             &set,
@@ -209,10 +252,23 @@ impl<'a> MergeReduceSketch<'a> {
             },
             &mut self.rng,
         );
+        // Error accounting: the observed relative cost distortion of
+        // this reduction at the bucket's own centers, composed
+        // multiplicatively with the input's history.
+        let reduced_asg = self
+            .backend
+            .assign(&reduced.set.points, &reduced.set.weights, &sol.centers);
+        let err = if total > 0.0 {
+            ((reduced_asg.total(self.objective) - total) / total).abs()
+        } else {
+            0.0 // degenerate bucket: zero cost either way
+        };
+        let factor = factor * (1.0 + err);
+        self.worst_factor = self.worst_factor.max(factor);
         self.reductions += 1;
         self.points -= set.n();
         self.points += reduced.set.n();
-        reduced.set
+        (reduced.set, factor)
     }
 }
 
@@ -233,16 +289,19 @@ impl MergeableSketch for MergeReduceSketch<'_> {
 
     fn merge(&mut self, other: MergeReduceSketch<'_>) {
         // Carry the other sketch's history: the merged meter must not
-        // under-report memory the process actually held, and reduction
-        // counts accumulate.
+        // under-report memory the process actually held, reduction
+        // counts accumulate, and composed error factors ride along with
+        // their buckets.
         self.peak = self.peak.max(other.peak);
         self.reductions += other.reductions;
+        self.worst_factor = self.worst_factor.max(other.worst_factor);
         self.tracker.merge(other.tracker);
+        let l0_factor = other.level0_factor;
         if let Some(l0) = other.level0 {
-            self.insert_set(&l0);
+            self.insert_weighted(&l0, l0_factor);
         }
-        for level in other.levels.into_iter().flatten() {
-            self.insert_set(&level);
+        for (level, factor) in other.levels.into_iter().flatten() {
+            self.insert_weighted(&level, factor);
         }
     }
 
@@ -252,14 +311,14 @@ impl MergeableSketch for MergeReduceSketch<'_> {
             .levels
             .iter()
             .flatten()
-            .chain(self.level0.iter())
-            .map(|s| s.d())
+            .map(|(s, _)| s.d())
+            .chain(self.level0.iter().map(|s| s.d()))
             .next()
             .unwrap_or(1);
         let mut out = WeightedSet::empty(d);
         // Deepest (oldest) buckets first, the level-0 tail last — a
         // fixed, deterministic order.
-        for level in self.levels.iter().rev().flatten() {
+        for (level, _) in self.levels.iter().rev().flatten() {
             out.extend(level);
         }
         if let Some(l0) = &self.level0 {
@@ -400,6 +459,47 @@ mod tests {
         let mut s = sketch(128, 3);
         s.insert_set(&set);
         assert_eq!(s.reductions(), 0);
+        assert_eq!(s.error_factor(), 1.0, "no reduction, no error");
         assert_eq!(s.finish().unwrap(), set, "under one bucket: identity");
+    }
+
+    #[test]
+    fn error_factor_composes_with_reductions() {
+        let mut rng = Pcg64::seed_from(7);
+        let data = gaussian_mixture(&mut rng, 6_000, 4, 4);
+        let set = WeightedSet::unit(data);
+        let mut s = sketch(128, 4);
+        s.insert_set(&set);
+        assert!(s.reductions() > 0);
+        let f = s.error_factor();
+        assert!(f > 1.0, "measured distortion must register, got {f}");
+        assert!(f.is_finite() && f < 50.0, "implausible factor {f}");
+        // More levels (smaller bucket) compose at least as much error
+        // on the same stream — monotone in reduction depth, typically.
+        // Pin only the invariants: a factor never decreases as more of
+        // the same stream flows through one sketch.
+        let mut longer = sketch(128, 4);
+        longer.insert_set(&set);
+        let f1 = longer.error_factor();
+        longer.insert_set(&set);
+        assert!(longer.error_factor() >= f1, "factor is monotone");
+    }
+
+    #[test]
+    fn merge_carries_error_factors() {
+        let mut rng = Pcg64::seed_from(8);
+        let a = WeightedSet::unit(gaussian_mixture(&mut rng, 3_000, 4, 3));
+        let b = WeightedSet::unit(gaussian_mixture(&mut rng, 3_000, 4, 3));
+        let mut left = sketch(128, 3);
+        left.insert_set(&a);
+        let mut right = sketch(128, 3);
+        right.insert_set(&b);
+        let right_factor = right.error_factor();
+        assert!(right_factor > 1.0);
+        left.merge(right);
+        assert!(
+            left.error_factor() >= right_factor,
+            "merge must not forget the other sketch's composed error"
+        );
     }
 }

@@ -31,9 +31,12 @@
 //! n× bucket re-solves); and every relay on a tree in merge-reduce
 //! mode, where the relay forwards its *reduced* stream upstream —
 //! in-network reduction. [`SketchPlan`] selects the implementation and
-//! is plumbed from the CLI/config down to
-//! [`crate::protocol::run_pipeline`] and the lazy streaming
-//! coordinator.
+//! is the sketch axis of [`crate::scenario::Scenario`], plumbed from
+//! the CLI/config down to the wire engine and the lazy streaming
+//! coordinator. Every merge-and-reduce reduction *measures* its cost
+//! distortion and composes it into an error factor
+//! ([`MergeReduceSketch::error_factor`]) the run surfaces through
+//! `RunResult::meters`.
 
 mod exact;
 mod merge_reduce;
@@ -253,6 +256,24 @@ impl Sketch<'_> {
         match self {
             Sketch::Exact(s) => s.complete_sites(),
             Sketch::MergeReduce(s) => s.complete_sites(),
+        }
+    }
+
+    /// Measured composed error factor `Π(1 + ε_r)` of the worst
+    /// reduction chain (`1.0` for the lossless exact sketch) — see
+    /// [`MergeReduceSketch::error_factor`].
+    pub fn error_factor(&self) -> f64 {
+        match self {
+            Sketch::Exact(_) => 1.0,
+            Sketch::MergeReduce(s) => s.error_factor(),
+        }
+    }
+
+    /// Bucket reductions performed (always `0` for the exact sketch).
+    pub fn reductions(&self) -> usize {
+        match self {
+            Sketch::Exact(_) => 0,
+            Sketch::MergeReduce(s) => s.reductions(),
         }
     }
 }

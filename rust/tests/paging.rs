@@ -21,11 +21,8 @@ use distclus::network::{paginate, reassemble, ChannelConfig, LinkModel, Network,
 use distclus::partition::Scheme;
 use distclus::points::WeightedSet;
 use distclus::prop_assert;
-use distclus::protocol::{
-    flood_multi, flood_reliable_multi, run_pipeline, CoresetPlan, RunResult, Topology,
-};
-use distclus::rng::Pcg64;
-use distclus::sketch::SketchPlan;
+use distclus::protocol::{flood_multi, flood_reliable_multi, RunResult};
+use distclus::scenario::{Distributed, Scenario};
 use distclus::testutil::{arb_connected_graph, arb_portion, for_all, mixture_sites};
 use std::sync::Arc;
 
@@ -125,18 +122,12 @@ fn graph_run(
     channel: ChannelConfig,
     exec: ExecPolicy,
 ) -> RunResult {
-    let mut rng = Pcg64::seed_from(1234);
-    run_pipeline(
-        Topology::Graph(g),
-        locals,
-        CoresetPlan::Distributed(cfg),
-        &channel,
-        &SketchPlan::exact(),
-        &RustBackend,
-        &mut rng,
-        exec,
-    )
-    .unwrap()
+    Scenario::on_graph(g.clone())
+        .channel(channel)
+        .exec(exec)
+        .seed(1234)
+        .run(&Distributed(*cfg), locals, &RustBackend)
+        .unwrap()
 }
 
 #[test]
@@ -157,10 +148,7 @@ fn paged_peak_strictly_below_monolithic_at_4x_page_boundary() {
         &g,
         &locals,
         &cfg,
-        ChannelConfig {
-            page_points: page,
-            link_capacity: page,
-        },
+        ChannelConfig::uniform(page, page),
         ExecPolicy::Sequential,
     );
     assert_eq!(mono.comm_points, paged.comm_points);
@@ -188,12 +176,9 @@ fn acceptance_paged_peak_quarter_of_monolithic_at_t2048() {
         k: 4,
         ..Default::default()
     };
-    let channel = ChannelConfig {
-        page_points: 64,
-        link_capacity: 64,
-    };
+    let channel = ChannelConfig::uniform(64, 64);
     let mono = graph_run(&g, &locals, &cfg, ChannelConfig::default(), ExecPolicy::Sequential);
-    let paged = graph_run(&g, &locals, &cfg, channel, ExecPolicy::Sequential);
+    let paged = graph_run(&g, &locals, &cfg, channel.clone(), ExecPolicy::Sequential);
 
     // Exact Theorem-2 communication, invariant under paging.
     let expected = 2 * g.m() * g.n() + 2 * g.m() * (cfg.t + g.n() * cfg.k);
@@ -214,7 +199,13 @@ fn acceptance_paged_peak_quarter_of_monolithic_at_t2048() {
     // worker counts.)
     assert_eq!(mono.coreset.set, paged.coreset.set);
     assert_eq!(mono.centers, paged.centers);
-    let p2 = graph_run(&g, &locals, &cfg, channel, ExecPolicy::Parallel { threads: 2 });
+    let p2 = graph_run(
+        &g,
+        &locals,
+        &cfg,
+        channel.clone(),
+        ExecPolicy::Parallel { threads: 2 },
+    );
     let m2 = graph_run(
         &g,
         &locals,
@@ -247,24 +238,14 @@ fn paged_tree_pipeline_bounds_peak_too() {
         ..Default::default()
     };
     let run_at = |channel: ChannelConfig| {
-        let mut rng = Pcg64::seed_from(77);
-        run_pipeline(
-            Topology::Tree(&tree),
-            &locals,
-            CoresetPlan::Distributed(&cfg),
-            &channel,
-            &SketchPlan::exact(),
-            &RustBackend,
-            &mut rng,
-            ExecPolicy::Sequential,
-        )
-        .unwrap()
+        Scenario::on_tree(tree.clone())
+            .channel(channel)
+            .seed(77)
+            .run(&Distributed(cfg), &locals, &RustBackend)
+            .unwrap()
     };
     let mono = run_at(ChannelConfig::default());
-    let paged = run_at(ChannelConfig {
-        page_points: 32,
-        link_capacity: 32,
-    });
+    let paged = run_at(ChannelConfig::uniform(32, 32));
     assert_eq!(mono.comm_points, paged.comm_points);
     assert_eq!(mono.centers, paged.centers);
     assert!(

@@ -13,9 +13,9 @@ use distclus::exec::ExecPolicy;
 use distclus::network::ChannelConfig;
 use distclus::partition::{PartitionError, Scheme};
 use distclus::points::WeightedSet;
-use distclus::protocol::{cluster_on_graph_exec, run_pipeline, CoresetPlan, Topology};
+use distclus::protocol::cluster_on_graph_exec;
 use distclus::rng::Pcg64;
-use distclus::sketch::SketchPlan;
+use distclus::scenario::{Distributed, Scenario};
 use distclus::testutil::mixture_sites;
 use distclus::topology::generators;
 
@@ -110,25 +110,16 @@ fn paged_pipeline_meters_are_thread_count_invariant() {
         k: 4,
         ..Default::default()
     };
-    let channel = ChannelConfig {
-        page_points: 32,
-        link_capacity: 32,
-    };
+    let channel = ChannelConfig::uniform(32, 32);
     let run = |site_threads: usize| {
-        let mut rng = Pcg64::seed_from(21);
-        run_pipeline(
-            Topology::Graph(&g),
-            &locals,
-            CoresetPlan::Distributed(&cfg),
-            &channel,
-            &SketchPlan::exact(),
-            &RustBackend,
-            &mut rng,
-            ExecPolicy::Parallel {
+        Scenario::on_graph(g.clone())
+            .channel(channel.clone())
+            .exec(ExecPolicy::Parallel {
                 threads: site_threads,
-            },
-        )
-        .unwrap()
+            })
+            .seed(21)
+            .run(&Distributed(cfg), &locals, &RustBackend)
+            .unwrap()
     };
     let a = run(1);
     let b = run(3);

@@ -1,0 +1,295 @@
+//! Scenario-builder API — the typed run surface's contracts:
+//!
+//! 1. builder-vs-legacy bit-compatibility: every legacy entry point is
+//!    a shim over [`Scenario`], so centers, coreset, communication,
+//!    rounds and all peak meters must agree exactly, for all five
+//!    algorithm variants across 1/2/8 worker threads;
+//! 2. the per-directed-edge [`LinkModel`] axis: throttling one edge of
+//!    a star stretches `rounds` while total communication and results
+//!    stay bit-identical (property test — the acceptance criterion of
+//!    the heterogeneous-links axis);
+//! 3. error-accounted merge-reduce: the composed `(1+ε)^levels` meter
+//!    registers reductions and stays 1.0 on exact runs;
+//! 4. composed exchanges (Zhang) accept the channel axis — and stay
+//!    bit-identical under it, because one summary per edge can never
+//!    saturate a link.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::Objective;
+use distclus::coreset::combine::CombineConfig;
+use distclus::coreset::zhang::ZhangConfig;
+use distclus::coreset::DistributedConfig;
+use distclus::exec::ExecPolicy;
+use distclus::network::{ChannelConfig, LinkModel};
+use distclus::partition::Scheme;
+use distclus::points::WeightedSet;
+use distclus::prop_assert;
+use distclus::protocol::{
+    cluster_on_graph_exec, cluster_on_tree_exec, combine_on_graph, combine_on_tree,
+    zhang_on_tree_exec, RunResult,
+};
+use distclus::rng::Pcg64;
+use distclus::scenario::{Combine, Distributed, Scenario, Zhang};
+use distclus::sketch::SketchPlan;
+use distclus::testutil::{for_all, mixture_sites};
+use distclus::topology::{generators, Graph, SpanningTree};
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.centers, b.centers, "{what}: centers");
+    assert_eq!(a.coreset.set, b.coreset.set, "{what}: coreset");
+    assert_eq!(a.comm_points, b.comm_points, "{what}: comm");
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.peak_points, b.peak_points, "{what}: wire peak");
+    assert_eq!(a.node_peaks, b.node_peaks, "{what}: node peaks");
+    assert_eq!(a.collector_peak, b.collector_peak, "{what}: collector peak");
+    assert_eq!(a.algorithm, b.algorithm, "{what}: label");
+}
+
+fn fixture(seed: u64, sites: usize) -> (Graph, SpanningTree, Vec<WeightedSet>) {
+    let locals = mixture_sites(seed, 4_000, 5, 4, sites, Scheme::Weighted, true);
+    let mut rng = Pcg64::seed_from(seed ^ 0xABCD);
+    let g = generators::erdos_renyi_connected(&mut rng, locals.len(), 0.4);
+    let tree = SpanningTree::bfs(&g, 0);
+    (g, tree, locals)
+}
+
+#[test]
+fn builder_matches_legacy_for_all_five_algorithms() {
+    let (g, tree, locals) = fixture(11, 8);
+    let dcfg = DistributedConfig {
+        t: 400,
+        k: 4,
+        ..Default::default()
+    };
+    let ccfg = CombineConfig {
+        t: 400,
+        k: 4,
+        objective: Objective::KMeans,
+    };
+    let zcfg = ZhangConfig {
+        t_node: 60,
+        k: 4,
+        objective: Objective::KMeans,
+    };
+
+    // Exec-capable legacy entries × 1/2/8 worker threads.
+    for threads in [1usize, 2, 8] {
+        let exec = ExecPolicy::Parallel { threads };
+        let what = format!("distributed/graph t={threads}");
+        let mut rng = Pcg64::seed_from(7);
+        let legacy =
+            cluster_on_graph_exec(&g, &locals, &dcfg, &RustBackend, &mut rng, exec).unwrap();
+        let built = Scenario::on_graph(g.clone())
+            .exec(exec)
+            .seed(7)
+            .run(&Distributed(dcfg), &locals, &RustBackend)
+            .unwrap();
+        assert_bit_identical(&legacy, &built, &what);
+
+        let what = format!("distributed/tree t={threads}");
+        let mut rng = Pcg64::seed_from(8);
+        let legacy =
+            cluster_on_tree_exec(&tree, &locals, &dcfg, &RustBackend, &mut rng, exec).unwrap();
+        let built = Scenario::on_tree(tree.clone())
+            .exec(exec)
+            .seed(8)
+            .run(&Distributed(dcfg), &locals, &RustBackend)
+            .unwrap();
+        assert_bit_identical(&legacy, &built, &what);
+
+        let what = format!("zhang/tree t={threads}");
+        let mut rng = Pcg64::seed_from(9);
+        let legacy =
+            zhang_on_tree_exec(&tree, &locals, &zcfg, &RustBackend, &mut rng, exec).unwrap();
+        let built = Scenario::on_tree(tree.clone())
+            .exec(exec)
+            .seed(9)
+            .run(&Zhang(zcfg), &locals, &RustBackend)
+            .unwrap();
+        assert_bit_identical(&legacy, &built, &what);
+    }
+
+    // The sequential-only combine entries.
+    let mut rng = Pcg64::seed_from(10);
+    let legacy = combine_on_graph(&g, &locals, &ccfg, &RustBackend, &mut rng).unwrap();
+    let built = Scenario::on_graph(g.clone())
+        .seed(10)
+        .run(&Combine(ccfg), &locals, &RustBackend)
+        .unwrap();
+    assert_bit_identical(&legacy, &built, "combine/graph");
+
+    let mut rng = Pcg64::seed_from(12);
+    let legacy = combine_on_tree(&tree, &locals, &ccfg, &RustBackend, &mut rng).unwrap();
+    let built = Scenario::on_tree(tree.clone())
+        .seed(12)
+        .run(&Combine(ccfg), &locals, &RustBackend)
+        .unwrap();
+    assert_bit_identical(&legacy, &built, "combine/tree");
+
+    // Combine gains parallel execution through the builder (no legacy
+    // entry to compare against) — results must be thread-invariant.
+    let combine_at = |threads: usize| {
+        Scenario::on_graph(g.clone())
+            .exec(ExecPolicy::Parallel { threads })
+            .seed(13)
+            .run(&Combine(ccfg), &locals, &RustBackend)
+            .unwrap()
+    };
+    assert_bit_identical(&combine_at(2), &combine_at(8), "combine thread-invariance");
+}
+
+#[test]
+fn prop_throttled_edge_stretches_rounds_at_identical_results() {
+    // The per-edge capacity acceptance criterion: a star with ONE
+    // throttled link must take strictly more rounds than the uniform
+    // star at identical total points and bit-identical centers — the
+    // link model reshapes time, never results.
+    for_all(
+        8,
+        97,
+        |rng| {
+            let t = 256 + rng.below(512);
+            let page = 16 + rng.below(33);
+            let slow = 2 + rng.below(6);
+            (t, page, slow, rng.next_u64())
+        },
+        |&(t, page, slow, seed)| {
+            let locals = mixture_sites(seed, 3_000, 4, 4, 5, Scheme::Uniform, false);
+            let g = generators::star(5);
+            let cfg = DistributedConfig {
+                t,
+                k: 4,
+                ..Default::default()
+            };
+            let run_with = |link: LinkModel| {
+                Scenario::on_graph(g.clone())
+                    .channel(ChannelConfig {
+                        page_points: page,
+                        link,
+                    })
+                    .seed(seed ^ 1)
+                    .run(&Distributed(cfg), &locals, &RustBackend)
+                    .unwrap()
+            };
+            let uniform = run_with(LinkModel::capped(256));
+            let throttled = run_with(LinkModel::capped(256).with_link(1, 0, slow));
+            prop_assert!(
+                throttled.comm_points == uniform.comm_points,
+                "comm changed: {} != {}",
+                throttled.comm_points,
+                uniform.comm_points
+            );
+            prop_assert!(
+                throttled.centers == uniform.centers,
+                "a slow edge must not change the solution"
+            );
+            prop_assert!(
+                throttled.coreset.set == uniform.coreset.set,
+                "a slow edge must not change the coreset"
+            );
+            prop_assert!(
+                throttled.rounds > uniform.rounds,
+                "throttled rounds {} !> uniform {}",
+                throttled.rounds,
+                uniform.rounds
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn degraded_subset_profile_runs_end_to_end() {
+    // The ROADMAP scenario this API unblocks: a grid deployment where a
+    // whole subset of links is degraded (asymmetric backhaul).
+    let locals = mixture_sites(21, 3_000, 4, 4, 9, Scheme::Uniform, false);
+    let g = generators::grid(3, 3);
+    let cfg = DistributedConfig {
+        t: 512,
+        k: 4,
+        ..Default::default()
+    };
+    let run_with = |link: LinkModel| {
+        Scenario::on_graph(g.clone())
+            .page_points(32)
+            .links(link)
+            .seed(22)
+            .run(&Distributed(cfg), &locals, &RustBackend)
+            .unwrap()
+    };
+    let uniform = run_with(LinkModel::capped(128));
+    let degraded = run_with(LinkModel::capped(128).degraded(&[(0, 1), (3, 4)], 4));
+    assert_eq!(uniform.comm_points, degraded.comm_points);
+    assert_eq!(uniform.centers, degraded.centers);
+    assert!(
+        degraded.rounds > uniform.rounds,
+        "degraded {} !> uniform {}",
+        degraded.rounds,
+        uniform.rounds
+    );
+}
+
+#[test]
+fn merge_reduce_meters_surface_error_accounting() {
+    let locals = mixture_sites(33, 6_000, 4, 4, 5, Scheme::Uniform, false);
+    let g = generators::star(5);
+    let cfg = DistributedConfig {
+        t: 2_048,
+        k: 4,
+        ..Default::default()
+    };
+    let base = || {
+        Scenario::on_graph(g.clone())
+            .channel(ChannelConfig::uniform(64, 64))
+            .seed(3)
+    };
+    let exact = base().run(&Distributed(cfg), &locals, &RustBackend).unwrap();
+    assert!(exact.meters.is_empty(), "exact runs meter nothing extra");
+    assert_eq!(exact.error_factor(), 1.0);
+
+    let mr = base()
+        .sketch(SketchPlan::merge_reduce(256))
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .unwrap();
+    assert!(mr.meters["mr_reductions"] > 0, "reductions must be counted");
+    assert!(
+        mr.error_factor() > 1.0,
+        "composed factor {} must register measured distortion",
+        mr.error_factor()
+    );
+    assert!(
+        mr.error_factor() < 8.0,
+        "implausible composed factor {}",
+        mr.error_factor()
+    );
+}
+
+#[test]
+fn composed_exchanges_accept_the_channel_axis() {
+    // Zhang's summary transfers ran outside any link model before the
+    // Scenario redesign; now the channel axis reaches its wire phase
+    // too. Its traffic pattern, however, puts exactly ONE summary on
+    // each directed edge per session (every node emits once, after its
+    // children) — and a lone message always ships on an idle edge (the
+    // simulator's progress guarantee) — so a per-round capacity has
+    // nothing to defer: every meter must be *identical*, not merely
+    // the totals. This pins both the plumbing and the reason the axis
+    // cannot bind here.
+    let locals = mixture_sites(41, 2_000, 4, 3, 6, Scheme::Uniform, false);
+    let tree = SpanningTree::bfs(&generators::path(6), 0);
+    let zcfg = ZhangConfig {
+        t_node: 48,
+        k: 3,
+        objective: Objective::KMeans,
+    };
+    let run_with = |link: LinkModel| {
+        Scenario::on_tree(tree.clone())
+            .links(link)
+            .seed(42)
+            .run(&Zhang(zcfg), &locals, &RustBackend)
+            .unwrap()
+    };
+    let open = run_with(LinkModel::unlimited());
+    let capped = run_with(LinkModel::capped(8));
+    assert_bit_identical(&open, &capped, "zhang under a capacity");
+}

@@ -25,8 +25,9 @@ use distclus::network::{paginate, ChannelConfig, Payload};
 use distclus::partition::Scheme;
 use distclus::points::WeightedSet;
 use distclus::prop_assert;
-use distclus::protocol::{run_pipeline, CoresetPlan, RunResult, Topology};
+use distclus::protocol::RunResult;
 use distclus::rng::Pcg64;
+use distclus::scenario::{Distributed, Scenario};
 use distclus::sketch::{MergeReduceSketch, MergeableSketch, SketchPlan};
 use distclus::testutil::{arb_portion, for_all, mixture_sites};
 
@@ -100,7 +101,7 @@ fn star_locals(seed: u64, sites: usize, points: usize) -> Vec<WeightedSet> {
 }
 
 fn run(
-    topology: Topology<'_>,
+    base: Scenario,
     locals: &[WeightedSet],
     cfg: &DistributedConfig,
     channel: ChannelConfig,
@@ -108,18 +109,12 @@ fn run(
     exec: ExecPolicy,
     seed: u64,
 ) -> RunResult {
-    let mut rng = Pcg64::seed_from(seed);
-    run_pipeline(
-        topology,
-        locals,
-        CoresetPlan::Distributed(cfg),
-        &channel,
-        &sketch,
-        &RustBackend,
-        &mut rng,
-        exec,
-    )
-    .unwrap()
+    base.channel(channel)
+        .sketch(sketch)
+        .exec(exec)
+        .seed(seed)
+        .run(&Distributed(*cfg), locals, &RustBackend)
+        .unwrap()
 }
 
 /// The materialized (PR 2) construction, reproduced host-side: round 1,
@@ -160,15 +155,9 @@ fn exact_mode_is_bit_identical_to_materialized_construction() {
     for threads in [1usize, 2, 8] {
         let exec = ExecPolicy::Parallel { threads };
         let (want_set, want_centers) = materialized(&locals, &cfg, exec, 23);
-        for channel in [
-            ChannelConfig::default(),
-            ChannelConfig {
-                page_points: 64,
-                link_capacity: 64,
-            },
-        ] {
+        for channel in [ChannelConfig::default(), ChannelConfig::uniform(64, 64)] {
             let got = run(
-                Topology::Graph(&g),
+                Scenario::on_graph(g.clone()),
                 &locals,
                 &cfg,
                 channel,
@@ -198,21 +187,18 @@ fn merge_reduce_solve_cost_within_ten_percent_of_materialized() {
             objective,
             ..Default::default()
         };
-        let channel = ChannelConfig {
-            page_points: 64,
-            link_capacity: 0,
-        };
+        let channel = ChannelConfig::uniform(64, 0);
         let exact = run(
-            Topology::Graph(&g),
+            Scenario::on_graph(g.clone()),
             &locals,
             &cfg,
-            channel,
+            channel.clone(),
             SketchPlan::exact(),
             ExecPolicy::Sequential,
             seed + 1,
         );
         let reduced = run(
-            Topology::Graph(&g),
+            Scenario::on_graph(g.clone()),
             &locals,
             &cfg,
             channel,
@@ -245,26 +231,23 @@ fn acceptance_star_page64_t2048_collector_memory() {
         k: 4,
         ..Default::default()
     };
-    let channel = ChannelConfig {
-        page_points: 64,
-        link_capacity: 64,
-    };
+    let channel = ChannelConfig::uniform(64, 64);
     let bucket = 256usize;
 
     let exact = run(
-        Topology::Graph(&g),
+        Scenario::on_graph(g.clone()),
         &locals,
         &cfg,
-        channel,
+        channel.clone(),
         SketchPlan::exact(),
         ExecPolicy::Sequential,
         31,
     );
     let reduced = run(
-        Topology::Graph(&g),
+        Scenario::on_graph(g.clone()),
         &locals,
         &cfg,
-        channel,
+        channel.clone(),
         SketchPlan::merge_reduce(bucket),
         ExecPolicy::Sequential,
         31,
@@ -304,25 +287,25 @@ fn acceptance_star_page64_t2048_collector_memory() {
     // Bit-identical exact centers across thread counts, and against the
     // materialized chain.
     let p1 = run(
-        Topology::Graph(&g),
+        Scenario::on_graph(g.clone()),
         &locals,
         &cfg,
-        channel,
+        channel.clone(),
         SketchPlan::exact(),
         ExecPolicy::Parallel { threads: 1 },
         31,
     );
     let p2 = run(
-        Topology::Graph(&g),
+        Scenario::on_graph(g.clone()),
         &locals,
         &cfg,
-        channel,
+        channel.clone(),
         SketchPlan::exact(),
         ExecPolicy::Parallel { threads: 2 },
         31,
     );
     let p8 = run(
-        Topology::Graph(&g),
+        Scenario::on_graph(g.clone()),
         &locals,
         &cfg,
         channel,
@@ -352,22 +335,19 @@ fn merge_reduce_tree_reduces_in_network() {
         k: 4,
         ..Default::default()
     };
-    let channel = ChannelConfig {
-        page_points: 64,
-        link_capacity: 0,
-    };
+    let channel = ChannelConfig::uniform(64, 0);
     let bucket = 256usize;
     let exact = run(
-        Topology::Tree(&tree),
+        Scenario::on_tree(tree.clone()),
         &locals,
         &cfg,
-        channel,
+        channel.clone(),
         SketchPlan::exact(),
         ExecPolicy::Sequential,
         39,
     );
     let reduced = run(
-        Topology::Tree(&tree),
+        Scenario::on_tree(tree.clone()),
         &locals,
         &cfg,
         channel,
