@@ -6,7 +6,10 @@
 //! is invariant while rounds stretch and peak receiver memory collapses,
 //! and a heterogeneous-links panel (one slow edge through the Scenario
 //! builder's per-edge `LinkModel`) demonstrating that link asymmetry
-//! reshapes transfer time only, never totals or results.
+//! reshapes transfer time only, never totals or results — and an
+//! overlay-reduced-exchange panel (ER-16 at t = 2048) asserting the
+//! overlay's wire total lands strictly below flooding's 2m(t+nk) at
+//! equal centers-quality.
 //!
 //! Run with `cargo bench --bench comm_scaling` (`-- --smoke` for the CI
 //! bitrot check: smallest sizes only).
@@ -21,7 +24,7 @@ use distclus::points::WeightedSet;
 use distclus::protocol::{broadcast_down, converge_cast, flood, flood_multi};
 use distclus::rng::Pcg64;
 use distclus::scenario::{Distributed, Scenario};
-use distclus::testutil::{mixture_sites, unit_portion};
+use distclus::testutil::{mixture_sites, overlay_acceptance, unit_portion};
 use distclus::topology::{diameter, generators, SpanningTree};
 use std::sync::Arc;
 
@@ -227,6 +230,46 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\n# heterogeneous links (star, page=32; Scenario per-edge LinkModel)\n");
     println!("{}", hetero_table.render());
+
+    // Overlay-reduced graph exchange vs flooding on a 16-node connected
+    // Erdős–Rényi graph at t = 2048: converge-fold up a spanning-tree
+    // overlay, flood only the reduced root set + centers. Total wire
+    // points must land strictly below flooding's 2m(t+nk) portion bill
+    // at equal centers-quality (cost within the run's composed error
+    // factor). This panel runs under --smoke (smaller dataset, same
+    // operating point) as the CI bitrot check for the overlay path.
+    let mut overlay_table = Table::new(&[
+        "exchange",
+        "comm (points)",
+        "2m(t+nk)",
+        "rounds",
+        "coreset",
+        "err-factor",
+        "cost vs flooded",
+    ]);
+    // The fixture (shared with tests/overlay.rs, so the operating point
+    // lives in one place) asserts the bound + quality contract itself.
+    let a = overlay_acceptance(if smoke { 4_000 } else { 12_000 });
+    for (label, run, cost) in [
+        ("flooded", &a.flooded, a.flooded_cost),
+        ("overlay", &a.overlay, a.overlay_cost),
+    ] {
+        overlay_table.row(vec![
+            label.into(),
+            run.comm_points.to_string(),
+            a.flooded_portion_bound.to_string(),
+            run.rounds.to_string(),
+            run.coreset.size().to_string(),
+            format!("{:.4}", run.error_factor()),
+            format!("{:.3}x", cost / a.flooded_cost),
+        ]);
+    }
+    println!(
+        "\n# overlay-reduced vs flooded exchange (ER n={}, t={})\n",
+        a.graph.n(),
+        a.t
+    );
+    println!("{}", overlay_table.render());
     println!("\nall analytical bounds verified exactly (assertions passed)");
     Ok(())
 }

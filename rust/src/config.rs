@@ -113,6 +113,106 @@ impl TopologySpec {
     }
 }
 
+/// How the coreset exchange runs over *graph* topologies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExchangeSpec {
+    /// Flood every portion to every node (Algorithm 3; the default).
+    #[default]
+    Flooded,
+    /// Overlay-reduced: converge-fold up a spanning-tree overlay, flood
+    /// only the root's reduced set + centers back (requires
+    /// `sketch = merge-reduce` and `page_points > 0` — see
+    /// [`crate::scenario::Scenario::on_overlay_of`]).
+    Overlay,
+}
+
+impl ExchangeSpec {
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ExchangeSpec::Flooded => "flooded",
+            ExchangeSpec::Overlay => "overlay",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<ExchangeSpec> {
+        Some(match s {
+            "flooded" => ExchangeSpec::Flooded,
+            "overlay" => ExchangeSpec::Overlay,
+            _ => return None,
+        })
+    }
+}
+
+/// Parse a `link.<from>.<to>` config key into its directed edge — the
+/// per-edge capacity override surface of the flat config format (the
+/// value is the capacity in points/round, `0` = unlimited).
+///
+/// ```
+/// assert_eq!(distclus::config::parse_link_key("link.3.0").unwrap(), (3, 0));
+/// assert!(distclus::config::parse_link_key("link.3").is_err());
+/// assert!(distclus::config::parse_link_key("link.a.b").is_err());
+/// ```
+pub fn parse_link_key(key: &str) -> Result<(usize, usize)> {
+    let rest = key
+        .strip_prefix("link.")
+        .ok_or_else(|| anyhow!("'{key}': not a link.<from>.<to> key"))?;
+    let (a, b) = rest
+        .split_once('.')
+        .ok_or_else(|| anyhow!("'{key}': expected link.<from>.<to>"))?;
+    let from = a
+        .parse()
+        .map_err(|_| anyhow!("'{key}': bad node id '{a}'"))?;
+    let to = b
+        .parse()
+        .map_err(|_| anyhow!("'{key}': bad node id '{b}'"))?;
+    Ok((from, to))
+}
+
+/// Parse the degraded-subset shorthand `a-b,c-d @ <capacity>`: the named
+/// links (both directions each) share one capacity, everything else
+/// keeps the uniform `link_capacity` — the config-file form of
+/// [`crate::network::LinkModel::degraded`].
+///
+/// ```
+/// let (links, cap) = distclus::config::parse_degraded("0-1, 2-3 @ 4").unwrap();
+/// assert_eq!(links, vec![(0, 1), (2, 3)]);
+/// assert_eq!(cap, 4);
+/// assert!(distclus::config::parse_degraded("0-1").is_err());
+/// assert!(distclus::config::parse_degraded("@ 4").is_err());
+/// ```
+pub fn parse_degraded(v: &str) -> Result<(Vec<(usize, usize)>, usize)> {
+    let (pairs, cap) = v
+        .split_once('@')
+        .ok_or_else(|| anyhow!("degraded '{v}': expected 'a-b,c-d @ <capacity>'"))?;
+    let cap_txt = cap.trim();
+    let cap = cap_txt
+        .parse()
+        .map_err(|_| anyhow!("degraded '{v}': bad capacity '{cap_txt}'"))?;
+    let mut links = Vec::new();
+    for pair in pairs.split(',') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue; // tolerate a trailing comma
+        }
+        let (a, b) = pair
+            .split_once('-')
+            .ok_or_else(|| anyhow!("degraded link '{pair}': expected a-b"))?;
+        let a = a
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("degraded link '{pair}': bad node id"))?;
+        let b = b
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("degraded link '{pair}': bad node id"))?;
+        links.push((a, b));
+    }
+    anyhow::ensure!(!links.is_empty(), "degraded '{v}': no links named");
+    Ok((links, cap))
+}
+
 /// Which algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
@@ -202,6 +302,19 @@ pub struct ExperimentSpec {
     /// unlimited). With a finite capacity, `rounds` measures real
     /// transfer time and peak receiver memory stays bounded.
     pub link_capacity: usize,
+    /// Per-directed-edge capacity overrides on top of `link_capacity`,
+    /// from repeated `link.<from>.<to> = <cap>` config keys (a `0`
+    /// override frees that one edge).
+    pub link_overrides: Vec<(usize, usize, usize)>,
+    /// Degraded-subset link profile from the `degraded = a-b,c-d @ <cap>`
+    /// shorthand: the named links (both directions each) share the given
+    /// capacity.
+    pub degraded: Option<(Vec<(usize, usize)>, usize)>,
+    /// How the exchange runs over graph topologies: `flooded` (the
+    /// paper's Algorithm 3) or `overlay` (converge-fold up a spanning-
+    /// tree overlay, flood only the reduced root set — requires
+    /// `sketch = merge-reduce` and `page_points > 0`).
+    pub exchange: ExchangeSpec,
     /// How collecting nodes fold the coreset stream: `exact` (default;
     /// bit-compatible plain accumulation) or `merge-reduce` (bounded
     /// memory at the collector, in-network reduction at tree relays —
@@ -229,17 +342,35 @@ impl Default for ExperimentSpec {
             threads: 1,
             page_points: 0,
             link_capacity: 0,
+            link_overrides: Vec::new(),
+            degraded: None,
+            exchange: ExchangeSpec::Flooded,
             sketch: SketchMode::Exact,
             bucket_points: 0,
         }
     }
 }
 
+/// Strip a trailing `#` comment — but only outside double quotes, so a
+/// quoted value may contain `#` (regression: `label = "a#b"` used to be
+/// truncated to `label = "a`).
+fn strip_comment(raw: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in raw.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &raw[..i],
+            _ => {}
+        }
+    }
+    raw
+}
+
 /// Parse the flat `key = value` config format.
 pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
     let mut out = BTreeMap::new();
     for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.split('#').next().unwrap().trim();
+        let line = strip_comment(raw).trim();
         if line.is_empty() {
             continue;
         }
@@ -292,6 +423,15 @@ impl ExperimentSpec {
                 "threads" => spec.threads = v.parse()?,
                 "page_points" => spec.page_points = v.parse()?,
                 "link_capacity" => spec.link_capacity = v.parse()?,
+                "degraded" => spec.degraded = Some(parse_degraded(v)?),
+                "exchange" => {
+                    spec.exchange = ExchangeSpec::parse(v)
+                        .ok_or_else(|| anyhow!("unknown exchange '{v}' (flooded|overlay)"))?
+                }
+                key if key.starts_with("link.") => {
+                    let (from, to) = parse_link_key(key)?;
+                    spec.link_overrides.push((from, to, v.parse()?));
+                }
                 "sketch" => {
                     spec.sketch = SketchMode::parse(v)
                         .ok_or_else(|| anyhow!("unknown sketch '{v}' (exact|merge-reduce)"))?
@@ -332,11 +472,29 @@ impl ExperimentSpec {
         ExecPolicy::from_threads(self.threads)
     }
 
-    /// The paged-exchange channel this spec selects (flat config keys
-    /// describe one uniform capacity; per-edge link profiles are built
-    /// directly on [`Scenario`]).
+    /// The per-directed-edge link model this spec selects, least to
+    /// most specific: the uniform `link_capacity`, then the `degraded`
+    /// subset shorthand, then the explicit `link.<from>.<to>` overrides
+    /// — so a single named directed edge always wins where the layers
+    /// overlap.
+    pub fn link_model(&self) -> crate::network::LinkModel {
+        let mut link = crate::network::LinkModel::capped(self.link_capacity);
+        if let Some((pairs, cap)) = &self.degraded {
+            link = link.degraded(pairs, *cap);
+        }
+        for &(from, to, cap) in &self.link_overrides {
+            link = link.with_edge(from, to, cap);
+        }
+        link
+    }
+
+    /// The paged-exchange channel this spec selects (page size + the
+    /// full per-edge [`link_model`](Self::link_model)).
     pub fn channel(&self) -> crate::network::ChannelConfig {
-        crate::network::ChannelConfig::uniform(self.page_points, self.link_capacity)
+        crate::network::ChannelConfig {
+            page_points: self.page_points,
+            link: self.link_model(),
+        }
     }
 
     /// The collector-side sketch plan this spec selects (see
@@ -359,16 +517,28 @@ impl ExperimentSpec {
     /// before handing its generator to `run_with_rng`, which ignores
     /// the seed axis. To reproduce a reported experiment, go through
     /// [`crate::coordinator::run_experiment`] with the same spec.
-    pub fn scenario(&self, graph: crate::topology::Graph) -> Scenario {
+    ///
+    /// Errors on contradictory axes (`exchange = overlay` with a
+    /// `*-tree` algorithm — the overlay is a graph-mode exchange).
+    pub fn scenario(&self, graph: crate::topology::Graph) -> Result<Scenario> {
         let base = if self.algorithm.on_tree() {
+            anyhow::ensure!(
+                self.exchange == ExchangeSpec::Flooded,
+                "exchange = overlay applies to graph-mode algorithms; {} already \
+                 runs on a spanning tree",
+                self.algorithm.name()
+            );
             Scenario::on_spanning_tree_of(graph)
+        } else if self.exchange == ExchangeSpec::Overlay {
+            Scenario::on_overlay_of(graph)
         } else {
             Scenario::on_graph(graph)
         };
-        base.channel(self.channel())
+        Ok(base
+            .channel(self.channel())
             .sketch(self.sketch_plan())
             .exec(self.exec_policy())
-            .seed(self.seed)
+            .seed(self.seed))
     }
 
     /// The algorithm implementation this spec selects — table-driven
@@ -419,6 +589,97 @@ mod tests {
         assert_eq!(kv["a"], "1");
         assert_eq!(kv["b"], "x");
         assert!(parse_kv("novalue\n").is_err());
+    }
+
+    #[test]
+    fn kv_comment_stripping_respects_quotes() {
+        // Regression: `raw.split('#')` truncated any quoted value
+        // containing '#'. Comments must be stripped only OUTSIDE quotes.
+        let kv = parse_kv("label = \"a#b\"\n").unwrap();
+        assert_eq!(kv["label"], "a#b");
+        // A trailing comment after a closed quote still strips.
+        let kv = parse_kv("label = \"x#y\" # note\ndataset = \"p#q#r\"\n").unwrap();
+        assert_eq!(kv["label"], "x#y");
+        assert_eq!(kv["dataset"], "p#q#r");
+        // Unquoted trailing comments and whole-line comments still work.
+        let kv = parse_kv("t = 500 # budget\n  # indented comment\n").unwrap();
+        assert_eq!(kv["t"], "500");
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn link_profile_keys_build_the_per_edge_model() {
+        // The ROADMAP item: degraded-subset profiles straight from a
+        // flat config file, no builder code needed. Round-trip:
+        // config text -> ExperimentSpec -> LinkModel.
+        let spec = ExperimentSpec::from_config(
+            "link_capacity = 128\nlink.1.0 = 4\nlink.0.1 = 8\n\
+             degraded = 2-0, 3-0 @ 2\npage_points = 32\n",
+        )
+        .unwrap();
+        let expected = crate::network::LinkModel::capped(128)
+            .with_edge(1, 0, 4)
+            .with_edge(0, 1, 8)
+            .degraded(&[(2, 0), (3, 0)], 2);
+        assert_eq!(spec.link_model(), expected);
+        let ch = spec.channel();
+        assert_eq!(ch.page_points, 32);
+        assert_eq!(ch.link.capacity(1, 0), 4, "directed override");
+        assert_eq!(ch.link.capacity(0, 1), 8, "other direction independent");
+        assert_eq!(ch.link.capacity(2, 0), 2, "degraded, forward");
+        assert_eq!(ch.link.capacity(0, 2), 2, "degraded, reverse");
+        assert_eq!(ch.link.capacity(5, 6), 128, "uniform default");
+
+        // A zero override frees one edge while the default stays capped.
+        let spec = ExperimentSpec::from_config("link_capacity = 8\nlink.0.1 = 0\n").unwrap();
+        assert_eq!(spec.link_model().capacity(0, 1), 0);
+        assert_eq!(spec.link_model().capacity(1, 0), 8);
+
+        // Overlap: an explicit directed-edge override beats the degraded
+        // shorthand — the most specific statement wins, so freeing one
+        // direction of a degraded link sticks.
+        let spec = ExperimentSpec::from_config(
+            "link_capacity = 64\ndegraded = 1-0, 2-0 @ 8\nlink.1.0 = 0\n",
+        )
+        .unwrap();
+        assert_eq!(spec.link_model().capacity(1, 0), 0, "explicit override wins");
+        assert_eq!(spec.link_model().capacity(0, 1), 8, "reverse stays degraded");
+        assert_eq!(spec.link_model().capacity(2, 0), 8);
+
+        // Malformed profiles fail loudly.
+        assert!(ExperimentSpec::from_config("link.3 = 4\n").is_err());
+        assert!(ExperimentSpec::from_config("link.a.b = 4\n").is_err());
+        assert!(ExperimentSpec::from_config("degraded = 0-1\n").is_err());
+        assert!(ExperimentSpec::from_config("degraded = @ 4\n").is_err());
+        assert!(ExperimentSpec::from_config("degraded = 0:1 @ 4\n").is_err());
+    }
+
+    #[test]
+    fn exchange_key_parses_and_rejects_tree_algorithms() {
+        let spec = ExperimentSpec::from_config(
+            "exchange = overlay\nsketch = merge-reduce\npage_points = 32\n",
+        )
+        .unwrap();
+        assert_eq!(spec.exchange, ExchangeSpec::Overlay);
+        assert!(ExperimentSpec::from_config("exchange = gossip\n").is_err());
+        for e in [ExchangeSpec::Flooded, ExchangeSpec::Overlay] {
+            assert_eq!(ExchangeSpec::parse(e.name()), Some(e));
+        }
+
+        // The overlay is a graph-mode exchange; combining it with a
+        // spanning-tree algorithm is contradictory and must be loud.
+        let mut spec = ExperimentSpec {
+            exchange: ExchangeSpec::Overlay,
+            algorithm: Algorithm::DistributedTree,
+            ..Default::default()
+        };
+        let mut rng = crate::rng::Pcg64::seed_from(1);
+        let g = spec.topology.build(&mut rng);
+        let err = spec.scenario(g.clone()).unwrap_err();
+        assert!(err.to_string().contains("overlay"), "{err}");
+        // Graph-mode algorithms accept it.
+        spec.algorithm = Algorithm::Distributed;
+        assert!(spec.scenario(g).is_ok());
     }
 
     #[test]

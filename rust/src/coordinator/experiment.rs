@@ -43,6 +43,10 @@ pub struct ExperimentResult {
     pub error_factor: Summary,
     /// Which sketch folded the stream (`exact` / `merge-reduce`).
     pub sketch: &'static str,
+    /// The per-edge link profile the runs used, human-readable (see
+    /// [`crate::network::LinkModel::describe`]) — surfaces the config
+    /// file's `link.*`/`degraded` profile in the JSON report.
+    pub links: String,
     /// Summary of coreset sizes.
     pub coreset_size: Summary,
     /// Mean wall-clock seconds per repetition.
@@ -101,7 +105,7 @@ pub fn run_once(
     let locals = patch_empty_sites(locals);
 
     let algorithm = spec.algorithm_impl(graph.n());
-    spec.scenario(graph)
+    spec.scenario(graph)?
         .run_with_rng(algorithm.as_ref(), &locals, backend, rng)
 }
 
@@ -202,13 +206,18 @@ impl Session {
             sizes.push(run.coreset.size() as f64);
             sketch = run.sketch;
         }
+        let exchange_tag = match spec.exchange {
+            crate::config::ExchangeSpec::Flooded => "",
+            crate::config::ExchangeSpec::Overlay => "+overlay",
+        };
         Ok(ExperimentResult {
             label: format!(
-                "{}/{}-{}/{}",
+                "{}/{}-{}/{}{}",
                 spec.dataset,
                 spec.topology.name(),
                 spec.partition.name(),
-                spec.algorithm.name()
+                spec.algorithm.name(),
+                exchange_tag
             ),
             ratio: Summary::of(&ratios),
             comm: Summary::of(&comms),
@@ -216,6 +225,7 @@ impl Session {
             node_peak: Summary::of(&node_peaks),
             error_factor: Summary::of(&error_factors),
             sketch,
+            links: spec.link_model().describe(),
             coreset_size: Summary::of(&sizes),
             secs_per_rep: sw.secs() / spec.reps as f64,
         })
@@ -341,6 +351,64 @@ mod tests {
             mr.error_factor.mean > 1.0,
             "composed factor {} must register the reductions",
             mr.error_factor.mean
+        );
+    }
+
+    #[test]
+    fn overlay_exchange_spec_runs_and_is_labeled() {
+        use crate::config::ExchangeSpec;
+        let mut spec = small_spec(Algorithm::Distributed);
+        spec.exchange = ExchangeSpec::Overlay;
+        spec.sketch = crate::sketch::SketchMode::MergeReduce;
+        spec.bucket_points = 64;
+        spec.page_points = 16;
+        let res = run_experiment(&spec, &RustBackend).unwrap();
+        assert!(
+            res.label.ends_with("distributed+overlay"),
+            "label must carry the exchange: {}",
+            res.label
+        );
+        assert_eq!(res.sketch, "merge-reduce");
+        assert!(res.ratio.mean > 0.8 && res.ratio.mean < 2.5, "{}", res.ratio.mean);
+
+        // The overlay must beat flooding's wire bill on the same spec.
+        let mut flooded = small_spec(Algorithm::Distributed);
+        flooded.page_points = 16;
+        let flooded = run_experiment(&flooded, &RustBackend).unwrap();
+        assert!(
+            res.comm.mean < flooded.comm.mean,
+            "overlay comm {} !< flooded {}",
+            res.comm.mean,
+            flooded.comm.mean
+        );
+
+        // Misconfigs are loud: overlay without merge-reduce folding...
+        let mut bad = small_spec(Algorithm::Distributed);
+        bad.exchange = ExchangeSpec::Overlay;
+        bad.page_points = 16;
+        let err = run_experiment(&bad, &RustBackend).unwrap_err();
+        assert!(err.to_string().contains("merge-reduce"), "{err}");
+        // ...or on a tree algorithm.
+        let mut bad = small_spec(Algorithm::DistributedTree);
+        bad.exchange = ExchangeSpec::Overlay;
+        let err = run_experiment(&bad, &RustBackend).unwrap_err();
+        assert!(err.to_string().contains("overlay"), "{err}");
+    }
+
+    #[test]
+    fn link_profile_round_trips_into_the_json_report() {
+        // config text -> spec -> LinkModel -> ExperimentResult -> JSON.
+        let text = "dataset = synthetic\nscale = 0.02\nt = 300\nreps = 1\n\
+                    topology = star\nsites = 6\nlink_capacity = 64\n\
+                    page_points = 16\nlink.1.0 = 4\ndegraded = 2-0 @ 8\n";
+        let spec = crate::config::ExperimentSpec::from_config(text).unwrap();
+        let res = run_experiment(&spec, &RustBackend).unwrap();
+        assert_eq!(res.links, "cap=64; 0->2@8; 1->0@4; 2->0@8");
+        let json = crate::coordinator::series_json(std::slice::from_ref(&res)).to_string();
+        let parsed = crate::json::parse(&json).unwrap();
+        assert_eq!(
+            parsed.as_arr().unwrap()[0].get("links").unwrap().as_str(),
+            Some("cap=64; 0->2@8; 1->0@4; 2->0@8")
         );
     }
 

@@ -52,6 +52,7 @@ pub fn series_json(results: &[ExperimentResult]) -> Value {
                     ("peak_points", build::num(r.peak.mean)),
                     ("node_peak_points", build::num(r.node_peak.mean)),
                     ("sketch", build::s(r.sketch.to_string())),
+                    ("links", build::s(r.links.clone())),
                     ("coreset_size", build::num(r.coreset_size.mean)),
                     ("reps", build::num(r.ratio.n as f64)),
                 ])
@@ -74,6 +75,7 @@ mod tests {
             node_peak: Summary::of(&[520.0]),
             error_factor: Summary::of(&[1.25]),
             sketch: "exact",
+            links: "cap=64; 1->0@4".into(),
             coreset_size: Summary::of(&[520.0]),
             secs_per_rep: 0.5,
         }
@@ -98,5 +100,10 @@ mod tests {
         assert_eq!(arr[0].get("experiment").unwrap().as_str(), Some("exp"));
         assert_eq!(arr[0].get("reps").unwrap().as_usize(), Some(2));
         assert_eq!(arr[0].get("error_factor").unwrap().as_f64(), Some(1.25));
+        assert_eq!(
+            arr[0].get("links").unwrap().as_str(),
+            Some("cap=64; 1->0@4"),
+            "the per-edge link profile must survive into the JSON series"
+        );
     }
 }

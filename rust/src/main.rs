@@ -18,7 +18,7 @@
 use anyhow::{anyhow, bail, Result};
 use distclus::clustering::backend::{Backend, ParallelBackend, RustBackend};
 use distclus::cli::Args;
-use distclus::config::{Algorithm, BackendSpec, ExperimentSpec, TopologySpec};
+use distclus::config::{Algorithm, BackendSpec, ExchangeSpec, ExperimentSpec, TopologySpec};
 use distclus::coordinator::{render_report, run_experiment, series_json};
 use distclus::partition::Scheme;
 use distclus::rng::Pcg64;
@@ -36,6 +36,11 @@ fn usage() -> ! {
          \x20          --backend rust|parallel|xla --threads N (0 = all cores, 1 = sequential)\n\
          \x20          --page-points N (0 = monolithic portions) --link-capacity N (points\n\
          \x20          per edge per round, 0 = unlimited)\n\
+         \x20          --degraded \"a-b,c-d @ CAP\" (throttle a link subset; config files also\n\
+         \x20          take repeated link.FROM.TO = CAP per-edge overrides)\n\
+         \x20          --exchange flooded|overlay (graph mode only; overlay converge-folds up a\n\
+         \x20          spanning-tree overlay and floods only the reduced root set — needs\n\
+         \x20          --sketch merge-reduce and --page-points > 0)\n\
          \x20          --sketch exact|merge-reduce (collector folding; merge-reduce bounds\n\
          \x20          collector memory and reduces at tree relays) --bucket-points N (0 = auto)\n\
          \x20          --artifacts DIR --config FILE --json OUT.json"
@@ -118,6 +123,13 @@ fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
     spec.threads = args.get_parse("threads", spec.threads)?;
     spec.page_points = args.get_parse("page-points", spec.page_points)?;
     spec.link_capacity = args.get_parse("link-capacity", spec.link_capacity)?;
+    if let Some(d) = args.get("degraded") {
+        spec.degraded = Some(distclus::config::parse_degraded(d)?);
+    }
+    if let Some(e) = args.get("exchange") {
+        spec.exchange = ExchangeSpec::parse(e)
+            .ok_or_else(|| anyhow!("unknown exchange '{e}' (flooded|overlay)"))?;
+    }
     if let Some(s) = args.get("sketch") {
         spec.sketch = distclus::sketch::SketchMode::parse(s)
             .ok_or_else(|| anyhow!("unknown sketch '{s}' (exact|merge-reduce)"))?;

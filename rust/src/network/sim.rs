@@ -91,6 +91,25 @@ impl LinkModel {
     pub fn is_unlimited(&self) -> bool {
         self.default_cap == 0 && self.overrides.values().all(|&c| c == 0)
     }
+
+    /// Human-readable profile for reports and the JSON series: the
+    /// uniform capacity plus every per-directed-edge override in
+    /// deterministic `(from, to)` order, e.g. `"cap=64; 1->0@4; 2->0@8"`
+    /// (`"unlimited"` when nothing is limited).
+    pub fn describe(&self) -> String {
+        if self.is_unlimited() {
+            return "unlimited".to_string();
+        }
+        let mut out = if self.default_cap == 0 {
+            "cap=unlimited".to_string()
+        } else {
+            format!("cap={}", self.default_cap)
+        };
+        for (&(from, to), &cap) in &self.overrides {
+            out.push_str(&format!("; {from}->{to}@{cap}"));
+        }
+        out
+    }
 }
 
 /// Paged-exchange configuration shared by the protocol drivers: how big
@@ -486,6 +505,73 @@ mod tests {
         net.recv_all(0);
         assert!(net.quiescent());
         assert_eq!(net.round(), 3);
+    }
+
+    fn four_point_page(site: usize, page: u32) -> Payload {
+        let set = crate::points::WeightedSet::unit(crate::points::Dataset::from_flat(
+            vec![0.0; 8],
+            2,
+        ));
+        Payload::PortionPage {
+            site,
+            page,
+            pages: 8,
+            set: std::sync::Arc::new(set),
+        }
+    }
+
+    #[test]
+    fn oversized_rule_consults_the_edge_override_not_the_default() {
+        // Audit pin for the "ships alone on an idle edge" rule: a
+        // 4-point page is oversized ONLY under the (1,0) override of 3 —
+        // the default of 10 would admit two per round. If `step`
+        // consulted `default_capacity`, both pages on (1,0) would ship
+        // in round 1.
+        let model = LinkModel::capped(10).with_edge(1, 0, 3);
+        let mut net = Network::new(generators::star(3)).with_link_model(model);
+        net.send(1, 0, four_point_page(1, 0));
+        net.send(1, 0, four_point_page(1, 1));
+        net.send(2, 0, four_point_page(2, 0));
+        net.send(2, 0, four_point_page(2, 1));
+        // Round 1: override edge ships its first page alone (oversized on
+        // an idle edge), defers the second; the default edge ships both.
+        assert_eq!(net.step(), 3);
+        assert_eq!(net.recv_all(0).len(), 3);
+        assert_eq!(net.queued_points(), 4);
+        // Round 2: the deferred page ships alone under the override.
+        assert_eq!(net.step(), 1);
+        net.recv_all(0);
+        assert!(net.quiescent());
+    }
+
+    #[test]
+    fn oversized_rule_override_can_also_widen_an_edge() {
+        // The mirror pin: default 3 would make a 4-point page oversized,
+        // but the (0,1) override of 10 admits two per round. Consulting
+        // the default here would defer the second page.
+        let model = LinkModel::capped(3).with_edge(0, 1, 10);
+        let mut net = Network::new(generators::path(2)).with_link_model(model);
+        net.send(0, 1, four_point_page(0, 0));
+        net.send(0, 1, four_point_page(0, 1));
+        assert_eq!(net.step(), 2, "8 points fit the widened edge");
+        net.recv_all(1);
+        assert!(net.quiescent());
+        assert_eq!(net.round(), 1);
+    }
+
+    #[test]
+    fn link_model_describe_is_deterministic() {
+        assert_eq!(LinkModel::unlimited().describe(), "unlimited");
+        assert_eq!(LinkModel::capped(64).describe(), "cap=64");
+        assert_eq!(
+            LinkModel::capped(64).with_edge(2, 0, 8).with_edge(1, 0, 4).describe(),
+            "cap=64; 1->0@4; 2->0@8",
+            "overrides sort by (from, to)"
+        );
+        assert_eq!(
+            LinkModel::unlimited().with_edge(0, 1, 2).describe(),
+            "cap=unlimited; 0->1@2"
+        );
     }
 
     #[test]

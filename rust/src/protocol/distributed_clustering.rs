@@ -47,7 +47,8 @@ pub struct RunResult {
     pub coreset_cost: f64,
     /// The global coreset the solution was computed on (the collector's
     /// finished sketch; in exact mode, byte-identical to the union of
-    /// the portions).
+    /// the portions; under the overlay exchange, the root's reduced set
+    /// — exactly what flooded back to every node).
     pub coreset: Coreset,
     /// Total measured communication (points transmitted).
     pub comm_points: usize,
@@ -100,6 +101,13 @@ pub enum Topology<'a> {
     /// Rooted spanning tree (Theorem 3): converge-cast up, broadcast
     /// down, the root solves.
     Tree(&'a SpanningTree),
+    /// Overlay-reduced graph exchange: costs flood the graph, portions
+    /// converge-fold up a spanning-tree overlay of it (merge-and-reduce
+    /// at every overlay relay), the overlay root solves on the reduced
+    /// sketch, and only the reduced set + centers flood back over the
+    /// graph edges — so every node still ends holding a coreset + the
+    /// solution, at wire totals far below flooding the full stream.
+    Overlay(&'a Graph, &'a SpanningTree),
 }
 
 fn solve_on(
@@ -115,7 +123,11 @@ fn solve_on(
 /// Worst leaf→root composition of per-node sketch error factors: every
 /// reducing relay re-sketches what flows through it, so the stream
 /// reaching the root through the loosest chain carries the product of
-/// the factors along its path.
+/// the factors along its path. Used for both explicit trees and the
+/// spanning-tree overlay of a graph (the chains are overlay chains
+/// there). With every factor ≥ 1 the composition is monotone in chain
+/// depth — extending the worst chain can only raise the product
+/// (pinned by `composed_error_factor_is_monotone_in_path_depth`).
 fn composed_error_factor(tree: &SpanningTree, factors: &[f64]) -> f64 {
     fn walk(tree: &SpanningTree, factors: &[f64], v: usize) -> f64 {
         let through_children = tree.children[v]
@@ -148,6 +160,13 @@ fn composed_error_factor(tree: &SpanningTree, factors: &[f64]) -> f64 {
 /// Merge-and-reduce re-solves draw from dedicated per-node RNG streams,
 /// never from the pipeline generator, and meter their measured composed
 /// error factor into `RunResult::meters`.
+///
+/// The overlay topology composes both modes in one session: the cost
+/// flood and the converge-fold overlap through the same per-node
+/// readiness gating as always (a node streams into its sketch the
+/// moment its own cost view completes, while costs still propagate
+/// elsewhere), and the root's reduced-set flood rides the same drive
+/// loop — no phase barrier anywhere.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn stream_exchange(
     topology: Topology<'_>,
@@ -163,11 +182,23 @@ pub(crate) fn stream_exchange(
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
     anyhow::ensure!(portions.len() == n, "one portion per site");
+    // The overlay exchange simulates on the *graph*: overlay-tree edges
+    // are graph edges, so each hop pays the underlying directed edge's
+    // LinkModel capacity — there is no separate "overlay channel".
     let graph = match topology {
-        Topology::Graph(g) => g.clone(),
+        Topology::Graph(g) | Topology::Overlay(g, _) => g.clone(),
         Topology::Tree(t) => t.as_graph(),
     };
     anyhow::ensure!(graph.n() == n, "one local set per node");
+    if let Topology::Overlay(_, tree) = topology {
+        // Scenario validates these axes with user-facing messages; this
+        // is the engine's own invariant (misuse is a driver bug).
+        anyhow::ensure!(
+            sketch.mode == SketchMode::MergeReduce && channel.page_points > 0,
+            "overlay exchange needs merge-reduce folding and paging"
+        );
+        anyhow::ensure!(tree.n() == n, "overlay tree spans the graph");
+    }
     let mut net = Network::new(graph)
         .without_transcript()
         .with_link_model(channel.link_model());
@@ -295,17 +326,59 @@ pub(crate) fn stream_exchange(
                 .collect();
             (tree.root, nodes)
         }
+        Topology::Overlay(g, tree) => {
+            let nodes: Vec<PipeMachine> = pages
+                .into_iter()
+                .enumerate()
+                .map(|(v, own)| {
+                    let is_root = v == tree.root;
+                    // Every overlay node folds its own portion plus one
+                    // reduced portion per overlay child (site-based
+                    // completion — empty sites count through their
+                    // zero-cost page) and non-roots forward the reduced
+                    // stream up the overlay.
+                    PipeMachine::overlay(
+                        v,
+                        (!is_root).then_some(tree.parent[v]),
+                        g.neighbors(v).to_vec(),
+                        cost_payload(v),
+                        own,
+                        n,
+                        node_sketch(true),
+                        tree.children[v].len() + 1,
+                        channel.page_points,
+                        is_root.then(|| solver.take().expect("one solver")),
+                    )
+                })
+                .collect();
+            (tree.root, nodes)
+        }
     };
     drive(&mut net, &mut nodes);
 
     // Delivery checks: on a graph every node must have folded the whole
-    // stream; on a tree the root must have completed its collection.
+    // stream; on a tree the root must have completed its collection; on
+    // an overlay every node must hold the root's full reduced-set flood
+    // plus the centers.
     if matches!(topology, Topology::Graph(_)) {
         for (v, node) in nodes.iter().enumerate() {
             anyhow::ensure!(
                 node.pages_collected() == total_pages,
                 "node {v} folded {} of {total_pages} pages (disconnected graph?)",
                 node.pages_collected()
+            );
+        }
+    }
+    if matches!(topology, Topology::Overlay(..)) {
+        let expected = nodes[collector].bcast_pages_total;
+        anyhow::ensure!(expected > 0, "overlay root never flooded its reduced set");
+        for (v, node) in nodes.iter().enumerate() {
+            anyhow::ensure!(
+                node.bcast_pages_got == expected && node.centers_got,
+                "node {v} holds {} of {expected} reduced pages (centers: {}) — \
+                 disconnected graph?",
+                node.bcast_pages_got,
+                node.centers_got
             );
         }
     }
@@ -337,7 +410,9 @@ pub(crate) fn stream_exchange(
         let factors: Vec<f64> = nodes.iter().map(|m| m.sketch_error_factor).collect();
         let composed = match topology {
             Topology::Graph(_) => factors[collector],
-            Topology::Tree(tree) => composed_error_factor(tree, &factors),
+            Topology::Tree(tree) | Topology::Overlay(_, tree) => {
+                composed_error_factor(tree, &factors)
+            }
         };
         meters.insert(
             "mr_error_ppm",
@@ -818,6 +893,48 @@ mod tests {
             c_reduced < 2.0 * c_exact,
             "reduced {c_reduced} vs exact {c_exact}"
         );
+    }
+
+    #[test]
+    fn composed_error_factor_is_monotone_in_path_depth() {
+        // The worst-chain composition over a path tree is the prefix
+        // product of per-node factors ≥ 1, so deepening the overlay can
+        // only raise (never lower) the composed factor — the algebraic
+        // half of the overlay error-accounting contract.
+        crate::testutil::for_all(
+            24,
+            61,
+            |rng| {
+                let len = 2 + rng.below(9);
+                let factors: Vec<f64> =
+                    (0..len).map(|_| 1.0 + rng.uniform() * 0.5).collect();
+                factors
+            },
+            |factors| {
+                let mut prev = 0.0_f64;
+                for depth in 1..=factors.len() {
+                    let tree =
+                        SpanningTree::bfs(&generators::path(depth), 0);
+                    let composed = composed_error_factor(&tree, &factors[..depth]);
+                    let product: f64 = factors[..depth].iter().product();
+                    crate::prop_assert!(
+                        (composed - product).abs() < 1e-12 * product,
+                        "path composition must be the chain product: {composed} vs {product}"
+                    );
+                    crate::prop_assert!(
+                        composed >= prev,
+                        "depth {depth}: composed {composed} < shallower {prev}"
+                    );
+                    prev = composed;
+                }
+                Ok(())
+            },
+        );
+
+        // Branching: the worst chain wins, siblings don't multiply.
+        let star = SpanningTree::bfs(&generators::star(4), 0);
+        let composed = composed_error_factor(&star, &[1.5, 1.1, 1.3, 1.2]);
+        assert!((composed - 1.5 * 1.3).abs() < 1e-12, "{composed}");
     }
 
     #[test]

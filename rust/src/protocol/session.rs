@@ -289,6 +289,17 @@ pub(crate) enum PipeRole {
         /// Children, ascending node id.
         children: Vec<usize>,
     },
+    /// Overlay-reduced graph exchange: the cost exchange floods the
+    /// *graph*, portions converge-fold up a spanning-tree *overlay*
+    /// (every overlay edge is a graph edge, so the underlying per-edge
+    /// link capacities apply unchanged), and the root floods only its
+    /// reduced set + the centers back over the graph edges.
+    Overlay {
+        /// Overlay parent (`None` at the overlay root).
+        parent: Option<usize>,
+        /// *Graph* neighbor list (cost flood + reduced-set flood).
+        neigh: Vec<usize>,
+    },
 }
 
 /// The final-solve hook a collector machine runs when its fold
@@ -321,7 +332,10 @@ pub(crate) struct Solver<'a> {
 ///    are complete, re-paginates the reduced set under its own site id
 ///    and sends it upstream; the *collector* finishes its sketch, runs
 ///    the final solve ([`Solver`]) and — on a tree — broadcasts the
-///    `Centers` down.
+///    `Centers` down. The overlay role ([`PipeRole::Overlay`]) composes
+///    the tree fold with graph flooding in the same phases: costs flood
+///    the graph, reduced streams converge up the overlay, and the root
+///    floods only its reduced set + centers back over the graph.
 pub(crate) struct PipeMachine<'a> {
     /// This node's id (site id of re-paginated reduced streams).
     id: usize,
@@ -378,6 +392,14 @@ pub(crate) struct PipeMachine<'a> {
     pub(crate) sketch_error_factor: f64,
     /// Bucket reductions this node's sketch performed.
     pub(crate) sketch_reductions: usize,
+    /// Overlay: this node received (or, at the root, originated) the
+    /// final `Centers` flood.
+    pub(crate) centers_got: bool,
+    /// Overlay: distinct reduced-set flood pages this node holds.
+    pub(crate) bcast_pages_got: usize,
+    /// Overlay: total pages of the root's reduced-set flood (learned
+    /// from the page headers; authoritative at the root).
+    pub(crate) bcast_pages_total: usize,
 }
 
 impl<'a> PipeMachine<'a> {
@@ -425,6 +447,9 @@ impl<'a> PipeMachine<'a> {
             node_peak: 0,
             sketch_error_factor: 1.0,
             sketch_reductions: 0,
+            centers_got: false,
+            bcast_pages_got: 0,
+            bcast_pages_total: 0,
         }
     }
 
@@ -480,6 +505,65 @@ impl<'a> PipeMachine<'a> {
             node_peak: 0,
             sketch_error_factor: 1.0,
             sketch_reductions: 0,
+            centers_got: false,
+            bcast_pages_got: 0,
+            bcast_pages_total: 0,
+        }
+    }
+
+    /// Overlay-mode node: cost exchange floods the graph (readiness
+    /// gating exactly as in graph mode), the node folds its own portion
+    /// plus one reduced portion per overlay child into its sketch
+    /// (site-based completion — an empty site's single zero-cost page
+    /// still completes its site through the sketch's page tracker), and
+    /// on completion a non-root re-paginates its reduced sketch under
+    /// its own id toward the overlay parent while the root solves and
+    /// floods only the reduced set + centers over the graph edges.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn overlay(
+        id: usize,
+        parent: Option<usize>,
+        neigh: Vec<usize>,
+        cost: Option<Payload>,
+        pages: Vec<Payload>,
+        n_nodes: usize,
+        fold: Option<Sketch<'a>>,
+        sites_expected: usize,
+        page_points: usize,
+        solver: Option<Solver<'a>>,
+    ) -> Self {
+        let has_cost = cost.is_some();
+        let reduce_relay = parent.is_some();
+        PipeMachine {
+            id,
+            role: PipeRole::Overlay { parent, neigh },
+            cost,
+            costs_seen: HashSet::new(),
+            costs_expected: if has_cost { n_nodes } else { 0 },
+            relay_up: Vec::new(),
+            relay_points: 0,
+            total: None,
+            ready: !has_cost,
+            launched: false,
+            pages,
+            // Reused for the reduced-set flood dedup on the way back.
+            pages_seen: HashSet::new(),
+            fold,
+            pages_folded: 0,
+            pages_expected: usize::MAX,
+            sites_expected,
+            reduce_relay,
+            page_points,
+            solver,
+            done: false,
+            solution: None,
+            finished: None,
+            node_peak: 0,
+            sketch_error_factor: 1.0,
+            sketch_reductions: 0,
+            centers_got: false,
+            bcast_pages_got: 0,
+            bcast_pages_total: 0,
         }
     }
 
@@ -524,8 +608,9 @@ impl<'a> PipeMachine<'a> {
                 fold_page(&mut self.fold, &mut self.pages_folded, &p);
             }
         } else if self.fold.is_some() {
-            // Folding tree node (root, or reducing relay): own pages go
-            // straight into the sketch.
+            // Folding tree/overlay node (root, or reducing relay): own
+            // pages go straight into the sketch — they never hit the
+            // wire under their own ids.
             for p in pages {
                 fold_page(&mut self.fold, &mut self.pages_folded, &p);
             }
@@ -555,11 +640,16 @@ impl<'a> PipeMachine<'a> {
             let reduced = sketch
                 .finish()
                 .expect("site-based completion implies untorn portions");
-            if let PipeRole::Tree {
-                parent: Some(parent),
-                ..
-            } = self.role
-            {
+            let parent = match self.role {
+                PipeRole::Tree {
+                    parent: Some(p), ..
+                }
+                | PipeRole::Overlay {
+                    parent: Some(p), ..
+                } => Some(p),
+                _ => None,
+            };
+            if let Some(parent) = parent {
                 for p in paginate(self.id, Arc::new(reduced), self.page_points) {
                     out.send(parent, p);
                 }
@@ -583,11 +673,30 @@ impl<'a> PipeMachine<'a> {
                 solver.rng,
                 solver.iters,
             );
-            if let PipeRole::Tree { children, .. } = &self.role {
-                let payload = Payload::Centers(Arc::new(sol.centers.clone()));
-                for &c in children {
-                    out.send(c, payload.clone());
+            match &self.role {
+                PipeRole::Tree { children, .. } => {
+                    let payload = Payload::Centers(Arc::new(sol.centers.clone()));
+                    for &c in children {
+                        out.send(c, payload.clone());
+                    }
                 }
+                PipeRole::Overlay { neigh, .. } => {
+                    // Flood ONLY the reduced root set + the centers back
+                    // over the graph edges — the full stream never
+                    // floods. Seeding `pages_seen` keeps echoes from
+                    // re-flooding at the root.
+                    let pages =
+                        paginate(self.id, Arc::new(coreset.set.clone()), self.page_points);
+                    self.bcast_pages_total = pages.len();
+                    self.bcast_pages_got = pages.len();
+                    for p in &pages {
+                        self.pages_seen.insert(p.flood_key().expect("page key"));
+                        out.broadcast(neigh, p);
+                    }
+                    self.centers_got = true;
+                    out.broadcast(neigh, &Payload::Centers(Arc::new(sol.centers.clone())));
+                }
+                PipeRole::Graph { .. } => {}
             }
             self.solution = Some(sol);
             self.finished = Some(coreset);
@@ -628,7 +737,7 @@ impl NodeMachine for PipeMachine<'_> {
         // First tick: emit the own cost scalar.
         if let Some(c) = self.cost.take() {
             match &self.role {
-                PipeRole::Graph { neigh } => {
+                PipeRole::Graph { neigh } | PipeRole::Overlay { neigh, .. } => {
                     self.costs_seen.insert(c.flood_key().expect("cost key"));
                     out.broadcast(neigh, &c);
                 }
@@ -718,6 +827,38 @@ impl NodeMachine for PipeMachine<'_> {
             (PipeRole::Tree { children, .. }, msg @ Payload::Centers(_)) => {
                 for &c in children {
                     out.send(c, msg.clone());
+                }
+            }
+            (PipeRole::Overlay { neigh, .. }, msg @ Payload::LocalCost { .. }) => {
+                let key = msg.flood_key().expect("cost key");
+                if self.costs_seen.insert(key) {
+                    out.broadcast(neigh, &msg);
+                }
+            }
+            (PipeRole::Overlay { neigh, .. }, msg @ Payload::PortionPage { .. }) => {
+                if !self.done {
+                    // Converge phase: an overlay child's reduced stream.
+                    // (The root completes only after every node's subtree
+                    // did, so a reduced-set flood page can never arrive
+                    // before this node finished its own fold.)
+                    fold_page(&mut self.fold, &mut self.pages_folded, &msg);
+                } else {
+                    // The root's reduced set flooding back over the graph.
+                    let key = msg.flood_key().expect("page key");
+                    if self.pages_seen.insert(key) {
+                        if let Payload::PortionPage { pages, .. } = &msg {
+                            self.bcast_pages_total = *pages as usize;
+                        }
+                        self.bcast_pages_got += 1;
+                        out.broadcast(neigh, &msg);
+                    }
+                }
+            }
+            (PipeRole::Overlay { neigh, .. }, msg @ Payload::Centers(_)) => {
+                // Single in-flight payload: a boolean is its flood dedup.
+                if !self.centers_got {
+                    self.centers_got = true;
+                    out.broadcast(neigh, &msg);
                 }
             }
             (_, other) => unreachable!("pipeline: unexpected payload {other:?}"),

@@ -11,7 +11,7 @@
 //!
 //! | axis       | values                                            | builder |
 //! |------------|---------------------------------------------------|---------|
-//! | topology   | graph (flooding) / rooted tree (converge-cast) / spanning tree drawn from a graph | [`Scenario::on_graph`] / [`Scenario::on_tree`] / [`Scenario::on_spanning_tree_of`] |
+//! | topology   | graph (flooding) / rooted tree (converge-cast) / spanning tree drawn from a graph / overlay-reduced graph exchange | [`Scenario::on_graph`] / [`Scenario::on_tree`] / [`Scenario::on_spanning_tree_of`] / [`Scenario::on_overlay_of`] |
 //! | channel    | page size + per-directed-edge [`LinkModel`] capacities (uniform / per-edge / degraded subsets) | [`Scenario::channel`], [`Scenario::page_points`], [`Scenario::links`] |
 //! | sketch     | exact (bit-compatible) / merge-and-reduce (bounded memory, error-accounted) | [`Scenario::sketch`] |
 //! | exec       | sequential / parallel per-site workers            | [`Scenario::exec`], [`Scenario::threads`] |
@@ -75,13 +75,24 @@ pub enum ScenarioTopology {
     /// root (the experiment driver's `*-tree` behaviour; the draw
     /// consumes the run RNG first, so results are reproducible).
     SpanningTreeOf(Graph),
+    /// Graph mode with an overlay-reduced exchange: the cost exchange
+    /// floods the graph as usual, but portions converge-fold up a
+    /// random-root spanning-tree *overlay* of the graph (merge-and-
+    /// reduce at every overlay relay), and only the overlay root's
+    /// reduced set + the centers flood back over the graph edges. The
+    /// overlay draw consumes the run RNG first, exactly like
+    /// [`ScenarioTopology::SpanningTreeOf`]. Requires the merge-reduce
+    /// sketch and a nonzero page size (validated loudly at run time).
+    OverlayReduced(Graph),
 }
 
 impl ScenarioTopology {
     /// Number of sites this topology hosts.
     pub fn sites(&self) -> usize {
         match self {
-            ScenarioTopology::Graph(g) | ScenarioTopology::SpanningTreeOf(g) => g.n(),
+            ScenarioTopology::Graph(g)
+            | ScenarioTopology::SpanningTreeOf(g)
+            | ScenarioTopology::OverlayReduced(g) => g.n(),
             ScenarioTopology::Tree(t) => t.n(),
         }
     }
@@ -167,6 +178,12 @@ pub trait CoresetAlgorithm {
         true
     }
 
+    /// Report label when the run uses the overlay-reduced graph
+    /// exchange ([`ScenarioTopology::OverlayReduced`]).
+    fn label_overlay(&self) -> &'static str {
+        self.label(false)
+    }
+
     /// Build this algorithm's [`Exchange`] over the prepared context.
     fn build(&self, ctx: BuildCtx<'_, '_>) -> Result<Exchange>;
 }
@@ -190,6 +207,10 @@ impl CoresetAlgorithm for Distributed {
         } else {
             "distributed-coreset (Alg.1+3)"
         }
+    }
+
+    fn label_overlay(&self) -> &'static str {
+        "distributed-coreset (overlay)"
     }
 
     fn build(&self, ctx: BuildCtx<'_, '_>) -> Result<Exchange> {
@@ -242,6 +263,10 @@ impl CoresetAlgorithm for Combine {
         } else {
             "combine"
         }
+    }
+
+    fn label_overlay(&self) -> &'static str {
+        "combine (overlay)"
     }
 
     fn build(&self, ctx: BuildCtx<'_, '_>) -> Result<Exchange> {
@@ -349,6 +374,18 @@ impl Scenario {
         Scenario::new(ScenarioTopology::SpanningTreeOf(graph))
     }
 
+    /// Overlay-reduced exchange over a general graph: portions
+    /// converge-fold up a random-root spanning-tree overlay (merge-and-
+    /// reduce at every relay) and only the root's reduced set + centers
+    /// flood back over the graph edges — graph mode at a fraction of
+    /// flooding's `2m(t + nk)` wire total. Requires
+    /// [`SketchPlan::merge_reduce`] and a nonzero
+    /// [`page_points`](Scenario::page_points); anything else is
+    /// rejected loudly at [`run`](Scenario::run).
+    pub fn on_overlay_of(graph: Graph) -> Scenario {
+        Scenario::new(ScenarioTopology::OverlayReduced(graph))
+    }
+
     /// Set the whole channel axis at once (page size + link model).
     pub fn channel(mut self, channel: ChannelConfig) -> Scenario {
         self.channel = channel;
@@ -441,8 +478,34 @@ impl Scenario {
                 algo.label(true),
             );
         }
-        if matches!(self.topology, ScenarioTopology::Graph(_)) && !algo.supports_graph() {
+        if matches!(
+            self.topology,
+            ScenarioTopology::Graph(_) | ScenarioTopology::OverlayReduced(_)
+        ) && !algo.supports_graph()
+        {
             anyhow::bail!("{} requires a tree topology", algo.label(true));
+        }
+        if matches!(self.topology, ScenarioTopology::OverlayReduced(_)) {
+            // The overlay only exists to reduce in-network: an exact
+            // relay would forward its whole subtree verbatim (nothing
+            // reduced, strictly worse than a plain spanning tree), and
+            // monolithic portions would serialize each relay's fold
+            // behind its slowest descendant — both are misconfigs the
+            // user must hear about, not silently-degraded runs.
+            if self.sketch.mode != SketchMode::MergeReduce {
+                anyhow::bail!(
+                    "the overlay-reduced exchange requires --sketch merge-reduce \
+                     (an exact relay has nothing to reduce; got --sketch {})",
+                    self.sketch.mode.name(),
+                );
+            }
+            if self.channel.page_points == 0 {
+                anyhow::bail!(
+                    "the overlay-reduced exchange requires --page-points > 0 \
+                     (relays stream reduced pages; a monolithic exchange would \
+                     serialize every fold behind the slowest subtree)"
+                );
+            }
         }
         anyhow::ensure!(
             self.topology.sites() == locals.len(),
@@ -458,8 +521,19 @@ impl Scenario {
                 drawn_tree = SpanningTree::random_root(g, rng);
                 Topology::Tree(&drawn_tree)
             }
+            ScenarioTopology::OverlayReduced(g) => {
+                // Same RNG position as the SpanningTreeOf draw, so an
+                // overlay run and a spanning-tree run at one seed share
+                // their construction randomness.
+                drawn_tree = SpanningTree::random_root(g, rng);
+                Topology::Overlay(g, &drawn_tree)
+            }
         };
         let is_tree = matches!(topology, Topology::Tree(_));
+        let label = match topology {
+            Topology::Overlay(..) => algo.label_overlay(),
+            _ => algo.label(is_tree),
+        };
         let exchange = algo.build(BuildCtx {
             locals,
             topology,
@@ -475,7 +549,7 @@ impl Scenario {
                 costs,
                 algo.k(),
                 algo.objective(),
-                algo.label(is_tree),
+                label,
                 &self.channel,
                 &self.sketch,
                 backend,

@@ -54,6 +54,10 @@ pub struct MergeReduceSketch<'a> {
     /// (= `bucket_points / 2`, samples + the k solution centers).
     reduce_target: usize,
     tracker: PageTracker,
+    /// Stream dimensionality, fixed by the first insert — *including an
+    /// empty one*: an all-empty relay must finish to `empty(d)`, not
+    /// `empty(1)`, so its re-paginated stream matches its siblings'.
+    dim: Option<usize>,
     /// Level-0 accumulator, capped at `bucket_points` (`None` until the
     /// first non-empty insert fixes the dimensionality).
     level0: Option<WeightedSet>,
@@ -98,6 +102,7 @@ impl<'a> MergeReduceSketch<'a> {
             bucket_points,
             reduce_target: bucket_points / 2,
             tracker: PageTracker::default(),
+            dim: None,
             level0: None,
             level0_factor: 1.0,
             levels: Vec::new(),
@@ -146,10 +151,14 @@ impl<'a> MergeReduceSketch<'a> {
     /// Fold a set whose content already carries a composed error factor
     /// (merged-in buckets from another sketch).
     fn insert_weighted(&mut self, set: &WeightedSet, factor: f64) {
+        // Record the stream's shape and history even for an empty set —
+        // a zero-point page still declares its dimensionality, and a
+        // merged-in empty bucket must not lose its composed factor.
+        self.dim.get_or_insert(set.d());
+        self.worst_factor = self.worst_factor.max(factor);
         if set.n() == 0 {
             return;
         }
-        self.worst_factor = self.worst_factor.max(factor);
         let d = set.d();
         let mut start = 0;
         while start < set.n() {
@@ -295,6 +304,7 @@ impl MergeableSketch for MergeReduceSketch<'_> {
         self.peak = self.peak.max(other.peak);
         self.reductions += other.reductions;
         self.worst_factor = self.worst_factor.max(other.worst_factor);
+        self.dim = self.dim.or(other.dim);
         self.tracker.merge(other.tracker);
         let l0_factor = other.level0_factor;
         if let Some(l0) = other.level0 {
@@ -314,6 +324,7 @@ impl MergeableSketch for MergeReduceSketch<'_> {
             .map(|(s, _)| s.d())
             .chain(self.level0.iter().map(|s| s.d()))
             .next()
+            .or(self.dim)
             .unwrap_or(1);
         let mut out = WeightedSet::empty(d);
         // Deepest (oldest) buckets first, the level-0 tail last — a
@@ -449,6 +460,45 @@ mod tests {
         let out = left.finish().unwrap();
         let total = a.total_weight() + b.total_weight();
         assert!((out.total_weight() / total - 1.0).abs() < 0.35);
+    }
+
+    #[test]
+    fn empty_page_counts_its_site_and_keeps_the_dimension() {
+        // Regression: a site whose portion paginates to a single
+        // zero-cost empty page must (a) complete its site through the
+        // tracker — relay/root completion counts on it — and (b) fix the
+        // stream dimensionality, so an all-empty relay finishes to
+        // `empty(d)`, not `empty(1)` (the pre-fix fallback).
+        let mut s = sketch(64, 3);
+        let empty = Arc::new(WeightedSet::empty(4));
+        assert!(s.insert_page(7, 0, 1, &empty));
+        assert!(!s.insert_page(7, 0, 1, &empty), "duplicate rejected");
+        assert_eq!(s.complete_sites(), 1, "empty site still completes");
+        assert_eq!(s.points_held(), 0);
+        assert_eq!(s.error_factor(), 1.0);
+        let out = s.finish().unwrap();
+        assert_eq!(out.n(), 0);
+        assert_eq!(out.d(), 4, "empty stream keeps its declared dimension");
+
+        // Mixed case: the empty site plus a real one — the content wins
+        // the dimension and both sites count.
+        let mut s = sketch(64, 3);
+        assert!(s.insert_page(0, 0, 1, &Arc::new(WeightedSet::empty(5))));
+        let mut rng = Pcg64::seed_from(12);
+        let data = gaussian_mixture(&mut rng, 40, 5, 2);
+        assert!(s.insert_page(1, 0, 1, &Arc::new(WeightedSet::unit(data))));
+        assert_eq!(s.complete_sites(), 2);
+        let out = s.finish().unwrap();
+        assert_eq!(out.n(), 40);
+        assert_eq!(out.d(), 5);
+
+        // An empty sketch merged into another carries its dimension.
+        let mut a = sketch(64, 3);
+        let mut b = sketch(64, 3);
+        assert!(b.insert_page(2, 0, 1, &Arc::new(WeightedSet::empty(6))));
+        a.merge(b);
+        assert_eq!(a.complete_sites(), 1);
+        assert_eq!(a.finish().unwrap().d(), 6);
     }
 
     #[test]

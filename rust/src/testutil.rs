@@ -2,9 +2,15 @@
 //! seeded random-instance generators + a `for_all` driver that reports
 //! the failing seed so any counterexample reproduces deterministically.
 
+use crate::clustering::backend::RustBackend;
+use crate::clustering::{cost_of, Objective};
+use crate::coreset::DistributedConfig;
 use crate::partition::Scheme;
 use crate::points::{Dataset, WeightedSet};
+use crate::protocol::RunResult;
 use crate::rng::Pcg64;
+use crate::scenario::{Distributed, Scenario};
+use crate::sketch::SketchPlan;
 use crate::topology::{generators, Graph};
 use std::sync::Arc;
 
@@ -113,6 +119,86 @@ pub fn mixture_sites(
         .filter(|p| !drop_empty || p.n() > 0)
         .map(WeightedSet::unit)
         .collect()
+}
+
+/// The overlay-vs-flooded acceptance fixture (PR 5), shared by
+/// `tests/overlay.rs` and the `comm_scaling` bench panel so the
+/// operating point and the acceptance contract live in exactly one
+/// place.
+pub struct OverlayAcceptance {
+    /// The 16-node connected Erdős–Rényi graph both runs used.
+    pub graph: Graph,
+    /// Flooded graph-mode run (exact sketch).
+    pub flooded: RunResult,
+    /// Overlay-reduced run (merge-reduce, bucket 256) at the same seed.
+    pub overlay: RunResult,
+    /// Flooding's portion bill `2m(t + nk)` — the bound the overlay's
+    /// TOTAL wire points must beat strictly.
+    pub flooded_portion_bound: usize,
+    /// Flooded solution's cost on the global data.
+    pub flooded_cost: f64,
+    /// Overlay solution's cost on the global data.
+    pub overlay_cost: f64,
+    /// Global sample budget t (2048).
+    pub t: usize,
+    /// Centers k (4).
+    pub k: usize,
+}
+
+/// Run the overlay acceptance comparison: the distributed construction
+/// on a 16-node connected Erdős–Rényi graph at `t = 2048`, identical
+/// seeds, flooded graph mode vs the overlay-reduced exchange (page 64,
+/// merge-reduce bucket 256) over a `points`-point mixture. Asserts the
+/// shared acceptance contract — the overlay's *total* wire bill lands
+/// strictly below the flooded `2m(t + nk)` portion bound, with solution
+/// cost within the overlay's composed error factor of the flooded
+/// solution (×1.25 slack for the variance between two independent final
+/// solves) — and returns everything the callers render or assert on.
+pub fn overlay_acceptance(points: usize) -> OverlayAcceptance {
+    let (n, t, k) = (16usize, 2_048usize, 4usize);
+    let locals = mixture_sites(91, points, 4, 4, n, Scheme::Uniform, false);
+    let mut rng = Pcg64::seed_from(92);
+    let graph = generators::erdos_renyi_connected(&mut rng, n, 0.3);
+    let cfg = DistributedConfig {
+        t,
+        k,
+        ..Default::default()
+    };
+    let flooded = Scenario::on_graph(graph.clone())
+        .page_points(64)
+        .seed(93)
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .expect("flooded acceptance run");
+    let overlay = Scenario::on_overlay_of(graph.clone())
+        .page_points(64)
+        .sketch(SketchPlan::merge_reduce(256))
+        .seed(93) // identical seed to the flooded run
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .expect("overlay acceptance run");
+    let flooded_portion_bound = 2 * graph.m() * (t + n * k);
+    assert!(
+        overlay.comm_points < flooded_portion_bound,
+        "overlay total {} !< flooded portion bound {flooded_portion_bound}",
+        overlay.comm_points
+    );
+    let global = WeightedSet::union(locals.iter());
+    let flooded_cost = cost_of(&global, &flooded.centers, Objective::KMeans);
+    let overlay_cost = cost_of(&global, &overlay.centers, Objective::KMeans);
+    assert!(
+        overlay_cost <= flooded_cost * overlay.error_factor() * 1.25,
+        "overlay quality {overlay_cost} outside flooded {flooded_cost} x factor {}",
+        overlay.error_factor()
+    );
+    OverlayAcceptance {
+        graph,
+        flooded,
+        overlay,
+        flooded_portion_bound,
+        flooded_cost,
+        overlay_cost,
+        t,
+        k,
+    }
 }
 
 #[cfg(test)]

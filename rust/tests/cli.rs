@@ -174,6 +174,119 @@ fn sketch_flags_accepted_and_reported() {
 }
 
 #[test]
+fn overlay_exchange_flag_runs_and_misconfigs_fail() {
+    let base = [
+        "run",
+        "--dataset",
+        "synthetic",
+        "--scale",
+        "0.01",
+        "--topology",
+        "star",
+        "--sites",
+        "4",
+        "--algorithm",
+        "distributed",
+        "--t",
+        "200",
+        "--reps",
+        "1",
+        "--seed",
+        "3",
+        "--exchange",
+        "overlay",
+    ];
+    let out = distclus()
+        .args(base)
+        .args(["--page-points", "16", "--sketch", "merge-reduce", "--bucket-points", "64"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("+overlay"), "report: {text}");
+
+    // The overlay requires the merge-reduce sketch — loud, not silent.
+    let out = distclus().args(base).args(["--page-points", "16"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("merge-reduce"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // And a tree algorithm cannot take a graph-mode exchange.
+    let out = distclus()
+        .args([
+            "run",
+            "--dataset",
+            "synthetic",
+            "--scale",
+            "0.01",
+            "--algorithm",
+            "distributed-tree",
+            "--t",
+            "100",
+            "--reps",
+            "1",
+            "--exchange",
+            "overlay",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn degraded_link_flag_is_accepted_and_reported() {
+    let out = distclus()
+        .args([
+            "run",
+            "--dataset",
+            "synthetic",
+            "--scale",
+            "0.01",
+            "--topology",
+            "star",
+            "--sites",
+            "4",
+            "--algorithm",
+            "distributed",
+            "--t",
+            "100",
+            "--reps",
+            "1",
+            "--seed",
+            "3",
+            "--page-points",
+            "16",
+            "--link-capacity",
+            "64",
+            "--degraded",
+            "1-0 @ 4",
+            "--json",
+        ])
+        .arg(std::env::temp_dir().join("distclus_degraded_test.json"))
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let tmp = std::env::temp_dir().join("distclus_degraded_test.json");
+    let text = std::fs::read_to_string(&tmp).unwrap();
+    assert!(
+        text.contains("cap=64; 0->1@4; 1->0@4"),
+        "link profile must reach the JSON report: {text}"
+    );
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
 fn rejects_unknown_flags_and_values() {
     let out = distclus()
         .args(["run", "--bogus-flag", "1"])

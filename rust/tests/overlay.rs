@@ -1,0 +1,323 @@
+//! The overlay-reduced graph exchange — contracts of the PR 5 tentpole:
+//!
+//! 1. acceptance: on a 16-node connected Erdős–Rényi graph at t = 2048,
+//!    the overlay's *total* wire points land strictly below flooded
+//!    graph mode's `2m(t + nk)` portion bound at identical seeds, with
+//!    solution cost within the run's reported composed error factor of
+//!    the flooded solution;
+//! 2. the overlay has no channel of its own: every overlay hop pays the
+//!    underlying *graph* edge's per-edge `LinkModel` capacity;
+//! 3. zero-point sites: a site whose portion paginates to a single
+//!    zero-cost empty page still counts toward `sites_expected` at
+//!    folding relays and toward overlay root completion (mixed
+//!    empty/non-empty runs on both the tree and overlay paths);
+//! 4. error accounting: the composed factor is monotone as the overlay
+//!    deepens on a path graph (the algebraic half is the unit property
+//!    in `protocol/distributed_clustering.rs`), and exactly 1.0 under
+//!    `--sketch exact` everywhere exact is legal;
+//! 5. axis validation: overlay × exact, overlay × monolithic paging and
+//!    overlay × tree-only algorithms are rejected loudly.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::Objective;
+use distclus::coreset::zhang::ZhangConfig;
+use distclus::coreset::{Coreset, DistributedConfig};
+use distclus::network::LinkModel;
+use distclus::partition::Scheme;
+use distclus::points::WeightedSet;
+use distclus::rng::Pcg64;
+use distclus::scenario::{BuildCtx, CoresetAlgorithm, Distributed, Exchange, Scenario, Zhang};
+use distclus::sketch::SketchPlan;
+use distclus::testutil::{mixture_sites, overlay_acceptance};
+use distclus::topology::{generators, SpanningTree};
+
+#[test]
+fn overlay_wire_total_beats_flooded_2m_bound_on_er16() {
+    // The fixture (shared with the comm_scaling panel, so the operating
+    // point lives in one place) already asserts the tentpole contract:
+    // the overlay's ENTIRE bill — its own cost flood, the converge-
+    // folded reduced streams, the reduced-set flood and the centers
+    // flood — lands strictly below the flooded portion exchange alone,
+    // at solution cost within the overlay's composed error factor.
+    let a = overlay_acceptance(12_000);
+    let (g, t, k) = (&a.graph, a.t, a.k);
+    let n = g.n();
+
+    // Flooding pays exactly 2mn (costs) + 2m(t + nk) (portions).
+    assert_eq!(
+        a.flooded.comm_points,
+        2 * g.m() * n + a.flooded_portion_bound
+    );
+    assert!(a.overlay.comm_points < a.flooded.comm_points);
+
+    assert_eq!(a.overlay.algorithm, "distributed-coreset (overlay)");
+    assert_eq!(a.overlay.sketch, "merge-reduce");
+    assert_eq!(a.overlay.centers.n(), k);
+    // What flooded back (and what the root solved on) is the REDUCED
+    // set, not the full t + nk stream.
+    assert!(
+        a.overlay.coreset.size() < t + n * k,
+        "reduced root set {} !< full stream {}",
+        a.overlay.coreset.size(),
+        t + n * k
+    );
+    // Error accounting composes along the overlay chains into the
+    // run-level meter.
+    assert!(a.overlay.meters.contains_key("mr_reductions"));
+    assert!(a.overlay.error_factor() >= 1.0);
+}
+
+#[test]
+fn overlay_hops_pay_the_underlying_graph_edge_capacities() {
+    // On a path graph every spanning-tree overlay edge IS a graph edge,
+    // so throttling one graph edge via a per-edge override (the default
+    // stays unlimited) must back-pressure the overlay run: the slow
+    // edge carries converge traffic and the reduced-set flood at one
+    // point per round, stretching `rounds` well past the open run.
+    let n = 6usize;
+    let locals = mixture_sites(71, 3_000, 3, 3, n, Scheme::Uniform, false);
+    let g = generators::path(n);
+    let cfg = DistributedConfig {
+        t: 512,
+        k: 3,
+        ..Default::default()
+    };
+    let run_with = |link: LinkModel| {
+        Scenario::on_overlay_of(g.clone())
+            .page_points(16)
+            .links(link)
+            .sketch(SketchPlan::merge_reduce(128))
+            .seed(72)
+            .run(&Distributed(cfg), &locals, &RustBackend)
+            .unwrap()
+    };
+    let open = run_with(LinkModel::unlimited());
+    let throttled = run_with(LinkModel::unlimited().with_link(2, 3, 1));
+    assert!(
+        throttled.rounds > open.rounds,
+        "a throttled graph edge must stretch the overlay run: {} !> {}",
+        throttled.rounds,
+        open.rounds
+    );
+    assert_eq!(open.centers.n(), 3);
+    assert_eq!(throttled.centers.n(), 3);
+    assert!(open.comm_points > 0 && throttled.comm_points > 0);
+}
+
+/// A test-only construction handing the wire phase a fixed set of
+/// portions — the only way to drive genuinely empty sites through the
+/// public `Scenario` surface (real constructions always append local
+/// centers, and the experiment driver patches empty sites up front).
+struct FixedPortions {
+    k: usize,
+    portions: Vec<Coreset>,
+}
+
+impl CoresetAlgorithm for FixedPortions {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn objective(&self) -> Objective {
+        Objective::KMeans
+    }
+
+    fn label(&self, _tree: bool) -> &'static str {
+        "fixed-portions"
+    }
+
+    fn build(&self, _ctx: BuildCtx<'_, '_>) -> anyhow::Result<Exchange> {
+        Ok(Exchange::Portions {
+            portions: self.portions.clone(),
+            costs: None,
+        })
+    }
+}
+
+/// `sites` portions over a path, the ones named in `empty` zero-point.
+fn mixed_portions(seed: u64, sites: usize, d: usize, empty: &[usize]) -> Vec<Coreset> {
+    let mut rng = Pcg64::seed_from(seed);
+    (0..sites)
+        .map(|i| {
+            let mut set = WeightedSet::empty(d);
+            if !empty.contains(&i) {
+                for _ in 0..40 {
+                    let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                    set.push(&p, rng.uniform() + 0.1);
+                }
+            }
+            Coreset {
+                sampled: set.n(),
+                set,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn zero_point_sites_complete_tree_and_overlay_folds() {
+    // Sites 1 (an interior relay) and 5 (a leaf) paginate to a single
+    // zero-cost empty page each. If an empty site failed to count
+    // toward `sites_expected` at folding relays (or toward overlay root
+    // completion), the session would go quiescent with the collection
+    // torn and the run would error out instead of completing.
+    let sites = 6usize;
+    let empty = [1usize, 5];
+    let portions = mixed_portions(81, sites, 3, &empty);
+    let live_points: usize = portions.iter().map(|c| c.set.n()).sum();
+    let locals: Vec<WeightedSet> = portions.iter().map(|c| c.set.clone()).collect();
+    let algo = FixedPortions {
+        k: 2,
+        portions: portions.clone(),
+    };
+    let g = generators::path(sites);
+
+    // Tree path: merge-reduce relays complete through empty sites.
+    let tree = SpanningTree::bfs(&g, 0);
+    let run = Scenario::on_tree(tree)
+        .page_points(8)
+        .sketch(SketchPlan::merge_reduce(64))
+        .seed(82)
+        .run(&algo, &locals, &RustBackend)
+        .unwrap();
+    assert!(run.coreset.size() > 0 && run.coreset.size() <= live_points);
+    assert_eq!(run.centers.n(), 2);
+
+    // Exact tree mode for the same mix: byte-compatible union, so the
+    // empty sites contribute exactly nothing.
+    let tree = SpanningTree::bfs(&g, 0);
+    let exact = Scenario::on_tree(tree)
+        .page_points(8)
+        .seed(83)
+        .run(&algo, &locals, &RustBackend)
+        .unwrap();
+    assert_eq!(exact.coreset.size(), live_points);
+
+    // Overlay path: empty sites count toward relay AND root completion,
+    // and every node still receives the reduced root set + centers.
+    let run = Scenario::on_overlay_of(g.clone())
+        .page_points(8)
+        .sketch(SketchPlan::merge_reduce(64))
+        .seed(84)
+        .run(&algo, &locals, &RustBackend)
+        .unwrap();
+    assert!(run.coreset.size() > 0 && run.coreset.size() <= live_points);
+    assert_eq!(run.centers.n(), 2);
+    assert_eq!(run.algorithm, "fixed-portions");
+
+    // Degenerate extreme: every site empty except one, empty at both
+    // ends of the path (root side and leaf side).
+    let portions = mixed_portions(85, sites, 3, &[0, 1, 3, 4, 5]);
+    let locals: Vec<WeightedSet> = portions.iter().map(|c| c.set.clone()).collect();
+    let algo = FixedPortions { k: 1, portions };
+    let run = Scenario::on_overlay_of(g)
+        .page_points(8)
+        .sketch(SketchPlan::merge_reduce(64))
+        .seed(86)
+        .run(&algo, &locals, &RustBackend)
+        .unwrap();
+    assert!(run.coreset.size() > 0);
+    assert_eq!(run.centers.n(), 1);
+}
+
+#[test]
+fn overlay_error_factor_grows_with_depth_and_exact_is_one() {
+    // End-to-end half of the worst-chain contract: identical data at
+    // every site, so a longer path means strictly more reducing relays
+    // between the far leaf and the root — the measured composed factor
+    // must not shrink as the overlay deepens (the algebraic guarantee —
+    // chain products of factors ≥ 1 are monotone in depth — is pinned
+    // by the unit property test next to `composed_error_factor`).
+    let site = mixture_sites(61, 600, 3, 3, 1, Scheme::Uniform, false)
+        .pop()
+        .unwrap();
+    let cfg = DistributedConfig {
+        t: 256,
+        k: 2,
+        ..Default::default()
+    };
+    let factor_at = |len: usize| {
+        let locals = vec![site.clone(); len];
+        Scenario::on_overlay_of(generators::path(len))
+            .page_points(16)
+            .sketch(SketchPlan::merge_reduce(64))
+            .seed(62)
+            .run(&Distributed(cfg), &locals, &RustBackend)
+            .unwrap()
+            .error_factor()
+    };
+    let shallow = factor_at(2);
+    let deep = factor_at(16);
+    assert!(shallow >= 1.0);
+    assert!(
+        deep > 1.0,
+        "a 16-deep overlay of 600-point sites must register reductions"
+    );
+    assert!(
+        deep >= shallow,
+        "composed factor must not shrink with depth: {deep} < {shallow}"
+    );
+
+    // Exact folding is lossless wherever it is legal: factor exactly 1.
+    let locals = mixture_sites(63, 2_000, 3, 3, 5, Scheme::Uniform, false);
+    let g = generators::star(5);
+    let graph_exact = Scenario::on_graph(g.clone())
+        .seed(64)
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .unwrap();
+    assert_eq!(graph_exact.error_factor(), 1.0);
+    let tree_exact = Scenario::on_tree(SpanningTree::bfs(&g, 0))
+        .seed(65)
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .unwrap();
+    assert_eq!(tree_exact.error_factor(), 1.0);
+    let stree_exact = Scenario::on_spanning_tree_of(g)
+        .seed(66)
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .unwrap();
+    assert_eq!(stree_exact.error_factor(), 1.0);
+}
+
+#[test]
+fn overlay_axis_misconfigs_are_rejected_loudly() {
+    let locals = mixture_sites(51, 1_000, 3, 3, 4, Scheme::Uniform, false);
+    let g = generators::star(4);
+    let cfg = DistributedConfig {
+        t: 128,
+        k: 2,
+        ..Default::default()
+    };
+
+    // Overlay × exact sketch: nothing to reduce — rejected.
+    let err = Scenario::on_overlay_of(g.clone())
+        .page_points(16)
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .unwrap_err();
+    assert!(err.to_string().contains("merge-reduce"), "{err}");
+
+    // Overlay × monolithic paging (page_points = 0): rejected.
+    let err = Scenario::on_overlay_of(g.clone())
+        .sketch(SketchPlan::merge_reduce(64))
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .unwrap_err();
+    assert!(err.to_string().contains("page-points"), "{err}");
+
+    // Overlay × a tree-only algorithm: rejected before any compute
+    // (zhang trips its sketch-axis rejection first — it supports
+    // neither the fold nor a graph-mode exchange, and either way the
+    // run must name the offending algorithm loudly).
+    let err = Scenario::on_overlay_of(g)
+        .page_points(16)
+        .sketch(SketchPlan::merge_reduce(64))
+        .run(
+            &Zhang(ZhangConfig {
+                t_node: 32,
+                k: 2,
+                objective: Objective::KMeans,
+            }),
+            &locals,
+            &RustBackend,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("zhang"), "{err}");
+}
