@@ -1,9 +1,18 @@
 //! The network simulator: edge-restricted delivery, exact cost metering,
 //! link bandwidth modelling, memory-pressure metering, full transcript.
+//!
+//! Internally event-driven: traffic lives in per-directed-edge FIFO
+//! queues keyed by the topology's CSR edge ids, and a round visits only
+//! the edges that actually carry traffic (ascending edge id, so every
+//! run is deterministic). A round therefore costs O(edges-with-traffic),
+//! not O(n) or O(queued messages × map lookups), and the set of nodes
+//! that received something is available sparsely via
+//! [`Network::delivered_nodes`].
 
 use super::{Payload, TranscriptEntry};
 use crate::topology::Graph;
-use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Per-link bandwidth model: how many points each *directed* edge can
 /// deliver per synchronous round.
@@ -152,13 +161,31 @@ impl ChannelConfig {
 /// metric; [`Network::peak_points`] meters the worst-case receiver-side
 /// buffer the run ever needed.
 pub struct Network {
-    graph: Graph,
-    /// Messages awaiting delivery, FIFO: (from, to, payload). Under an
-    /// unlimited link model everything drains at the next `step`; with a
-    /// capacity, the tail beyond each edge's budget stays queued.
-    queue: VecDeque<(usize, usize, Payload)>,
+    graph: Arc<Graph>,
+    /// Per-directed-edge FIFO queues, keyed by CSR edge id. Entries
+    /// carry a monotone send sequence so debug builds can machine-check
+    /// that per-edge FIFO order is never violated. Drained edges leave
+    /// the map, keeping memory proportional to in-flight traffic.
+    queues: HashMap<usize, VecDeque<(u64, Payload)>>,
+    /// Edge ids with queued traffic; each appears exactly once (pushed
+    /// on the empty→non-empty transition, rebuilt by `step`).
+    active_edges: Vec<usize>,
+    /// Monotone per-send sequence backing the FIFO debug assertion.
+    send_seq: u64,
+    /// Messages / points queued but not yet admitted by the link model.
+    backlog_msgs: usize,
+    backlog_points: usize,
     /// Per-node inbox for the current round.
     inboxes: Vec<VecDeque<(usize, Payload)>>,
+    /// Messages currently buffered across all inboxes.
+    inbox_msgs: usize,
+    /// Nodes that received at least one message in the last `step`,
+    /// ascending and deduplicated — the sparse delivered set.
+    delivered: Vec<usize>,
+    /// `recv_all` calls that found messages (and so allocated).
+    recv_drains: usize,
+    /// `recv_all` calls that hit an empty inbox (alloc-free fast path).
+    idle_recvs: usize,
     transcript: Vec<TranscriptEntry>,
     cost_points: usize,
     round: usize,
@@ -179,9 +206,17 @@ impl Network {
     pub fn new(graph: Graph) -> Self {
         let n = graph.n();
         Network {
-            graph,
-            queue: VecDeque::new(),
+            graph: Arc::new(graph),
+            queues: HashMap::new(),
+            active_edges: Vec::new(),
+            send_seq: 0,
+            backlog_msgs: 0,
+            backlog_points: 0,
             inboxes: vec![VecDeque::new(); n],
+            inbox_msgs: 0,
+            delivered: Vec::new(),
+            recv_drains: 0,
+            idle_recvs: 0,
             transcript: Vec::new(),
             cost_points: 0,
             round: 0,
@@ -223,6 +258,11 @@ impl Network {
         self.dropped
     }
 
+    /// True when a per-transmission loss probability is active.
+    pub fn is_lossy(&self) -> bool {
+        self.loss > 0.0
+    }
+
     /// Disable transcript recording (large experiments; cost metering
     /// stays on).
     pub fn without_transcript(mut self) -> Self {
@@ -233,6 +273,12 @@ impl Network {
     /// The underlying topology.
     pub fn graph(&self) -> &Graph {
         &self.graph
+    }
+
+    /// Shared handle on the topology — lets node machines hold the CSR
+    /// neighbor slices without cloning adjacency into each node.
+    pub fn graph_shared(&self) -> Arc<Graph> {
+        Arc::clone(&self.graph)
     }
 
     /// Number of nodes.
@@ -257,7 +303,7 @@ impl Network {
     /// Points queued for delivery but not yet admitted by the link model
     /// (sender-side backlog; 0 whenever the simulator is quiescent).
     pub fn queued_points(&self) -> usize {
-        self.queue.iter().map(|(_, _, p)| p.size_points()).sum()
+        self.backlog_points
     }
 
     /// Completed synchronous rounds.
@@ -270,16 +316,37 @@ impl Network {
         &self.transcript
     }
 
+    /// Nodes that received at least one message in the last
+    /// [`Network::step`], ascending and deduplicated. The sparse
+    /// alternative to scanning all `n` inboxes: the active-set drive
+    /// loop schedules exactly these nodes.
+    pub fn delivered_nodes(&self) -> &[usize] {
+        &self.delivered
+    }
+
+    /// How many [`Network::recv_all`] calls drained a non-empty inbox
+    /// (each such drain allocates the returned `Vec`).
+    pub fn recv_drains(&self) -> usize {
+        self.recv_drains
+    }
+
+    /// How many [`Network::recv_all`] calls hit an empty inbox and took
+    /// the allocation-free fast path. The dense drive loop pays this on
+    /// every idle node every round; the active-set loop never should.
+    pub fn idle_recvs(&self) -> usize {
+        self.idle_recvs
+    }
+
     /// Queue a message for delivery from the next round on (later under
     /// a saturated [`LinkModel`]).
     ///
     /// Panics if `(from, to)` is not an edge of the topology — protocols
     /// physically cannot cheat the communication graph.
     pub fn send(&mut self, from: usize, to: usize, payload: Payload) {
-        assert!(
-            self.graph.has_edge(from, to),
-            "send({from},{to}) is not an edge"
-        );
+        let eid = self
+            .graph
+            .edge_id(from, to)
+            .unwrap_or_else(|| panic!("send({from},{to}) is not an edge"));
         let points = payload.size_points();
         self.cost_points += points;
         if self.record_transcript {
@@ -290,15 +357,23 @@ impl Network {
                 points,
             });
         }
-        self.queue.push_back((from, to, payload));
+        self.send_seq += 1;
+        self.backlog_msgs += 1;
+        self.backlog_points += points;
+        let q = self.queues.entry(eid).or_default();
+        if q.is_empty() {
+            self.active_edges.push(eid);
+        }
+        q.push_back((self.send_seq, payload));
     }
 
     /// Broadcast to every neighbor of `from` (shallow clone per neighbor
-    /// — point-set payloads are `Arc`-backed, so this is O(1) per edge).
+    /// — point-set payloads are `Arc`-backed, so this is O(1) per edge,
+    /// and the CSR neighbor slice is read through the shared graph
+    /// handle, so no neighbor list is ever copied).
     pub fn send_to_neighbors(&mut self, from: usize, payload: &Payload) {
-        // Neighbor list copied to appease borrows.
-        let neigh: Vec<usize> = self.graph.neighbors(from).to_vec();
-        for to in neigh {
+        let graph = Arc::clone(&self.graph);
+        for &to in graph.neighbors(from) {
             self.send(from, to, payload.clone());
         }
     }
@@ -306,46 +381,75 @@ impl Network {
     /// Advance one synchronous round: queued traffic becomes receivable
     /// within each directed edge's bandwidth (minus lossy drops), FIFO
     /// per edge. Returns the number of messages delivered.
+    ///
+    /// Only edges with queued traffic are visited, in ascending edge-id
+    /// order — a deterministic O(active-edges + deliveries) round.
     pub fn step(&mut self) -> usize {
         self.round += 1;
-        let mut delivered = 0;
+        let mut active = std::mem::take(&mut self.active_edges);
+        active.sort_unstable();
+        debug_assert!(
+            active.windows(2).all(|w| w[0] < w[1]),
+            "active edge listed twice"
+        );
+        let mut delivered_count = 0usize;
+        let mut delivered_nodes: Vec<usize> = Vec::new();
+        let mut still_active: Vec<usize> = Vec::new();
         let loss = self.loss;
-        let mut used: BTreeMap<(usize, usize), usize> = BTreeMap::new();
-        let mut blocked: HashSet<(usize, usize)> = HashSet::new();
-        let mut deferred: VecDeque<(usize, usize, Payload)> = VecDeque::new();
-        for (from, to, payload) in std::mem::take(&mut self.queue) {
-            let edge = (from, to);
-            // FIFO per edge: once one message defers, everything behind
-            // it on the same edge defers too.
-            if blocked.contains(&edge) {
-                deferred.push_back((from, to, payload));
-                continue;
-            }
+        for eid in active {
+            let (from, to) = self.graph.edge_endpoints(eid);
             let cap = self.link.capacity(from, to);
-            let size = payload.size_points();
-            let spent = used.get(&edge).copied().unwrap_or(0);
-            // An oversized message may occupy an otherwise-idle edge for
-            // the round; anything else must fit in the remaining budget.
-            if cap > 0 && spent > 0 && spent + size > cap {
-                blocked.insert(edge);
-                deferred.push_back((from, to, payload));
-                continue;
-            }
-            used.insert(edge, spent + size);
-            if loss > 0.0 {
-                let rng = self.loss_rng.as_mut().expect("loss rng");
-                if rng.uniform() < loss {
-                    self.dropped += 1;
-                    continue;
+            let q = self.queues.get_mut(&eid).expect("active edge has a queue");
+            let mut spent = 0usize;
+            #[cfg(debug_assertions)]
+            let mut last_seq: Option<u64> = None;
+            while let Some((_seq, front)) = q.front() {
+                let size = front.size_points();
+                // An oversized message may occupy an otherwise-idle edge
+                // for the round; anything else must fit in the remaining
+                // budget. FIFO per edge: once the head defers, everything
+                // behind it on the same edge defers too.
+                if cap > 0 && spent > 0 && spent + size > cap {
+                    break;
                 }
+                #[cfg(debug_assertions)]
+                {
+                    assert!(
+                        last_seq.map_or(true, |s| s < *_seq),
+                        "per-edge FIFO reordered on edge {eid}"
+                    );
+                    last_seq = Some(*_seq);
+                }
+                let (_, payload) = q.pop_front().unwrap();
+                spent += size;
+                self.backlog_msgs -= 1;
+                self.backlog_points -= size;
+                if loss > 0.0 {
+                    let rng = self.loss_rng.as_mut().expect("loss rng");
+                    if rng.uniform() < loss {
+                        self.dropped += 1;
+                        continue;
+                    }
+                }
+                self.inbox_points += size;
+                self.inbox_msgs += 1;
+                self.inboxes[to].push_back((from, payload));
+                delivered_nodes.push(to);
+                delivered_count += 1;
             }
-            self.inbox_points += size;
-            self.inboxes[to].push_back((from, payload));
-            delivered += 1;
+            let drained = q.is_empty();
+            if drained {
+                self.queues.remove(&eid);
+            } else {
+                still_active.push(eid);
+            }
         }
-        self.queue = deferred;
+        self.active_edges = still_active;
+        delivered_nodes.sort_unstable();
+        delivered_nodes.dedup();
+        self.delivered = delivered_nodes;
         self.peak_points = self.peak_points.max(self.inbox_points);
-        delivered
+        delivered_count
     }
 
     /// Pop one pending message for `node`, if any.
@@ -353,20 +457,29 @@ impl Network {
         let msg = self.inboxes[node].pop_front();
         if let Some((_, p)) = &msg {
             self.inbox_points -= p.size_points();
+            self.inbox_msgs -= 1;
         }
         msg
     }
 
-    /// Drain all pending messages for `node`.
+    /// Drain all pending messages for `node`. An empty inbox returns
+    /// without allocating (`Vec::new` holds no heap block).
     pub fn recv_all(&mut self, node: usize) -> Vec<(usize, Payload)> {
+        if self.inboxes[node].is_empty() {
+            self.idle_recvs += 1;
+            return Vec::new();
+        }
+        self.recv_drains += 1;
         let msgs: Vec<(usize, Payload)> = self.inboxes[node].drain(..).collect();
         self.inbox_points -= msgs.iter().map(|(_, p)| p.size_points()).sum::<usize>();
+        self.inbox_msgs -= msgs.len();
         msgs
     }
 
-    /// True when nothing is queued or buffered.
+    /// True when nothing is queued or buffered. O(1) — maintained by
+    /// message counters, so zero-point payloads still count.
     pub fn quiescent(&self) -> bool {
-        self.queue.is_empty() && self.inboxes.iter().all(|q| q.is_empty())
+        self.backlog_msgs == 0 && self.inbox_msgs == 0
     }
 }
 
@@ -628,5 +741,51 @@ mod tests {
         assert_eq!(open.peak_points(), 6);
         assert_eq!(capped.peak_points(), 1);
         assert_eq!(capped.cost_points(), open.cost_points());
+    }
+
+    #[test]
+    fn delivered_nodes_is_sparse_sorted_and_deduplicated() {
+        let mut net = Network::new(generators::star(6));
+        // Two messages to node 0, one to node 3 — out of send order.
+        net.send(5, 0, Payload::Scalar(1.0));
+        net.send(0, 3, Payload::Scalar(2.0));
+        net.send(1, 0, Payload::Scalar(3.0));
+        net.step();
+        assert_eq!(net.delivered_nodes(), &[0, 3]);
+        net.recv_all(0);
+        net.recv_all(3);
+        net.step();
+        assert_eq!(net.delivered_nodes(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn recv_all_counts_idle_and_draining_calls() {
+        let mut net = Network::new(generators::path(3));
+        net.send(0, 1, Payload::Scalar(1.0));
+        net.step();
+        for v in 0..3 {
+            net.recv_all(v);
+        }
+        assert_eq!(net.recv_drains(), 1, "only node 1 had traffic");
+        assert_eq!(net.idle_recvs(), 2, "nodes 0 and 2 were idle");
+    }
+
+    #[test]
+    fn backlog_counters_stay_exact_under_caps_and_loss() {
+        let mut net = Network::new(generators::path(2))
+            .with_link_model(LinkModel::capped(2))
+            .with_loss(0.5, 9);
+        for i in 0..8 {
+            net.send(0, 1, Payload::Scalar(i as f64));
+        }
+        assert_eq!(net.queued_points(), 8);
+        let mut delivered = 0;
+        for _ in 0..8 {
+            delivered += net.step();
+            net.recv_all(1);
+        }
+        assert!(net.quiescent());
+        assert_eq!(net.queued_points(), 0);
+        assert_eq!(delivered + net.dropped(), 8, "every send admitted once");
     }
 }

@@ -27,7 +27,7 @@ use crate::exec::ExecPolicy;
 use crate::network::{paginate, ChannelConfig, Network, Payload};
 use crate::points::{Dataset, WeightedSet};
 use crate::protocol::broadcast_down;
-use crate::protocol::session::{drive, PipeMachine, Solver, ZhangMachine};
+use crate::protocol::session::{drive_with_mode, DriveMode, PipeMachine, Solver, ZhangMachine};
 use crate::rng::Pcg64;
 use crate::sketch::{SketchMode, SketchPlan};
 use crate::topology::{Graph, SpanningTree};
@@ -74,11 +74,14 @@ pub struct RunResult {
     /// Algorithm label for reports.
     pub algorithm: &'static str,
     /// Extensible named meters, so future instrumentation stops forcing
-    /// signature churn. Current keys (merge-and-reduce runs only):
+    /// signature churn. Current keys: `sched_ticks` — node ticks the
+    /// drive loop actually scheduled (under the default
+    /// [`DriveMode::ActiveSet`] this tracks the active frontier, not
+    /// `n × rounds`); and, on merge-and-reduce runs only,
     /// `mr_error_ppm` — the measured composed `(1+ε)^levels` error
     /// factor of the worst reduction chain feeding the collector, as
-    /// parts-per-million above 1 (see [`RunResult::error_factor`]);
-    /// `mr_reductions` — total bucket reductions across all folding
+    /// parts-per-million above 1 (see [`RunResult::error_factor`]) —
+    /// and `mr_reductions` — total bucket reductions across all folding
     /// nodes.
     pub meters: BTreeMap<&'static str, u64>,
 }
@@ -178,6 +181,7 @@ pub(crate) fn stream_exchange(
     algorithm: &'static str,
     channel: &ChannelConfig,
     sketch: &SketchPlan,
+    mode: DriveMode,
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
@@ -202,6 +206,7 @@ pub(crate) fn stream_exchange(
     let mut net = Network::new(graph)
         .without_transcript()
         .with_link_model(channel.link_model());
+    let shared = net.graph_shared();
 
     // Dedicated per-node streams for merge-and-reduce re-solves (exact
     // mode takes none, leaving the pipeline generator untouched — the
@@ -267,7 +272,7 @@ pub(crate) fn stream_exchange(
                     };
                     PipeMachine::graph(
                         i,
-                        net.graph().neighbors(i).to_vec(),
+                        Arc::clone(&shared),
                         cost_payload(i),
                         own,
                         n,
@@ -326,7 +331,7 @@ pub(crate) fn stream_exchange(
                 .collect();
             (tree.root, nodes)
         }
-        Topology::Overlay(g, tree) => {
+        Topology::Overlay(_, tree) => {
             let nodes: Vec<PipeMachine> = pages
                 .into_iter()
                 .enumerate()
@@ -340,7 +345,7 @@ pub(crate) fn stream_exchange(
                     PipeMachine::overlay(
                         v,
                         (!is_root).then_some(tree.parent[v]),
-                        g.neighbors(v).to_vec(),
+                        Arc::clone(&shared),
                         cost_payload(v),
                         own,
                         n,
@@ -354,7 +359,7 @@ pub(crate) fn stream_exchange(
             (tree.root, nodes)
         }
     };
-    drive(&mut net, &mut nodes);
+    let stats = drive_with_mode(&mut net, &mut nodes, mode);
 
     // Delivery checks: on a graph every node must have folded the whole
     // stream; on a tree the root must have completed its collection; on
@@ -406,6 +411,7 @@ pub(crate) fn stream_exchange(
     let node_peaks: Vec<usize> = nodes.iter().map(|m| m.node_peak).collect();
     let collector_peak = node_peaks[collector];
     let mut meters = BTreeMap::new();
+    meters.insert("sched_ticks", stats.node_ticks);
     if merge_reduce {
         let factors: Vec<f64> = nodes.iter().map(|m| m.sketch_error_factor).collect();
         let composed = match topology {
@@ -452,6 +458,7 @@ pub(crate) fn run_composed(
     objective: Objective,
     algorithm: &'static str,
     channel: &ChannelConfig,
+    mode: DriveMode,
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
@@ -478,7 +485,7 @@ pub(crate) fn run_composed(
             )
         })
         .collect();
-    drive(&mut net, &mut machines);
+    let stats = drive_with_mode(&mut net, &mut machines, mode);
     let sol = solve_on(&coreset, k, objective, backend, rng);
     broadcast_down(
         &mut net,
@@ -500,6 +507,8 @@ pub(crate) fn run_composed(
         .collect();
     node_peaks[tree.root] = node_peaks[tree.root].max(coreset.size());
     let collector_peak = node_peaks[tree.root];
+    let mut meters = BTreeMap::new();
+    meters.insert("sched_ticks", stats.node_ticks);
     Ok(RunResult {
         centers: sol.centers,
         coreset_cost: sol.cost,
@@ -511,7 +520,7 @@ pub(crate) fn run_composed(
         collector_peak,
         sketch: SketchMode::Exact.name(),
         algorithm,
-        meters: BTreeMap::new(),
+        meters,
     })
 }
 
@@ -689,8 +698,10 @@ mod tests {
         assert_eq!(run.collector_peak, run.node_peaks[0]);
         // Exact folding holds the full coreset at the collector.
         assert_eq!(run.collector_peak, run.coreset.size());
-        // Exact folds carry no error-accounting meters: factor 1.
-        assert!(run.meters.is_empty());
+        // Exact folds carry no error-accounting meters: factor 1. (The
+        // scheduler meter is always present.)
+        assert!(run.meters.keys().all(|m| !m.starts_with("mr_")));
+        assert!(run.meters["sched_ticks"] > 0);
         assert_eq!(run.error_factor(), 1.0);
 
         // Solution quality on the *global* data vs direct clustering.

@@ -14,8 +14,9 @@
 //! Implemented as [`FloodMachine`]s under the unified
 //! [`session`](super::session) round loop.
 
-use super::session::{drive, FloodMachine};
+use super::session::{drive_with_mode, DriveMode, FloodMachine};
 use crate::network::{Network, Payload};
+use std::sync::Arc;
 
 /// Flood one payload per node to every node. `payloads[i]` is node `i`'s
 /// `I_i` (must be floodable, i.e. carry an origin site id).
@@ -35,9 +36,27 @@ pub fn flood(net: &mut Network, payloads: Vec<Payload>) -> Vec<Vec<Payload>> {
 /// Returns, per node, all `Σ_j |origins[j]|` payloads it ended up
 /// holding, ordered by `(kind, site, page)`.
 pub fn flood_multi(net: &mut Network, origins: Vec<Vec<Payload>>) -> Vec<Vec<Payload>> {
+    flood_multi_mode(net, origins, DriveMode::ActiveSet)
+}
+
+/// [`flood_multi`] with an explicit drive-loop scheduling mode — the
+/// differential-testing hook of the equivalence suite: running the same
+/// flood under [`DriveMode::ActiveSet`] and [`DriveMode::Dense`] must
+/// produce bit-identical transcripts, costs and rounds.
+///
+/// On a lossy network ([`Network::with_loss`]) the everyone-saw-
+/// everything assertion is skipped — plain flooding has no
+/// retransmission (see [`crate::protocol::flood_reliable`]), so partial
+/// delivery is the expected outcome, not an error.
+pub fn flood_multi_mode(
+    net: &mut Network,
+    origins: Vec<Vec<Payload>>,
+    mode: DriveMode,
+) -> Vec<Vec<Payload>> {
     let n = net.n();
     assert_eq!(origins.len(), n, "one origin set per node");
     let expect: usize = origins.iter().map(|o| o.len()).sum();
+    let shared = net.graph_shared();
     let mut nodes: Vec<FloodMachine> = origins
         .into_iter()
         .enumerate()
@@ -48,18 +67,18 @@ pub fn flood_multi(net: &mut Network, origins: Vec<Vec<Payload>>) -> Vec<Vec<Pay
                     .expect("flooded payloads must have an origin");
                 assert_eq!(key.1, i, "payload origin must match its node");
             }
-            FloodMachine::new(net.graph().neighbors(i).to_vec(), own)
+            FloodMachine::new(Arc::clone(&shared), i, own)
         })
         .collect();
-    drive(net, &mut nodes);
+    drive_with_mode(net, &mut nodes, mode);
+    let lossy = net.is_lossy();
     nodes
         .into_iter()
         .enumerate()
         .map(|(v, node)| {
             let mut held = node.held;
-            assert_eq!(
-                held.len(),
-                expect,
+            assert!(
+                lossy || held.len() == expect,
                 "node {v} only saw {} of {expect} payloads (disconnected graph?)",
                 held.len()
             );

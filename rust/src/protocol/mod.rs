@@ -24,6 +24,7 @@ pub use distributed_clustering::{
     combine_on_graph, combine_on_tree, zhang_on_tree, zhang_on_tree_exec, RunResult, Topology,
 };
 pub(crate) use distributed_clustering::{run_composed, stream_exchange};
-pub use flooding::{flood, flood_multi};
+pub use flooding::{flood, flood_multi, flood_multi_mode};
+pub use session::{DriveMode, DriveStats};
 pub use reliable::{flood_reliable, flood_reliable_multi};
 pub use tree::{broadcast_down, converge_cast, converge_cast_multi};

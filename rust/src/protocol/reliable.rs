@@ -55,7 +55,7 @@ pub fn flood_reliable_multi(
         for payload in own {
             let key = payload.flood_key().expect("floodable payload");
             assert_eq!(key.1, i, "payload origin mismatch");
-            for &nb in net.graph().neighbors(i).to_vec().iter() {
+            for &nb in net.graph().neighbors(i) {
                 pending[i].insert((key, nb));
             }
             seen[i].insert(key, payload);
@@ -84,7 +84,7 @@ pub fn flood_reliable_multi(
                     other => {
                         let key = other.flood_key().expect("floodable");
                         if !seen[v].contains_key(&key) {
-                            for &nb in net.graph().neighbors(v).to_vec().iter() {
+                            for &nb in net.graph().neighbors(v) {
                                 if nb != from {
                                     pending[v].insert((key, nb));
                                 }

@@ -34,6 +34,7 @@ use crate::coreset::Coreset;
 use crate::network::{paginate, FloodKey, Network, Payload};
 use crate::rng::Pcg64;
 use crate::sketch::Sketch;
+use crate::topology::Graph;
 use std::collections::HashSet;
 use std::sync::Arc;
 
@@ -66,36 +67,124 @@ pub(crate) trait NodeMachine {
 
     /// One message delivered to this node in the round just stepped.
     fn on_msg(&mut self, from: usize, msg: Payload, out: &mut Outbox);
+
+    /// True when the next `tick` would act even without a new delivery —
+    /// the active-set drive loop keeps such nodes scheduled. The default
+    /// (false) is correct for machines whose ticks are no-ops absent new
+    /// input; machines holding deferred work must override it.
+    fn wants_tick(&self) -> bool {
+        false
+    }
 }
 
-/// Run machines to quiescence: tick all nodes, advance one synchronous
-/// round, deliver. Terminates when a round moves no messages — by then
-/// no machine has pending sends (ticks already ran) and the simulator is
+/// Scheduling strategy for [`drive_with_mode`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DriveMode {
+    /// Event-driven: after the initialization round, a node is ticked
+    /// only when the last round delivered to it or its machine signals
+    /// [`NodeMachine::wants_tick`]. Per-round scheduling work is
+    /// O(active frontier), not O(n). The default.
+    #[default]
+    ActiveSet,
+    /// The dense reference loop: tick all `n` nodes every round and
+    /// scan all `n` inboxes. Semantically identical (skipped ticks are
+    /// no-ops); kept as the bit-identity oracle for the equivalence
+    /// suite.
+    Dense,
+}
+
+/// Scheduling-work meters reported by the drive loop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DriveStats {
+    /// Node ticks executed across the run (dense mode: `n × rounds`;
+    /// active-set mode: the sum of per-round frontier sizes).
+    pub node_ticks: u64,
+    /// Rounds the loop ran, including the final empty round that
+    /// detects quiescence.
+    pub rounds: u64,
+}
+
+/// Run machines to quiescence with the default [`DriveMode::ActiveSet`]
+/// scheduling: tick the scheduled nodes, advance one synchronous round,
+/// deliver. Terminates when a round moves no messages — by then no
+/// machine has pending sends (ticks already ran) and the simulator is
 /// drained.
-pub(crate) fn drive<M: NodeMachine>(net: &mut Network, nodes: &mut [M]) {
+pub(crate) fn drive<M: NodeMachine>(net: &mut Network, nodes: &mut [M]) -> DriveStats {
+    drive_with_mode(net, nodes, DriveMode::ActiveSet)
+}
+
+/// [`drive`] with an explicit scheduling mode.
+///
+/// Both modes produce bit-identical transcripts, comm totals, rounds
+/// and RNG draw orders: the first round ticks every node (first ticks
+/// double as initialization), and afterwards a tick can only act on
+/// state changed by `on_msg` — whose node was delivered to, and is
+/// therefore scheduled — or flagged via [`NodeMachine::wants_tick`].
+/// The active set is processed in ascending node id (debug-asserted),
+/// matching the dense loop's `0..n` scan order exactly.
+pub(crate) fn drive_with_mode<M: NodeMachine>(
+    net: &mut Network,
+    nodes: &mut [M],
+    mode: DriveMode,
+) -> DriveStats {
     let n = nodes.len();
     assert_eq!(net.n(), n, "one machine per node");
+    let mut stats = DriveStats::default();
+    let mut active: Vec<usize> = (0..n).collect();
     loop {
-        for v in 0..n {
+        debug_assert!(
+            active.windows(2).all(|w| w[0] < w[1]),
+            "active set must be ascending and deduplicated"
+        );
+        stats.node_ticks += active.len() as u64;
+        for &v in &active {
             let mut out = Outbox::default();
             nodes[v].tick(&mut out);
             for (to, p) in out.sends {
                 net.send(v, to, p);
             }
         }
+        stats.rounds += 1;
         if net.step() == 0 {
             break;
         }
-        for v in 0..n {
-            for (from, p) in net.recv_all(v) {
-                let mut out = Outbox::default();
-                nodes[v].on_msg(from, p, &mut out);
-                for (to, q) in out.sends {
-                    net.send(v, to, q);
+        match mode {
+            DriveMode::Dense => {
+                for v in 0..n {
+                    for (from, p) in net.recv_all(v) {
+                        let mut out = Outbox::default();
+                        nodes[v].on_msg(from, p, &mut out);
+                        for (to, q) in out.sends {
+                            net.send(v, to, q);
+                        }
+                    }
                 }
+                active = (0..n).collect();
+            }
+            DriveMode::ActiveSet => {
+                // The simulator's delivered set is already ascending
+                // and deduplicated — O(frontier), no O(n) scan.
+                let delivered: Vec<usize> = net.delivered_nodes().to_vec();
+                for &v in &delivered {
+                    for (from, p) in net.recv_all(v) {
+                        let mut out = Outbox::default();
+                        nodes[v].on_msg(from, p, &mut out);
+                        for (to, q) in out.sends {
+                            net.send(v, to, q);
+                        }
+                    }
+                }
+                // Next frontier: delivered nodes, plus any node ticked
+                // this round whose machine still holds deferred work.
+                let mut next = delivered;
+                next.extend(active.iter().copied().filter(|&v| nodes[v].wants_tick()));
+                next.sort_unstable();
+                next.dedup();
+                active = next;
             }
         }
     }
+    stats
 }
 
 // ---------------------------------------------------------------------
@@ -103,9 +192,12 @@ pub(crate) fn drive<M: NodeMachine>(net: &mut Network, nodes: &mut [M]) {
 // ---------------------------------------------------------------------
 
 /// Algorithm 3 flooding: originate payloads, forward each distinct key
-/// to every neighbor exactly once.
+/// to every neighbor exactly once. Holds the shared CSR graph, so its
+/// broadcasts read the zero-alloc neighbor slice instead of a per-node
+/// copy of the adjacency.
 pub(crate) struct FloodMachine {
-    neigh: Vec<usize>,
+    graph: Arc<Graph>,
+    id: usize,
     origin: Vec<Payload>,
     seen: HashSet<FloodKey>,
     /// Every payload this node ended up holding (its own included).
@@ -113,9 +205,10 @@ pub(crate) struct FloodMachine {
 }
 
 impl FloodMachine {
-    pub(crate) fn new(neigh: Vec<usize>, origin: Vec<Payload>) -> Self {
+    pub(crate) fn new(graph: Arc<Graph>, id: usize, origin: Vec<Payload>) -> Self {
         FloodMachine {
-            neigh,
+            graph,
+            id,
             origin,
             seen: HashSet::new(),
             held: Vec::new(),
@@ -128,7 +221,7 @@ impl NodeMachine for FloodMachine {
         for p in self.origin.drain(..) {
             let key = p.flood_key().expect("flooded payloads must have an origin");
             self.seen.insert(key);
-            out.broadcast(&self.neigh, &p);
+            out.broadcast(self.graph.neighbors(self.id), &p);
             self.held.push(p);
         }
     }
@@ -136,9 +229,13 @@ impl NodeMachine for FloodMachine {
     fn on_msg(&mut self, _from: usize, msg: Payload, out: &mut Outbox) {
         let key = msg.flood_key().expect("floodable");
         if self.seen.insert(key) {
-            out.broadcast(&self.neigh, &msg);
+            out.broadcast(self.graph.neighbors(self.id), &msg);
             self.held.push(msg);
         }
+    }
+
+    fn wants_tick(&self) -> bool {
+        !self.origin.is_empty()
     }
 }
 
@@ -183,6 +280,10 @@ impl NodeMachine for ConvergeMachine {
             self.relay.push(msg);
         }
     }
+
+    fn wants_tick(&self) -> bool {
+        !self.relay.is_empty()
+    }
 }
 
 /// Root-to-leaves broadcast: each tree edge carries the payload once.
@@ -219,6 +320,10 @@ impl NodeMachine for BroadcastMachine {
         for &c in &self.children {
             out.send(c, msg.clone());
         }
+    }
+
+    fn wants_tick(&self) -> bool {
+        self.origin.is_some()
     }
 }
 
@@ -269,18 +374,24 @@ impl NodeMachine for ZhangMachine {
         );
         self.pending_children -= 1;
     }
+
+    fn wants_tick(&self) -> bool {
+        !self.sent && self.pending_children == 0
+    }
 }
 
 // ---------------------------------------------------------------------
 // End-to-end pipeline machine (Algorithm 2 over either topology)
 // ---------------------------------------------------------------------
 
-/// How a pipeline node is wired into the topology.
+/// How a pipeline node is wired into the topology. Graph-flooding
+/// roles hold the shared CSR graph and read their neighbor slice
+/// through it — no per-node adjacency copies.
 pub(crate) enum PipeRole {
     /// General graph: flood everything to everyone.
     Graph {
-        /// Neighbor list.
-        neigh: Vec<usize>,
+        /// Shared topology (this node broadcasts to its CSR slice).
+        graph: Arc<Graph>,
     },
     /// Rooted spanning tree: converge up, broadcast down.
     Tree {
@@ -297,8 +408,8 @@ pub(crate) enum PipeRole {
     Overlay {
         /// Overlay parent (`None` at the overlay root).
         parent: Option<usize>,
-        /// *Graph* neighbor list (cost flood + reduced-set flood).
-        neigh: Vec<usize>,
+        /// Shared *graph* topology (cost flood + reduced-set flood).
+        graph: Arc<Graph>,
     },
 }
 
@@ -412,7 +523,7 @@ impl<'a> PipeMachine<'a> {
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn graph(
         id: usize,
-        neigh: Vec<usize>,
+        graph: Arc<Graph>,
         cost: Option<Payload>,
         pages: Vec<Payload>,
         n_nodes: usize,
@@ -423,7 +534,7 @@ impl<'a> PipeMachine<'a> {
         let has_cost = cost.is_some();
         PipeMachine {
             id,
-            role: PipeRole::Graph { neigh },
+            role: PipeRole::Graph { graph },
             cost,
             costs_seen: HashSet::new(),
             costs_expected: if has_cost { n_nodes } else { 0 },
@@ -523,7 +634,7 @@ impl<'a> PipeMachine<'a> {
     pub(crate) fn overlay(
         id: usize,
         parent: Option<usize>,
-        neigh: Vec<usize>,
+        graph: Arc<Graph>,
         cost: Option<Payload>,
         pages: Vec<Payload>,
         n_nodes: usize,
@@ -536,7 +647,7 @@ impl<'a> PipeMachine<'a> {
         let reduce_relay = parent.is_some();
         PipeMachine {
             id,
-            role: PipeRole::Overlay { parent, neigh },
+            role: PipeRole::Overlay { parent, graph },
             cost,
             costs_seen: HashSet::new(),
             costs_expected: if has_cost { n_nodes } else { 0 },
@@ -601,10 +712,10 @@ impl<'a> PipeMachine<'a> {
     fn launch(&mut self, out: &mut Outbox) {
         self.launched = true;
         let pages = std::mem::take(&mut self.pages);
-        if let PipeRole::Graph { neigh } = &self.role {
+        if let PipeRole::Graph { graph } = &self.role {
             for p in pages {
                 self.pages_seen.insert(p.flood_key().expect("page key"));
-                out.broadcast(neigh, &p);
+                out.broadcast(graph.neighbors(self.id), &p);
                 fold_page(&mut self.fold, &mut self.pages_folded, &p);
             }
         } else if self.fold.is_some() {
@@ -680,7 +791,7 @@ impl<'a> PipeMachine<'a> {
                         out.send(c, payload.clone());
                     }
                 }
-                PipeRole::Overlay { neigh, .. } => {
+                PipeRole::Overlay { graph, .. } => {
                     // Flood ONLY the reduced root set + the centers back
                     // over the graph edges — the full stream never
                     // floods. Seeding `pages_seen` keeps echoes from
@@ -691,10 +802,13 @@ impl<'a> PipeMachine<'a> {
                     self.bcast_pages_got = pages.len();
                     for p in &pages {
                         self.pages_seen.insert(p.flood_key().expect("page key"));
-                        out.broadcast(neigh, p);
+                        out.broadcast(graph.neighbors(self.id), p);
                     }
                     self.centers_got = true;
-                    out.broadcast(neigh, &Payload::Centers(Arc::new(sol.centers.clone())));
+                    out.broadcast(
+                        graph.neighbors(self.id),
+                        &Payload::Centers(Arc::new(sol.centers.clone())),
+                    );
                 }
                 PipeRole::Graph { .. } => {}
             }
@@ -737,9 +851,9 @@ impl NodeMachine for PipeMachine<'_> {
         // First tick: emit the own cost scalar.
         if let Some(c) = self.cost.take() {
             match &self.role {
-                PipeRole::Graph { neigh } | PipeRole::Overlay { neigh, .. } => {
+                PipeRole::Graph { graph } | PipeRole::Overlay { graph, .. } => {
                     self.costs_seen.insert(c.flood_key().expect("cost key"));
-                    out.broadcast(neigh, &c);
+                    out.broadcast(graph.neighbors(self.id), &c);
                 }
                 PipeRole::Tree { parent, .. } => {
                     if parent.is_none() {
@@ -787,16 +901,16 @@ impl NodeMachine for PipeMachine<'_> {
 
     fn on_msg(&mut self, _from: usize, msg: Payload, out: &mut Outbox) {
         match (&self.role, msg) {
-            (PipeRole::Graph { neigh }, msg @ Payload::LocalCost { .. }) => {
+            (PipeRole::Graph { graph }, msg @ Payload::LocalCost { .. }) => {
                 let key = msg.flood_key().expect("cost key");
                 if self.costs_seen.insert(key) {
-                    out.broadcast(neigh, &msg);
+                    out.broadcast(graph.neighbors(self.id), &msg);
                 }
             }
-            (PipeRole::Graph { neigh }, msg @ Payload::PortionPage { .. }) => {
+            (PipeRole::Graph { graph }, msg @ Payload::PortionPage { .. }) => {
                 let key = msg.flood_key().expect("page key");
                 if self.pages_seen.insert(key) {
-                    out.broadcast(neigh, &msg);
+                    out.broadcast(graph.neighbors(self.id), &msg);
                     fold_page(&mut self.fold, &mut self.pages_folded, &msg);
                 }
             }
@@ -829,13 +943,13 @@ impl NodeMachine for PipeMachine<'_> {
                     out.send(c, msg.clone());
                 }
             }
-            (PipeRole::Overlay { neigh, .. }, msg @ Payload::LocalCost { .. }) => {
+            (PipeRole::Overlay { graph, .. }, msg @ Payload::LocalCost { .. }) => {
                 let key = msg.flood_key().expect("cost key");
                 if self.costs_seen.insert(key) {
-                    out.broadcast(neigh, &msg);
+                    out.broadcast(graph.neighbors(self.id), &msg);
                 }
             }
-            (PipeRole::Overlay { neigh, .. }, msg @ Payload::PortionPage { .. }) => {
+            (PipeRole::Overlay { graph, .. }, msg @ Payload::PortionPage { .. }) => {
                 if !self.done {
                     // Converge phase: an overlay child's reduced stream.
                     // (The root completes only after every node's subtree
@@ -850,20 +964,34 @@ impl NodeMachine for PipeMachine<'_> {
                             self.bcast_pages_total = *pages as usize;
                         }
                         self.bcast_pages_got += 1;
-                        out.broadcast(neigh, &msg);
+                        out.broadcast(graph.neighbors(self.id), &msg);
                     }
                 }
             }
-            (PipeRole::Overlay { neigh, .. }, msg @ Payload::Centers(_)) => {
+            (PipeRole::Overlay { graph, .. }, msg @ Payload::Centers(_)) => {
                 // Single in-flight payload: a boolean is its flood dedup.
                 if !self.centers_got {
                     self.centers_got = true;
-                    out.broadcast(neigh, &msg);
+                    out.broadcast(graph.neighbors(self.id), &msg);
                 }
             }
             (_, other) => unreachable!("pipeline: unexpected payload {other:?}"),
         }
         self.bump_peak();
+    }
+
+    fn wants_tick(&self) -> bool {
+        // Mirrors every action `tick` can take without a new delivery:
+        // cost emission, cost-phase completion, page launch, collection
+        // completion, relay drain. Anything else only becomes actionable
+        // through `on_msg`, after which the node is scheduled anyway.
+        self.cost.is_some()
+            || !self.relay_up.is_empty()
+            || (!self.ready
+                && self.costs_expected > 0
+                && self.costs_seen.len() == self.costs_expected)
+            || (self.ready && !self.launched)
+            || (self.launched && !self.done && self.collection_complete())
     }
 }
 
@@ -881,20 +1009,23 @@ mod tests {
         }
         let mut net = Network::new(generators::path(3));
         let mut nodes = vec![Quiet, Quiet, Quiet];
-        drive(&mut net, &mut nodes);
+        let stats = drive(&mut net, &mut nodes);
         assert_eq!(net.cost_points(), 0);
         assert_eq!(net.round(), 1, "one empty round detects quiescence");
+        assert_eq!(stats, DriveStats { node_ticks: 3, rounds: 1 });
     }
 
     #[test]
     fn flood_machines_deliver_and_meter_like_algorithm_3() {
         let g = generators::grid(3, 3);
         let (n, m) = (g.n(), g.m());
-        let mut net = Network::new(g.clone());
+        let mut net = Network::new(g);
+        let shared = net.graph_shared();
         let mut nodes: Vec<FloodMachine> = (0..n)
             .map(|i| {
                 FloodMachine::new(
-                    g.neighbors(i).to_vec(),
+                    Arc::clone(&shared),
+                    i,
                     vec![Payload::LocalCost {
                         site: i,
                         cost: i as f64,
@@ -902,11 +1033,14 @@ mod tests {
                 )
             })
             .collect();
-        drive(&mut net, &mut nodes);
+        let stats = drive(&mut net, &mut nodes);
         for node in &nodes {
             assert_eq!(node.held.len(), n);
         }
         assert_eq!(net.cost_points(), 2 * m * n);
+        // The active-set loop never schedules more work than dense
+        // (n × rounds) would.
+        assert!(stats.node_ticks <= (n as u64) * stats.rounds);
     }
 
     #[test]

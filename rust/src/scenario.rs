@@ -15,6 +15,7 @@
 //! | channel    | page size + per-directed-edge [`LinkModel`] capacities (uniform / per-edge / degraded subsets) | [`Scenario::channel`], [`Scenario::page_points`], [`Scenario::links`] |
 //! | sketch     | exact (bit-compatible) / merge-and-reduce (bounded memory, error-accounted) | [`Scenario::sketch`] |
 //! | exec       | sequential / parallel per-site workers            | [`Scenario::exec`], [`Scenario::threads`] |
+//! | drive      | active-set scheduling (default) / dense every-node re-scan | [`Scenario::drive_mode`] |
 //! | seed       | the run RNG for [`Scenario::run`]                 | [`Scenario::seed`] |
 //!
 //! The five classic entry points (`distributed`, `distributed-tree`,
@@ -56,7 +57,7 @@ use crate::exec::{map_sites, ExecPolicy};
 use crate::network::{ChannelConfig, LinkModel};
 use crate::points::WeightedSet;
 use crate::protocol::{run_composed, stream_exchange};
-pub use crate::protocol::{RunResult, Topology};
+pub use crate::protocol::{DriveMode, RunResult, Topology};
 use crate::rng::Pcg64;
 use crate::sketch::{SketchMode, SketchPlan};
 use crate::topology::{Graph, SpanningTree};
@@ -339,6 +340,7 @@ pub struct Scenario {
     channel: ChannelConfig,
     sketch: SketchPlan,
     exec: ExecPolicy,
+    drive: DriveMode,
     seed: u64,
 }
 
@@ -351,6 +353,7 @@ impl Scenario {
             channel: ChannelConfig::default(),
             sketch: SketchPlan::exact(),
             exec: ExecPolicy::Sequential,
+            drive: DriveMode::ActiveSet,
             seed: 0,
         }
     }
@@ -422,6 +425,17 @@ impl Scenario {
     pub fn threads(self, threads: usize) -> Scenario {
         let exec = ExecPolicy::from_threads(threads);
         self.exec(exec)
+    }
+
+    /// Drive-loop scheduling mode of the wire phase.
+    /// [`DriveMode::ActiveSet`] (the default) only ticks nodes on the
+    /// message frontier; [`DriveMode::Dense`] re-scans every node every
+    /// round — the O(n·rounds) reference the equivalence suite checks
+    /// the active-set scheduler against. Results are bit-identical
+    /// either way; only the `sched_ticks` meter differs.
+    pub fn drive_mode(mut self, mode: DriveMode) -> Scenario {
+        self.drive = mode;
+        self
     }
 
     /// RNG seed used by [`Scenario::run`].
@@ -552,6 +566,7 @@ impl Scenario {
                 label,
                 &self.channel,
                 &self.sketch,
+                self.drive,
                 backend,
                 rng,
             ),
@@ -570,6 +585,7 @@ impl Scenario {
                     algo.objective(),
                     algo.label(true),
                     &self.channel,
+                    self.drive,
                     backend,
                     rng,
                 )

@@ -136,15 +136,16 @@ impl SpanningTree {
         order
     }
 
-    /// The tree's edges as a [`Graph`].
+    /// The tree's edges as a [`Graph`] (streamed through a
+    /// [`GraphBuilder`](super::GraphBuilder) — O(n), no splicing).
     pub fn as_graph(&self) -> Graph {
-        let mut g = Graph::empty(self.n());
+        let mut b = super::GraphBuilder::with_capacity(self.n(), self.n().saturating_sub(1));
         for v in 0..self.n() {
             if v != self.root {
-                g.add_edge(v, self.parent[v]);
+                b.add_edge(v, self.parent[v]);
             }
         }
-        g
+        b.build()
     }
 }
 

@@ -1,23 +1,55 @@
 //! Graph generators for the paper's evaluation topologies (§5):
 //! Erdős–Rényi `G(n, p)`, 2-D grids, Barabási–Albert preferential
-//! attachment, plus the star / path / complete graphs used by tests and
-//! the communication-scaling benches.
+//! attachment, a Chung–Lu power-law/hub generator for the web-scale
+//! topology axis, plus the star / path / complete graphs used by tests
+//! and the communication-scaling benches.
+//!
+//! The random generators are O(n + m): Erdős–Rényi skips over absent
+//! edges geometrically (Batagelj–Brandes) instead of flipping all
+//! `n(n-1)/2` coins, and the power-law generator applies the same
+//! skipping per weight class (Miller–Hagberg). Everything streams into
+//! a [`GraphBuilder`], so no Vec-of-Vec adjacency is ever materialized.
 
-use super::{connected, Graph};
+use super::{connected, Graph, GraphBuilder};
 use crate::rng::Pcg64;
+use std::collections::VecDeque;
 
 /// Erdős–Rényi `G(n, p)`: each of the `n(n-1)/2` potential edges included
 /// independently with probability `p`. The paper uses `p = 0.3`.
+///
+/// Runs in O(n + m) by drawing geometric skip lengths over the
+/// lexicographic pair sequence (Batagelj–Brandes): after each present
+/// edge, `floor(ln(1-r) / ln(1-p))` absent pairs are jumped in one
+/// draw.
 pub fn erdos_renyi(rng: &mut Pcg64, n: usize, p: f64) -> Graph {
-    let mut g = Graph::empty(n);
-    for u in 0..n {
-        for v in (u + 1)..n {
-            if rng.uniform() < p {
-                g.add_edge(u, v);
-            }
+    if p <= 0.0 || n < 2 {
+        return Graph::empty(n);
+    }
+    if p >= 1.0 {
+        return complete(n);
+    }
+    let mut b = GraphBuilder::new(n);
+    let log_q = (1.0 - p).ln();
+    // Walk pairs (w, v) with w < v in lexicographic (v, w) order.
+    let mut v = 1usize;
+    let mut w = 0usize;
+    let mut first = true;
+    while v < n {
+        let r = rng.uniform();
+        // `1 - r` is in (0, 1], so the skip is finite and >= 0.
+        let skip = ((1.0 - r).ln() / log_q) as usize;
+        let jump = if first { skip } else { skip + 1 };
+        first = false;
+        w += jump;
+        while v < n && w >= v {
+            w -= v;
+            v += 1;
+        }
+        if v < n {
+            b.add_edge(w, v);
         }
     }
-    g
+    b.build()
 }
 
 /// Erdős–Rényi conditioned on connectivity: resample until connected
@@ -56,19 +88,19 @@ pub fn erdos_renyi_connected(rng: &mut Pcg64, n: usize, p: f64) -> Graph {
 /// has index `r * cols + c`. Diameter is `rows + cols - 2` — the paper's
 /// large-diameter motivating case (`Omega(sqrt(n))`).
 pub fn grid(rows: usize, cols: usize) -> Graph {
-    let mut g = Graph::empty(rows * cols);
+    let mut b = GraphBuilder::with_capacity(rows * cols, 2 * rows * cols);
     for r in 0..rows {
         for c in 0..cols {
             let u = r * cols + c;
             if c + 1 < cols {
-                g.add_edge(u, u + 1);
+                b.add_edge(u, u + 1);
             }
             if r + 1 < rows {
-                g.add_edge(u, u + cols);
+                b.add_edge(u, u + cols);
             }
         }
     }
-    g
+    b.build()
 }
 
 /// Barabási–Albert preferential attachment: start from a clique on
@@ -78,14 +110,14 @@ pub fn grid(rows: usize, cols: usize) -> Graph {
 /// partition.
 pub fn preferential_attachment(rng: &mut Pcg64, n: usize, m_attach: usize) -> Graph {
     assert!(m_attach >= 1 && n > m_attach, "need n > m_attach >= 1");
-    let mut g = Graph::empty(n);
+    let mut b = GraphBuilder::with_capacity(n, n * m_attach);
     // Repeated-endpoint list: sampling uniformly from it is sampling
     // proportional to degree.
     let mut endpoints: Vec<usize> = Vec::new();
     let seed = m_attach + 1;
     for u in 0..seed {
         for v in (u + 1)..seed {
-            g.add_edge(u, v);
+            b.add_edge(u, v);
             endpoints.push(u);
             endpoints.push(v);
         }
@@ -99,54 +131,166 @@ pub fn preferential_attachment(rng: &mut Pcg64, n: usize, m_attach: usize) -> Gr
             }
         }
         for &t in &targets {
-            g.add_edge(u, t);
+            b.add_edge(u, t);
             endpoints.push(u);
             endpoints.push(t);
         }
     }
-    g
+    b.build()
+}
+
+/// Chung–Lu power-law graph: node `i` gets expected-degree weight
+/// `w_i ∝ (i + 1)^(-1/(gamma - 1))` scaled so the average degree is
+/// `avg_deg`, and edge `(u, v)` appears independently with probability
+/// `min(1, w_u w_v / Σw)`. Low-index nodes become hubs; the degree
+/// tail follows `P(deg ≥ d) ~ d^(1 - gamma)`.
+///
+/// O(n + m) via the Miller–Hagberg skipping construction: weights are
+/// sorted descending (they are, by construction), so for each `u` the
+/// candidate probability is non-increasing in `v` and absent edges can
+/// be jumped geometrically at the current probability ceiling, then
+/// accepted with ratio `q / p`.
+pub fn power_law(rng: &mut Pcg64, n: usize, avg_deg: f64, gamma: f64) -> Graph {
+    assert!(gamma > 1.0, "need gamma > 1, got {gamma}");
+    assert!(avg_deg >= 0.0, "need avg_deg >= 0, got {avg_deg}");
+    if n < 2 || avg_deg == 0.0 {
+        return Graph::empty(n);
+    }
+    let alpha = 1.0 / (gamma - 1.0);
+    let mut w: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    let total = n as f64 * avg_deg;
+    let sum: f64 = w.iter().sum();
+    for x in &mut w {
+        *x *= total / sum;
+    }
+    let mut b = GraphBuilder::with_capacity(n, (total / 2.0) as usize + n);
+    for u in 0..n - 1 {
+        let mut v = u + 1;
+        let mut p = (w[u] * w[v] / total).min(1.0);
+        while v < n && p > 0.0 {
+            if p < 1.0 {
+                // Geometric skip at the ceiling probability `p`; the
+                // `as usize` saturates if `r` rounds to 0.
+                let r = rng.uniform();
+                let skip = (r.max(f64::MIN_POSITIVE).ln() / (1.0 - p).ln()) as usize;
+                v += skip;
+            }
+            if v >= n {
+                break;
+            }
+            let q = (w[u] * w[v] / total).min(1.0);
+            // Accept with q/p: corrects the skip's ceiling down to the
+            // true (smaller) probability at this v.
+            if rng.uniform() < q / p {
+                b.add_edge(u, v);
+            }
+            p = q;
+            v += 1;
+        }
+    }
+    b.build()
+}
+
+/// [`power_law`] stitched connected: every component outside the
+/// largest is attached to the highest-degree hub of the largest
+/// component by one extra edge from the component's minimum-id node.
+/// Deterministic given the draw, O(n + m), and adds at most
+/// `components - 1` edges, so the degree distribution is preserved up
+/// to the hub.
+pub fn power_law_connected(rng: &mut Pcg64, n: usize, avg_deg: f64, gamma: f64) -> Graph {
+    let g = power_law(rng, n, avg_deg, gamma);
+    if n == 0 || connected(&g) {
+        return g;
+    }
+    // Label components; reps[c] is each component's minimum node id
+    // (the first one visited, since sources scan ascending).
+    let mut comp = vec![usize::MAX; n];
+    let mut sizes: Vec<usize> = Vec::new();
+    let mut reps: Vec<usize> = Vec::new();
+    let mut queue = VecDeque::new();
+    for s in 0..n {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        let c = sizes.len();
+        comp[s] = c;
+        reps.push(s);
+        sizes.push(0);
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            sizes[c] += 1;
+            for &v in g.neighbors(u) {
+                if comp[v] == usize::MAX {
+                    comp[v] = c;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    let giant = sizes
+        .iter()
+        .enumerate()
+        .max_by_key(|&(c, &size)| (size, std::cmp::Reverse(c)))
+        .map(|(c, _)| c)
+        .unwrap();
+    let mut hub = reps[giant];
+    for v in 0..n {
+        if comp[v] == giant && g.degree(v) > g.degree(hub) {
+            hub = v;
+        }
+    }
+    let mut b = GraphBuilder::with_capacity(n, g.m() + sizes.len());
+    for (u, v) in g.edges_iter() {
+        b.add_edge(u, v);
+    }
+    for (c, &rep) in reps.iter().enumerate() {
+        if c != giant {
+            b.add_edge(rep, hub);
+        }
+    }
+    b.build()
 }
 
 /// Star graph: node 0 is the hub (the "central coordinator" special case).
 pub fn star(n: usize) -> Graph {
-    let mut g = Graph::empty(n);
+    let mut b = GraphBuilder::with_capacity(n, n.saturating_sub(1));
     for v in 1..n {
-        g.add_edge(0, v);
+        b.add_edge(0, v);
     }
-    g
+    b.build()
 }
 
 /// Path graph `0 - 1 - ... - n-1` (worst-case diameter).
 pub fn path(n: usize) -> Graph {
-    let mut g = Graph::empty(n);
+    let mut b = GraphBuilder::with_capacity(n, n.saturating_sub(1));
     for v in 1..n {
-        g.add_edge(v - 1, v);
+        b.add_edge(v - 1, v);
     }
-    g
+    b.build()
 }
 
 /// Complete graph `K_n`.
 pub fn complete(n: usize) -> Graph {
-    let mut g = Graph::empty(n);
+    let mut b = GraphBuilder::with_capacity(n, n * n.saturating_sub(1) / 2);
     for u in 0..n {
         for v in (u + 1)..n {
-            g.add_edge(u, v);
+            b.add_edge(u, v);
         }
     }
-    g
+    b.build()
 }
 
 /// Uniform random labelled tree via a Prüfer sequence (used by property
 /// tests to exercise arbitrary tree shapes).
 pub fn random_tree(rng: &mut Pcg64, n: usize) -> Graph {
     assert!(n >= 1);
-    let mut g = Graph::empty(n);
     if n == 1 {
-        return g;
+        return Graph::empty(1);
     }
+    let mut b = GraphBuilder::with_capacity(n, n - 1);
     if n == 2 {
-        g.add_edge(0, 1);
-        return g;
+        b.add_edge(0, 1);
+        return b.build();
     }
     let prufer: Vec<usize> = (0..n - 2).map(|_| rng.below(n)).collect();
     let mut degree = vec![1usize; n];
@@ -159,16 +303,16 @@ pub fn random_tree(rng: &mut Pcg64, n: usize) -> Graph {
         .collect();
     for &p in &prufer {
         let std::cmp::Reverse(leaf) = leaves.pop().unwrap();
-        g.add_edge(leaf, p);
+        b.add_edge(leaf, p);
         degree[p] -= 1;
         if degree[p] == 1 {
             leaves.push(std::cmp::Reverse(p));
         }
     }
     let std::cmp::Reverse(a) = leaves.pop().unwrap();
-    let std::cmp::Reverse(b) = leaves.pop().unwrap();
-    g.add_edge(a, b);
-    g
+    let std::cmp::Reverse(b2) = leaves.pop().unwrap();
+    b.add_edge(a, b2);
+    b.build()
 }
 
 #[cfg(test)]
@@ -183,6 +327,33 @@ mod tests {
         let g = erdos_renyi(&mut rng, n, 0.3);
         let expect = 0.3 * (n * (n - 1) / 2) as f64;
         assert!((g.m() as f64 - expect).abs() < 0.2 * expect, "m={}", g.m());
+    }
+
+    #[test]
+    fn er_degenerate_probabilities() {
+        let mut rng = Pcg64::seed_from(5);
+        assert_eq!(erdos_renyi(&mut rng, 20, 0.0).m(), 0);
+        assert_eq!(erdos_renyi(&mut rng, 20, -0.5).m(), 0);
+        let g = erdos_renyi(&mut rng, 20, 1.0);
+        assert_eq!(g.m(), 20 * 19 / 2);
+    }
+
+    #[test]
+    fn er_is_linear_in_output_on_sparse_large_n() {
+        // The old generator flipped all n(n-1)/2 coins; at n = 20_000
+        // that is 2·10^8 draws. The skipping form draws O(m) times —
+        // this finishing quickly (and the count matching expectation)
+        // is the O(n + m) pin.
+        let mut rng = Pcg64::seed_from(6);
+        let n = 20_000usize;
+        let p = 1e-4;
+        let g = erdos_renyi(&mut rng, n, p);
+        let expect = p * (n as f64) * ((n - 1) as f64) / 2.0;
+        assert!(
+            (g.m() as f64 - expect).abs() < 0.25 * expect,
+            "m={} expect~{expect}",
+            g.m()
+        );
     }
 
     #[test]
@@ -228,6 +399,40 @@ mod tests {
         // Heavy tail: max degree well above m_attach.
         let max_deg = (0..100).map(|v| g.degree(v)).max().unwrap();
         assert!(max_deg >= 8, "max degree {max_deg}");
+    }
+
+    #[test]
+    fn power_law_degree_scale_and_tail() {
+        let mut rng = Pcg64::seed_from(8);
+        let n = 2_000usize;
+        let g = power_law(&mut rng, n, 8.0, 2.5);
+        // Expected degree sum is n·avg_deg minus the min(1, ·) clipping
+        // on hub-hub pairs — allow a generous band.
+        let avg = 2.0 * g.m() as f64 / n as f64;
+        assert!((4.0..=9.0).contains(&avg), "avg degree {avg}");
+        // Node 0 is the heaviest hub; its degree must dwarf the mean.
+        assert!(
+            g.degree(0) as f64 > 5.0 * avg,
+            "hub degree {} vs avg {avg}",
+            g.degree(0)
+        );
+        // Deterministic given the seed.
+        let mut rng2 = Pcg64::seed_from(8);
+        assert_eq!(power_law(&mut rng2, n, 8.0, 2.5), g);
+    }
+
+    #[test]
+    fn power_law_connected_stitches_components() {
+        let mut rng = Pcg64::seed_from(9);
+        // Sparse enough that isolated nodes are all but certain.
+        let g = power_law_connected(&mut rng, 500, 3.0, 2.5);
+        assert!(connected(&g));
+        let mut rng2 = Pcg64::seed_from(9);
+        assert_eq!(power_law_connected(&mut rng2, 500, 3.0, 2.5), g);
+        // A denser operating point comes out connected as well.
+        let mut rng3 = Pcg64::seed_from(10);
+        let dense = power_law_connected(&mut rng3, 60, 12.0, 2.2);
+        assert!(connected(&dense));
     }
 
     #[test]

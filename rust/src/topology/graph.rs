@@ -1,11 +1,21 @@
-//! Undirected simple graph with adjacency lists.
+//! Undirected simple graph in CSR (compressed sparse row) form:
+//! a flat `offsets` array (length `n + 1`) into one flat, sorted
+//! neighbor array. Degree is O(1), a neighbor list is a zero-alloc
+//! slice, and every *directed* edge `(u, v)` has a dense integer id
+//! (its position in the neighbor array) that the network simulator
+//! uses to index per-edge FIFO queues.
 
-/// An undirected simple graph over nodes `0..n`.
+/// An undirected simple graph over nodes `0..n`, stored in CSR form.
 ///
-/// Invariants: no self-loops, no parallel edges, adjacency lists sorted.
+/// Invariants: no self-loops, no parallel edges, each node's neighbor
+/// slice sorted ascending. `neigh.len() == 2 * m` (each undirected edge
+/// appears once per direction).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Graph {
-    adj: Vec<Vec<usize>>,
+    /// `offsets[u]..offsets[u + 1]` indexes `neigh` for node `u`.
+    offsets: Vec<usize>,
+    /// Flat neighbor array, sorted within each node's slice.
+    neigh: Vec<usize>,
     m: usize,
 }
 
@@ -13,23 +23,24 @@ impl Graph {
     /// Empty graph on `n` nodes.
     pub fn empty(n: usize) -> Self {
         Graph {
-            adj: vec![Vec::new(); n],
+            offsets: vec![0; n + 1],
+            neigh: Vec::new(),
             m: 0,
         }
     }
 
     /// Build from an edge list (deduplicates, rejects self-loops).
     pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
-        let mut g = Graph::empty(n);
+        let mut b = GraphBuilder::new(n);
         for &(u, v) in edges {
-            g.add_edge(u, v);
+            b.add_edge(u, v);
         }
-        g
+        b.build()
     }
 
     /// Number of nodes.
     pub fn n(&self) -> usize {
-        self.adj.len()
+        self.offsets.len() - 1
     }
 
     /// Number of edges `m = |E|`.
@@ -38,43 +49,171 @@ impl Graph {
     }
 
     /// Add an undirected edge; no-op if it already exists.
+    ///
+    /// O(n + m) per call (CSR splice) — fine for the hand-built test
+    /// graphs; bulk construction goes through [`GraphBuilder`].
     pub fn add_edge(&mut self, u: usize, v: usize) {
         assert!(u != v, "self-loop {u}");
         assert!(u < self.n() && v < self.n(), "edge ({u},{v}) out of range");
-        if let Err(pos) = self.adj[u].binary_search(&v) {
-            self.adj[u].insert(pos, v);
-            let pos_v = self.adj[v].binary_search(&u).unwrap_err();
-            self.adj[v].insert(pos_v, u);
-            self.m += 1;
+        if self.has_edge(u, v) {
+            return;
+        }
+        self.insert_directed(u, v);
+        self.insert_directed(v, u);
+        self.m += 1;
+    }
+
+    /// Splice `v` into `u`'s sorted slice, shifting later offsets.
+    fn insert_directed(&mut self, u: usize, v: usize) {
+        let s = self.offsets[u];
+        let e = self.offsets[u + 1];
+        let pos = s + self.neigh[s..e].partition_point(|&w| w < v);
+        self.neigh.insert(pos, v);
+        for off in &mut self.offsets[u + 1..] {
+            *off += 1;
         }
     }
 
     /// True if `(u, v)` is an edge.
     pub fn has_edge(&self, u: usize, v: usize) -> bool {
-        self.adj[u].binary_search(&v).is_ok()
+        self.neighbors(u).binary_search(&v).is_ok()
     }
 
-    /// Neighbors of `u` (sorted).
+    /// Neighbors of `u` (sorted). A zero-alloc slice into the CSR array.
     pub fn neighbors(&self, u: usize) -> &[usize] {
-        &self.adj[u]
+        &self.neigh[self.offsets[u]..self.offsets[u + 1]]
     }
 
     /// Degree of `u`.
     pub fn degree(&self, u: usize) -> usize {
-        self.adj[u].len()
+        self.offsets[u + 1] - self.offsets[u]
     }
 
-    /// All edges as `(u, v)` with `u < v`.
+    /// Number of *directed* edges (`2m`) — one per CSR slot, so also
+    /// the exclusive upper bound on [`Graph::edge_id`].
+    pub fn directed_edges(&self) -> usize {
+        self.neigh.len()
+    }
+
+    /// Dense id of the directed edge `u -> v` (its slot in the CSR
+    /// neighbor array), or `None` when `(u, v)` is not an edge.
+    pub fn edge_id(&self, u: usize, v: usize) -> Option<usize> {
+        self.neighbors(u)
+            .binary_search(&v)
+            .ok()
+            .map(|pos| self.offsets[u] + pos)
+    }
+
+    /// Endpoints `(u, v)` of the directed edge id `eid` (inverse of
+    /// [`Graph::edge_id`]). O(log n) via binary search on the offsets.
+    pub fn edge_endpoints(&self, eid: usize) -> (usize, usize) {
+        assert!(eid < self.neigh.len(), "edge id {eid} out of range");
+        let u = self.offsets.partition_point(|&o| o <= eid) - 1;
+        (u, self.neigh[eid])
+    }
+
+    /// All edges as `(u, v)` with `u < v`, without allocating.
+    pub fn edges_iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.n()).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter_map(move |v| (u < v).then_some((u, v)))
+        })
+    }
+
+    /// All edges as `(u, v)` with `u < v` (allocating form of
+    /// [`Graph::edges_iter`]).
     pub fn edges(&self) -> Vec<(usize, usize)> {
-        let mut out = Vec::with_capacity(self.m);
-        for u in 0..self.n() {
-            for &v in &self.adj[u] {
-                if u < v {
-                    out.push((u, v));
+        self.edges_iter().collect()
+    }
+}
+
+/// Streaming CSR construction: buffer the edge list, then one
+/// counting-sort pass builds the final [`Graph`] in O(n + m) without
+/// ever materializing per-node `Vec`s.
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(usize, usize)>,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph on `n` nodes.
+    pub fn new(n: usize) -> Self {
+        GraphBuilder {
+            n,
+            edges: Vec::new(),
+        }
+    }
+
+    /// Builder with capacity for `m` edges.
+    pub fn with_capacity(n: usize, m: usize) -> Self {
+        GraphBuilder {
+            n,
+            edges: Vec::with_capacity(m),
+        }
+    }
+
+    /// Record an undirected edge. Duplicates are deduplicated at
+    /// [`GraphBuilder::build`]; self-loops and out-of-range endpoints
+    /// panic exactly like [`Graph::add_edge`].
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        assert!(u != v, "self-loop {u}");
+        assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range");
+        self.edges.push((u, v));
+    }
+
+    /// Number of edges recorded so far (duplicates included).
+    pub fn recorded(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Counting-sort the buffered edges into CSR form: degree count,
+    /// prefix-sum, scatter, per-slice sort + in-place dedup.
+    pub fn build(self) -> Graph {
+        let n = self.n;
+        let mut offsets = vec![0usize; n + 1];
+        for &(u, v) in &self.edges {
+            offsets[u + 1] += 1;
+            offsets[v + 1] += 1;
+        }
+        for u in 0..n {
+            offsets[u + 1] += offsets[u];
+        }
+        let mut neigh = vec![0usize; offsets[n]];
+        let mut cursor = offsets.clone();
+        for &(u, v) in &self.edges {
+            neigh[cursor[u]] = v;
+            cursor[u] += 1;
+            neigh[cursor[v]] = u;
+            cursor[v] += 1;
+        }
+        drop(self.edges);
+        // Sort each slice and compact duplicates in place; the write
+        // cursor never overtakes the read index, so this is safe.
+        let mut write = 0usize;
+        let mut compact = vec![0usize; n + 1];
+        for u in 0..n {
+            let (s, e) = (offsets[u], offsets[u + 1]);
+            neigh[s..e].sort_unstable();
+            let mut prev = usize::MAX;
+            for i in s..e {
+                let v = neigh[i];
+                if v != prev {
+                    neigh[write] = v;
+                    write += 1;
+                    prev = v;
                 }
             }
+            compact[u + 1] = write;
         }
-        out
+        neigh.truncate(write);
+        Graph {
+            offsets: compact,
+            neigh,
+            m: write / 2,
+        }
     }
 }
 
@@ -110,5 +249,49 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn rejects_out_of_range() {
         Graph::empty(2).add_edge(0, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn builder_rejects_self_loop() {
+        GraphBuilder::new(2).add_edge(0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn builder_rejects_out_of_range() {
+        GraphBuilder::new(2).add_edge(0, 2);
+    }
+
+    #[test]
+    fn builder_matches_incremental_construction() {
+        let edges = [(3usize, 1usize), (0, 2), (1, 0), (2, 3), (0, 1), (1, 3)];
+        let mut b = GraphBuilder::new(4);
+        let mut g = Graph::empty(4);
+        for &(u, v) in &edges {
+            b.add_edge(u, v);
+            g.add_edge(u, v);
+        }
+        assert_eq!(b.build(), g);
+    }
+
+    #[test]
+    fn edge_ids_roundtrip() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (1, 2), (2, 3)]);
+        assert_eq!(g.directed_edges(), 2 * g.m());
+        for eid in 0..g.directed_edges() {
+            let (u, v) = g.edge_endpoints(eid);
+            assert!(g.has_edge(u, v));
+            assert_eq!(g.edge_id(u, v), Some(eid));
+        }
+        assert_eq!(g.edge_id(0, 3), None);
+        assert_ne!(g.edge_id(0, 1), g.edge_id(1, 0));
+    }
+
+    #[test]
+    fn edges_iter_agrees_with_edges() {
+        let g = Graph::from_edges(5, &[(0, 4), (1, 2), (0, 1), (3, 4)]);
+        let collected: Vec<_> = g.edges_iter().collect();
+        assert_eq!(collected, g.edges());
     }
 }

@@ -9,7 +9,7 @@ mod generators_impl;
 mod graph;
 
 pub use algo::{bfs_distances, connected, diameter, SpanningTree};
-pub use graph::Graph;
+pub use graph::{Graph, GraphBuilder};
 
 /// Graph generators matching the paper's experimental setup.
 pub mod generators {

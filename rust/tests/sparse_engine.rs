@@ -1,0 +1,274 @@
+//! Equivalence suite for the sparse topology + event-driven engine:
+//!
+//! 1. CSR construction parity: `Graph::from_edges`, incremental
+//!    `add_edge` and the streaming `GraphBuilder` produce identical
+//!    graphs, with sorted zero-alloc neighbor slices and edge-id
+//!    roundtrips;
+//! 2. the active-set drive loop is *bit-identical* to the dense
+//!    reference loop — same transcripts, comm totals, rounds, drops and
+//!    held payloads — across topology families (Erdős–Rényi, grid,
+//!    power-law, random tree), link capacities and loss;
+//! 3. the same holds end-to-end through `Scenario` for every topology
+//!    axis (graph / drawn tree / overlay / composed Zhang) and thread
+//!    count, with only the `sched_ticks` meter allowed to differ;
+//! 4. the active-set scheduler never polls an idle inbox (the counter
+//!    contract behind its O(active frontier) round cost).
+
+use distclus::clustering::backend::RustBackend;
+use distclus::clustering::Objective;
+use distclus::coreset::zhang::ZhangConfig;
+use distclus::coreset::DistributedConfig;
+use distclus::network::{paginate, LinkModel, Network, Payload};
+use distclus::partition::Scheme;
+use distclus::prop_assert;
+use distclus::protocol::{flood_multi_mode, DriveMode, RunResult};
+use distclus::rng::Pcg64;
+use distclus::scenario::{CoresetAlgorithm, Distributed, Scenario, Zhang};
+use distclus::sketch::SketchPlan;
+use distclus::testutil::{for_all, mixture_sites, unit_portion};
+use distclus::topology::{generators, Graph, GraphBuilder};
+
+#[test]
+fn csr_construction_parity_across_entry_points() {
+    for_all(
+        40,
+        101,
+        |rng| {
+            let n = 2 + rng.below(40);
+            // Random edge list with duplicates and both orientations —
+            // every entry point must normalize to the same CSR.
+            let edges: Vec<(usize, usize)> = (0..3 * n)
+                .filter_map(|_| {
+                    let u = rng.below(n);
+                    let v = rng.below(n);
+                    (u != v).then_some((u, v))
+                })
+                .collect();
+            (n, edges)
+        },
+        |(n, edges)| {
+            let from = Graph::from_edges(*n, edges);
+            let mut incremental = Graph::empty(*n);
+            let mut builder = GraphBuilder::new(*n);
+            for &(u, v) in edges {
+                incremental.add_edge(u, v);
+                builder.add_edge(u, v);
+            }
+            prop_assert!(from == incremental, "from_edges != add_edge at n={n}");
+            prop_assert!(from == builder.build(), "from_edges != builder at n={n}");
+
+            let mut directed = 0usize;
+            for u in 0..*n {
+                let nb = from.neighbors(u);
+                prop_assert!(
+                    nb.windows(2).all(|w| w[0] < w[1]),
+                    "neighbors of {u} must be sorted and deduplicated: {nb:?}"
+                );
+                prop_assert!(from.degree(u) == nb.len(), "degree mismatch at {u}");
+                for &v in nb {
+                    let Some(eid) = from.edge_id(u, v) else {
+                        return Err(format!("present edge ({u},{v}) has no id"));
+                    };
+                    prop_assert!(
+                        from.edge_endpoints(eid) == (u, v),
+                        "edge id {eid} does not round-trip to ({u},{v})"
+                    );
+                    directed += 1;
+                }
+            }
+            prop_assert!(
+                directed == from.directed_edges() && directed == 2 * from.m(),
+                "directed-edge count mismatch: {directed} vs m={}",
+                from.m()
+            );
+            let listed: Vec<(usize, usize)> = from.edges_iter().collect();
+            prop_assert!(listed == from.edges(), "edges_iter disagrees with edges()");
+            prop_assert!(listed.len() == from.m(), "edges_iter length != m");
+            Ok(())
+        },
+    );
+}
+
+/// Per-node origin sets for the flood equivalence runs: every node
+/// floods its cost scalar; `paged` adds a small paged portion on top.
+fn flood_origins(rng: &mut Pcg64, n: usize, paged: bool) -> Vec<Vec<Payload>> {
+    (0..n)
+        .map(|i| {
+            let mut own = vec![Payload::LocalCost {
+                site: i,
+                cost: i as f64,
+            }];
+            if paged {
+                own.extend(paginate(i, unit_portion(rng, 5 + rng.below(20), 3), 8));
+            }
+            own
+        })
+        .collect()
+}
+
+#[test]
+fn flood_active_set_is_bit_identical_to_dense() {
+    for_all(
+        16,
+        201,
+        |rng| {
+            let graph = match rng.below(4) {
+                0 => generators::erdos_renyi_connected(rng, 8 + rng.below(16), 0.3),
+                1 => generators::grid(2 + rng.below(3), 3 + rng.below(4)),
+                2 => generators::power_law_connected(rng, 20 + rng.below(30), 4.0, 2.5),
+                _ => generators::random_tree(rng, 6 + rng.below(20)),
+            };
+            let cap = [0usize, 4][rng.below(2)];
+            let loss = if rng.below(3) == 0 { Some((0.3, 7u64)) } else { None };
+            let origins = flood_origins(rng, graph.n(), rng.below(2) == 0);
+            (graph, cap, loss, origins)
+        },
+        |(graph, cap, loss, origins)| {
+            let run = |mode: DriveMode| {
+                let mut net =
+                    Network::new(graph.clone()).with_link_model(LinkModel::capped(*cap));
+                if let Some((p, seed)) = loss {
+                    net = net.with_loss(*p, *seed);
+                }
+                let held = flood_multi_mode(&mut net, origins.clone(), mode);
+                (held, net)
+            };
+            let (held_a, net_a) = run(DriveMode::ActiveSet);
+            let (held_d, net_d) = run(DriveMode::Dense);
+            prop_assert!(held_a == held_d, "held payloads diverge");
+            prop_assert!(
+                net_a.transcript() == net_d.transcript(),
+                "transcripts diverge on n={} cap={cap} loss={loss:?}",
+                graph.n()
+            );
+            prop_assert!(net_a.cost_points() == net_d.cost_points(), "comm diverges");
+            prop_assert!(net_a.round() == net_d.round(), "rounds diverge");
+            prop_assert!(net_a.dropped() == net_d.dropped(), "drops diverge");
+            prop_assert!(
+                net_a.peak_points() == net_d.peak_points(),
+                "peaks diverge"
+            );
+            prop_assert!(
+                net_a.idle_recvs() == 0,
+                "active-set mode polled {} idle inboxes",
+                net_a.idle_recvs()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn scenario_drive_modes_are_bit_identical_for_every_topology_and_thread_count() {
+    let n = 8usize;
+    let locals = mixture_sites(301, 4_000, 4, 4, n, Scheme::Uniform, false);
+    let mut rng0 = Pcg64::seed_from(302);
+    let g = generators::erdos_renyi_connected(&mut rng0, n, 0.35);
+    let cfg = DistributedConfig {
+        t: 384,
+        k: 3,
+        ..Default::default()
+    };
+    let distributed = Distributed(cfg);
+    let zhang = Zhang(ZhangConfig {
+        t_node: 60,
+        k: 3,
+        objective: Objective::KMeans,
+    });
+    let cases: Vec<(&str, Scenario, &dyn CoresetAlgorithm)> = vec![
+        (
+            "graph",
+            Scenario::on_graph(g.clone())
+                .page_points(32)
+                .links(LinkModel::capped(48)),
+            &distributed,
+        ),
+        (
+            "tree",
+            Scenario::on_spanning_tree_of(g.clone()).page_points(32),
+            &distributed,
+        ),
+        (
+            "overlay",
+            Scenario::on_overlay_of(g.clone())
+                .page_points(32)
+                .sketch(SketchPlan::merge_reduce(128)),
+            &distributed,
+        ),
+        ("zhang", Scenario::on_spanning_tree_of(g.clone()), &zhang),
+    ];
+    let mut some_case_scheduled_strictly_less = false;
+    for (label, base, algo) in cases {
+        let dense: RunResult = base
+            .clone()
+            .drive_mode(DriveMode::Dense)
+            .seed(9)
+            .run(algo, &locals, &RustBackend)
+            .unwrap();
+        for threads in [1usize, 2, 8] {
+            let active = base
+                .clone()
+                .threads(threads)
+                .seed(9)
+                .run(algo, &locals, &RustBackend)
+                .unwrap();
+            assert_eq!(active.centers, dense.centers, "{label} threads={threads}");
+            assert_eq!(active.coreset.set, dense.coreset.set, "{label}");
+            assert_eq!(active.comm_points, dense.comm_points, "{label}");
+            assert_eq!(active.rounds, dense.rounds, "{label}");
+            assert_eq!(active.peak_points, dense.peak_points, "{label}");
+            assert_eq!(active.node_peaks, dense.node_peaks, "{label}");
+            // Error accounting must not depend on the scheduler.
+            for key in ["mr_error_ppm", "mr_reductions"] {
+                assert_eq!(
+                    active.meters.get(key),
+                    dense.meters.get(key),
+                    "{label}: {key}"
+                );
+            }
+            // The one sanctioned difference: scheduled work.
+            let (a, d) = (active.meters["sched_ticks"], dense.meters["sched_ticks"]);
+            assert!(a <= d, "{label}: active scheduled {a} > dense {d}");
+            some_case_scheduled_strictly_less |= a < d;
+        }
+    }
+    assert!(
+        some_case_scheduled_strictly_less,
+        "the active-set scheduler saved no work on any topology"
+    );
+}
+
+#[test]
+fn active_mode_never_polls_idle_inboxes() {
+    // One origin at node 0 of a long path: the frontier is one or two
+    // nodes wide while the dense loop re-scans all 64 inboxes per round.
+    let n = 64usize;
+    let g = generators::path(n);
+    let origins: Vec<Vec<Payload>> = (0..n)
+        .map(|i| {
+            if i == 0 {
+                vec![Payload::LocalCost { site: 0, cost: 1.0 }]
+            } else {
+                Vec::new()
+            }
+        })
+        .collect();
+    let run = |mode: DriveMode| {
+        let mut net = Network::new(g.clone()).without_transcript();
+        let held = flood_multi_mode(&mut net, origins.clone(), mode);
+        assert!(held.iter().all(|h| h.len() == 1), "payload must reach everyone");
+        (net.idle_recvs(), net.recv_drains(), net.round())
+    };
+    let (idle_active, drains_active, rounds_active) = run(DriveMode::ActiveSet);
+    let (idle_dense, drains_dense, rounds_dense) = run(DriveMode::Dense);
+    assert_eq!(rounds_active, rounds_dense, "schedulers must agree on rounds");
+    assert_eq!(
+        drains_active, drains_dense,
+        "both modes drain exactly the real deliveries"
+    );
+    assert_eq!(idle_active, 0, "active-set polled an idle inbox");
+    assert!(
+        idle_dense > 100,
+        "dense must have paid the idle scans this test contrasts ({idle_dense})"
+    );
+}
