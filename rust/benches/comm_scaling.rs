@@ -23,6 +23,7 @@ use distclus::cli::Args;
 use distclus::clustering::backend::RustBackend;
 use distclus::clustering::Objective;
 use distclus::coreset::{Coreset, DistributedConfig};
+use distclus::json::{build, Value};
 use distclus::metrics::Table;
 use distclus::network::{paginate, LinkModel, Network, Payload};
 use distclus::partition::Scheme;
@@ -98,9 +99,12 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let smoke = args.has("smoke");
     let huge = args.has("huge");
+    let json_out = args.get("json").map(str::to_string);
     // `cargo bench` appends `--bench` to every harness=false binary.
     let _ = args.has("bench");
     args.reject_unknown()?;
+    let mut json_flood: Vec<Value> = Vec::new();
+    let mut json_scale: Vec<Value> = Vec::new();
     let sizes: &[usize] = if smoke { &[16] } else { &[16, 36, 64, 100, 196] };
 
     let mut rng = Pcg64::seed_from(41);
@@ -143,6 +147,14 @@ fn main() -> anyhow::Result<()> {
 
             assert_eq!(flood_cost, 2 * g.m() * g.n(), "Thm 2 accounting");
             assert!(up_cost <= g.n() * tree.height().max(1), "Thm 3 bound");
+            json_flood.push(build::obj(vec![
+                ("topology", build::s(name)),
+                ("n", build::num(g.n() as f64)),
+                ("m", build::num(g.m() as f64)),
+                ("flood_points", build::num(flood_cost as f64)),
+                ("tree_up_points", build::num(up_cost as f64)),
+                ("bcast_points", build::num(bcast_cost as f64)),
+            ]));
             table.row(vec![
                 name.into(),
                 g.n().to_string(),
@@ -386,6 +398,14 @@ fn main() -> anyhow::Result<()> {
             dense_bill.to_string(),
             format!("{ratio:.3}"),
         ]);
+        json_scale.push(build::obj(vec![
+            ("n", build::num(n as f64)),
+            ("m", build::num(m as f64)),
+            ("rounds", build::num(run.rounds as f64)),
+            ("comm_points", build::num(run.comm_points as f64)),
+            ("sched_ticks", build::num(run.meters["sched_ticks"] as f64)),
+            ("sched_ratio", build::num(ratio)),
+        ]));
     }
     println!(
         "\n# large sparse topologies (power-law avg-deg 4, overlay-reduced, \
@@ -394,5 +414,15 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{}", scale_table.render());
     println!("\nall analytical bounds verified exactly (assertions passed)");
+    if let Some(path) = json_out {
+        let snapshot = build::obj(vec![
+            ("bench", build::s("comm_scaling")),
+            ("smoke", build::num(if smoke { 1.0 } else { 0.0 })),
+            ("flood", build::arr(json_flood)),
+            ("scale", build::arr(json_scale)),
+        ]);
+        std::fs::write(&path, snapshot.to_string())?;
+        eprintln!("wrote {path}");
+    }
     Ok(())
 }

@@ -213,7 +213,7 @@ fn main() -> anyhow::Result<()> {
             &cfg,
             &backend,
             &mut rng,
-            ExecPolicy::Parallel { threads },
+            ExecPolicy::parallel(threads),
         );
         let secs = sw.secs();
         let identical = if let Some(r) = &reference {

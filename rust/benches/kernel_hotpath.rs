@@ -1,68 +1,132 @@
 //! Kernel hot-path bench: assignment and weighted-Lloyd throughput of
 //! the pure-Rust backend vs the chunk-parallel backend (sequential vs
 //! parallel at several thread counts) vs the AOT Pallas/XLA backend
-//! (when artifacts are present), across the paper's dataset shapes.
-//! This is the §Perf driver for L3 (EXPERIMENTS.md §Perf).
+//! (when artifacts are present), across the paper's dataset shapes —
+//! plus a layout panel comparing the AoS scalar kernel against the SoA
+//! vectorized kernel with and without space-filling-curve point
+//! ordering (results are bit-identical across layouts; only throughput
+//! differs). This is the §Perf driver for L3 (EXPERIMENTS.md §Perf).
 //!
 //! Run with `cargo bench --bench kernel_hotpath` (`-- --smoke` for the
-//! CI bitrot check: one small shape, minimal reps).
+//! CI bitrot check: one small shape, minimal reps; `--layout NAME` to
+//! restrict the layout panel; `--json PATH` to emit a machine-readable
+//! `BENCH_kernel.json` snapshot for trajectory tracking).
 
 use distclus::cli::Args;
 use distclus::clustering::backend::{Backend, ParallelBackend, RustBackend};
+use distclus::clustering::layout::{KernelLayout, ALL_LAYOUTS};
+use distclus::json::{build, Value};
 use distclus::metrics::{time_reps, Summary, Table};
-use distclus::points::Dataset;
 use distclus::rng::Pcg64;
 use distclus::runtime::XlaBackend;
+use distclus::testutil::kernel_instance;
 use std::path::Path;
 
-fn instance(rng: &mut Pcg64, n: usize, d: usize, k: usize) -> (Dataset, Vec<f64>, Dataset) {
-    let data = distclus::data::synthetic::gaussian_mixture(rng, n, d, k);
-    let weights: Vec<f64> = (0..data.n()).map(|_| rng.uniform() + 0.1).collect();
-    let mut centers = Dataset::with_capacity(k, d);
-    for _ in 0..k {
-        let c: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-        centers.push(&c);
+/// One timed (backend, layout, threads, shape) cell, kept for the
+/// `--json` snapshot alongside the rendered tables.
+struct BenchCell {
+    backend: String,
+    layout: &'static str,
+    threads: usize,
+    n: usize,
+    d: usize,
+    k: usize,
+    assign_ms: f64,
+    ns_per_point: f64,
+    lloyd_ms: f64,
+    reps: usize,
+}
+
+impl BenchCell {
+    fn to_json(&self) -> Value {
+        build::obj(vec![
+            ("backend", build::s(self.backend.clone())),
+            ("layout", build::s(self.layout)),
+            ("threads", build::num(self.threads as f64)),
+            ("n", build::num(self.n as f64)),
+            ("d", build::num(self.d as f64)),
+            ("k", build::num(self.k as f64)),
+            ("assign_ms", build::num(self.assign_ms)),
+            ("ns_per_point", build::num(self.ns_per_point)),
+            ("lloyd_ms", build::num(self.lloyd_ms)),
+            ("reps", build::num(self.reps as f64)),
+        ])
     }
-    (data, weights, centers)
+}
+
+fn time_cell(
+    name: &str,
+    layout: KernelLayout,
+    threads: usize,
+    backend: &dyn Backend,
+    (n, d, k): (usize, usize, usize),
+) -> BenchCell {
+    // Seed per shape so every backend/layout times the same instance.
+    let mut rng = Pcg64::seed_from(3 ^ (n as u64) ^ ((d as u64) << 20) ^ ((k as u64) << 40));
+    let (points, weights, centers) = kernel_instance(&mut rng, n, d, k);
+    let reps = if n > 50_000 { 3 } else { 5 };
+    let t_assign = Summary::of(&time_reps(
+        || {
+            std::hint::black_box(backend.assign(&points, &weights, &centers));
+        },
+        reps,
+    ));
+    let t_lloyd = Summary::of(&time_reps(
+        || {
+            std::hint::black_box(backend.lloyd_step(&points, &weights, &centers));
+        },
+        reps,
+    ));
+    BenchCell {
+        backend: name.to_string(),
+        layout: layout.name(),
+        threads,
+        n,
+        d,
+        k,
+        assign_ms: t_assign.mean * 1e3,
+        ns_per_point: t_assign.mean * 1e9 / n as f64,
+        lloyd_ms: t_lloyd.mean * 1e3,
+        reps,
+    }
 }
 
 fn bench_backend(
     table: &mut Table,
+    cells: &mut Vec<BenchCell>,
     name: &str,
+    layout: KernelLayout,
+    threads: usize,
     backend: &dyn Backend,
     shapes: &[(usize, usize, usize)],
 ) {
-    let mut rng = Pcg64::seed_from(3);
-    for &(n, d, k) in shapes {
-        let (points, weights, centers) = instance(&mut rng, n, d, k);
-        let reps = if n > 50_000 { 3 } else { 5 };
-        let t_assign = Summary::of(&time_reps(
-            || {
-                std::hint::black_box(backend.assign(&points, &weights, &centers));
-            },
-            reps,
-        ));
-        let t_lloyd = Summary::of(&time_reps(
-            || {
-                std::hint::black_box(backend.lloyd_step(&points, &weights, &centers));
-            },
-            reps,
-        ));
-        let mpts = points.n() as f64 / 1e6;
+    for &shape in shapes {
+        let cell = time_cell(name, layout, threads, backend, shape);
+        let (n, d, k) = shape;
+        let mpts = n as f64 / 1e6;
         table.row(vec![
             name.into(),
             format!("{n}x{d} k={k}"),
-            format!("{:.2}", t_assign.mean * 1e3),
-            format!("{:.1}", mpts / t_assign.mean),
-            format!("{:.2}", t_lloyd.mean * 1e3),
-            format!("{:.1}", mpts / t_lloyd.mean),
+            format!("{:.2}", cell.assign_ms),
+            format!("{:.1}", mpts / (cell.assign_ms / 1e3)),
+            format!("{:.2}", cell.lloyd_ms),
+            format!("{:.1}", mpts / (cell.lloyd_ms / 1e3)),
         ]);
+        cells.push(cell);
     }
 }
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let smoke = args.has("smoke");
+    let layout_filter = match args.get("layout") {
+        None => None,
+        Some(l) => match KernelLayout::parse(l) {
+            Some(v) => Some(v),
+            None => anyhow::bail!("unknown layout '{l}' (aos|soa|soa-hilbert|soa-morton)"),
+        },
+    };
+    let json_out = args.get("json").map(str::to_string);
     // `cargo bench` appends `--bench` to every harness=false binary.
     let _ = args.has("bench");
     args.reject_unknown()?;
@@ -83,6 +147,7 @@ fn main() -> anyhow::Result<()> {
             (10_000, 16, 512),  // larger-k: centers ~32 KB at low d
         ]
     };
+    let mut cells: Vec<BenchCell> = Vec::new();
     let mut table = Table::new(&[
         "backend",
         "shape",
@@ -91,7 +156,15 @@ fn main() -> anyhow::Result<()> {
         "lloyd (ms)",
         "lloyd Mpts/s",
     ]);
-    bench_backend(&mut table, "rust", &RustBackend, &shapes);
+    bench_backend(
+        &mut table,
+        &mut cells,
+        "rust",
+        KernelLayout::Aos,
+        1,
+        &RustBackend,
+        &shapes,
+    );
     let hw = distclus::exec::available_threads();
     let mut thread_counts = vec![2usize];
     if hw > 2 {
@@ -99,13 +172,82 @@ fn main() -> anyhow::Result<()> {
     }
     for &threads in &thread_counts {
         let name = format!("parallel-{threads}");
-        bench_backend(&mut table, &name, &ParallelBackend::new(threads), &shapes);
+        bench_backend(
+            &mut table,
+            &mut cells,
+            &name,
+            KernelLayout::Aos,
+            threads,
+            &ParallelBackend::new(threads),
+            &shapes,
+        );
     }
     match XlaBackend::load(Path::new("artifacts")) {
-        Ok(xla) => bench_backend(&mut table, "xla", &xla, &shapes),
+        Ok(xla) => bench_backend(
+            &mut table,
+            &mut cells,
+            "xla",
+            KernelLayout::Aos,
+            1,
+            &xla,
+            &shapes,
+        ),
         Err(e) => eprintln!("xla backend unavailable ({e}); run `make artifacts`"),
     }
     println!("# kernel_hotpath (assignment / weighted-Lloyd throughput)\n");
     println!("{}", table.render());
+
+    // Layout panel: the same parallel kernel at one worker thread so
+    // the table isolates memory layout, not parallelism. The large-k
+    // shapes are where the ROADMAP's >=2x target is measured; the
+    // smoke shapes keep every layout code path building in CI.
+    let layout_shapes: Vec<(usize, usize, usize)> = if smoke {
+        vec![(2_000, 16, 10), (2_000, 32, 192)]
+    } else {
+        vec![(20_000, 32, 256), (10_000, 16, 512)]
+    };
+    let layouts: Vec<KernelLayout> = ALL_LAYOUTS
+        .into_iter()
+        .filter(|l| layout_filter.map_or(true, |f| f == *l))
+        .collect();
+    let mut lt = Table::new(&["layout", "shape", "assign (ms)", "ns/point", "vs aos"]);
+    for &shape in &layout_shapes {
+        let mut aos_ms: Option<f64> = None;
+        for &layout in &layouts {
+            let backend = ParallelBackend::new(1).layout(layout);
+            let cell = time_cell(backend.name(), layout, 1, &backend, shape);
+            if layout == KernelLayout::Aos {
+                aos_ms = Some(cell.assign_ms);
+            }
+            let speedup = match aos_ms {
+                Some(base) if cell.assign_ms > 0.0 => format!("{:.2}x", base / cell.assign_ms),
+                _ => "-".into(),
+            };
+            let (n, d, k) = shape;
+            lt.row(vec![
+                layout.name().into(),
+                format!("{n}x{d} k={k}"),
+                format!("{:.2}", cell.assign_ms),
+                format!("{:.0}", cell.ns_per_point),
+                speedup,
+            ]);
+            cells.push(cell);
+        }
+    }
+    println!("# kernel layouts (assign, 1 kernel thread)\n");
+    println!("{}", lt.render());
+
+    if let Some(path) = json_out {
+        let snapshot = build::obj(vec![
+            ("bench", build::s("kernel_hotpath")),
+            ("smoke", build::num(if smoke { 1.0 } else { 0.0 })),
+            (
+                "rows",
+                build::arr(cells.iter().map(BenchCell::to_json).collect()),
+            ),
+        ]);
+        std::fs::write(&path, snapshot.to_string())?;
+        eprintln!("wrote {path}");
+    }
     Ok(())
 }

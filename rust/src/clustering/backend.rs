@@ -9,6 +9,7 @@
 //! test-suite asserts they agree on random instances, and that the
 //! parallel backend is bit-identical across thread counts.
 
+use super::layout::{KernelLayout, SoaPlanes, LANES};
 use super::Objective;
 use crate::points::Dataset;
 
@@ -243,6 +244,172 @@ fn assign_range_blocked(
     out
 }
 
+/// Per-center-block Euclidean-norm intervals `[lo, hi]` (f64), the
+/// center side of the SoA kernel's tile-level pruning bound. Non-finite
+/// center norms are ignored: such a center never wins the strict `<`
+/// argmin anyway, so excluding it from the interval stays sound.
+fn center_block_bounds(centers: &Dataset, block: usize) -> (Vec<f64>, Vec<f64>) {
+    let k = centers.n();
+    let nb = k.div_ceil(block);
+    let mut lo = vec![f64::INFINITY; nb];
+    let mut hi = vec![0.0f64; nb];
+    for c in 0..k {
+        let nrm = centers
+            .row(c)
+            .iter()
+            .map(|&x| x as f64 * x as f64)
+            .sum::<f64>()
+            .sqrt();
+        let b = c / block;
+        if nrm < lo[b] {
+            lo[b] = nrm;
+        }
+        if nrm > hi[b] {
+            hi[b] = nrm;
+        }
+    }
+    (lo, hi)
+}
+
+/// Conservative relative slack on the pruning bound: a computed `f32`
+/// distance can round *below* the exact value by roughly `d * 2^-23`
+/// relative, so the norm-gap bound is shrunk before comparing against
+/// the tile's worst running best. Covers every `d` up to ~8000 dims.
+const PRUNE_SLACK: f64 = 0.998;
+
+/// True when no point in a tile with norm interval `[pmin, pmax]` can
+/// beat its running best against any center in the block interval
+/// `[clo, chi]`: by the reverse triangle inequality every such distance
+/// is at least `max(clo - pmax, pmin - chi, 0)`. Pruning only ever
+/// *skips* work — it never alters a computed value — so a false
+/// negative costs time, never correctness.
+#[inline]
+fn block_prunable(clo: f64, chi: f64, pmin: f64, pmax: f64, tile_best_max: f64) -> bool {
+    if !tile_best_max.is_finite() {
+        return false;
+    }
+    let gap = (clo - pmax).max(pmin - chi).max(0.0);
+    gap * gap * PRUNE_SLACK > tile_best_max
+}
+
+/// The SoA vectorized assignment kernel over (possibly curve-permuted)
+/// positions `start..end`: per-position winner index and winning `f32`
+/// distance. `start` must be a [`LANES`] multiple (the fixed `PAR_CHUNK`
+/// grid guarantees it); the plane padding makes a ragged final group
+/// safe to read, and its lanes are simply never written out.
+///
+/// Bit-identical to [`assign_range_blocked`]'s per-point math by
+/// construction: each of the 8 lanes replicates `dist2_early`'s exact
+/// summation tree — the 32-wide blocks with four stride-4 partial sums
+/// folded as `(s0+s1)+(s2+s3)`, then 8-wide blocks, then the scalar
+/// remainder — and scans centers in ascending index order with the same
+/// strict `<`, so argmin, tie-breaks and winning distances all match
+/// the scalar oracle exactly. (Early abandonment never changed those
+/// either: `f32` sums of non-negative terms are monotone, so a bailed
+/// candidate's full sum was `>= best` and could not win.) The per-point
+/// branch is replaced by per-tile center-block pruning via
+/// [`block_prunable`], keeping the inner loop branch-free.
+fn assign_range_soa(
+    soa: &SoaPlanes,
+    centers: &Dataset,
+    bounds: &(Vec<f64>, Vec<f64>),
+    start: usize,
+    end: usize,
+    block: usize,
+) -> (Vec<u32>, Vec<f32>) {
+    debug_assert_eq!(start % LANES, 0, "chunk grid must be lane-aligned");
+    let d = soa.d();
+    let k = centers.n();
+    let mut best = vec![f32::INFINITY; end - start];
+    let mut best_c = vec![0u32; end - start];
+    let mut t0 = start;
+    while t0 < end {
+        let t1 = (t0 + POINT_TILE).min(end);
+        let tile = t1 - t0;
+        let tb = &mut best[t0 - start..t1 - start];
+        let tc = &mut best_c[t0 - start..t1 - start];
+        let (pmin, pmax) = soa.norm_range(t0, t1);
+        let mut tile_best_max = f64::INFINITY;
+        let mut c0 = 0;
+        while c0 < k {
+            let c1 = (c0 + block).min(k);
+            let bi = c0 / block;
+            if block_prunable(bounds.0[bi], bounds.1[bi], pmin, pmax, tile_best_max) {
+                c0 = c1;
+                continue;
+            }
+            let mut g = 0;
+            while g < tile {
+                let i0 = t0 + g;
+                let lanes = LANES.min(tile - g);
+                for c in c0..c1 {
+                    let crow = centers.row(c);
+                    let mut acc = [0.0f32; LANES];
+                    let mut j = 0;
+                    while j + 32 <= d {
+                        let mut s = [[0.0f32; LANES]; 4];
+                        for l in (0..32).step_by(4) {
+                            for (q, sq) in s.iter_mut().enumerate() {
+                                let cv = crow[j + l + q];
+                                let seg = soa.group(j + l + q, i0);
+                                for (a, &x) in sq.iter_mut().zip(seg) {
+                                    let df = x - cv;
+                                    *a += df * df;
+                                }
+                            }
+                        }
+                        for (lane, a) in acc.iter_mut().enumerate() {
+                            *a += (s[0][lane] + s[1][lane]) + (s[2][lane] + s[3][lane]);
+                        }
+                        j += 32;
+                    }
+                    while j + 8 <= d {
+                        let mut blk = [0.0f32; LANES];
+                        for l in 0..8 {
+                            let cv = crow[j + l];
+                            let seg = soa.group(j + l, i0);
+                            for (a, &x) in blk.iter_mut().zip(seg) {
+                                let df = x - cv;
+                                *a += df * df;
+                            }
+                        }
+                        for (a, &b) in acc.iter_mut().zip(&blk) {
+                            *a += b;
+                        }
+                        j += 8;
+                    }
+                    for l in j..d {
+                        let cv = crow[l];
+                        let seg = soa.group(l, i0);
+                        for (a, &x) in acc.iter_mut().zip(seg) {
+                            let df = x - cv;
+                            *a += df * df;
+                        }
+                    }
+                    // Per-lane running bests, merged in ascending lane
+                    // order; each lane owns its output slot, so no
+                    // cross-lane reduction can reorder ties.
+                    for lane in 0..lanes {
+                        if acc[lane] < tb[g + lane] {
+                            tb[g + lane] = acc[lane];
+                            tc[g + lane] = c as u32;
+                        }
+                    }
+                }
+                g += LANES;
+            }
+            // The bound the *next* block must beat to matter for anyone.
+            tile_best_max = tb
+                .iter()
+                .map(|&b| b as f64)
+                .fold(f64::NEG_INFINITY, f64::max);
+            c0 = c1;
+        }
+        t0 = t1;
+    }
+    (best_c, best)
+}
+
 /// One weighted-Lloyd accumulation over points `start..end`: assignment
 /// plus per-center weighted sums/counts/cost for that range. Summing
 /// range results in range order reproduces the full-set accumulation.
@@ -296,19 +463,43 @@ impl Backend for RustBackend {
 /// we care about.
 const PAR_CHUNK: usize = 4096;
 
+/// Merge per-chunk Lloyd accumulators in chunk order — the one merge
+/// both the AoS and SoA parallel paths share, so their `f64` results
+/// are bit-identical to each other at every thread count.
+fn merge_lloyd_parts(parts: Vec<LloydStep>, k: usize, d: usize) -> LloydStep {
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0.0f64; k];
+    let mut cost = 0.0f64;
+    for p in parts {
+        for (acc, v) in sums.iter_mut().zip(&p.sums) {
+            *acc += v;
+        }
+        for (acc, v) in counts.iter_mut().zip(&p.counts) {
+            *acc += v;
+        }
+        cost += p.cost;
+    }
+    LloydStep { sums, counts, cost }
+}
+
 /// Multithreaded CPU backend: the [`RustBackend`] kernels executed over
-/// fixed-size point chunks by scoped worker threads.
+/// fixed-size point chunks by scoped worker threads, against a
+/// selectable point-memory layout (see [`KernelLayout`]).
 ///
 /// Guarantees:
-/// - `assign` is *bit-identical* to [`RustBackend`] (per-point work);
+/// - `assign` is *bit-identical* to [`RustBackend`] (per-point work)
+///   for **every** layout — the SoA kernel replicates the scalar
+///   summation tree lane-for-lane, and curve pre-orders are inverted on
+///   output (pinned by `tests/layout_invariance.rs`);
 /// - `lloyd_step` merges per-chunk `f64` accumulators in chunk order,
-///   so it is bit-identical across thread counts (and agrees with
-///   [`RustBackend`] up to `f64` summation re-association);
+///   so it is bit-identical across thread counts *and* layouts (and
+///   agrees with [`RustBackend`] up to `f64` summation re-association);
 /// - small inputs (one chunk) take the sequential path, which is the
 ///   same code, so there is no behavioural cliff.
 #[derive(Clone, Copy, Debug)]
 pub struct ParallelBackend {
     threads: usize,
+    layout: KernelLayout,
 }
 
 impl Default for ParallelBackend {
@@ -318,19 +509,76 @@ impl Default for ParallelBackend {
 }
 
 impl ParallelBackend {
-    /// Backend using `threads` workers (0 = all available cores).
+    /// Backend using `threads` workers (0 = all available cores) on the
+    /// default AoS layout.
     pub fn new(threads: usize) -> ParallelBackend {
-        ParallelBackend { threads }
+        ParallelBackend {
+            threads,
+            layout: KernelLayout::Aos,
+        }
+    }
+
+    /// Select the kernel memory layout (builder-style). Results are
+    /// bit-identical across layouts; only the memory-access pattern —
+    /// and therefore throughput — changes.
+    pub fn layout(mut self, layout: KernelLayout) -> ParallelBackend {
+        self.layout = layout;
+        self
+    }
+
+    /// The selected kernel layout.
+    pub fn kernel_layout(&self) -> KernelLayout {
+        self.layout
     }
 
     fn workers(&self, chunks: usize) -> usize {
         self.threads().min(chunks).max(1)
+    }
+
+    /// The SoA/curve assign path: build the (optionally permuted)
+    /// dimension-major mirror once per call, run the vectorized kernel
+    /// over the fixed chunk grid, then scatter results through the
+    /// inverse permutation so the output is positionally identical to
+    /// the AoS path.
+    fn assign_soa(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> Assignment {
+        let n = points.n();
+        let perm = self.layout.order(points);
+        let soa = SoaPlanes::build(points, perm.as_deref());
+        let block = center_block(points.d, centers.n());
+        let bounds = center_block_bounds(centers, block);
+        let workers = self.workers(n.div_ceil(PAR_CHUNK));
+        let parts = crate::exec::par_map_chunks(n, PAR_CHUNK, workers, |start, end| {
+            assign_range_soa(&soa, centers, &bounds, start, end, block)
+        });
+        let mut out = Assignment {
+            assign: vec![0u32; n],
+            kmeans_cost: vec![0.0f64; n],
+            kmedian_cost: vec![0.0f64; n],
+        };
+        let mut pos = 0;
+        for (part_c, part_b) in parts {
+            for (&bc, &bf) in part_c.iter().zip(&part_b) {
+                let orig = match &perm {
+                    Some(p) => p[pos],
+                    None => pos,
+                };
+                let b = (bf.max(0.0)) as f64;
+                out.assign[orig] = bc;
+                out.kmeans_cost[orig] = weights[orig] * b;
+                out.kmedian_cost[orig] = weights[orig] * b.sqrt();
+                pos += 1;
+            }
+        }
+        out
     }
 }
 
 impl Backend for ParallelBackend {
     fn assign(&self, points: &Dataset, weights: &[f64], centers: &Dataset) -> Assignment {
         check_shapes(points, weights, centers);
+        if self.layout != KernelLayout::Aos {
+            return self.assign_soa(points, weights, centers);
+        }
         let n = points.n();
         // Always decompose by PAR_CHUNK — even on one worker — so the
         // result is a function of the chunk grid only, never of the
@@ -360,26 +608,45 @@ impl Backend for ParallelBackend {
         // merge happens in chunk order, so `lloyd_step` is bit-stable
         // from 1 worker to many (pinned by the tests below).
         let workers = self.workers(n.div_ceil(PAR_CHUNK));
+        if self.layout != KernelLayout::Aos {
+            // SoA layouts: one layout-aware assignment over the whole
+            // set, then the same per-chunk accumulation *in original
+            // point order* — chunk sums and chunk costs see exactly the
+            // values and order the AoS path sees, so the merged result
+            // is bit-identical across layouts too.
+            let asg = self.assign(points, weights, centers);
+            let parts = crate::exec::par_map_chunks(n, PAR_CHUNK, workers, |start, end| {
+                let mut sums = vec![0.0f64; k * d];
+                let mut counts = vec![0.0f64; k];
+                for i in start..end {
+                    let c = asg.assign[i] as usize;
+                    let w = weights[i];
+                    counts[c] += w;
+                    for (s, &x) in sums[c * d..(c + 1) * d].iter_mut().zip(points.row(i)) {
+                        *s += w * x as f64;
+                    }
+                }
+                LloydStep {
+                    sums,
+                    counts,
+                    cost: asg.kmeans_cost[start..end].iter().sum(),
+                }
+            });
+            return merge_lloyd_parts(parts, k, d);
+        }
         let parts = crate::exec::par_map_chunks(n, PAR_CHUNK, workers, |start, end| {
             lloyd_range(points, weights, centers, start, end)
         });
-        let mut sums = vec![0.0f64; k * d];
-        let mut counts = vec![0.0f64; k];
-        let mut cost = 0.0f64;
-        for p in parts {
-            for (acc, v) in sums.iter_mut().zip(&p.sums) {
-                *acc += v;
-            }
-            for (acc, v) in counts.iter_mut().zip(&p.counts) {
-                *acc += v;
-            }
-            cost += p.cost;
-        }
-        LloydStep { sums, counts, cost }
+        merge_lloyd_parts(parts, k, d)
     }
 
     fn name(&self) -> &'static str {
-        "parallel"
+        match self.layout {
+            KernelLayout::Aos => "parallel",
+            KernelLayout::Soa => "parallel-soa",
+            KernelLayout::SoaHilbert => "parallel-soa-hilbert",
+            KernelLayout::SoaMorton => "parallel-soa-morton",
+        }
     }
 
     /// Resolved kernel thread budget. Inside a parallel site worker
@@ -526,6 +793,82 @@ mod tests {
                 chosen <= true_min + 1e-3 * (1.0 + true_min),
                 "point {i}: chose {chosen}, best {true_min}"
             );
+        }
+    }
+
+    #[test]
+    fn soa_layouts_bit_identical_to_the_scalar_oracle() {
+        // d = 24 (8-blocks + remainder), k = 96 (multi-block center
+        // scan): every layout must reproduce the scalar kernel exactly.
+        let (pts, w, ctr) = instance(9, 3_000, 24, 96);
+        let oracle = RustBackend.assign(&pts, &w, &ctr);
+        for layout in [
+            KernelLayout::Soa,
+            KernelLayout::SoaHilbert,
+            KernelLayout::SoaMorton,
+        ] {
+            let b = ParallelBackend::new(2).layout(layout).assign(&pts, &w, &ctr);
+            assert_eq!(oracle.assign, b.assign, "{layout:?}");
+            assert_eq!(oracle.kmeans_cost, b.kmeans_cost, "{layout:?}");
+            assert_eq!(oracle.kmedian_cost, b.kmedian_cost, "{layout:?}");
+        }
+    }
+
+    #[test]
+    fn soa_kernel_invariant_across_center_block_sizes() {
+        // Like the scalar block-size test: tile pruning and center
+        // blocking must be pure scheduling — any explicit block size
+        // gives bit-identical winners and distances.
+        let (pts, w, ctr) = instance(7, 3_000, 24, 96);
+        let oracle = RustBackend.assign(&pts, &w, &ctr);
+        let soa = SoaPlanes::build(&pts, None);
+        for block in [1usize, 7, 8, 33, 64, 200] {
+            let bounds = center_block_bounds(&ctr, block);
+            let (bc, bf) = assign_range_soa(&soa, &ctr, &bounds, 0, pts.n(), block);
+            assert_eq!(oracle.assign, bc, "block={block}");
+            for (j, (&b, &o)) in bf.iter().zip(&oracle.kmeans_cost).enumerate() {
+                assert_eq!(w[j] * (b.max(0.0) as f64), o, "block={block} point {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn soa_handles_awkward_dimensionalities() {
+        // d < 8, d % 8 != 0, d >= 32 with remainder, and tiny n where
+        // one lane group is ragged.
+        for (seed, n, d, k) in [
+            (11u64, 37usize, 1usize, 5usize),
+            (12, 1_000, 5, 17),
+            (13, 500, 13, 33),
+            (14, 700, 39, 9),
+        ] {
+            let (pts, w, ctr) = instance(seed, n, d, k);
+            let oracle = RustBackend.assign(&pts, &w, &ctr);
+            for layout in [KernelLayout::Soa, KernelLayout::SoaHilbert] {
+                let b = ParallelBackend::new(3).layout(layout).assign(&pts, &w, &ctr);
+                assert_eq!(oracle.assign, b.assign, "d={d} {layout:?}");
+                assert_eq!(oracle.kmeans_cost, b.kmeans_cost, "d={d} {layout:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn soa_lloyd_bit_identical_across_layouts_and_threads() {
+        let (pts, w, ctr) = instance(10, 9_000, 33, 40);
+        let aos = ParallelBackend::new(2).lloyd_step(&pts, &w, &ctr);
+        for layout in [
+            KernelLayout::Soa,
+            KernelLayout::SoaHilbert,
+            KernelLayout::SoaMorton,
+        ] {
+            for threads in [1usize, 4] {
+                let s = ParallelBackend::new(threads)
+                    .layout(layout)
+                    .lloyd_step(&pts, &w, &ctr);
+                assert_eq!(aos.sums, s.sums, "{layout:?} threads={threads}");
+                assert_eq!(aos.counts, s.counts, "{layout:?} threads={threads}");
+                assert_eq!(aos.cost, s.cost, "{layout:?} threads={threads}");
+            }
         }
     }
 

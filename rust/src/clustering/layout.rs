@@ -1,0 +1,491 @@
+//! Point-memory layouts for the assign hot path: the SoA mirror the
+//! vectorized kernel streams over, and space-filling-curve pre-orders
+//! (Hilbert via Skilling's transpose algorithm, Morton via plain bit
+//! interleaving) that pack spatially-close points into the same tile so
+//! center blocks hit warm running-best state.
+//!
+//! Everything here is a *pure layout* transform: the kernel consumes the
+//! mirror/permutation and applies the inverse permutation to its
+//! outputs, so callers never observe the reorder — pinned by
+//! `tests/layout_invariance.rs` against the scalar AoS oracle.
+
+use crate::points::Dataset;
+
+/// Point lanes the SoA kernel processes per inner-loop step. Groups are
+/// this wide so the fixed-width `[f32; LANES]` accumulators autovectorize;
+/// [`SoaPlanes`] zero-pads every plane to a multiple of it.
+pub const LANES: usize = 8;
+
+/// Bits per dimension of the quantized curve coordinates. Three dims at
+/// 16 bits interleave into a 48-bit key (fits `u64`), and 2^16 cells per
+/// axis is far below `f32` precision on any real dataset.
+const CURVE_BITS: u32 = 16;
+
+/// Which memory layout the CPU assign kernel runs against.
+///
+/// Every variant is bit-identical to every other (same argmin, same
+/// tie-breaks, same `f32` winning distances, same `f64` costs) — the
+/// knob trades memory-access pattern only. `Aos` is the scalar
+/// reference implementation; the SoA variants run the 8-lane
+/// vectorized kernel, optionally over a space-filling-curve pre-order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelLayout {
+    /// Row-major points, scalar kernel with per-point early abandonment
+    /// (the oracle path every other variant is pinned against).
+    #[default]
+    Aos,
+    /// Dimension-major `f32` planes, branch-free 8-lane kernel with
+    /// per-tile center-block pruning.
+    Soa,
+    /// [`KernelLayout::Soa`] over a Hilbert-curve pre-order of the
+    /// points (inverse-permuted on output).
+    SoaHilbert,
+    /// [`KernelLayout::Soa`] over a Morton (Z-order) pre-order of the
+    /// points (inverse-permuted on output).
+    SoaMorton,
+}
+
+/// All layout variants, in documentation order (benches/tests iterate this).
+pub const ALL_LAYOUTS: [KernelLayout; 4] = [
+    KernelLayout::Aos,
+    KernelLayout::Soa,
+    KernelLayout::SoaHilbert,
+    KernelLayout::SoaMorton,
+];
+
+impl KernelLayout {
+    /// CLI/config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelLayout::Aos => "aos",
+            KernelLayout::Soa => "soa",
+            KernelLayout::SoaHilbert => "soa-hilbert",
+            KernelLayout::SoaMorton => "soa-morton",
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<KernelLayout> {
+        Some(match s {
+            "aos" => KernelLayout::Aos,
+            "soa" => KernelLayout::Soa,
+            "soa-hilbert" => KernelLayout::SoaHilbert,
+            "soa-morton" => KernelLayout::SoaMorton,
+            _ => return None,
+        })
+    }
+
+    /// The curve pre-order this layout applies, if any: a permutation
+    /// `perm[pos] = original index` over `points`.
+    pub fn order(self, points: &Dataset) -> Option<Vec<usize>> {
+        match self {
+            KernelLayout::Aos | KernelLayout::Soa => None,
+            KernelLayout::SoaHilbert => Some(hilbert_order(points)),
+            KernelLayout::SoaMorton => Some(morton_order(points)),
+        }
+    }
+}
+
+/// Dimension-major mirror of a [`Dataset`]: plane `j` holds coordinate
+/// `j` of every point contiguously, so an 8-lane group of points loads
+/// as one contiguous `[f32; 8]` per dimension. Planes are zero-padded
+/// to a [`LANES`] multiple — padding lanes compute garbage distances
+/// that are simply never written out, and their zero norms can only
+/// loosen (never unsound-tighten) the pruning bound.
+pub struct SoaPlanes {
+    planes: Vec<f32>,
+    stride: usize,
+    n: usize,
+    d: usize,
+}
+
+impl SoaPlanes {
+    /// Build the mirror, optionally under a pre-order permutation
+    /// (`perm[pos] = original index`, as produced by
+    /// [`KernelLayout::order`]).
+    pub fn build(points: &Dataset, perm: Option<&[usize]>) -> SoaPlanes {
+        let n = points.n();
+        let d = points.d;
+        let stride = n.div_ceil(LANES) * LANES;
+        let mut planes = vec![0.0f32; d * stride];
+        match perm {
+            None => {
+                for i in 0..n {
+                    let row = points.row(i);
+                    for j in 0..d {
+                        planes[j * stride + i] = row[j];
+                    }
+                }
+            }
+            Some(p) => {
+                debug_assert_eq!(p.len(), n);
+                for (pos, &orig) in p.iter().enumerate() {
+                    let row = points.row(orig);
+                    for j in 0..d {
+                        planes[j * stride + pos] = row[j];
+                    }
+                }
+            }
+        }
+        SoaPlanes { planes, stride, n, d }
+    }
+
+    /// Mirrored point count (excluding lane padding).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dimensionality.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The contiguous 8-lane group of coordinate `dim` starting at
+    /// (possibly permuted) position `i0`. `i0` must be a [`LANES`]
+    /// multiple; padding guarantees the full group is in bounds.
+    #[inline]
+    pub fn group(&self, dim: usize, i0: usize) -> &[f32; LANES] {
+        let s = dim * self.stride + i0;
+        (&self.planes[s..s + LANES]).try_into().unwrap()
+    }
+
+    /// Euclidean-norm interval of the real (non-padding) points at
+    /// positions `a..b`, in `f64` — the point side of the kernel's
+    /// center-block pruning bound. Non-finite coordinates poison the
+    /// interval to NaN, which disables pruning (never unsound).
+    pub fn norm_range(&self, a: usize, b: usize) -> (f64, f64) {
+        let mut sq = vec![0.0f64; b - a];
+        for j in 0..self.d {
+            let plane = &self.planes[j * self.stride..j * self.stride + self.stride];
+            for (s, i) in sq.iter_mut().zip(a..b) {
+                let x = plane[i] as f64;
+                *s += x * x;
+            }
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for s in sq {
+            let nrm = s.sqrt();
+            lo = if nrm < lo { nrm } else { lo + (nrm - nrm) }; // NaN poisons
+            hi = if nrm > hi { nrm } else { hi + (nrm - nrm) };
+        }
+        (lo, hi)
+    }
+}
+
+/// Skilling's `AxestoTranspose` (Programming the Hilbert curve, 2004):
+/// converts `bits`-bit coordinates in place into the "transposed" form
+/// of the Hilbert index; interleaving the transposed coordinates yields
+/// the Hilbert rank.
+fn axes_to_transpose(x: &mut [u64], bits: u32) {
+    let n = x.len();
+    if n == 0 || bits == 0 {
+        return;
+    }
+    let m: u64 = 1 << (bits - 1);
+    // Inverse undo.
+    let mut q = m;
+    while q > 1 {
+        let p = q - 1;
+        for i in 0..n {
+            if x[i] & q != 0 {
+                x[0] ^= p; // invert
+            } else {
+                let t = (x[0] ^ x[i]) & p; // exchange
+                x[0] ^= t;
+                x[i] ^= t;
+            }
+        }
+        q >>= 1;
+    }
+    // Gray encode.
+    for i in 1..n {
+        x[i] ^= x[i - 1];
+    }
+    let mut t: u64 = 0;
+    let mut q = m;
+    while q > 1 {
+        if x[n - 1] & q != 0 {
+            t ^= q - 1;
+        }
+        q >>= 1;
+    }
+    for xi in x.iter_mut() {
+        *xi ^= t;
+    }
+}
+
+/// Bit-interleave `bits`-bit coordinates MSB-first (dimension 0
+/// contributes the most significant bit of each group) — the Morton key
+/// of raw coordinates, and the Hilbert rank of transposed ones.
+fn interleave(x: &[u64], bits: u32) -> u64 {
+    let mut key = 0u64;
+    for b in (0..bits).rev() {
+        for xi in x {
+            key = (key << 1) | ((xi >> b) & 1);
+        }
+    }
+    key
+}
+
+/// Hilbert rank of integer coordinates (each `< 2^bits`); requires
+/// `coords.len() * bits <= 64`.
+pub fn hilbert_key(coords: &[u64], bits: u32) -> u64 {
+    let mut x = coords.to_vec();
+    axes_to_transpose(&mut x, bits);
+    interleave(&x, bits)
+}
+
+/// Morton (Z-order) rank of integer coordinates (each `< 2^bits`);
+/// requires `coords.len() * bits <= 64`.
+pub fn morton_key(coords: &[u64], bits: u32) -> u64 {
+    interleave(coords, bits)
+}
+
+/// Sort positions `0..n` by a space-filling-curve key over the first
+/// `min(d, 3)` coordinates, quantized per-dimension to [`CURVE_BITS`]
+/// bits. The sort is stable, so equal keys keep their original order and
+/// the permutation is a deterministic function of the data alone.
+fn curve_order(points: &Dataset, hilbert: bool) -> Vec<usize> {
+    let n = points.n();
+    let m = points.d.min(3);
+    if n == 0 || m == 0 {
+        return (0..n).collect();
+    }
+    let mut lo = vec![f64::INFINITY; m];
+    let mut hi = vec![f64::NEG_INFINITY; m];
+    for i in 0..n {
+        let row = points.row(i);
+        for j in 0..m {
+            let x = row[j] as f64;
+            if x.is_finite() {
+                if x < lo[j] {
+                    lo[j] = x;
+                }
+                if x > hi[j] {
+                    hi[j] = x;
+                }
+            }
+        }
+    }
+    let mask = (1u64 << CURVE_BITS) - 1;
+    let mut keyed: Vec<(u64, usize)> = Vec::with_capacity(n);
+    let mut q = vec![0u64; m];
+    for i in 0..n {
+        let row = points.row(i);
+        for j in 0..m {
+            let (l, h) = (lo[j], hi[j]);
+            q[j] = if h > l {
+                // NaN coordinates fall through the clamp and cast to 0:
+                // deterministic, and merely a weaker ordering.
+                (((row[j] as f64 - l) / (h - l) * mask as f64).round()).clamp(0.0, mask as f64)
+                    as u64
+            } else {
+                0
+            };
+        }
+        if hilbert {
+            axes_to_transpose(&mut q, CURVE_BITS);
+        }
+        keyed.push((interleave(&q, CURVE_BITS), i));
+    }
+    keyed.sort_by_key(|&(k, _)| k);
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Hilbert-curve pre-order of `points` over the first `min(d, 3)`
+/// dimensions: returns `perm` with `perm[pos] = original index`.
+/// Deterministic (stable sort; ties keep the original order).
+pub fn hilbert_order(points: &Dataset) -> Vec<usize> {
+    curve_order(points, true)
+}
+
+/// Morton-curve (Z-order) pre-order of `points`; same contract as
+/// [`hilbert_order`].
+pub fn morton_order(points: &Dataset) -> Vec<usize> {
+    curve_order(points, false)
+}
+
+/// Inverse of a permutation: `inv[perm[pos]] = pos`.
+pub fn invert_permutation(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (pos, &orig) in perm.iter().enumerate() {
+        inv[orig] = pos;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_names_round_trip() {
+        for l in ALL_LAYOUTS {
+            assert_eq!(KernelLayout::parse(l.name()), Some(l));
+        }
+        assert_eq!(KernelLayout::parse("simd"), None);
+        assert_eq!(KernelLayout::default(), KernelLayout::Aos);
+    }
+
+    #[test]
+    fn soa_planes_mirror_and_pad() {
+        let pts = Dataset::from_flat(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2);
+        let soa = SoaPlanes::build(&pts, None);
+        assert_eq!(soa.n(), 3);
+        assert_eq!(soa.d(), 2);
+        let g0 = soa.group(0, 0);
+        assert_eq!(&g0[..3], &[1.0, 3.0, 5.0]);
+        assert_eq!(&g0[3..], &[0.0; 5], "zero padding");
+        let g1 = soa.group(1, 0);
+        assert_eq!(&g1[..3], &[2.0, 4.0, 6.0]);
+        // Under a permutation, plane order follows the permutation.
+        let soa = SoaPlanes::build(&pts, Some(&[2, 0, 1]));
+        assert_eq!(&soa.group(0, 0)[..3], &[5.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn soa_norm_range_brackets_every_point() {
+        let pts = Dataset::from_flat(vec![3.0, 4.0, 0.0, 0.0, 6.0, 8.0], 2);
+        let soa = SoaPlanes::build(&pts, None);
+        let (lo, hi) = soa.norm_range(0, 3);
+        assert_eq!(lo, 0.0);
+        assert_eq!(hi, 10.0);
+        let (lo, hi) = soa.norm_range(0, 1);
+        assert_eq!((lo, hi), (5.0, 5.0));
+    }
+
+    #[test]
+    fn morton_key_is_z_order_on_the_unit_square() {
+        // 2x2 grid, dim 0 most significant: the classic Z.
+        assert_eq!(morton_key(&[0, 0], 1), 0);
+        assert_eq!(morton_key(&[0, 1], 1), 1);
+        assert_eq!(morton_key(&[1, 0], 1), 2);
+        assert_eq!(morton_key(&[1, 1], 1), 3);
+    }
+
+    #[test]
+    fn hilbert_key_is_the_first_order_u_on_the_unit_square() {
+        // The 2x2 Hilbert curve visits (0,0),(0,1),(1,1),(1,0).
+        assert_eq!(hilbert_key(&[0, 0], 1), 0);
+        assert_eq!(hilbert_key(&[0, 1], 1), 1);
+        assert_eq!(hilbert_key(&[1, 1], 1), 2);
+        assert_eq!(hilbert_key(&[1, 0], 1), 3);
+    }
+
+    /// Rank -> cell table for an n-D grid: ranks must be a permutation
+    /// and (for Hilbert) consecutive ranks must be grid neighbors.
+    fn curve_cells(bits: u32, dims: usize, hilbert: bool) -> Vec<Vec<u64>> {
+        let side = 1u64 << bits;
+        let total = side.pow(dims as u32) as usize;
+        let mut by_rank = vec![Vec::new(); total];
+        let mut seen = vec![false; total];
+        let mut coords = vec![0u64; dims];
+        for cell in 0..total {
+            let mut c = cell as u64;
+            for j in (0..dims).rev() {
+                coords[j] = c % side;
+                c /= side;
+            }
+            let key = if hilbert {
+                hilbert_key(&coords, bits)
+            } else {
+                morton_key(&coords, bits)
+            } as usize;
+            assert!(!seen[key], "duplicate rank {key}");
+            seen[key] = true;
+            by_rank[key] = coords.clone();
+        }
+        by_rank
+    }
+
+    #[test]
+    fn hilbert_consecutive_ranks_are_grid_adjacent() {
+        // The defining Hilbert property (Morton violates it at every
+        // Z-jump): consecutive ranks differ by exactly one unit step.
+        for (bits, dims) in [(1u32, 2usize), (2, 2), (3, 2), (1, 3), (2, 3)] {
+            let cells = curve_cells(bits, dims, true);
+            for w in cells.windows(2) {
+                let l1: u64 = w[0]
+                    .iter()
+                    .zip(&w[1])
+                    .map(|(&a, &b)| a.abs_diff(b))
+                    .sum();
+                assert_eq!(l1, 1, "bits={bits} dims={dims}: {:?} -> {:?}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn hilbert_4x4_matches_the_classic_order() {
+        // Pin the full 4x4 visitation (x = dim 0) so the transform can
+        // never silently change orientation between releases.
+        let cells = curve_cells(2, 2, false);
+        assert_eq!(cells.len(), 16); // morton: permutation sanity only
+        let cells = curve_cells(2, 2, true);
+        let expected: [(u64, u64); 16] = [
+            (0, 0), (1, 0), (1, 1), (0, 1),
+            (0, 2), (0, 3), (1, 3), (1, 2),
+            (2, 2), (2, 3), (3, 3), (3, 2),
+            (3, 1), (2, 1), (2, 0), (3, 0),
+        ];
+        for (rank, &(x, y)) in expected.iter().enumerate() {
+            assert_eq!(cells[rank], vec![x, y], "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn curve_orders_are_permutations_with_exact_inverses() {
+        let mut rng = crate::rng::Pcg64::seed_from(11);
+        for d in [1usize, 2, 3, 7] {
+            let pts = crate::data::synthetic::gaussian_mixture(&mut rng, 257, d, 3);
+            for perm in [hilbert_order(&pts), morton_order(&pts)] {
+                assert_eq!(perm.len(), 257);
+                let inv = invert_permutation(&perm);
+                // perm ∘ inv-perm = id, both ways.
+                for i in 0..perm.len() {
+                    assert_eq!(perm[inv[i]], i);
+                    assert_eq!(inv[perm[i]], i);
+                }
+            }
+            // Deterministic: same data, same permutation.
+            assert_eq!(hilbert_order(&pts), hilbert_order(&pts));
+            assert_eq!(morton_order(&pts), morton_order(&pts));
+        }
+    }
+
+    #[test]
+    fn hilbert_order_walks_a_grid_dataset_along_the_curve() {
+        // A 4x4 point grid quantizes onto the 4x4 cells (coarse top bits
+        // of the 16-bit grid), so the data-level order must match the
+        // pinned cell-level order above.
+        let mut pts = Dataset::with_capacity(16, 2);
+        for x in 0..4 {
+            for y in 0..4 {
+                pts.push(&[x as f32, y as f32]);
+            }
+        }
+        let perm = hilbert_order(&pts);
+        let first = pts.row(perm[0]).to_vec();
+        let last = pts.row(perm[15]).to_vec();
+        assert_eq!(first, vec![0.0, 0.0]);
+        assert_eq!(last, vec![3.0, 0.0]);
+        // Consecutive visited points are grid neighbors.
+        for w in perm.windows(2) {
+            let (a, b) = (pts.row(w[0]), pts.row(w[1]));
+            let l1 = (a[0] - b[0]).abs() + (a[1] - b[1]).abs();
+            assert_eq!(l1, 1.0, "{a:?} -> {b:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_order_safely() {
+        // Empty set, single point, constant dimension.
+        assert_eq!(hilbert_order(&Dataset::with_capacity(0, 3)), Vec::<usize>::new());
+        let one = Dataset::from_flat(vec![1.0, 2.0], 2);
+        assert_eq!(hilbert_order(&one), vec![0]);
+        let constant = Dataset::from_flat(vec![5.0; 12], 3);
+        let perm = morton_order(&constant);
+        assert_eq!(perm, vec![0, 1, 2, 3], "all-equal keys keep original order");
+    }
+}

@@ -11,6 +11,7 @@
 pub mod backend;
 pub mod kmeanspp;
 pub mod kmedian;
+pub mod layout;
 pub mod lines;
 pub mod lloyd;
 pub mod local_search;

@@ -3,11 +3,12 @@
 //! format is a strict TOML subset — flat keys, strings, numbers, and
 //! `#` comments — documented in README §Configuration).
 
+use crate::clustering::layout::KernelLayout;
 use crate::clustering::Objective;
 use crate::coreset::combine::CombineConfig;
 use crate::coreset::zhang::ZhangConfig;
 use crate::coreset::DistributedConfig;
-use crate::exec::ExecPolicy;
+use crate::exec::{ExecPolicy, SiteAffinity};
 use crate::partition::Scheme;
 use crate::scenario::{self, CoresetAlgorithm, Scenario};
 use crate::sketch::{SketchMode, SketchPlan};
@@ -293,6 +294,16 @@ pub struct ExperimentSpec {
     /// Parallel results are identical for every non-`1` value with the
     /// same seed.
     pub threads: usize,
+    /// Point/center memory layout of the parallel backend's assign
+    /// kernel (`aos` default; `soa`, `soa-hilbert`, `soa-morton` select
+    /// the vectorized planes, optionally curve-ordered). Results are
+    /// bit-identical across layouts; only rust/xla backends reject a
+    /// non-default layout.
+    pub layout: KernelLayout,
+    /// How parallel site workers bind to sites: `queue` (shared job
+    /// stack, default) or `pinned` (stable worker→site binding).
+    /// Scheduling only — results are affinity-invariant.
+    pub affinity: SiteAffinity,
     /// Maximum points per coreset-portion page streamed through the
     /// network (`0` = monolithic portions). Paging never changes results
     /// or total communication — only message granularity and, with a
@@ -340,6 +351,8 @@ impl Default for ExperimentSpec {
             seed: 1,
             backend: BackendSpec::Rust,
             threads: 1,
+            layout: KernelLayout::Aos,
+            affinity: SiteAffinity::Queue,
             page_points: 0,
             link_capacity: 0,
             link_overrides: Vec::new(),
@@ -421,6 +434,15 @@ impl ExperimentSpec {
                         .ok_or_else(|| anyhow!("unknown backend '{v}' (rust|parallel|xla)"))?
                 }
                 "threads" => spec.threads = v.parse()?,
+                "layout" => {
+                    spec.layout = KernelLayout::parse(v).ok_or_else(|| {
+                        anyhow!("unknown layout '{v}' (aos|soa|soa-hilbert|soa-morton)")
+                    })?
+                }
+                "affinity" => {
+                    spec.affinity = SiteAffinity::parse(v)
+                        .ok_or_else(|| anyhow!("unknown affinity '{v}' (queue|pinned)"))?
+                }
                 "page_points" => spec.page_points = v.parse()?,
                 "link_capacity" => spec.link_capacity = v.parse()?,
                 "degraded" => spec.degraded = Some(parse_degraded(v)?),
@@ -469,7 +491,7 @@ impl ExperimentSpec {
     /// The per-site execution policy this spec selects (see
     /// [`crate::exec`] for the determinism contract).
     pub fn exec_policy(&self) -> ExecPolicy {
-        ExecPolicy::from_threads(self.threads)
+        ExecPolicy::from_threads(self.threads).with_affinity(self.affinity)
     }
 
     /// The per-directed-edge link model this spec selects, least to
@@ -701,12 +723,12 @@ mod tests {
             ExperimentSpec::from_config("backend = parallel\nthreads = 4\n").unwrap();
         assert_eq!(spec.backend, BackendSpec::Parallel);
         assert_eq!(spec.threads, 4);
-        assert_eq!(spec.exec_policy(), ExecPolicy::Parallel { threads: 4 });
+        assert_eq!(spec.exec_policy(), ExecPolicy::parallel(4));
 
         // `backend = parallel` alone defaults threads to auto (0).
         let spec = ExperimentSpec::from_config("backend = parallel\n").unwrap();
         assert_eq!(spec.threads, 0);
-        assert_eq!(spec.exec_policy(), ExecPolicy::Parallel { threads: 0 });
+        assert_eq!(spec.exec_policy(), ExecPolicy::parallel(0));
 
         // Defaults keep the sequential legacy path.
         let spec = ExperimentSpec::default();
@@ -717,6 +739,31 @@ mod tests {
         for b in [BackendSpec::Rust, BackendSpec::Parallel, BackendSpec::Xla] {
             assert_eq!(BackendSpec::parse(b.name()), Some(b));
         }
+    }
+
+    #[test]
+    fn layout_and_affinity_keys() {
+        let spec = ExperimentSpec::default();
+        assert_eq!(spec.layout, KernelLayout::Aos);
+        assert_eq!(spec.affinity, SiteAffinity::Queue);
+
+        let spec = ExperimentSpec::from_config(
+            "backend = parallel\nthreads = 4\nlayout = soa-hilbert\naffinity = pinned\n",
+        )
+        .unwrap();
+        assert_eq!(spec.layout, KernelLayout::SoaHilbert);
+        assert_eq!(spec.affinity, SiteAffinity::Pinned);
+        assert_eq!(
+            spec.exec_policy(),
+            ExecPolicy::parallel(4).with_affinity(SiteAffinity::Pinned)
+        );
+
+        // Affinity never reaches the sequential path.
+        let spec = ExperimentSpec::from_config("affinity = pinned\n").unwrap();
+        assert_eq!(spec.exec_policy(), ExecPolicy::Sequential);
+
+        assert!(ExperimentSpec::from_config("layout = csr\n").is_err());
+        assert!(ExperimentSpec::from_config("affinity = stolen\n").is_err());
     }
 
     #[test]

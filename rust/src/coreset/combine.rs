@@ -122,7 +122,7 @@ mod tests {
                     &cfg,
                     &RustBackend,
                     &mut r,
-                    crate::exec::ExecPolicy::Parallel { threads },
+                    crate::exec::ExecPolicy::parallel(threads),
                 )
             })
             .collect();

@@ -270,7 +270,7 @@ mod tests {
                     &cfg,
                     &RustBackend,
                     &mut rng,
-                    ExecPolicy::Parallel { threads },
+                    ExecPolicy::parallel(threads),
                 )
             })
             .collect();

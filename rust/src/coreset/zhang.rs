@@ -215,7 +215,7 @@ mod tests {
                     &cfg,
                     &RustBackend,
                     &mut rng,
-                    ExecPolicy::Parallel { threads },
+                    ExecPolicy::parallel(threads),
                 )
             })
             .collect();

@@ -44,6 +44,43 @@ pub fn in_site_worker() -> bool {
     IN_SITE_WORKER.with(|c| c.get())
 }
 
+/// How parallel site workers pick up jobs. Results are identical either
+/// way — a site's output is a pure function of `(site index, master
+/// seed)` — so this is a *scheduling* knob only.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SiteAffinity {
+    /// Workers drain a shared LIFO job stack: best load balance when
+    /// site costs are skewed (the default).
+    #[default]
+    Queue,
+    /// Stable worker→site binding: worker `w` of `W` always processes
+    /// sites `w, w+W, w+2W, …` in ascending order. Across repeated
+    /// passes (Lloyd iterations, Round-2 sampling) the same worker
+    /// index revisits the same sites, so per-site working sets — SoA
+    /// mirrors, curve permutations, local solver state — stay warm in
+    /// that worker's cache instead of migrating with the steal order.
+    Pinned,
+}
+
+impl SiteAffinity {
+    /// CLI/config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SiteAffinity::Queue => "queue",
+            SiteAffinity::Pinned => "pinned",
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<SiteAffinity> {
+        Some(match s {
+            "queue" => SiteAffinity::Queue,
+            "pinned" => SiteAffinity::Pinned,
+            _ => return None,
+        })
+    }
+}
+
 /// How a batch of per-site jobs executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecPolicy {
@@ -56,13 +93,25 @@ pub enum ExecPolicy {
     Parallel {
         /// Worker thread count (0 = all available cores).
         threads: usize,
+        /// How workers pick up site jobs (scheduling only; results are
+        /// affinity-invariant).
+        affinity: SiteAffinity,
     },
 }
 
 impl ExecPolicy {
     /// Parallel policy sized to the machine.
     pub fn auto() -> ExecPolicy {
-        ExecPolicy::Parallel { threads: 0 }
+        ExecPolicy::parallel(0)
+    }
+
+    /// Parallel policy with `threads` workers (0 = all available cores)
+    /// and the default queue affinity.
+    pub fn parallel(threads: usize) -> ExecPolicy {
+        ExecPolicy::Parallel {
+            threads,
+            affinity: SiteAffinity::default(),
+        }
     }
 
     /// Map a CLI/config `threads` value to a policy: `1` selects the
@@ -72,7 +121,16 @@ impl ExecPolicy {
         if threads == 1 {
             ExecPolicy::Sequential
         } else {
-            ExecPolicy::Parallel { threads }
+            ExecPolicy::parallel(threads)
+        }
+    }
+
+    /// This policy with the given site affinity (no-op on the
+    /// sequential policy, which has exactly one worker anyway).
+    pub fn with_affinity(self, affinity: SiteAffinity) -> ExecPolicy {
+        match self {
+            ExecPolicy::Sequential => ExecPolicy::Sequential,
+            ExecPolicy::Parallel { threads, .. } => ExecPolicy::Parallel { threads, affinity },
         }
     }
 
@@ -80,7 +138,7 @@ impl ExecPolicy {
     pub fn worker_count(&self, jobs: usize) -> usize {
         match *self {
             ExecPolicy::Sequential => 1,
-            ExecPolicy::Parallel { threads } => {
+            ExecPolicy::Parallel { threads, .. } => {
                 let t = if threads == 0 {
                     available_threads()
                 } else {
@@ -114,35 +172,67 @@ where
     let workers = policy.worker_count(n);
     match policy {
         ExecPolicy::Sequential => (0..n).map(|i| f(i, &mut *rng)).collect(),
-        ExecPolicy::Parallel { .. } => {
-            // Stack of (site, stream) jobs; popped LIFO, which is fine
-            // because results are keyed by site index afterwards.
-            let jobs: Mutex<Vec<(usize, Pcg64)>> =
-                Mutex::new(rng.split_n(n).into_iter().enumerate().collect());
+        ExecPolicy::Parallel { affinity, .. } => {
+            let streams = rng.split_n(n);
             let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
-            std::thread::scope(|s| {
-                for _ in 0..workers {
-                    s.spawn(|| {
-                        // With several site workers, mark the thread so
-                        // kernel backends don't nest their own pools.
-                        // Scheduling only — results are thread-count
-                        // invariant either way.
-                        if workers > 1 {
-                            IN_SITE_WORKER.with(|c| c.set(true));
-                        }
-                        loop {
-                            let job = jobs.lock().unwrap().pop();
-                            match job {
-                                Some((i, mut site_rng)) => {
-                                    let out = f(i, &mut site_rng);
-                                    done.lock().unwrap().push((i, out));
+            match affinity {
+                SiteAffinity::Queue => {
+                    // Stack of (site, stream) jobs; popped LIFO, which
+                    // is fine because results are keyed by site index
+                    // afterwards.
+                    let jobs: Mutex<Vec<(usize, Pcg64)>> =
+                        Mutex::new(streams.into_iter().enumerate().collect());
+                    std::thread::scope(|s| {
+                        for _ in 0..workers {
+                            s.spawn(|| {
+                                // With several site workers, mark the
+                                // thread so kernel backends don't nest
+                                // their own pools. Scheduling only —
+                                // results are thread-count invariant.
+                                if workers > 1 {
+                                    IN_SITE_WORKER.with(|c| c.set(true));
                                 }
-                                None => break,
-                            }
+                                loop {
+                                    let job = jobs.lock().unwrap().pop();
+                                    match job {
+                                        Some((i, mut site_rng)) => {
+                                            let out = f(i, &mut site_rng);
+                                            done.lock().unwrap().push((i, out));
+                                        }
+                                        None => break,
+                                    }
+                                }
+                            });
                         }
                     });
                 }
-            });
+                SiteAffinity::Pinned => {
+                    // Stable worker→site binding: worker w owns sites
+                    // w, w+W, … and walks them in ascending order, so
+                    // repeated passes revisit sites on the same worker
+                    // index and per-site working sets stay warm.
+                    let mut batches: Vec<Vec<(usize, Pcg64)>> =
+                        (0..workers).map(|_| Vec::new()).collect();
+                    for (i, stream) in streams.into_iter().enumerate() {
+                        batches[i % workers].push((i, stream));
+                    }
+                    std::thread::scope(|s| {
+                        for batch in batches {
+                            let done = &done;
+                            let f = &f;
+                            s.spawn(move || {
+                                if workers > 1 {
+                                    IN_SITE_WORKER.with(|c| c.set(true));
+                                }
+                                for (i, mut site_rng) in batch {
+                                    let out = f(i, &mut site_rng);
+                                    done.lock().unwrap().push((i, out));
+                                }
+                            });
+                        }
+                    });
+                }
+            }
             let mut done = done.into_inner().unwrap();
             done.sort_unstable_by_key(|&(i, _)| i);
             done.into_iter().map(|(_, t)| t).collect()
@@ -217,7 +307,11 @@ mod tests {
     #[test]
     fn map_sites_orders_results() {
         let mut rng = Pcg64::seed_from(1);
-        for policy in [ExecPolicy::Sequential, ExecPolicy::Parallel { threads: 3 }] {
+        for policy in [
+            ExecPolicy::Sequential,
+            ExecPolicy::parallel(3),
+            ExecPolicy::parallel(3).with_affinity(SiteAffinity::Pinned),
+        ] {
             let out = map_sites(10, &mut rng, policy, |i, _| i * 2);
             assert_eq!(out, (0..10).map(|i| i * 2).collect::<Vec<_>>());
         }
@@ -231,9 +325,7 @@ mod tests {
             .iter()
             .map(|&t| {
                 let mut rng = Pcg64::seed_from(42);
-                map_sites(16, &mut rng, ExecPolicy::Parallel { threads: t }, |_, r| {
-                    r.next_u64()
-                })
+                map_sites(16, &mut rng, ExecPolicy::parallel(t), |_, r| r.next_u64())
             })
             .collect();
         assert_eq!(runs[0], runs[1]);
@@ -241,12 +333,34 @@ mod tests {
     }
 
     #[test]
+    fn pinned_affinity_matches_queue_results() {
+        // Affinity is a scheduling knob only: for every worker count the
+        // pinned binding must yield the exact queue-policy outputs and
+        // cover every site exactly once.
+        let mut rng = Pcg64::seed_from(42);
+        let baseline = map_sites(16, &mut rng, ExecPolicy::parallel(1), |i, r| {
+            (i, r.next_u64())
+        });
+        for t in [1usize, 2, 3, 8, 32] {
+            let mut rng = Pcg64::seed_from(42);
+            let pinned = ExecPolicy::parallel(t).with_affinity(SiteAffinity::Pinned);
+            let out = map_sites(16, &mut rng, pinned, |i, r| (i, r.next_u64()));
+            assert_eq!(out, baseline, "pinned affinity diverged at {t} workers");
+        }
+    }
+
+    #[test]
     fn parallel_advances_master_rng_deterministically() {
         let mut a = Pcg64::seed_from(7);
         let mut b = Pcg64::seed_from(7);
-        let _ = map_sites(5, &mut a, ExecPolicy::Parallel { threads: 2 }, |i, _| i);
-        let _ = map_sites(5, &mut b, ExecPolicy::Parallel { threads: 4 }, |i, _| i);
-        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = Pcg64::seed_from(7);
+        let _ = map_sites(5, &mut a, ExecPolicy::parallel(2), |i, _| i);
+        let _ = map_sites(5, &mut b, ExecPolicy::parallel(4), |i, _| i);
+        let pinned = ExecPolicy::parallel(4).with_affinity(SiteAffinity::Pinned);
+        let _ = map_sites(5, &mut c, pinned, |i, _| i);
+        let expect = a.next_u64();
+        assert_eq!(expect, b.next_u64());
+        assert_eq!(expect, c.next_u64());
     }
 
     #[test]
@@ -287,16 +401,30 @@ mod tests {
     #[test]
     fn policy_helpers() {
         assert_eq!(ExecPolicy::from_threads(1), ExecPolicy::Sequential);
-        assert_eq!(
-            ExecPolicy::from_threads(4),
-            ExecPolicy::Parallel { threads: 4 }
-        );
-        assert_eq!(
-            ExecPolicy::from_threads(0),
-            ExecPolicy::Parallel { threads: 0 }
-        );
+        assert_eq!(ExecPolicy::from_threads(4), ExecPolicy::parallel(4));
+        assert_eq!(ExecPolicy::from_threads(0), ExecPolicy::parallel(0));
         assert_eq!(ExecPolicy::Sequential.worker_count(100), 1);
-        assert_eq!(ExecPolicy::Parallel { threads: 8 }.worker_count(3), 3);
+        assert_eq!(ExecPolicy::parallel(8).worker_count(3), 3);
         assert!(ExecPolicy::auto().worker_count(64) >= 1);
+    }
+
+    #[test]
+    fn affinity_round_trips_and_composes() {
+        for a in [SiteAffinity::Queue, SiteAffinity::Pinned] {
+            assert_eq!(SiteAffinity::parse(a.name()), Some(a));
+        }
+        assert!(SiteAffinity::parse("stolen").is_none());
+        assert_eq!(
+            ExecPolicy::parallel(4).with_affinity(SiteAffinity::Pinned),
+            ExecPolicy::Parallel {
+                threads: 4,
+                affinity: SiteAffinity::Pinned,
+            }
+        );
+        // Sequential has one worker; affinity is meaningless there.
+        assert_eq!(
+            ExecPolicy::Sequential.with_affinity(SiteAffinity::Pinned),
+            ExecPolicy::Sequential
+        );
     }
 }

@@ -72,8 +72,9 @@ pub mod topology;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::clustering::backend::{Backend, ParallelBackend, RustBackend};
+    pub use crate::clustering::layout::KernelLayout;
     pub use crate::coreset::{Coreset, DistributedConfig};
-    pub use crate::exec::ExecPolicy;
+    pub use crate::exec::{ExecPolicy, SiteAffinity};
     pub use crate::network::{ChannelConfig, LinkModel};
     pub use crate::points::{Dataset, WeightedSet};
     pub use crate::rng::Pcg64;

@@ -16,10 +16,12 @@
 //! ```
 
 use anyhow::{anyhow, bail, Result};
-use distclus::clustering::backend::{Backend, ParallelBackend, RustBackend};
 use distclus::cli::Args;
+use distclus::clustering::backend::{Backend, ParallelBackend, RustBackend};
+use distclus::clustering::layout::KernelLayout;
 use distclus::config::{Algorithm, BackendSpec, ExchangeSpec, ExperimentSpec, TopologySpec};
 use distclus::coordinator::{render_report, run_experiment, series_json};
+use distclus::exec::SiteAffinity;
 use distclus::partition::Scheme;
 use distclus::rng::Pcg64;
 use distclus::runtime::XlaBackend;
@@ -34,6 +36,9 @@ fn usage() -> ! {
          \x20          --algorithm distributed|distributed-tree|combine|combine-tree|zhang-tree\n\
          \x20          --t N --k K --objective kmeans|kmedian --reps N --seed S\n\
          \x20          --backend rust|parallel|xla --threads N (0 = all cores, 1 = sequential)\n\
+         \x20          --layout aos|soa|soa-hilbert|soa-morton (parallel backend's assign-kernel\n\
+         \x20          memory layout; results bit-identical) --affinity queue|pinned (site\n\
+         \x20          worker scheduling; results affinity-invariant)\n\
          \x20          --page-points N (0 = monolithic portions) --link-capacity N (points\n\
          \x20          per edge per round, 0 = unlimited)\n\
          \x20          --degraded \"a-b,c-d @ CAP\" (throttle a link subset; config files also\n\
@@ -50,9 +55,19 @@ fn usage() -> ! {
 
 fn build_backend(spec: &ExperimentSpec, args: &Args) -> Result<Box<dyn Backend>> {
     let artifacts = args.get_or("artifacts", "artifacts");
+    // Only the parallel backend implements the SoA/curve layouts; a
+    // non-default layout on rust/xla would silently run AoS.
+    anyhow::ensure!(
+        spec.backend == BackendSpec::Parallel || spec.layout == KernelLayout::Aos,
+        "--layout {} requires --backend parallel (got {})",
+        spec.layout.name(),
+        spec.backend.name()
+    );
     Ok(match spec.backend {
         BackendSpec::Rust => Box::new(RustBackend),
-        BackendSpec::Parallel => Box::new(ParallelBackend::new(spec.threads)),
+        BackendSpec::Parallel => {
+            Box::new(ParallelBackend::new(spec.threads).layout(spec.layout))
+        }
         BackendSpec::Xla => Box::new(XlaBackend::load(Path::new(&artifacts))?),
     })
 }
@@ -121,6 +136,14 @@ fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
         }
     }
     spec.threads = args.get_parse("threads", spec.threads)?;
+    if let Some(l) = args.get("layout") {
+        spec.layout = KernelLayout::parse(l)
+            .ok_or_else(|| anyhow!("unknown layout '{l}' (aos|soa|soa-hilbert|soa-morton)"))?;
+    }
+    if let Some(a) = args.get("affinity") {
+        spec.affinity = SiteAffinity::parse(a)
+            .ok_or_else(|| anyhow!("unknown affinity '{a}' (queue|pinned)"))?;
+    }
     spec.page_points = args.get_parse("page-points", spec.page_points)?;
     spec.link_capacity = args.get_parse("link-capacity", spec.link_capacity)?;
     if let Some(d) = args.get("degraded") {

@@ -54,11 +54,13 @@ impl Dataset {
 
     /// Gather rows by index into a new dataset.
     pub fn gather(&self, idx: &[usize]) -> Dataset {
-        let mut out = Dataset::with_capacity(idx.len(), self.d);
+        debug_assert!(idx.iter().all(|&i| i < self.n()), "gather index out of range");
+        let d = self.d;
+        let mut data = Vec::with_capacity(idx.len() * d);
         for &i in idx {
-            out.push(self.row(i));
+            data.extend_from_slice(&self.data[i * d..(i + 1) * d]);
         }
-        out
+        Dataset { data, d }
     }
 
     /// Squared Euclidean distance between point `i` and an external point.

@@ -53,7 +53,7 @@ use crate::coreset::combine::{self, CombineConfig};
 use crate::coreset::distributed::{self, allocate_budget, local_cost, DistributedConfig};
 use crate::coreset::zhang::{self, ZhangConfig};
 use crate::coreset::Coreset;
-use crate::exec::{map_sites, ExecPolicy};
+use crate::exec::{map_sites, ExecPolicy, SiteAffinity};
 use crate::network::{ChannelConfig, LinkModel};
 use crate::points::WeightedSet;
 use crate::protocol::{run_composed, stream_exchange};
@@ -427,6 +427,14 @@ impl Scenario {
         self.exec(exec)
     }
 
+    /// Site-worker scheduling affinity of the current exec policy
+    /// (no-op on the sequential policy; results are affinity-invariant
+    /// either way — see [`crate::exec::SiteAffinity`]).
+    pub fn affinity(mut self, affinity: SiteAffinity) -> Scenario {
+        self.exec = self.exec.with_affinity(affinity);
+        self
+    }
+
     /// Drive-loop scheduling mode of the wire phase.
     /// [`DriveMode::ActiveSet`] (the default) only ticks nodes on the
     /// message frontier; [`DriveMode::Dense`] re-scans every node every
@@ -619,8 +627,16 @@ mod tests {
         assert_eq!(s.exec, ExecPolicy::Sequential);
         let s = s.page_points(16).threads(4).seed(9);
         assert_eq!(s.channel.page_points, 16);
-        assert_eq!(s.exec, ExecPolicy::Parallel { threads: 4 });
+        assert_eq!(s.exec, ExecPolicy::parallel(4));
         assert_eq!(s.seed, 9);
+        let s = s.affinity(SiteAffinity::Pinned);
+        assert_eq!(
+            s.exec,
+            ExecPolicy::parallel(4).with_affinity(SiteAffinity::Pinned)
+        );
+        // Affinity on a sequential scenario is a no-op.
+        let s = Scenario::on_graph(generators::star(4)).affinity(SiteAffinity::Pinned);
+        assert_eq!(s.exec, ExecPolicy::Sequential);
     }
 
     #[test]

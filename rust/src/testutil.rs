@@ -71,6 +71,25 @@ pub fn arb_weighted_set(rng: &mut Pcg64, max_n: usize, max_d: usize) -> Weighted
     WeightedSet::new(data, weights)
 }
 
+/// A kernel-bench instance: an `n x d` Gaussian mixture, weights in
+/// (0.1, 1.1] and `k` standard-normal centers — the fixture the
+/// assignment/Lloyd benches and layout tests table over.
+pub fn kernel_instance(
+    rng: &mut Pcg64,
+    n: usize,
+    d: usize,
+    k: usize,
+) -> (Dataset, Vec<f64>, Dataset) {
+    let data = crate::data::synthetic::gaussian_mixture(rng, n, d, k);
+    let weights: Vec<f64> = (0..data.n()).map(|_| rng.uniform() + 0.1).collect();
+    let mut centers = Dataset::with_capacity(k, d);
+    for _ in 0..k {
+        let c: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        centers.push(&c);
+    }
+    (data, weights, centers)
+}
+
 /// A random coreset-portion stand-in of 1..=`max_n` normal points with
 /// weights in (0.1, 1.1], `Arc`-wrapped like a page payload — the
 /// shared generator behind the paging/sketch property tests and the

@@ -1,0 +1,177 @@
+//! Layout-invariance suite: the determinism contract across kernel
+//! memory layouts.
+//!
+//! Contract under test (see `distclus::clustering::layout`): every
+//! `KernelLayout` variant of the parallel backend — AoS scalar, SoA
+//! vectorized, SoA with Hilbert or Morton pre-ordering — produces an
+//! `Assignment` bit-identical to the scalar `RustBackend` oracle at any
+//! worker-thread count. The curve reorder is applied before blocking
+//! and inverted on output, so callers never observe it; the SoA lane
+//! kernel replicates the scalar kernel's f32 summation tree exactly, so
+//! argmin, lowest-index tie-breaks and both cost vectors match to the
+//! bit, not just to a tolerance.
+
+use distclus::clustering::backend::{Backend, ParallelBackend, RustBackend};
+use distclus::clustering::layout::{hilbert_order, invert_permutation, morton_order, ALL_LAYOUTS};
+use distclus::points::Dataset;
+use distclus::prop_assert;
+use distclus::rng::Pcg64;
+use distclus::testutil::{for_all, kernel_instance};
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+#[test]
+fn assignment_bit_identical_across_layouts_and_threads() {
+    // Random shapes, d deliberately spanning "not a multiple of the
+    // 8-lane width" and k spanning one vs many center blocks.
+    for_all(
+        12,
+        17,
+        |rng| {
+            let n = 50 + rng.below(1_200);
+            let d = 1 + rng.below(40);
+            let k = 1 + rng.below(200);
+            let (points, weights, centers) = kernel_instance(rng, n, d, k);
+            (points, weights, centers)
+        },
+        |(points, weights, centers)| {
+            let oracle = RustBackend.assign(points, weights, centers);
+            for layout in ALL_LAYOUTS {
+                for threads in THREADS {
+                    let backend = ParallelBackend::new(threads).layout(layout);
+                    let got = backend.assign(points, weights, centers);
+                    prop_assert!(
+                        got.assign == oracle.assign,
+                        "argmin diverged: layout {} threads {threads} (n={} d={} k={})",
+                        layout.name(),
+                        points.n(),
+                        points.d,
+                        centers.n()
+                    );
+                    prop_assert!(
+                        got.kmeans_cost == oracle.kmeans_cost,
+                        "kmeans costs diverged: layout {} threads {threads}",
+                        layout.name()
+                    );
+                    prop_assert!(
+                        got.kmedian_cost == oracle.kmedian_cost,
+                        "kmedian costs diverged: layout {} threads {threads}",
+                        layout.name()
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tie_heavy_instances_break_ties_to_the_lowest_index() {
+    // Integer-grid points with every center duplicated and most points
+    // sitting exactly on a center: distances tie exactly in f32, so any
+    // deviation from the scalar strict-< scan order shows up here.
+    let mut rng = Pcg64::seed_from(23);
+    let d = 11; // not a multiple of the lane width
+    let k = 24;
+    let mut centers = Dataset::with_capacity(2 * k, d);
+    let mut base = Vec::new();
+    for _ in 0..k {
+        let c: Vec<f32> = (0..d).map(|_| rng.below(4) as f32).collect();
+        base.push(c);
+    }
+    for c in &base {
+        centers.push(c);
+    }
+    for c in &base {
+        centers.push(c); // duplicate block: indices k..2k never win
+    }
+    let n = 900;
+    let mut points = Dataset::with_capacity(n, d);
+    for i in 0..n {
+        if i % 3 == 0 {
+            // Off-grid point: ties only through coordinate symmetry.
+            let p: Vec<f32> = (0..d).map(|_| rng.below(4) as f32 + 0.5).collect();
+            points.push(&p);
+        } else {
+            // Exactly on a (duplicated) center.
+            points.push(&base[rng.below(k)]);
+        }
+    }
+    let weights = vec![1.0f64; n];
+    let oracle = RustBackend.assign(&points, &weights, &centers);
+    assert!(
+        oracle.assign.iter().all(|&c| (c as usize) < k),
+        "oracle must already break ties below the duplicate block"
+    );
+    for layout in ALL_LAYOUTS {
+        for threads in THREADS {
+            let backend = ParallelBackend::new(threads).layout(layout);
+            let got = backend.assign(&points, &weights, &centers);
+            assert_eq!(
+                got.assign,
+                oracle.assign,
+                "tie-break diverged: layout {} threads {threads}",
+                layout.name()
+            );
+            assert_eq!(got.kmeans_cost, oracle.kmeans_cost);
+            assert_eq!(got.kmedian_cost, oracle.kmedian_cost);
+        }
+    }
+}
+
+#[test]
+fn lloyd_step_bit_identical_across_layouts_and_threads() {
+    let mut rng = Pcg64::seed_from(31);
+    let (points, weights, centers) = kernel_instance(&mut rng, 4_000, 21, 48);
+    let oracle = RustBackend.lloyd_step(&points, &weights, &centers);
+    for layout in ALL_LAYOUTS {
+        for threads in THREADS {
+            let backend = ParallelBackend::new(threads).layout(layout);
+            let got = backend.lloyd_step(&points, &weights, &centers);
+            assert_eq!(got.sums, oracle.sums, "layout {}", layout.name());
+            assert_eq!(got.counts, oracle.counts, "layout {}", layout.name());
+            assert_eq!(got.cost, oracle.cost, "layout {}", layout.name());
+        }
+    }
+}
+
+#[test]
+fn curve_orders_round_trip_on_known_grids() {
+    // 2D: a 4x4 grid; 3D: a 3x3x3 grid. Both curve orders must be true
+    // permutations whose inverse composes to the identity.
+    let mut grid2 = Dataset::with_capacity(16, 2);
+    for y in 0..4 {
+        for x in 0..4 {
+            grid2.push(&[x as f32, y as f32]);
+        }
+    }
+    let mut grid3 = Dataset::with_capacity(27, 3);
+    for z in 0..3 {
+        for y in 0..3 {
+            for x in 0..3 {
+                grid3.push(&[x as f32, y as f32, z as f32]);
+            }
+        }
+    }
+    for points in [&grid2, &grid3] {
+        for order in [hilbert_order(points), morton_order(points)] {
+            let mut seen = vec![false; points.n()];
+            for &i in &order {
+                assert!(!seen[i], "duplicate index {i} in curve order");
+                seen[i] = true;
+            }
+            let inv = invert_permutation(&order);
+            for (pos, &i) in order.iter().enumerate() {
+                assert_eq!(inv[i], pos, "perm o inv-perm != id at {i}");
+            }
+        }
+    }
+    // Hilbert on the 4x4 grid is a unit-step walk: consecutive points
+    // are grid neighbours (the locality the SoA tiles bank on).
+    let order = hilbert_order(&grid2);
+    for w in order.windows(2) {
+        let (a, b) = (grid2.row(w[0]), grid2.row(w[1]));
+        let l1 = (a[0] - b[0]).abs() + (a[1] - b[1]).abs();
+        assert_eq!(l1, 1.0, "hilbert walk must step one cell at a time");
+    }
+}

@@ -204,16 +204,16 @@ fn acceptance_paged_peak_quarter_of_monolithic_at_t2048() {
         &locals,
         &cfg,
         channel.clone(),
-        ExecPolicy::Parallel { threads: 2 },
+        ExecPolicy::parallel(2),
     );
     let m2 = graph_run(
         &g,
         &locals,
         &cfg,
         ChannelConfig::default(),
-        ExecPolicy::Parallel { threads: 2 },
+        ExecPolicy::parallel(2),
     );
-    let p8 = graph_run(&g, &locals, &cfg, channel, ExecPolicy::Parallel { threads: 8 });
+    let p8 = graph_run(&g, &locals, &cfg, channel, ExecPolicy::parallel(8));
     assert_eq!(p2.centers, m2.centers, "paged == monolithic at 2 threads");
     assert_eq!(p2.coreset.set, m2.coreset.set);
     assert_eq!(p2.comm_points, expected);

@@ -35,7 +35,7 @@ fn portions_at(threads: usize, locals: &[WeightedSet]) -> Vec<Coreset> {
         &cfg,
         &RustBackend,
         &mut rng,
-        ExecPolicy::Parallel { threads },
+        ExecPolicy::parallel(threads),
     )
 }
 
@@ -75,9 +75,7 @@ fn full_protocol_identical_across_thread_counts_and_backends() {
             &cfg,
             &backend,
             &mut rng,
-            ExecPolicy::Parallel {
-                threads: site_threads,
-            },
+            ExecPolicy::parallel(site_threads),
         )
         .unwrap()
     };
@@ -114,9 +112,7 @@ fn paged_pipeline_meters_are_thread_count_invariant() {
     let run = |site_threads: usize| {
         Scenario::on_graph(g.clone())
             .channel(channel.clone())
-            .exec(ExecPolicy::Parallel {
-                threads: site_threads,
-            })
+            .exec(ExecPolicy::parallel(site_threads))
             .seed(21)
             .run(&Distributed(cfg), &locals, &RustBackend)
             .unwrap()

@@ -74,7 +74,7 @@ fn builder_matches_legacy_for_all_five_algorithms() {
 
     // Exec-capable legacy entries × 1/2/8 worker threads.
     for threads in [1usize, 2, 8] {
-        let exec = ExecPolicy::Parallel { threads };
+        let exec = ExecPolicy::parallel(threads);
         let what = format!("distributed/graph t={threads}");
         let mut rng = Pcg64::seed_from(7);
         let legacy =
@@ -130,7 +130,7 @@ fn builder_matches_legacy_for_all_five_algorithms() {
     // entry to compare against) — results must be thread-invariant.
     let combine_at = |threads: usize| {
         Scenario::on_graph(g.clone())
-            .exec(ExecPolicy::Parallel { threads })
+            .exec(ExecPolicy::parallel(threads))
             .seed(13)
             .run(&Combine(ccfg), &locals, &RustBackend)
             .unwrap()

@@ -153,7 +153,7 @@ fn exact_mode_is_bit_identical_to_materialized_construction() {
         ..Default::default()
     };
     for threads in [1usize, 2, 8] {
-        let exec = ExecPolicy::Parallel { threads };
+        let exec = ExecPolicy::parallel(threads);
         let (want_set, want_centers) = materialized(&locals, &cfg, exec, 23);
         for channel in [ChannelConfig::default(), ChannelConfig::uniform(64, 64)] {
             let got = run(
@@ -292,7 +292,7 @@ fn acceptance_star_page64_t2048_collector_memory() {
         &cfg,
         channel.clone(),
         SketchPlan::exact(),
-        ExecPolicy::Parallel { threads: 1 },
+        ExecPolicy::parallel(1),
         31,
     );
     let p2 = run(
@@ -301,7 +301,7 @@ fn acceptance_star_page64_t2048_collector_memory() {
         &cfg,
         channel.clone(),
         SketchPlan::exact(),
-        ExecPolicy::Parallel { threads: 2 },
+        ExecPolicy::parallel(2),
         31,
     );
     let p8 = run(
@@ -310,14 +310,14 @@ fn acceptance_star_page64_t2048_collector_memory() {
         &cfg,
         channel,
         SketchPlan::exact(),
-        ExecPolicy::Parallel { threads: 8 },
+        ExecPolicy::parallel(8),
         31,
     );
     assert_eq!(p1.centers, p2.centers);
     assert_eq!(p2.centers, p8.centers);
     assert_eq!(p2.coreset.set, p8.coreset.set);
     let (want_set, want_centers) =
-        materialized(&locals, &cfg, ExecPolicy::Parallel { threads: 2 }, 31);
+        materialized(&locals, &cfg, ExecPolicy::parallel(2), 31);
     assert_eq!(p2.coreset.set, want_set);
     assert_eq!(p2.centers, want_centers);
 }
