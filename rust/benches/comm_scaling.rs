@@ -32,7 +32,7 @@ use distclus::protocol::{broadcast_down, converge_cast, flood, flood_multi};
 use distclus::rng::Pcg64;
 use distclus::scenario::{BuildCtx, CoresetAlgorithm, Distributed, Exchange, Scenario};
 use distclus::sketch::SketchPlan;
-use distclus::testutil::{mixture_sites, overlay_acceptance, unit_portion};
+use distclus::testutil::{mixture_sites, overlay_acceptance_with, unit_portion};
 use distclus::topology::{diameter, generators, SpanningTree};
 use std::sync::Arc;
 
@@ -100,6 +100,7 @@ fn main() -> anyhow::Result<()> {
     let smoke = args.has("smoke");
     let huge = args.has("huge");
     let json_out = args.get("json").map(str::to_string);
+    let trace_out = args.get("trace").map(str::to_string);
     // `cargo bench` appends `--bench` to every harness=false binary.
     let _ = args.has("bench");
     args.reject_unknown()?;
@@ -315,7 +316,13 @@ fn main() -> anyhow::Result<()> {
     ]);
     // The fixture (shared with tests/overlay.rs, so the operating point
     // lives in one place) asserts the bound + quality contract itself.
-    let a = overlay_acceptance(if smoke { 4_000 } else { 12_000 });
+    // With --trace, the overlay run records its event log (counts-only,
+    // results unchanged) and writes it as JSONL for `trace_view`.
+    let a = overlay_acceptance_with(if smoke { 4_000 } else { 12_000 }, trace_out.is_some());
+    if let (Some(path), Some(log)) = (&trace_out, &a.overlay.trace) {
+        std::fs::write(path, log.to_jsonl())?;
+        eprintln!("wrote {path} ({} trace events)", log.events.len());
+    }
     for (label, run, cost) in [
         ("flooded", &a.flooded, a.flooded_cost),
         ("overlay", &a.overlay, a.overlay_cost),

@@ -1,0 +1,117 @@
+//! `trace_view` — render a captured run trace (`--trace <path>` JSONL)
+//! as a human-readable report:
+//!
+//! - an ASCII round timeline of the four protocol phases (global
+//!   first/last round per phase, overlap visible);
+//! - per-phase round and delivered-point shares;
+//! - the top-10 hottest directed edges by delivered points;
+//! - the merge-and-reduce fold-tree depth;
+//! - a greppable conservation line checking per-edge flow totals
+//!   against the run's recorded `comm_points`
+//!   (`conservation: ... OK|MISMATCH`).
+//!
+//! ```text
+//! trace_view run.jsonl [--top N] [--width W]
+//! ```
+//!
+//! Exits non-zero when the conservation check fails, so CI can gate on
+//! it directly.
+
+use anyhow::{bail, Context, Result};
+use distclus::cli::Args;
+use distclus::metrics::plot::{render_timeline, PhaseSpan};
+use distclus::metrics::Table;
+use distclus::trace::{TraceEvent, TraceLog};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .context("usage: trace_view <trace.jsonl> [--top N] [--width W]")?;
+    let top: usize = args.get_parse("top", 10)?;
+    let width: usize = args.get_parse("width", 48)?;
+    args.reject_unknown()?;
+
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let log = TraceLog::from_jsonl(&text)?;
+    println!("# trace: {path} ({} events)", log.events.len());
+
+    let (comm_points, rounds, dropped) = match log.run_summary() {
+        Some(s) => s,
+        None => bail!("{path}: no summary event — trace is incomplete"),
+    };
+    println!("run: comm_points={comm_points} rounds={rounds} dropped={dropped}");
+
+    // Phase timeline over the global round axis.
+    let spans = log.phase_spans();
+    let bars: Vec<PhaseSpan> = spans
+        .iter()
+        .map(|&(phase, start, end)| PhaseSpan {
+            label: phase.name().to_string(),
+            start,
+            end,
+        })
+        .collect();
+    println!("\n## phase timeline\n");
+    print!("{}", render_timeline(&bars, rounds as u64, width));
+
+    // Per-phase round/point shares. Delivered points within overlapping
+    // spans double-count by design: overlap is real under paging.
+    let total_delivered: usize = log
+        .events
+        .iter()
+        .filter_map(|ev| match ev {
+            TraceEvent::Round {
+                delivered_points, ..
+            } => Some(*delivered_points),
+            _ => None,
+        })
+        .sum();
+    let mut share_table = Table::new(&["phase", "rounds", "round share", "points", "point share"]);
+    for &(phase, start, end) in &spans {
+        let span_rounds = end - start + 1;
+        let span_points = log.delivered_in_rounds(start, end);
+        let pct = |part: f64, whole: f64| {
+            if whole > 0.0 {
+                format!("{:.1}%", 100.0 * part / whole)
+            } else {
+                "-".to_string()
+            }
+        };
+        share_table.row(vec![
+            phase.name().into(),
+            span_rounds.to_string(),
+            pct(span_rounds as f64, rounds.max(1) as f64),
+            span_points.to_string(),
+            pct(span_points as f64, total_delivered as f64),
+        ]);
+    }
+    println!("\n## phase shares\n");
+    println!("{}", share_table.render());
+
+    // Hottest directed edges.
+    let edges = log.edge_totals();
+    let mut edge_table = Table::new(&["edge", "delivered points"]);
+    for ((from, to), points) in edges.iter().take(top) {
+        edge_table.row(vec![format!("{from}->{to}"), points.to_string()]);
+    }
+    println!("\n## top {} edges ({} active)\n", top.min(edges.len()), edges.len());
+    println!("{}", edge_table.render());
+
+    println!("\nfold tree depth: {}", log.fold_depth());
+
+    // Self-check: every point charged to the run must appear in exactly
+    // one per-edge flow record, delivered or dropped.
+    let (flow_delivered, flow_dropped) = log.flow_totals();
+    let ok = flow_delivered + flow_dropped == comm_points && flow_dropped == dropped;
+    println!(
+        "conservation: delivered={flow_delivered} dropped={flow_dropped} comm_points={comm_points} {}",
+        if ok { "OK" } else { "MISMATCH" }
+    );
+    if !ok {
+        bail!("trace flow totals do not reconcile with the run summary");
+    }
+    Ok(())
+}

@@ -334,6 +334,10 @@ pub struct ExperimentSpec {
     /// Bucket capacity of the merge-and-reduce sketch in points (`0` =
     /// auto; ignored in exact mode).
     pub bucket_points: usize,
+    /// Capture a run trace and write it (as JSONL) to this path —
+    /// `None` (the default) records nothing and costs nothing. Tracing
+    /// is counts-only and never changes results (see [`crate::trace`]).
+    pub trace: Option<String>,
 }
 
 impl Default for ExperimentSpec {
@@ -360,6 +364,7 @@ impl Default for ExperimentSpec {
             exchange: ExchangeSpec::Flooded,
             sketch: SketchMode::Exact,
             bucket_points: 0,
+            trace: None,
         }
     }
 }
@@ -459,6 +464,7 @@ impl ExperimentSpec {
                         .ok_or_else(|| anyhow!("unknown sketch '{v}' (exact|merge-reduce)"))?
                 }
                 "bucket_points" => spec.bucket_points = v.parse()?,
+                "trace" => spec.trace = Some(v.clone()),
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -560,6 +566,7 @@ impl ExperimentSpec {
             .channel(self.channel())
             .sketch(self.sketch_plan())
             .exec(self.exec_policy())
+            .trace(self.trace.is_some())
             .seed(self.seed))
     }
 
@@ -799,6 +806,13 @@ mod tests {
         assert_eq!(spec.sketch_plan(), SketchPlan::merge_reduce(256));
 
         assert!(ExperimentSpec::from_config("sketch = lossy\n").is_err());
+    }
+
+    #[test]
+    fn trace_key_parses_and_defaults_off() {
+        assert_eq!(ExperimentSpec::default().trace, None);
+        let spec = ExperimentSpec::from_config("trace = \"run.jsonl\"\n").unwrap();
+        assert_eq!(spec.trace.as_deref(), Some("run.jsonl"));
     }
 
     #[test]

@@ -51,6 +51,11 @@ pub struct ExperimentResult {
     pub coreset_size: Summary,
     /// Mean wall-clock seconds per repetition.
     pub secs_per_rep: f64,
+    /// The first repetition's service meters (scheduling counters, and
+    /// — when tracing is on — the trace-derived aggregates), keyed by
+    /// the [`crate::trace::keys`] registry. Counts, not summaries: one
+    /// representative run's exact values.
+    pub meters: std::collections::BTreeMap<&'static str, u64>,
 }
 
 /// Load or generate the dataset for a spec.
@@ -189,6 +194,7 @@ impl Session {
         let mut error_factors = Vec::with_capacity(spec.reps);
         let mut sizes = Vec::with_capacity(spec.reps);
         let mut sketch = crate::sketch::SketchMode::Exact.name();
+        let mut meters = std::collections::BTreeMap::new();
         let sw = crate::metrics::Stopwatch::start();
         for rep in 0..spec.reps {
             let rep_seed = spec.seed.wrapping_add(1_000_003 * (rep as u64 + 1));
@@ -197,6 +203,14 @@ impl Session {
             // Keep RNG streams aligned with the pre-Session behaviour:
             // the baseline solve used to consume from this stream first.
             let run = run_once(spec, &self.data, backend, &mut rng)?;
+            if rep == 0 {
+                meters = run.meters.clone();
+                // The representative trace: repetition 0's event log,
+                // written where the spec asked for it.
+                if let (Some(path), Some(log)) = (&spec.trace, &run.trace) {
+                    std::fs::write(path, log.to_jsonl())?;
+                }
+            }
             let q = evaluate_quality(&self.global, &run, spec.objective, baseline);
             ratios.push(q.cost_ratio);
             comms.push(run.comm_points as f64);
@@ -228,6 +242,7 @@ impl Session {
             links: spec.link_model().describe(),
             coreset_size: Summary::of(&sizes),
             secs_per_rep: sw.secs() / spec.reps as f64,
+            meters,
         })
     }
 }
@@ -423,6 +438,38 @@ mod tests {
         spec.bucket_points = 512;
         let err = run_experiment(&spec, &RustBackend).unwrap_err();
         assert!(err.to_string().contains("bucket-points 512"), "{err}");
+    }
+
+    #[test]
+    fn trace_spec_writes_rep0_jsonl_and_surfaces_meters() {
+        use crate::trace::keys;
+        let path = std::env::temp_dir()
+            .join(format!("distclus_trace_{}.jsonl", std::process::id()));
+        let mut spec = small_spec(Algorithm::Distributed);
+        spec.reps = 1;
+        spec.trace = Some(path.to_string_lossy().into_owned());
+        let res = run_experiment(&spec, &RustBackend).unwrap();
+        assert!(res.meters[keys::SCHED_TICKS] > 0);
+        assert!(res.meters.contains_key(keys::TRACE_EVENTS));
+        // The written JSONL is self-checking: per-edge flow totals
+        // reconcile against the run's recorded communication.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let log = crate::trace::TraceLog::from_jsonl(&text).unwrap();
+        let (delivered, dropped) = log.flow_totals();
+        let (comm, _, summary_dropped) = log.run_summary().unwrap();
+        assert_eq!(delivered + dropped, comm);
+        assert_eq!(dropped, summary_dropped);
+        assert_eq!(comm as f64, res.comm.mean);
+        let _ = std::fs::remove_file(&path);
+
+        // Untraced runs still surface the always-on scheduling meters
+        // but none of the trace-derived ones.
+        let mut spec = small_spec(Algorithm::Distributed);
+        spec.reps = 1;
+        let res = run_experiment(&spec, &RustBackend).unwrap();
+        assert!(res.meters[keys::SCHED_TICKS] > 0);
+        assert!(res.meters.contains_key(keys::RECV_DRAINS));
+        assert!(!res.meters.contains_key(keys::TRACE_EVENTS));
     }
 
     #[test]

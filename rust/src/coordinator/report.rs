@@ -4,8 +4,12 @@
 use super::ExperimentResult;
 use crate::json::{build, Value};
 use crate::metrics::Table;
+use crate::trace::keys;
 
-/// Render a set of experiment results as a markdown table.
+/// Render a set of experiment results as a markdown table, followed by
+/// one `meters:` line per result that has service meters — keys in
+/// [`keys::ALL`] registry order, so reports stay diffable as meters
+/// are added.
 pub fn render_report(results: &[ExperimentResult]) -> String {
     let mut t = Table::new(&[
         "experiment",
@@ -33,7 +37,18 @@ pub fn render_report(results: &[ExperimentResult]) -> String {
             format!("{:.2}", r.secs_per_rep),
         ]);
     }
-    t.render()
+    let mut out = t.render();
+    for r in results {
+        if r.meters.is_empty() {
+            continue;
+        }
+        let line: Vec<String> = keys::ALL
+            .iter()
+            .filter_map(|&(key, _)| r.meters.get(key).map(|v| format!("{key}={v}")))
+            .collect();
+        out.push_str(&format!("\nmeters {}: {}", r.label, line.join(" ")));
+    }
+    out
 }
 
 /// Encode results as a JSON array (one object per experiment) for the
@@ -55,6 +70,17 @@ pub fn series_json(results: &[ExperimentResult]) -> Value {
                     ("links", build::s(r.links.clone())),
                     ("coreset_size", build::num(r.coreset_size.mean)),
                     ("reps", build::num(r.ratio.n as f64)),
+                    (
+                        "meters",
+                        build::obj(
+                            keys::ALL
+                                .iter()
+                                .filter_map(|&(key, _)| {
+                                    r.meters.get(key).map(|&v| (key, build::num(v as f64)))
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ])
             })
             .collect(),
@@ -78,6 +104,9 @@ mod tests {
             links: "cap=64; 1->0@4".into(),
             coreset_size: Summary::of(&[520.0]),
             secs_per_rep: 0.5,
+            meters: [(keys::SCHED_TICKS, 42u64), (keys::RECV_DRAINS, 7u64)]
+                .into_iter()
+                .collect(),
         }
     }
 
@@ -88,7 +117,11 @@ mod tests {
         assert!(out.contains("1.0750"));
         assert!(out.contains("err-factor"));
         assert!(out.contains("1.2500"));
-        assert_eq!(out.lines().count(), 4);
+        // Table (header + rule + 2 rows) plus one meters line per result.
+        assert_eq!(out.lines().count(), 6);
+        // Meters emit in registry order, not BTreeMap (alphabetical)
+        // order: sched_ticks is registered before recv_drains.
+        assert!(out.contains("meters a/b-c/d: sched_ticks=42 recv_drains=7"));
     }
 
     #[test]
@@ -105,5 +138,8 @@ mod tests {
             Some("cap=64; 1->0@4"),
             "the per-edge link profile must survive into the JSON series"
         );
+        let meters = arr[0].get("meters").unwrap();
+        assert_eq!(meters.get("sched_ticks").unwrap().as_usize(), Some(42));
+        assert_eq!(meters.get("recv_drains").unwrap().as_usize(), Some(7));
     }
 }

@@ -24,6 +24,7 @@ use crate::coreset::Coreset;
 use crate::points::{Dataset, WeightedSet};
 use crate::rng::Pcg64;
 use crate::sketch::{SketchMode, SketchPlan};
+use crate::trace::Tracer;
 
 /// One site's streaming state.
 struct SiteState {
@@ -49,6 +50,13 @@ pub struct EpochReport {
     /// epoch's rebuild (0 on skip epochs) — the full coreset under the
     /// exact plan, `O(levels · bucket_points)` under merge-and-reduce.
     pub sketch_peak: usize,
+    /// Epochs since the global coreset was last rebuilt — 0 on a
+    /// rebuild epoch, growing by one per skip (the coreset staleness
+    /// the `staleness_epochs` registry key documents).
+    pub staleness_epochs: usize,
+    /// Rebuilds per epoch so far, in parts per million (1_000_000 =
+    /// rebuilt every epoch) — the lazy-maintenance savings at a glance.
+    pub rebuild_rate_ppm: u64,
 }
 
 /// Streaming maintenance driver over `n` sites.
@@ -71,6 +79,10 @@ pub struct StreamingCoordinator {
     coreset: Option<Coreset>,
     epochs: usize,
     rebuilds: usize,
+    epochs_since_rebuild: usize,
+    /// Optional epoch-event observer (counts only; never alters the
+    /// maintenance decisions or RNG draws).
+    tracer: Option<Tracer>,
 }
 
 impl StreamingCoordinator {
@@ -92,6 +104,8 @@ impl StreamingCoordinator {
             coreset: None,
             epochs: 0,
             rebuilds: 0,
+            epochs_since_rebuild: 0,
+            tracer: None,
         }
     }
 
@@ -99,6 +113,13 @@ impl StreamingCoordinator {
     /// union (builder-style).
     pub fn with_sketch(mut self, sketch: SketchPlan) -> Self {
         self.sketch = sketch;
+        self
+    }
+
+    /// Record one [`crate::trace::TraceEvent::Epoch`] per processed
+    /// epoch into `tracer` (builder-style). Observation only.
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = Some(tracer);
         self
     }
 
@@ -192,11 +213,21 @@ impl StreamingCoordinator {
                 s.summary = Some(summary);
             }
         }
+        self.epochs_since_rebuild = if rebuilt {
+            0
+        } else {
+            self.epochs_since_rebuild + 1
+        };
+        if let Some(t) = &self.tracer {
+            t.epoch(self.epochs, rebuilt, self.epochs_since_rebuild, comm);
+        }
         EpochReport {
             rebuilt,
             comm_points: comm,
             drift: if drift.is_finite() { drift } else { 1.0 },
             sketch_peak,
+            staleness_epochs: self.epochs_since_rebuild,
+            rebuild_rate_ppm: (self.rebuilds as u64 * 1_000_000) / self.epochs as u64,
         }
     }
 }
@@ -341,6 +372,47 @@ mod tests {
         let global = WeightedSet::union(bounded.sites.iter().map(|s| &s.data));
         let ratio = coreset.set.total_weight() / global.total_weight();
         assert!((ratio - 1.0).abs() < 0.3, "mass ratio {ratio}");
+    }
+
+    #[test]
+    fn epoch_meters_track_staleness_and_rebuild_rate() {
+        use crate::trace::{TraceEvent, Tracer};
+        let mut rng = Pcg64::seed_from(7);
+        let tracer = Tracer::new();
+        let mut coord =
+            StreamingCoordinator::new(3, 5, cfg(), 0.5).with_tracer(tracer.clone());
+        feed(&mut coord, &mut rng, 500, 0.0);
+        let first = coord.epoch(&RustBackend, &mut rng);
+        assert!(first.rebuilt);
+        assert_eq!(first.staleness_epochs, 0, "a rebuild resets staleness");
+        assert_eq!(first.rebuild_rate_ppm, 1_000_000, "1 rebuild / 1 epoch");
+        let mut last = first;
+        for _ in 0..2 {
+            feed(&mut coord, &mut rng, 20, 0.0);
+            last = coord.epoch(&RustBackend, &mut rng);
+        }
+        if !last.rebuilt {
+            assert!(last.staleness_epochs > 0, "skips accumulate staleness");
+            assert!(last.rebuild_rate_ppm < 1_000_000);
+        }
+        // One Epoch event per processed epoch, mirroring the reports.
+        let epochs: Vec<_> = tracer
+            .snapshot()
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Epoch {
+                    epoch,
+                    rebuilt,
+                    staleness_epochs,
+                    ..
+                } => Some((*epoch, *rebuilt, *staleness_epochs)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(epochs.len(), 3);
+        assert_eq!(epochs[0], (1, true, 0));
+        assert_eq!(epochs[2].2, last.staleness_epochs);
     }
 
     #[test]

@@ -68,6 +68,7 @@ pub mod scenario;
 pub mod sketch;
 pub mod testutil;
 pub mod topology;
+pub mod trace;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
@@ -81,4 +82,5 @@ pub mod prelude {
     pub use crate::scenario::{CoresetAlgorithm, Scenario};
     pub use crate::sketch::{SketchMode, SketchPlan};
     pub use crate::topology::Graph;
+    pub use crate::trace::{TraceLog, Tracer};
 }

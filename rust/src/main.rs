@@ -48,6 +48,9 @@ fn usage() -> ! {
          \x20          --sketch merge-reduce and --page-points > 0)\n\
          \x20          --sketch exact|merge-reduce (collector folding; merge-reduce bounds\n\
          \x20          collector memory and reduces at tree relays) --bucket-points N (0 = auto)\n\
+         \x20          --trace OUT.jsonl (record the first repetition's run trace — phase spans,\n\
+         \x20          per-round edge flows, fold events — as JSONL; render with `trace_view`;\n\
+         \x20          never changes results)\n\
          \x20          --artifacts DIR --config FILE --json OUT.json"
     );
     std::process::exit(2)
@@ -158,6 +161,9 @@ fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
             .ok_or_else(|| anyhow!("unknown sketch '{s}' (exact|merge-reduce)"))?;
     }
     spec.bucket_points = args.get_parse("bucket-points", spec.bucket_points)?;
+    if let Some(path) = args.get("trace") {
+        spec.trace = Some(path.to_string());
+    }
     Ok(spec)
 }
 

@@ -1,6 +1,8 @@
 //! Terminal line plots: render the paper's figures (cost ratio vs
 //! communication) as ASCII charts so `figures` output is an actual
-//! figure, not only a table.
+//! figure, not only a table. Also home to the phase-span timeline
+//! ([`render_timeline`]) the `trace_view` binary draws from a captured
+//! [`crate::trace::TraceLog`].
 
 /// One plotted series.
 #[derive(Clone, Debug)]
@@ -148,6 +150,66 @@ pub fn render(series: &[Series], cfg: &PlotConfig) -> String {
     out
 }
 
+/// One labelled interval of a round timeline (`start ≤ end`, both
+/// inclusive, in network rounds).
+#[derive(Clone, Debug)]
+pub struct PhaseSpan {
+    /// Row label (e.g. a phase name).
+    pub label: String,
+    /// First round the span covers.
+    pub start: u64,
+    /// Last round the span covers (inclusive).
+    pub end: u64,
+}
+
+/// Render labelled round spans as one ASCII Gantt row per span over a
+/// common `[0, total_rounds]` axis — overlapping rows make phase
+/// overlap visible at a glance. `width` is the character width of the
+/// bar area (clamped to at least 8); rows render in input order.
+pub fn render_timeline(spans: &[PhaseSpan], total_rounds: u64, width: usize) -> String {
+    if spans.is_empty() {
+        return "(no spans)".to_string();
+    }
+    let width = width.max(8);
+    // At least as wide as the closing "rounds" axis label.
+    let label_w = spans
+        .iter()
+        .map(|s| s.label.len())
+        .max()
+        .unwrap_or(0)
+        .max("rounds".len());
+    // Axis covers every span even if a caller under-reports the total.
+    let horizon = spans
+        .iter()
+        .map(|s| s.end)
+        .fold(total_rounds.max(1), u64::max);
+    let cell = |round: u64| -> usize {
+        ((round as f64 / horizon as f64) * (width - 1) as f64).round() as usize
+    };
+    let mut out = String::new();
+    for s in spans {
+        let (a, b) = (cell(s.start.min(s.end)), cell(s.start.max(s.end)));
+        let mut bar: Vec<char> = vec!['.'; width];
+        for c in bar.iter_mut().take(b + 1).skip(a) {
+            *c = '#';
+        }
+        out.push_str(&format!(
+            "{:<label_w$} |{}| r{}..{}\n",
+            s.label,
+            bar.into_iter().collect::<String>(),
+            s.start,
+            s.end,
+        ));
+    }
+    out.push_str(&format!(
+        "{:<label_w$} |0{:>pad$}|\n",
+        "rounds",
+        horizon,
+        pad = width - 1,
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +271,47 @@ mod tests {
             .parse()
             .unwrap();
         assert!(label > 8.0, "top marker row label {label}");
+    }
+
+    #[test]
+    fn timeline_rows_cover_spans() {
+        let spans = [
+            PhaseSpan {
+                label: "cost-flood".into(),
+                start: 0,
+                end: 4,
+            },
+            PhaseSpan {
+                label: "converge-fold".into(),
+                start: 4,
+                end: 9,
+            },
+        ];
+        let out = render_timeline(&spans, 10, 20);
+        let rows: Vec<&str> = out.lines().collect();
+        assert_eq!(rows.len(), 3, "two span rows plus the axis row");
+        assert!(rows[0].starts_with("cost-flood"));
+        assert!(rows[0].contains('#') && rows[0].ends_with("r0..4"));
+        assert!(rows[1].contains("r4..9"));
+        assert!(rows[2].contains("rounds"));
+        // First row's bar starts at the left edge; second row's doesn't.
+        let bar = |r: &str| r.split('|').nth(1).unwrap().to_string();
+        assert!(bar(rows[0]).starts_with('#'));
+        assert!(bar(rows[1]).starts_with('.'));
+    }
+
+    #[test]
+    fn timeline_empty_and_degenerate_are_safe() {
+        assert_eq!(render_timeline(&[], 10, 20), "(no spans)");
+        // Zero total rounds and zero-length span must not divide by zero.
+        let spans = [PhaseSpan {
+            label: "solve".into(),
+            start: 0,
+            end: 0,
+        }];
+        let out = render_timeline(&spans, 0, 0);
+        assert!(out.contains("solve"));
+        assert!(out.contains('#'));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use super::{Payload, TranscriptEntry};
 use crate::topology::Graph;
+use crate::trace::Tracer;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::Arc;
 
@@ -199,6 +200,9 @@ pub struct Network {
     loss: f64,
     loss_rng: Option<crate::rng::Pcg64>,
     dropped: usize,
+    /// Optional counts-only tracer: per-edge flow and per-round records
+    /// (`None` = tracing off, the default — no overhead on this path).
+    tracer: Option<Tracer>,
 }
 
 impl Network {
@@ -227,7 +231,19 @@ impl Network {
             loss: 0.0,
             loss_rng: None,
             dropped: 0,
+            tracer: None,
         }
+    }
+
+    /// Attach a [`Tracer`]: every subsequent [`Network::step`] records
+    /// one flow event per active directed edge (delivered / deferred /
+    /// dropped points) and one round record (delivered total, in-flight
+    /// points), and pushes the current round number into the tracer so
+    /// machines can stamp their own events. Counts only — delivery,
+    /// metering and RNG draws are bit-identical with or without it.
+    pub fn with_tracer(mut self, tracer: Option<Tracer>) -> Self {
+        self.tracer = tracer;
+        self
     }
 
     /// Enable i.i.d. per-transmission loss with probability `p`
@@ -386,6 +402,9 @@ impl Network {
     /// order — a deterministic O(active-edges + deliveries) round.
     pub fn step(&mut self) -> usize {
         self.round += 1;
+        if let Some(t) = &self.tracer {
+            t.set_round(self.round as u64);
+        }
         let mut active = std::mem::take(&mut self.active_edges);
         active.sort_unstable();
         debug_assert!(
@@ -393,6 +412,7 @@ impl Network {
             "active edge listed twice"
         );
         let mut delivered_count = 0usize;
+        let mut delivered_points_total = 0usize;
         let mut delivered_nodes: Vec<usize> = Vec::new();
         let mut still_active: Vec<usize> = Vec::new();
         let loss = self.loss;
@@ -401,6 +421,8 @@ impl Network {
             let cap = self.link.capacity(from, to);
             let q = self.queues.get_mut(&eid).expect("active edge has a queue");
             let mut spent = 0usize;
+            let mut edge_delivered = 0usize;
+            let mut edge_dropped = 0usize;
             #[cfg(debug_assertions)]
             let mut last_seq: Option<u64> = None;
             while let Some((_seq, front)) = q.front() {
@@ -428,6 +450,7 @@ impl Network {
                     let rng = self.loss_rng.as_mut().expect("loss rng");
                     if rng.uniform() < loss {
                         self.dropped += 1;
+                        edge_dropped += size;
                         continue;
                     }
                 }
@@ -436,7 +459,15 @@ impl Network {
                 self.inboxes[to].push_back((from, payload));
                 delivered_nodes.push(to);
                 delivered_count += 1;
+                edge_delivered += size;
             }
+            if let Some(t) = &self.tracer {
+                // Deferred = what the link cap left queued on this edge;
+                // summed only here, so the off path never walks queues.
+                let deferred: usize = q.iter().map(|(_, p)| p.size_points()).sum();
+                t.flow(from, to, edge_delivered, deferred, edge_dropped);
+            }
+            delivered_points_total += edge_delivered;
             let drained = q.is_empty();
             if drained {
                 self.queues.remove(&eid);
@@ -449,6 +480,9 @@ impl Network {
         delivered_nodes.dedup();
         self.delivered = delivered_nodes;
         self.peak_points = self.peak_points.max(self.inbox_points);
+        if let Some(t) = &self.tracer {
+            t.round_flow(delivered_points_total, self.inbox_points);
+        }
         delivered_count
     }
 
@@ -768,6 +802,72 @@ mod tests {
         }
         assert_eq!(net.recv_drains(), 1, "only node 1 had traffic");
         assert_eq!(net.idle_recvs(), 2, "nodes 0 and 2 were idle");
+    }
+
+    #[test]
+    fn tracer_flow_records_reconcile_with_cost_under_caps_and_loss() {
+        use crate::trace::TraceEvent;
+        let tracer = crate::trace::Tracer::new();
+        let mut net = Network::new(generators::path(2))
+            .with_link_model(LinkModel::capped(2))
+            .with_loss(0.5, 9)
+            .with_tracer(Some(tracer.clone()));
+        for i in 0..8 {
+            net.send(0, 1, Payload::Scalar(i as f64));
+        }
+        while !net.quiescent() {
+            net.step();
+            net.recv_all(1);
+        }
+        let log = tracer.snapshot();
+        // Conservation: every charged point was traced as delivered or
+        // dropped on some edge, and deferral drained to zero.
+        let (delivered, dropped) = log.flow_totals();
+        assert_eq!(delivered + dropped, net.cost_points());
+        let last_flow = log
+            .events
+            .iter()
+            .rev()
+            .find_map(|e| match e {
+                TraceEvent::Flow {
+                    deferred_points, ..
+                } => Some(*deferred_points),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(last_flow, 0, "final flow leaves nothing deferred");
+        // First round on the capped edge: 2 admitted, 6 still queued.
+        assert_eq!(
+            log.events[0],
+            TraceEvent::Flow {
+                round: 1,
+                from: 0,
+                to: 1,
+                delivered_points: delivered_first(&log),
+                deferred_points: 6,
+                dropped_points: 2 - delivered_first(&log),
+            }
+        );
+        // Every step emitted one round record stamped with its round.
+        let rounds: Vec<u64> = log
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Round { round, .. } => Some(*round),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(rounds.len(), net.round());
+        assert!(rounds.windows(2).all(|w| w[1] == w[0] + 1));
+    }
+
+    fn delivered_first(log: &crate::trace::TraceLog) -> usize {
+        match log.events[0] {
+            crate::trace::TraceEvent::Flow {
+                delivered_points, ..
+            } => delivered_points,
+            _ => panic!("first event must be a flow"),
+        }
     }
 
     #[test]

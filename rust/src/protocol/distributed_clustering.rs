@@ -31,6 +31,7 @@ use crate::protocol::session::{drive_with_mode, DriveMode, PipeMachine, Solver, 
 use crate::rng::Pcg64;
 use crate::sketch::{SketchMode, SketchPlan};
 use crate::topology::{Graph, SpanningTree};
+use crate::trace::{keys, TraceLog, Tracer};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -74,16 +75,17 @@ pub struct RunResult {
     /// Algorithm label for reports.
     pub algorithm: &'static str,
     /// Extensible named meters, so future instrumentation stops forcing
-    /// signature churn. Current keys: `sched_ticks` — node ticks the
-    /// drive loop actually scheduled (under the default
-    /// [`DriveMode::ActiveSet`] this tracks the active frontier, not
-    /// `n × rounds`); and, on merge-and-reduce runs only,
-    /// `mr_error_ppm` — the measured composed `(1+ε)^levels` error
-    /// factor of the worst reduction chain feeding the collector, as
-    /// parts-per-million above 1 (see [`RunResult::error_factor`]) —
-    /// and `mr_reductions` — total bucket reductions across all folding
-    /// nodes.
+    /// signature churn. Every key (and its one-line meaning) lives in
+    /// the [`crate::trace::keys`] registry: the scheduling counters
+    /// (`sched_ticks`, `sched_rounds`, `recv_drains`, `idle_recvs`) are
+    /// always present; `mr_error_ppm` / `mr_reductions` appear on
+    /// merge-and-reduce runs only (see [`RunResult::error_factor`]);
+    /// and traced runs add the `phase_rounds_*` spans, `inflight_p99`
+    /// and `trace_events` aggregates derived from the captured log.
     pub meters: BTreeMap<&'static str, u64>,
+    /// The captured event log of a traced run (`None` when tracing was
+    /// off — the default; capture is opt-in and bit-identical).
+    pub trace: Option<TraceLog>,
 }
 
 impl RunResult {
@@ -91,7 +93,7 @@ impl RunResult {
     /// over the worst reduction chain of this run — `1.0` for exact
     /// (lossless) folds. Decoded from the `mr_error_ppm` meter.
     pub fn error_factor(&self) -> f64 {
-        1.0 + self.meters.get("mr_error_ppm").copied().unwrap_or(0) as f64 / 1e6
+        1.0 + self.meters.get(keys::MR_ERROR_PPM).copied().unwrap_or(0) as f64 / 1e6
     }
 }
 
@@ -182,6 +184,7 @@ pub(crate) fn stream_exchange(
     channel: &ChannelConfig,
     sketch: &SketchPlan,
     mode: DriveMode,
+    trace: bool,
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
@@ -203,9 +206,14 @@ pub(crate) fn stream_exchange(
         );
         anyhow::ensure!(tree.n() == n, "overlay tree spans the graph");
     }
+    // One tracer handle shared by the network, every machine and every
+    // sketch (counts-only capture; `None` costs nothing and the traced
+    // run is bit-identical — see `crate::trace`).
+    let tracer = trace.then(Tracer::new);
     let mut net = Network::new(graph)
         .without_transcript()
-        .with_link_model(channel.link_model());
+        .with_link_model(channel.link_model())
+        .with_tracer(tracer.clone());
     let shared = net.graph_shared();
 
     // Dedicated per-node streams for merge-and-reduce re-solves (exact
@@ -280,6 +288,7 @@ pub(crate) fn stream_exchange(
                         fold,
                         if i == 0 { solver.take() } else { None },
                     )
+                    .with_tracer(tracer.clone())
                 })
                 .collect();
             (0usize, nodes)
@@ -327,6 +336,7 @@ pub(crate) fn stream_exchange(
                         channel.page_points,
                         is_root.then(|| solver.take().expect("one solver")),
                     )
+                    .with_tracer(tracer.clone())
                 })
                 .collect();
             (tree.root, nodes)
@@ -354,6 +364,7 @@ pub(crate) fn stream_exchange(
                         channel.page_points,
                         is_root.then(|| solver.take().expect("one solver")),
                     )
+                    .with_tracer(tracer.clone())
                 })
                 .collect();
             (tree.root, nodes)
@@ -411,7 +422,10 @@ pub(crate) fn stream_exchange(
     let node_peaks: Vec<usize> = nodes.iter().map(|m| m.node_peak).collect();
     let collector_peak = node_peaks[collector];
     let mut meters = BTreeMap::new();
-    meters.insert("sched_ticks", stats.node_ticks);
+    meters.insert(keys::SCHED_TICKS, stats.node_ticks);
+    meters.insert(keys::SCHED_ROUNDS, stats.rounds);
+    meters.insert(keys::RECV_DRAINS, net.recv_drains() as u64);
+    meters.insert(keys::IDLE_RECVS, net.idle_recvs() as u64);
     if merge_reduce {
         let factors: Vec<f64> = nodes.iter().map(|m| m.sketch_error_factor).collect();
         let composed = match topology {
@@ -421,14 +435,25 @@ pub(crate) fn stream_exchange(
             }
         };
         meters.insert(
-            "mr_error_ppm",
+            keys::MR_ERROR_PPM,
             ((composed - 1.0).max(0.0) * 1e6).round() as u64,
         );
         meters.insert(
-            "mr_reductions",
+            keys::MR_REDUCTIONS,
             nodes.iter().map(|m| m.sketch_reductions).sum::<usize>() as u64,
         );
     }
+    let trace_log = tracer.map(|t| {
+        // Close the log with the self-check totals, then fold the
+        // derived aggregates (phase spans, inflight p99, event count)
+        // into the run's meters.
+        t.summary(net.cost_points(), net.round(), net.dropped());
+        let log = t.snapshot();
+        for (key, value) in log.derived_meters() {
+            meters.insert(key, value);
+        }
+        log
+    });
     Ok(RunResult {
         centers: sol.centers,
         coreset_cost: sol.cost,
@@ -441,6 +466,7 @@ pub(crate) fn stream_exchange(
         sketch: sketch.mode.name(),
         algorithm,
         meters,
+        trace: trace_log,
     })
 }
 
@@ -459,13 +485,18 @@ pub(crate) fn run_composed(
     algorithm: &'static str,
     channel: &ChannelConfig,
     mode: DriveMode,
+    trace: bool,
     backend: &dyn Backend,
     rng: &mut Pcg64,
 ) -> anyhow::Result<RunResult> {
     anyhow::ensure!(tree.n() == sent_points.len(), "one summary per node");
+    // The composed exchange has no per-node phase machinery, so a trace
+    // captures the wire layer only: per-edge flow and per-round totals.
+    let tracer = trace.then(Tracer::new);
     let mut net = Network::new(tree.as_graph())
         .without_transcript()
-        .with_link_model(channel.link_model());
+        .with_link_model(channel.link_model())
+        .with_tracer(tracer.clone());
     // Charge each child -> parent summary transfer with a metering-only
     // payload (the simulator never needs the summary's coordinates).
     // Every node waits for its children before emitting, so one session
@@ -508,7 +539,18 @@ pub(crate) fn run_composed(
     node_peaks[tree.root] = node_peaks[tree.root].max(coreset.size());
     let collector_peak = node_peaks[tree.root];
     let mut meters = BTreeMap::new();
-    meters.insert("sched_ticks", stats.node_ticks);
+    meters.insert(keys::SCHED_TICKS, stats.node_ticks);
+    meters.insert(keys::SCHED_ROUNDS, stats.rounds);
+    meters.insert(keys::RECV_DRAINS, net.recv_drains() as u64);
+    meters.insert(keys::IDLE_RECVS, net.idle_recvs() as u64);
+    let trace_log = tracer.map(|t| {
+        t.summary(net.cost_points(), net.round(), net.dropped());
+        let log = t.snapshot();
+        for (key, value) in log.derived_meters() {
+            meters.insert(key, value);
+        }
+        log
+    });
     Ok(RunResult {
         centers: sol.centers,
         coreset_cost: sol.cost,
@@ -521,6 +563,7 @@ pub(crate) fn run_composed(
         sketch: SketchMode::Exact.name(),
         algorithm,
         meters,
+        trace: trace_log,
     })
 }
 

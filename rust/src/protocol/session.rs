@@ -35,6 +35,7 @@ use crate::network::{paginate, FloodKey, Network, Payload};
 use crate::rng::Pcg64;
 use crate::sketch::Sketch;
 use crate::topology::Graph;
+use crate::trace::{Phase, Tracer};
 use std::collections::HashSet;
 use std::sync::Arc;
 
@@ -511,6 +512,8 @@ pub(crate) struct PipeMachine<'a> {
     /// Overlay: total pages of the root's reduced-set flood (learned
     /// from the page headers; authoritative at the root).
     pub(crate) bcast_pages_total: usize,
+    /// Phase-span observer (counts only; never alters behavior or RNG).
+    tracer: Option<Tracer>,
 }
 
 impl<'a> PipeMachine<'a> {
@@ -561,6 +564,7 @@ impl<'a> PipeMachine<'a> {
             centers_got: false,
             bcast_pages_got: 0,
             bcast_pages_total: 0,
+            tracer: None,
         }
     }
 
@@ -619,6 +623,7 @@ impl<'a> PipeMachine<'a> {
             centers_got: false,
             bcast_pages_got: 0,
             bcast_pages_total: 0,
+            tracer: None,
         }
     }
 
@@ -675,6 +680,7 @@ impl<'a> PipeMachine<'a> {
             centers_got: false,
             bcast_pages_got: 0,
             bcast_pages_total: 0,
+            tracer: None,
         }
     }
 
@@ -682,6 +688,44 @@ impl<'a> PipeMachine<'a> {
     /// whole flooded stream; the driver checks everyone saw everything).
     pub(crate) fn pages_collected(&self) -> usize {
         self.pages_folded
+    }
+
+    /// Attach a [`Tracer`]: the machine emits per-node phase enter/exit
+    /// events at its existing state flips (cost-ready, fold-complete,
+    /// solve, centers receipt) and wires the same tracer into its
+    /// sketch for reduction events. Observation only — no state flip,
+    /// send or RNG draw changes, so traced runs stay bit-identical.
+    pub(crate) fn with_tracer(mut self, tracer: Option<Tracer>) -> Self {
+        if let Some(t) = &tracer {
+            if let Some(f) = &mut self.fold {
+                f.set_tracer(t.clone(), self.id);
+            }
+            // The node starts inside whichever phase its readiness
+            // implies: waiting on the cost exchange, or (plans without
+            // one) streaming portions immediately.
+            let phase = if self.ready {
+                Phase::ConvergeFold
+            } else {
+                Phase::CostFlood
+            };
+            t.phase(self.id, phase, true);
+        }
+        self.tracer = tracer;
+        self
+    }
+
+    /// Emit one phase enter/exit event for this node, if tracing.
+    fn trace_phase(&self, phase: Phase, enter: bool) {
+        if let Some(t) = &self.tracer {
+            t.phase(self.id, phase, enter);
+        }
+    }
+
+    /// The cost exchange just completed for this node: close the
+    /// cost-flood span and open the converge-fold span.
+    fn trace_ready_flip(&self) {
+        self.trace_phase(Phase::CostFlood, false);
+        self.trace_phase(Phase::ConvergeFold, true);
     }
 
     fn bump_peak(&mut self) {
@@ -776,6 +820,7 @@ impl<'a> PipeMachine<'a> {
                 sampled: set.n(),
                 set,
             };
+            self.trace_phase(Phase::Solve, true);
             let sol = approx_solution(
                 &coreset.set,
                 solver.k,
@@ -784,12 +829,14 @@ impl<'a> PipeMachine<'a> {
                 solver.rng,
                 solver.iters,
             );
+            self.trace_phase(Phase::Solve, false);
             match &self.role {
                 PipeRole::Tree { children, .. } => {
                     let payload = Payload::Centers(Arc::new(sol.centers.clone()));
                     for &c in children {
                         out.send(c, payload.clone());
                     }
+                    self.trace_phase(Phase::Broadcast, true);
                 }
                 PipeRole::Overlay { graph, .. } => {
                     // Flood ONLY the reduced root set + the centers back
@@ -809,6 +856,7 @@ impl<'a> PipeMachine<'a> {
                         graph.neighbors(self.id),
                         &Payload::Centers(Arc::new(sol.centers.clone())),
                     );
+                    self.trace_phase(Phase::Broadcast, true);
                 }
                 PipeRole::Graph { .. } => {}
             }
@@ -869,6 +917,7 @@ impl NodeMachine for PipeMachine<'_> {
         if !self.ready && self.costs_expected > 0 && self.costs_seen.len() == self.costs_expected
         {
             self.ready = true;
+            self.trace_ready_flip();
             // Tree root: answer with the budget total.
             if let (PipeRole::Tree { children, .. }, Some(t)) = (&self.role, self.total.take())
             {
@@ -884,6 +933,7 @@ impl NodeMachine for PipeMachine<'_> {
         // Completion: reduce-and-forward, or solve-and-broadcast.
         if self.launched && !self.done && self.collection_complete() {
             self.done = true;
+            self.trace_phase(Phase::ConvergeFold, false);
             self.on_complete(out);
         }
         // Tree: move relayed payloads one hop up.
@@ -933,12 +983,21 @@ impl NodeMachine for PipeMachine<'_> {
                 }
             }
             (PipeRole::Tree { children, .. }, msg @ Payload::Scalar(_)) => {
-                self.ready = true;
+                if !self.ready {
+                    self.ready = true;
+                    if let Some(t) = &self.tracer {
+                        t.phase(self.id, Phase::CostFlood, false);
+                        t.phase(self.id, Phase::ConvergeFold, true);
+                    }
+                }
                 for &c in children {
                     out.send(c, msg.clone());
                 }
             }
             (PipeRole::Tree { children, .. }, msg @ Payload::Centers(_)) => {
+                if let Some(t) = &self.tracer {
+                    t.phase(self.id, Phase::Broadcast, false);
+                }
                 for &c in children {
                     out.send(c, msg.clone());
                 }
@@ -972,6 +1031,9 @@ impl NodeMachine for PipeMachine<'_> {
                 // Single in-flight payload: a boolean is its flood dedup.
                 if !self.centers_got {
                     self.centers_got = true;
+                    if let Some(t) = &self.tracer {
+                        t.phase(self.id, Phase::Broadcast, false);
+                    }
                     out.broadcast(graph.neighbors(self.id), &msg);
                 }
             }

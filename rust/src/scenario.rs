@@ -341,6 +341,7 @@ pub struct Scenario {
     sketch: SketchPlan,
     exec: ExecPolicy,
     drive: DriveMode,
+    trace: bool,
     seed: u64,
 }
 
@@ -354,6 +355,7 @@ impl Scenario {
             sketch: SketchPlan::exact(),
             exec: ExecPolicy::Sequential,
             drive: DriveMode::ActiveSet,
+            trace: false,
             seed: 0,
         }
     }
@@ -443,6 +445,16 @@ impl Scenario {
     /// either way; only the `sched_ticks` meter differs.
     pub fn drive_mode(mut self, mode: DriveMode) -> Scenario {
         self.drive = mode;
+        self
+    }
+
+    /// Capture a [`crate::trace::TraceLog`] of the wire phase (per-edge
+    /// flow, phase spans, sketch reductions) into `RunResult::trace`,
+    /// with the derived aggregates folded into `RunResult::meters`.
+    /// Off by default; the tracer records counts only, so a traced run
+    /// is bit-identical to an untraced one (pinned by `tests/trace.rs`).
+    pub fn trace(mut self, trace: bool) -> Scenario {
+        self.trace = trace;
         self
     }
 
@@ -575,6 +587,7 @@ impl Scenario {
                 &self.channel,
                 &self.sketch,
                 self.drive,
+                self.trace,
                 backend,
                 rng,
             ),
@@ -594,6 +607,7 @@ impl Scenario {
                     algo.label(true),
                     &self.channel,
                     self.drive,
+                    self.trace,
                     backend,
                     rng,
                 )

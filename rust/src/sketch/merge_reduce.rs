@@ -32,6 +32,7 @@ use crate::clustering::{approx_solution, Objective};
 use crate::coreset::sensitivity::{sample_portion, SampleParams};
 use crate::points::WeightedSet;
 use crate::rng::Pcg64;
+use crate::trace::Tracer;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -74,6 +75,11 @@ pub struct MergeReduceSketch<'a> {
     /// Monotone high-water mark of the composed factor across every
     /// bucket this sketch (and anything merged into it) ever built.
     worst_factor: f64,
+    /// Observer for reduction events (counts + measured distortion
+    /// only — attaching one never changes folding behavior or RNG use).
+    tracer: Option<Tracer>,
+    /// Node id stamped on emitted reduction events.
+    node: usize,
 }
 
 impl<'a> MergeReduceSketch<'a> {
@@ -110,7 +116,19 @@ impl<'a> MergeReduceSketch<'a> {
             peak: 0,
             reductions: 0,
             worst_factor: 1.0,
+            tracer: None,
+            node: 0,
         }
+    }
+
+    /// Attach a [`Tracer`]: every *real* bucket reduction (the ones
+    /// [`Self::reductions`] counts) emits one `Reduce` event stamped
+    /// with `node`, the tower level it carried into, its in/out point
+    /// counts and the measured `ε_r`. Pure observation — no RNG draws,
+    /// no behavioral change.
+    pub fn set_tracer(&mut self, tracer: Tracer, node: usize) {
+        self.tracer = Some(tracer);
+        self.node = node;
     }
 
     /// Effective bucket capacity in points.
@@ -181,7 +199,7 @@ impl<'a> MergeReduceSketch<'a> {
     fn carry(&mut self) {
         let full = self.level0.take().expect("carry of empty level 0");
         let full_factor = std::mem::replace(&mut self.level0_factor, 1.0);
-        let (mut carry, mut carry_factor) = self.reduce(full, full_factor);
+        let (mut carry, mut carry_factor) = self.reduce(full, full_factor, 0);
         let mut lvl = 0;
         loop {
             if lvl == self.levels.len() {
@@ -195,7 +213,7 @@ impl<'a> MergeReduceSketch<'a> {
                 Some((mut occupied, occupied_factor)) => {
                     occupied.extend(&carry);
                     let merged =
-                        self.reduce(occupied, occupied_factor.max(carry_factor));
+                        self.reduce(occupied, occupied_factor.max(carry_factor), lvl + 1);
                     carry = merged.0;
                     carry_factor = merged.1;
                     lvl += 1;
@@ -211,7 +229,7 @@ impl<'a> MergeReduceSketch<'a> {
     /// through unchanged (no information loss, no RNG draws, factor
     /// untouched). A real reduction measures its cost distortion and
     /// composes it into the returned factor.
-    fn reduce(&mut self, set: WeightedSet, factor: f64) -> (WeightedSet, f64) {
+    fn reduce(&mut self, set: WeightedSet, factor: f64, level: usize) -> (WeightedSet, f64) {
         if set.n() <= self.reduce_target {
             return (set, factor);
         }
@@ -275,6 +293,9 @@ impl<'a> MergeReduceSketch<'a> {
         let factor = factor * (1.0 + err);
         self.worst_factor = self.worst_factor.max(factor);
         self.reductions += 1;
+        if let Some(t) = &self.tracer {
+            t.reduce(self.node, level, set.n(), reduced.set.n(), err);
+        }
         self.points -= set.n();
         self.points += reduced.set.n();
         (reduced.set, factor)

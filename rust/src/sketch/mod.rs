@@ -276,6 +276,16 @@ impl Sketch<'_> {
             Sketch::MergeReduce(s) => s.reductions(),
         }
     }
+
+    /// Attach a [`crate::trace::Tracer`] stamped with this folding
+    /// node's id. The exact sketch never reduces, so this is a no-op
+    /// there; see [`MergeReduceSketch::set_tracer`].
+    pub fn set_tracer(&mut self, tracer: crate::trace::Tracer, node: usize) {
+        match self {
+            Sketch::Exact(_) => {}
+            Sketch::MergeReduce(s) => s.set_tracer(tracer, node),
+        }
+    }
 }
 
 /// Per-site page-completion bookkeeping shared by both sketch

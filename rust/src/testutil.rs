@@ -174,6 +174,14 @@ pub struct OverlayAcceptance {
 /// solution (×1.25 slack for the variance between two independent final
 /// solves) — and returns everything the callers render or assert on.
 pub fn overlay_acceptance(points: usize) -> OverlayAcceptance {
+    overlay_acceptance_with(points, false)
+}
+
+/// [`overlay_acceptance`] with the overlay run optionally traced —
+/// tracing is counts-only, so every acceptance assertion holds
+/// unchanged; the traced variant additionally carries the overlay's
+/// event log in `overlay.trace` for the bench's `--trace` output.
+pub fn overlay_acceptance_with(points: usize, trace: bool) -> OverlayAcceptance {
     let (n, t, k) = (16usize, 2_048usize, 4usize);
     let locals = mixture_sites(91, points, 4, 4, n, Scheme::Uniform, false);
     let mut rng = Pcg64::seed_from(92);
@@ -191,6 +199,7 @@ pub fn overlay_acceptance(points: usize) -> OverlayAcceptance {
     let overlay = Scenario::on_overlay_of(graph.clone())
         .page_points(64)
         .sketch(SketchPlan::merge_reduce(256))
+        .trace(trace)
         .seed(93) // identical seed to the flooded run
         .run(&Distributed(cfg), &locals, &RustBackend)
         .expect("overlay acceptance run");

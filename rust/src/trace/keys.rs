@@ -1,0 +1,152 @@
+//! The meter-key registry: every key that can appear in
+//! `RunResult::meters` (plus the streaming epoch counters), centralized
+//! with documentation.
+//!
+//! Key strings used to be scattered literals across
+//! `distributed_clustering.rs`, the report emitters and the tests; a
+//! typo in any one of them silently forked a meter. Every producer and
+//! consumer now names keys through these constants, and the report /
+//! JSON emitters iterate [`ALL`] so the glossary, the rendered report
+//! and the serialized meters stay in one documented order.
+
+/// Node `tick()` invocations performed by the drive loop — the
+/// scheduler-work meter the active-set / dense equivalence suite
+/// compares (results are bit-identical across drive modes; only this
+/// meter differs).
+pub const SCHED_TICKS: &str = "sched_ticks";
+
+/// Network rounds the drive loop ran, including the final empty
+/// quiescence-detection round (`DriveStats::rounds`).
+pub const SCHED_ROUNDS: &str = "sched_rounds";
+
+/// Inbox drains that yielded at least one message — every `recv_drain`
+/// the simulator performed on behalf of a ticked node.
+pub const RECV_DRAINS: &str = "recv_drains";
+
+/// Inbox polls that found nothing. The active-set scheduler's "never
+/// polls idle inboxes" contract means this stays 0 under
+/// `DriveMode::ActiveSet`; the dense reference scheduler accumulates
+/// one per idle node per round.
+pub const IDLE_RECVS: &str = "idle_recvs";
+
+/// Bucket reductions performed across every merge-and-reduce folding
+/// node (absent on exact-sketch runs).
+pub const MR_REDUCTIONS: &str = "mr_reductions";
+
+/// Measured composed sketch error factor `Π(1 + ε_r)` of the worst
+/// reduction chain, in parts-per-million above 1.0 (absent on
+/// exact-sketch runs; decode with `RunResult::error_factor`).
+pub const MR_ERROR_PPM: &str = "mr_error_ppm";
+
+/// Global round span of the cost-flood phase (traced runs only):
+/// `last_round − first_round + 1` over every phase event.
+pub const PHASE_ROUNDS_COST_FLOOD: &str = "phase_rounds_cost_flood";
+
+/// Global round span of the converge-fold phase (traced runs only).
+pub const PHASE_ROUNDS_CONVERGE_FOLD: &str = "phase_rounds_converge_fold";
+
+/// Global round span of the solve phase (traced runs only).
+pub const PHASE_ROUNDS_SOLVE: &str = "phase_rounds_solve";
+
+/// Global round span of the broadcast phase (traced runs only).
+pub const PHASE_ROUNDS_BROADCAST: &str = "phase_rounds_broadcast";
+
+/// p99 (nearest-rank) of per-round in-flight points — points resident
+/// in receiver inboxes at the end of each round (traced runs only).
+pub const INFLIGHT_P99: &str = "inflight_p99";
+
+/// Events the tracer captured over the run (traced runs only).
+pub const TRACE_EVENTS: &str = "trace_events";
+
+/// Streaming epochs since the global coreset was last rebuilt — 0 on a
+/// rebuild epoch (an `EpochReport` counter, not a `RunResult` meter).
+pub const STALENESS_EPOCHS: &str = "staleness_epochs";
+
+/// Rebuilds per epoch so far, in parts per million (an `EpochReport`
+/// counter, not a `RunResult` meter).
+pub const REBUILD_RATE_PPM: &str = "rebuild_rate_ppm";
+
+/// Every registered key with its one-line doc, in report order:
+/// scheduling, sketch, phase spans, trace aggregates, streaming.
+/// Report and JSON emitters iterate this slice so meter order is a
+/// registry decision, not a call-site one.
+pub const ALL: &[(&str, &str)] = &[
+    (
+        SCHED_TICKS,
+        "node tick() invocations performed by the drive loop",
+    ),
+    (
+        SCHED_ROUNDS,
+        "network rounds driven, incl. the final quiescence round",
+    ),
+    (
+        RECV_DRAINS,
+        "inbox drains that yielded at least one message",
+    ),
+    (
+        IDLE_RECVS,
+        "inbox polls that found nothing (0 under active-set)",
+    ),
+    (
+        MR_REDUCTIONS,
+        "merge-and-reduce bucket reductions across folding nodes",
+    ),
+    (
+        MR_ERROR_PPM,
+        "composed worst-chain sketch error factor, ppm above 1.0",
+    ),
+    (
+        PHASE_ROUNDS_COST_FLOOD,
+        "global round span of the cost-flood phase (traced)",
+    ),
+    (
+        PHASE_ROUNDS_CONVERGE_FOLD,
+        "global round span of the converge-fold phase (traced)",
+    ),
+    (
+        PHASE_ROUNDS_SOLVE,
+        "global round span of the solve phase (traced)",
+    ),
+    (
+        PHASE_ROUNDS_BROADCAST,
+        "global round span of the broadcast phase (traced)",
+    ),
+    (
+        INFLIGHT_P99,
+        "p99 of per-round inbox-resident points (traced)",
+    ),
+    (TRACE_EVENTS, "events captured by the tracer (traced)"),
+    (
+        STALENESS_EPOCHS,
+        "streaming epochs since the last coreset rebuild",
+    ),
+    (
+        REBUILD_RATE_PPM,
+        "streaming rebuilds per epoch, parts per million",
+    ),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_keys_are_unique_and_documented() {
+        for (i, (key, doc)) in ALL.iter().enumerate() {
+            assert!(!key.is_empty() && !doc.is_empty());
+            for (other, _) in &ALL[i + 1..] {
+                assert_ne!(key, other, "duplicate registry key");
+            }
+        }
+    }
+
+    #[test]
+    fn registry_covers_the_legacy_literals() {
+        // The two historically-scattered literals must resolve to the
+        // same spellings the old call sites used.
+        assert_eq!(SCHED_TICKS, "sched_ticks");
+        assert_eq!(MR_ERROR_PPM, "mr_error_ppm");
+        assert!(ALL.iter().any(|(k, _)| *k == SCHED_TICKS));
+        assert!(ALL.iter().any(|(k, _)| *k == MR_ERROR_PPM));
+    }
+}

@@ -1,0 +1,746 @@
+//! Run tracing: zero-overhead-when-off, counts-only event capture
+//! across the session engine.
+//!
+//! The paper's headline claims are communication-shaped (Theorems 2–3
+//! bound total points on the wire), but end-of-run scalars can't say
+//! *which phase* stalled, *which edges* carried the traffic, or *when*
+//! a collector's sketch folded. A [`Tracer`] is a cloneable recording
+//! handle threaded through the four layers that meter:
+//!
+//! - `Network::step` records one [`TraceEvent::Flow`] per active edge
+//!   per round (delivered / deferred / dropped points) and one
+//!   [`TraceEvent::Round`] per round (delivered total + in-flight
+//!   points);
+//! - the `protocol::session` machines record [`TraceEvent::Phase`]
+//!   enter/exit markers per node, so phase *overlap* (a node folding
+//!   portions while another still floods costs) becomes a visible
+//!   timeline instead of a caveat;
+//! - `MergeReduceSketch` records one [`TraceEvent::Reduce`] per real
+//!   bucket reduction, with its tower level and measured distortion;
+//! - the streaming coordinator records one [`TraceEvent::Epoch`] per
+//!   epoch (rebuild/skip, staleness, communication).
+//!
+//! The tracer is counts-only: no wall clocks, no RNG draws, no behavior
+//! changes — a traced run is bit-identical to an untraced one (pinned
+//! by `tests/trace.rs` across topologies × thread counts). Events
+//! buffer in memory; a run snapshots them into a [`TraceLog`], which
+//! serializes to JSONL through the repo's own [`crate::json`] module
+//! (`--trace <path>` on the CLI) and derives aggregate meters
+//! ([`TraceLog::derived_meters`]) folded into `RunResult::meters`. The
+//! `trace_view` binary renders a per-phase round timeline, the hottest
+//! edges and the fold-tree depth from a trace file.
+//!
+//! Key names for the derived meters live in the [`keys`] registry.
+
+pub mod keys;
+
+use crate::json::{build, parse, Value};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// The four logical phases of the paged portion exchange, in protocol
+/// order. Phases are per-node: under paging and link caps they overlap
+/// globally (one node can fold portions while another still floods
+/// costs), which is exactly what the phase timeline makes visible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Round-1 scalar cost exchange (flooded on graphs, converge-cast
+    /// on trees) gating each site's portion budget.
+    CostFlood,
+    /// Portion pages streaming toward the folding nodes (converge-cast
+    /// up trees, flooding on graphs, reduced relays on the overlay).
+    ConvergeFold,
+    /// The collector's final approximate solve on the folded coreset.
+    Solve,
+    /// Centers (and, on the overlay, the reduced root set) returning to
+    /// every node.
+    Broadcast,
+}
+
+impl Phase {
+    /// Every phase, in protocol order.
+    pub const ALL: [Phase; 4] = [
+        Phase::CostFlood,
+        Phase::ConvergeFold,
+        Phase::Solve,
+        Phase::Broadcast,
+    ];
+
+    /// Stable wire/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::CostFlood => "cost-flood",
+            Phase::ConvergeFold => "converge-fold",
+            Phase::Solve => "solve",
+            Phase::Broadcast => "broadcast",
+        }
+    }
+
+    /// Parse a wire name back into a phase.
+    pub fn parse(s: &str) -> Option<Phase> {
+        Phase::ALL.into_iter().find(|p| p.name() == s)
+    }
+
+    /// Registry key of this phase's global round-span meter.
+    pub fn meter_key(self) -> &'static str {
+        match self {
+            Phase::CostFlood => keys::PHASE_ROUNDS_COST_FLOOD,
+            Phase::ConvergeFold => keys::PHASE_ROUNDS_CONVERGE_FOLD,
+            Phase::Solve => keys::PHASE_ROUNDS_SOLVE,
+            Phase::Broadcast => keys::PHASE_ROUNDS_BROADCAST,
+        }
+    }
+}
+
+/// One captured event. All quantities are counts in the paper's unit
+/// (points) or protocol indices — never wall-clock times, so traces are
+/// deterministic and machine-independent.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// One directed edge's activity in one network round.
+    Flow {
+        /// Network round (1-based; round 0 is pre-delivery setup).
+        round: u64,
+        /// Sending endpoint of the directed edge.
+        from: usize,
+        /// Receiving endpoint of the directed edge.
+        to: usize,
+        /// Points delivered over the edge this round.
+        delivered_points: usize,
+        /// Points still queued on the edge after this round (link-cap
+        /// backlog).
+        deferred_points: usize,
+        /// Points popped but lost to the loss model this round.
+        dropped_points: usize,
+    },
+    /// Network-wide totals at the end of one round.
+    Round {
+        /// Network round.
+        round: u64,
+        /// Points delivered across all edges this round.
+        delivered_points: usize,
+        /// Points resident in receiver inboxes after delivery (the
+        /// in-flight working set the p99 meter summarizes).
+        inflight_points: usize,
+    },
+    /// A node entering (`enter == true`) or exiting a protocol phase.
+    Phase {
+        /// Network round the transition was observed at.
+        round: u64,
+        /// Node making the transition.
+        node: usize,
+        /// Which phase.
+        phase: Phase,
+        /// Enter (`true`) or exit (`false`) marker.
+        enter: bool,
+    },
+    /// One real merge-and-reduce bucket reduction at a folding node.
+    Reduce {
+        /// Network round the reduction ran in (0 for host-side folds).
+        round: u64,
+        /// Folding node.
+        node: usize,
+        /// Tower level the reduced bucket carries into (0 = first
+        /// reduction of the level-0 accumulator).
+        level: usize,
+        /// Bucket points before the reduction.
+        points_in: usize,
+        /// Bucket points after the reduction.
+        points_out: usize,
+        /// Measured relative cost distortion `ε_r` of this reduction,
+        /// in parts per million.
+        eps_ppm: u64,
+    },
+    /// One streaming-maintenance epoch.
+    Epoch {
+        /// Epoch index (1-based, as counted by the coordinator).
+        epoch: usize,
+        /// Whether the global coreset was rebuilt this epoch.
+        rebuilt: bool,
+        /// Epochs since the last rebuild (0 on a rebuild epoch).
+        staleness_epochs: usize,
+        /// Points transmitted this epoch.
+        comm_points: usize,
+    },
+    /// End-of-run totals, appended once so a trace file is
+    /// self-checking: per-edge flow totals must reconcile against
+    /// `comm_points` (delivered + dropped = charged).
+    Summary {
+        /// The run's total communication in points.
+        comm_points: usize,
+        /// Total network rounds.
+        rounds: usize,
+        /// Total points lost to the loss model.
+        dropped_points: usize,
+    },
+}
+
+fn field(v: &Value, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Value::as_usize)
+        .with_context(|| format!("trace event: missing or non-integer field '{key}'"))
+}
+
+fn field_bool(v: &Value, key: &str) -> Result<bool> {
+    match v.get(key) {
+        Some(Value::Bool(b)) => Ok(*b),
+        _ => bail!("trace event: missing or non-bool field '{key}'"),
+    }
+}
+
+impl TraceEvent {
+    /// Serialize to one JSON object (`{"ev": "...", ...}`).
+    pub fn to_json(&self) -> Value {
+        let n = |x: usize| build::num(x as f64);
+        match self {
+            TraceEvent::Flow {
+                round,
+                from,
+                to,
+                delivered_points,
+                deferred_points,
+                dropped_points,
+            } => build::obj(vec![
+                ("ev", build::s("flow")),
+                ("round", n(*round as usize)),
+                ("from", n(*from)),
+                ("to", n(*to)),
+                ("delivered", n(*delivered_points)),
+                ("deferred", n(*deferred_points)),
+                ("dropped", n(*dropped_points)),
+            ]),
+            TraceEvent::Round {
+                round,
+                delivered_points,
+                inflight_points,
+            } => build::obj(vec![
+                ("ev", build::s("round")),
+                ("round", n(*round as usize)),
+                ("delivered", n(*delivered_points)),
+                ("inflight", n(*inflight_points)),
+            ]),
+            TraceEvent::Phase {
+                round,
+                node,
+                phase,
+                enter,
+            } => build::obj(vec![
+                ("ev", build::s("phase")),
+                ("round", n(*round as usize)),
+                ("node", n(*node)),
+                ("phase", build::s(phase.name())),
+                ("enter", Value::Bool(*enter)),
+            ]),
+            TraceEvent::Reduce {
+                round,
+                node,
+                level,
+                points_in,
+                points_out,
+                eps_ppm,
+            } => build::obj(vec![
+                ("ev", build::s("reduce")),
+                ("round", n(*round as usize)),
+                ("node", n(*node)),
+                ("level", n(*level)),
+                ("points_in", n(*points_in)),
+                ("points_out", n(*points_out)),
+                ("eps_ppm", n(*eps_ppm as usize)),
+            ]),
+            TraceEvent::Epoch {
+                epoch,
+                rebuilt,
+                staleness_epochs,
+                comm_points,
+            } => build::obj(vec![
+                ("ev", build::s("epoch")),
+                ("epoch", n(*epoch)),
+                ("rebuilt", Value::Bool(*rebuilt)),
+                ("staleness", n(*staleness_epochs)),
+                ("comm_points", n(*comm_points)),
+            ]),
+            TraceEvent::Summary {
+                comm_points,
+                rounds,
+                dropped_points,
+            } => build::obj(vec![
+                ("ev", build::s("summary")),
+                ("comm_points", n(*comm_points)),
+                ("rounds", n(*rounds)),
+                ("dropped", n(*dropped_points)),
+            ]),
+        }
+    }
+
+    /// Parse one JSON object back into an event.
+    pub fn from_json(v: &Value) -> Result<TraceEvent> {
+        let ev = v
+            .get("ev")
+            .and_then(Value::as_str)
+            .context("trace event: missing 'ev' tag")?;
+        Ok(match ev {
+            "flow" => TraceEvent::Flow {
+                round: field(v, "round")? as u64,
+                from: field(v, "from")?,
+                to: field(v, "to")?,
+                delivered_points: field(v, "delivered")?,
+                deferred_points: field(v, "deferred")?,
+                dropped_points: field(v, "dropped")?,
+            },
+            "round" => TraceEvent::Round {
+                round: field(v, "round")? as u64,
+                delivered_points: field(v, "delivered")?,
+                inflight_points: field(v, "inflight")?,
+            },
+            "phase" => {
+                let name = v
+                    .get("phase")
+                    .and_then(Value::as_str)
+                    .context("phase event: missing 'phase'")?;
+                TraceEvent::Phase {
+                    round: field(v, "round")? as u64,
+                    node: field(v, "node")?,
+                    phase: Phase::parse(name)
+                        .with_context(|| format!("unknown phase '{name}'"))?,
+                    enter: field_bool(v, "enter")?,
+                }
+            }
+            "reduce" => TraceEvent::Reduce {
+                round: field(v, "round")? as u64,
+                node: field(v, "node")?,
+                level: field(v, "level")?,
+                points_in: field(v, "points_in")?,
+                points_out: field(v, "points_out")?,
+                eps_ppm: field(v, "eps_ppm")? as u64,
+            },
+            "epoch" => TraceEvent::Epoch {
+                epoch: field(v, "epoch")?,
+                rebuilt: field_bool(v, "rebuilt")?,
+                staleness_epochs: field(v, "staleness")?,
+                comm_points: field(v, "comm_points")?,
+            },
+            "summary" => TraceEvent::Summary {
+                comm_points: field(v, "comm_points")?,
+                rounds: field(v, "rounds")?,
+                dropped_points: field(v, "dropped")?,
+            },
+            other => bail!("unknown trace event tag '{other}'"),
+        })
+    }
+}
+
+#[derive(Debug, Default)]
+struct TracerInner {
+    round: u64,
+    events: Vec<TraceEvent>,
+}
+
+/// Cloneable recording handle shared by every traced layer of one run.
+///
+/// All handles point at one in-memory buffer (the engine is
+/// single-threaded by construction — every machine runs on the driver
+/// thread). The network pushes the current round number into the
+/// tracer at the top of each `step`, so machines and sketches can stamp
+/// their events with the round without holding a network reference.
+///
+/// The tracer records counts only: it never reads clocks, never draws
+/// randomness, and never feeds anything back into the run — a traced
+/// run is bit-identical to an untraced one.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    inner: Rc<RefCell<TracerInner>>,
+}
+
+impl Tracer {
+    /// A fresh tracer with an empty buffer at round 0.
+    pub fn new() -> Tracer {
+        Tracer::default()
+    }
+
+    /// Set the current network round (called by `Network::step`).
+    pub fn set_round(&self, round: u64) {
+        self.inner.borrow_mut().round = round;
+    }
+
+    /// The current network round as last pushed by the network.
+    pub fn round(&self) -> u64 {
+        self.inner.borrow().round
+    }
+
+    /// Events buffered so far.
+    pub fn len(&self) -> usize {
+        self.inner.borrow().events.len()
+    }
+
+    /// Whether nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        self.inner.borrow_mut().events.push(ev);
+    }
+
+    /// Record one directed edge's delivery activity this round.
+    pub fn flow(
+        &self,
+        from: usize,
+        to: usize,
+        delivered_points: usize,
+        deferred_points: usize,
+        dropped_points: usize,
+    ) {
+        let round = self.round();
+        self.push(TraceEvent::Flow {
+            round,
+            from,
+            to,
+            delivered_points,
+            deferred_points,
+            dropped_points,
+        });
+    }
+
+    /// Record network-wide totals at the end of the current round.
+    pub fn round_flow(&self, delivered_points: usize, inflight_points: usize) {
+        let round = self.round();
+        self.push(TraceEvent::Round {
+            round,
+            delivered_points,
+            inflight_points,
+        });
+    }
+
+    /// Record a node entering or exiting a phase at the current round.
+    pub fn phase(&self, node: usize, phase: Phase, enter: bool) {
+        let round = self.round();
+        self.push(TraceEvent::Phase {
+            round,
+            node,
+            phase,
+            enter,
+        });
+    }
+
+    /// Record one real bucket reduction (`eps` is the measured relative
+    /// cost distortion of this reduction, stored in ppm).
+    pub fn reduce(&self, node: usize, level: usize, points_in: usize, points_out: usize, eps: f64) {
+        let round = self.round();
+        self.push(TraceEvent::Reduce {
+            round,
+            node,
+            level,
+            points_in,
+            points_out,
+            eps_ppm: (eps * 1e6).round() as u64,
+        });
+    }
+
+    /// Record one streaming-maintenance epoch.
+    pub fn epoch(&self, epoch: usize, rebuilt: bool, staleness_epochs: usize, comm_points: usize) {
+        self.push(TraceEvent::Epoch {
+            epoch,
+            rebuilt,
+            staleness_epochs,
+            comm_points,
+        });
+    }
+
+    /// Append the end-of-run totals that make the trace self-checking.
+    pub fn summary(&self, comm_points: usize, rounds: usize, dropped_points: usize) {
+        self.push(TraceEvent::Summary {
+            comm_points,
+            rounds,
+            dropped_points,
+        });
+    }
+
+    /// Clone the buffered events into an owned [`TraceLog`] (the buffer
+    /// stays shared between handles, so this cannot consume it).
+    pub fn snapshot(&self) -> TraceLog {
+        TraceLog {
+            events: self.inner.borrow().events.clone(),
+        }
+    }
+}
+
+/// An owned, serializable sequence of captured events — what a run
+/// stores in `RunResult::trace` and what `--trace <path>` writes as
+/// JSONL (one event object per line).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceLog {
+    /// Captured events in record order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceLog {
+    /// Serialize as JSONL: one compact JSON object per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSONL trace (blank lines are skipped; any malformed line
+    /// is a loud error with its line number).
+    pub fn from_jsonl(text: &str) -> Result<TraceLog> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = parse(line)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+            events.push(
+                TraceEvent::from_json(&v).with_context(|| format!("trace line {}", i + 1))?,
+            );
+        }
+        Ok(TraceLog { events })
+    }
+
+    /// Global round span of each phase that recorded events:
+    /// `(phase, first_round, last_round)` in protocol order.
+    pub fn phase_spans(&self) -> Vec<(Phase, u64, u64)> {
+        let mut spans: BTreeMap<Phase, (u64, u64)> = BTreeMap::new();
+        for ev in &self.events {
+            if let TraceEvent::Phase { round, phase, .. } = ev {
+                let e = spans.entry(*phase).or_insert((*round, *round));
+                e.0 = e.0.min(*round);
+                e.1 = e.1.max(*round);
+            }
+        }
+        Phase::ALL
+            .into_iter()
+            .filter_map(|p| spans.get(&p).map(|&(a, b)| (p, a, b)))
+            .collect()
+    }
+
+    /// Total `(delivered, dropped)` points summed over every
+    /// [`TraceEvent::Flow`] — the left-hand side of the conservation
+    /// check against the run's `comm_points`.
+    pub fn flow_totals(&self) -> (usize, usize) {
+        let (mut delivered, mut dropped) = (0, 0);
+        for ev in &self.events {
+            if let TraceEvent::Flow {
+                delivered_points,
+                dropped_points,
+                ..
+            } = ev
+            {
+                delivered += delivered_points;
+                dropped += dropped_points;
+            }
+        }
+        (delivered, dropped)
+    }
+
+    /// Per-directed-edge delivered-point totals, hottest first (ties
+    /// broken by edge id for determinism).
+    pub fn edge_totals(&self) -> Vec<((usize, usize), usize)> {
+        let mut edges: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+        for ev in &self.events {
+            if let TraceEvent::Flow {
+                from,
+                to,
+                delivered_points,
+                ..
+            } = ev
+            {
+                *edges.entry((*from, *to)).or_insert(0) += delivered_points;
+            }
+        }
+        let mut out: Vec<_> = edges.into_iter().collect();
+        out.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        out
+    }
+
+    /// Depth of the merge-and-reduce fold tree observed across every
+    /// [`TraceEvent::Reduce`] (`0` when nothing reduced).
+    pub fn fold_depth(&self) -> usize {
+        self.events
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Reduce { level, .. } => Some(level + 1),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The end-of-run [`TraceEvent::Summary`] totals, if recorded:
+    /// `(comm_points, rounds, dropped_points)`.
+    pub fn run_summary(&self) -> Option<(usize, usize, usize)> {
+        self.events.iter().rev().find_map(|ev| match ev {
+            TraceEvent::Summary {
+                comm_points,
+                rounds,
+                dropped_points,
+            } => Some((*comm_points, *rounds, *dropped_points)),
+            _ => None,
+        })
+    }
+
+    /// Points delivered network-wide within `[start, end]` (inclusive),
+    /// summed over the per-round records — the per-phase point shares
+    /// `trace_view` reports (overlapping phases double-count, which is
+    /// the point: overlap is real).
+    pub fn delivered_in_rounds(&self, start: u64, end: u64) -> usize {
+        self.events
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Round {
+                    round,
+                    delivered_points,
+                    ..
+                } if *round >= start && *round <= end => Some(*delivered_points),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Aggregate meters derived from the buffered events, keyed by the
+    /// [`keys`] registry: one `phase_rounds_*` span per phase that
+    /// recorded events, `inflight_p99` when round records exist, and
+    /// `trace_events`.
+    pub fn derived_meters(&self) -> Vec<(&'static str, u64)> {
+        let mut out = Vec::new();
+        for (phase, start, end) in self.phase_spans() {
+            out.push((phase.meter_key(), end - start + 1));
+        }
+        let mut inflight: Vec<usize> = self
+            .events
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Round {
+                    inflight_points, ..
+                } => Some(*inflight_points),
+                _ => None,
+            })
+            .collect();
+        if !inflight.is_empty() {
+            inflight.sort_unstable();
+            // Nearest-rank p99 (lower): deterministic integer index.
+            let idx = (inflight.len() - 1) * 99 / 100;
+            out.push((keys::INFLIGHT_P99, inflight[idx] as u64));
+        }
+        out.push((keys::TRACE_EVENTS, self.events.len() as u64));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> TraceLog {
+        let t = Tracer::new();
+        t.phase(0, Phase::CostFlood, true);
+        t.set_round(1);
+        t.flow(0, 1, 5, 2, 0);
+        t.flow(1, 0, 3, 0, 1);
+        t.round_flow(8, 8);
+        t.set_round(2);
+        t.phase(0, Phase::CostFlood, false);
+        t.phase(0, Phase::ConvergeFold, true);
+        t.flow(0, 1, 2, 0, 0);
+        t.round_flow(2, 4);
+        t.reduce(1, 0, 128, 64, 0.0125);
+        t.set_round(3);
+        t.phase(1, Phase::ConvergeFold, false);
+        t.phase(1, Phase::Solve, true);
+        t.phase(1, Phase::Solve, false);
+        t.phase(1, Phase::Broadcast, true);
+        t.epoch(1, true, 0, 40);
+        t.summary(11, 3, 1);
+        t.snapshot()
+    }
+
+    #[test]
+    fn phase_names_round_trip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::parse(p.name()), Some(p));
+        }
+        assert_eq!(Phase::parse("warmup"), None);
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_event_kind() {
+        let log = sample_log();
+        let text = log.to_jsonl();
+        assert_eq!(text.lines().count(), log.events.len());
+        let back = TraceLog::from_jsonl(&text).unwrap();
+        assert_eq!(back, log);
+        // Blank lines are tolerated; garbage is not.
+        let padded = format!("\n{text}\n\n");
+        assert_eq!(TraceLog::from_jsonl(&padded).unwrap(), log);
+        assert!(TraceLog::from_jsonl("{\"ev\":\"wat\"}").is_err());
+        assert!(TraceLog::from_jsonl("not json").is_err());
+    }
+
+    #[test]
+    fn tracer_round_stamping_and_snapshot() {
+        let t = Tracer::new();
+        assert!(t.is_empty());
+        let handle = t.clone();
+        handle.set_round(7);
+        t.phase(3, Phase::ConvergeFold, true);
+        assert_eq!(t.len(), 1);
+        let log = t.snapshot();
+        assert_eq!(
+            log.events[0],
+            TraceEvent::Phase {
+                round: 7,
+                node: 3,
+                phase: Phase::ConvergeFold,
+                enter: true,
+            }
+        );
+        // Snapshot clones: the shared buffer keeps recording.
+        handle.round_flow(1, 1);
+        assert_eq!(t.len(), 2);
+        assert_eq!(log.events.len(), 1);
+    }
+
+    #[test]
+    fn log_aggregates() {
+        let log = sample_log();
+        let spans = log.phase_spans();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0], (Phase::CostFlood, 0, 2));
+        assert_eq!(spans[1], (Phase::ConvergeFold, 2, 3));
+        assert_eq!(spans[2], (Phase::Solve, 3, 3));
+        assert_eq!(spans[3], (Phase::Broadcast, 3, 3));
+        assert_eq!(log.flow_totals(), (10, 1));
+        assert_eq!(log.edge_totals()[0], ((0, 1), 7));
+        assert_eq!(log.fold_depth(), 1);
+        assert_eq!(log.run_summary(), Some((11, 3, 1)));
+        assert_eq!(log.delivered_in_rounds(1, 1), 8);
+        assert_eq!(log.delivered_in_rounds(1, 3), 10);
+
+        let meters: BTreeMap<_, _> = log.derived_meters().into_iter().collect();
+        assert_eq!(meters[keys::PHASE_ROUNDS_COST_FLOOD], 3);
+        assert_eq!(meters[keys::PHASE_ROUNDS_CONVERGE_FOLD], 2);
+        assert_eq!(meters[keys::PHASE_ROUNDS_SOLVE], 1);
+        assert_eq!(meters[keys::INFLIGHT_P99], 8);
+        assert_eq!(meters[keys::TRACE_EVENTS], log.events.len() as u64);
+    }
+
+    #[test]
+    fn reduce_eps_converts_to_ppm() {
+        let t = Tracer::new();
+        t.reduce(0, 2, 100, 50, 0.0125);
+        let log = t.snapshot();
+        let TraceEvent::Reduce { eps_ppm, level, .. } = log.events[0] else {
+            panic!("expected a reduce event");
+        };
+        assert_eq!(eps_ppm, 12_500);
+        assert_eq!(level, 2);
+        assert_eq!(log.fold_depth(), 3);
+    }
+}

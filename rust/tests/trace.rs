@@ -1,0 +1,208 @@
+//! Tracing-layer contracts (the observability tentpole):
+//!
+//! 1. bit-identity: a traced run is indistinguishable from an untraced
+//!    one — centers, coreset, wire totals, rounds, peaks and the
+//!    scheduling meters all match exactly — across graph / tree /
+//!    overlay topologies × 1 / 2 / 8 worker threads;
+//! 2. conservation: the per-edge `Flow` records account for every point
+//!    the run charged (`Σ delivered + Σ dropped == comm_points`), the
+//!    per-round `Round` records agree with them, and the closing
+//!    `Summary` event matches the run's own meters — so a trace file is
+//!    self-checking, which `trace_view` and CI grep on;
+//! 3. phase spans: the four protocol phases tile the run gaplessly in
+//!    protocol order from round 0 (graph mode has no broadcast — all
+//!    nodes solve locally — so it records exactly three phases);
+//! 4. registry: every meter key a run emits is documented in
+//!    `trace::keys::ALL`, and JSONL round-trips a real run's log.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::coreset::DistributedConfig;
+use distclus::partition::Scheme;
+use distclus::protocol::RunResult;
+use distclus::rng::Pcg64;
+use distclus::scenario::{Distributed, Scenario};
+use distclus::sketch::SketchPlan;
+use distclus::testutil::mixture_sites;
+use distclus::topology::generators;
+use distclus::trace::{keys, Phase, TraceEvent, TraceLog};
+
+const KINDS: [&str; 3] = ["graph", "tree", "overlay"];
+
+/// One run of the full pipeline at a fixed operating point: 8-site
+/// connected Erdős–Rényi graph, t = 512, k = 3, paged exchange.
+fn run_kind(kind: &str, threads: usize, trace: bool) -> RunResult {
+    let n = 8usize;
+    let locals = mixture_sites(21, 2_400, 4, 4, n, Scheme::Uniform, false);
+    let mut rng = Pcg64::seed_from(22);
+    let g = generators::erdos_renyi_connected(&mut rng, n, 0.35);
+    let cfg = DistributedConfig {
+        t: 512,
+        k: 3,
+        ..Default::default()
+    };
+    let base = match kind {
+        "graph" => Scenario::on_graph(g).page_points(32),
+        "tree" => Scenario::on_spanning_tree_of(g).page_points(32),
+        "overlay" => Scenario::on_overlay_of(g)
+            .page_points(32)
+            .sketch(SketchPlan::merge_reduce(128)),
+        other => panic!("unknown kind {other}"),
+    };
+    base.threads(threads)
+        .trace(trace)
+        .seed(23)
+        .run(&Distributed(cfg), &locals, &RustBackend)
+        .expect("trace fixture run")
+}
+
+#[test]
+fn tracing_is_bit_identical_across_topologies_and_threads() {
+    for kind in KINDS {
+        for threads in [1usize, 2, 8] {
+            let off = run_kind(kind, threads, false);
+            let on = run_kind(kind, threads, true);
+            let tag = format!("{kind}/threads={threads}");
+            assert_eq!(on.centers, off.centers, "{tag}: centers");
+            assert_eq!(on.coreset.set, off.coreset.set, "{tag}: coreset");
+            assert_eq!(on.comm_points, off.comm_points, "{tag}: comm");
+            assert_eq!(on.rounds, off.rounds, "{tag}: rounds");
+            assert_eq!(on.peak_points, off.peak_points, "{tag}: wire peak");
+            assert_eq!(on.collector_peak, off.collector_peak, "{tag}: node peak");
+            assert_eq!(
+                on.meters[keys::SCHED_TICKS],
+                off.meters[keys::SCHED_TICKS],
+                "{tag}: sched_ticks"
+            );
+            assert_eq!(
+                on.meters[keys::SCHED_ROUNDS],
+                off.meters[keys::SCHED_ROUNDS],
+                "{tag}: sched_rounds"
+            );
+            assert_eq!(
+                on.meters[keys::RECV_DRAINS],
+                off.meters[keys::RECV_DRAINS],
+                "{tag}: recv_drains"
+            );
+            assert_eq!(
+                on.meters[keys::IDLE_RECVS],
+                off.meters[keys::IDLE_RECVS],
+                "{tag}: idle_recvs"
+            );
+            // Capture is opt-in: off-runs carry no log and none of the
+            // trace-derived meters; on-runs carry both.
+            assert!(off.trace.is_none(), "{tag}");
+            assert!(!off.meters.contains_key(keys::TRACE_EVENTS), "{tag}");
+            assert!(on.trace.is_some(), "{tag}");
+            assert!(on.meters[keys::TRACE_EVENTS] > 0, "{tag}");
+            assert!(on.meters.contains_key(keys::INFLIGHT_P99), "{tag}");
+        }
+    }
+}
+
+#[test]
+fn flow_records_conserve_the_wire_bill() {
+    for kind in KINDS {
+        let run = run_kind(kind, 1, true);
+        let log = run.trace.as_ref().unwrap();
+
+        // Per-edge records account for every charged point (lossless
+        // links here, so nothing drops).
+        let (delivered, dropped) = log.flow_totals();
+        assert_eq!(dropped, 0, "{kind}: lossless run");
+        assert_eq!(delivered, run.comm_points, "{kind}: flow vs charge");
+
+        // Per-round totals are the same series, aggregated.
+        let per_round: usize = log
+            .events
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Round {
+                    delivered_points, ..
+                } => Some(*delivered_points),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(per_round, delivered, "{kind}: round records");
+
+        // The closing summary matches the run's own meters.
+        let (comm, rounds, summary_dropped) = log.run_summary().unwrap();
+        assert_eq!(comm, run.comm_points, "{kind}");
+        assert_eq!(rounds, run.rounds, "{kind}");
+        assert_eq!(summary_dropped, 0, "{kind}");
+
+        // And the log survives its own wire format.
+        let back = TraceLog::from_jsonl(&log.to_jsonl()).unwrap();
+        assert_eq!(&back, log, "{kind}: JSONL round-trip");
+    }
+}
+
+#[test]
+fn phase_spans_tile_the_run_in_protocol_order() {
+    for kind in KINDS {
+        let run = run_kind(kind, 1, true);
+        let log = run.trace.as_ref().unwrap();
+        let spans = log.phase_spans();
+
+        // Graph mode: every node solves locally on its flooded copy, so
+        // there is no broadcast phase at all.
+        let expected = if kind == "graph" { 3 } else { 4 };
+        assert_eq!(spans.len(), expected, "{kind}: {spans:?}");
+        assert_eq!(spans[0].0, Phase::CostFlood, "{kind}");
+        assert_eq!(spans[0].1, 0, "{kind}: the cost flood opens the run");
+        for w in spans.windows(2) {
+            // Protocol order with overlap ≥ 0: each phase starts no
+            // later than its predecessor ends (the same readiness flip
+            // that exits one phase enters the next).
+            assert!(
+                w[1].1 <= w[0].2,
+                "{kind}: gap between {:?} (ends r{}) and {:?} (starts r{})",
+                w[0].0,
+                w[0].2,
+                w[1].0,
+                w[1].1
+            );
+        }
+        let last_end = spans.iter().map(|s| s.2).max().unwrap();
+        assert!(
+            last_end <= run.rounds as u64,
+            "{kind}: span end {last_end} past round count {}",
+            run.rounds
+        );
+
+        // The derived span meters mirror the spans exactly.
+        for &(phase, start, end) in &spans {
+            assert_eq!(
+                run.meters[phase.meter_key()],
+                end - start + 1,
+                "{kind}: {phase:?} meter"
+            );
+        }
+        assert_eq!(
+            run.meters.contains_key(keys::PHASE_ROUNDS_BROADCAST),
+            kind != "graph",
+            "{kind}"
+        );
+
+        // Fold events appear exactly where a sketch reduces: the
+        // merge-reduce overlay registers a fold tree, exact modes none.
+        if kind == "overlay" {
+            assert!(log.fold_depth() > 0, "overlay must record reductions");
+            assert!(run.meters[keys::MR_REDUCTIONS] > 0);
+        } else {
+            assert_eq!(log.fold_depth(), 0, "{kind}: exact folds are silent");
+        }
+    }
+}
+
+#[test]
+fn every_emitted_meter_is_registered() {
+    for kind in KINDS {
+        let run = run_kind(kind, 1, true);
+        for key in run.meters.keys() {
+            assert!(
+                keys::ALL.iter().any(|&(k, _)| k == *key),
+                "{kind}: meter '{key}' missing from the trace::keys registry"
+            );
+        }
+    }
+}
