@@ -1,0 +1,263 @@
+//! Service SLO bench: the always-on clustering service under scripted
+//! churn, reporting the meters an operator would alert on.
+//!
+//! Two panels:
+//!
+//! - **failover SLO** — a grid overlay with one relay failure per
+//!   epoch against a drift threshold high enough that every post-build
+//!   epoch skips: each failure must be absorbed by the subtree
+//!   re-merge, and the table shows the recovery bill landing strictly
+//!   below what reflooding every retained portion would cost (asserted,
+//!   not just printed);
+//! - **churn mix** — a seed-derived schedule of joins, leaves, drops,
+//!   relay failures and restart drills, closing with the full meter
+//!   registry (`trace::keys`) and a checkpoint kill/restore drill whose
+//!   continued reports must match the uninterrupted service
+//!   bit-for-bit.
+//!
+//! Run with `cargo bench --bench service_slo` (`-- --smoke` for the CI
+//! bitrot check; `--trace OUT.jsonl` records the churn-mix panel's
+//! service trace for `trace_view`; `--json OUT.json` writes a snapshot).
+
+use distclus::cli::Args;
+use distclus::clustering::backend::RustBackend;
+use distclus::coreset::DistributedConfig;
+use distclus::data::synthetic::gaussian_mixture;
+use distclus::json::build;
+use distclus::json::Value;
+use distclus::metrics::Table;
+use distclus::rng::Pcg64;
+use distclus::service::{ChurnEvent, ChurnSchedule, ClusterService};
+use distclus::topology::generators;
+use distclus::trace::Tracer;
+
+const DIM: usize = 4;
+
+fn cfg(t: usize) -> DistributedConfig {
+    DistributedConfig {
+        t,
+        k: 3,
+        ..Default::default()
+    }
+}
+
+/// Ingest one epoch of synthetic points into every live site.
+fn feed_epoch(svc: &mut ClusterService, feed: &mut Pcg64, per_site: usize) {
+    for site in 0..svc.overlay().n() {
+        if svc.overlay().is_live(site) {
+            svc.ingest(site, &gaussian_mixture(feed, per_site, DIM, 3));
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let smoke = args.has("smoke");
+    let json_out = args.get("json").map(str::to_string);
+    let trace_out = args.get("trace").map(str::to_string);
+    // `cargo bench` appends `--bench` to every harness=false binary.
+    let _ = args.has("bench");
+    args.reject_unknown()?;
+
+    // One tracer across both panels: the written trace then always
+    // carries recovery flow records (panel 1 guarantees re-merges), and
+    // its closing summary must cover both services' network totals.
+    let tracer = trace_out.as_ref().map(|_| Tracer::new());
+
+    // ---- panel 1: failover SLO (one relay failure per epoch) ----
+    let (rows, cols, epochs) = if smoke { (3, 3, 6) } else { (4, 4, 10) };
+    let mut schedule = ChurnSchedule::empty();
+    for epoch in 2..epochs {
+        schedule.push(epoch, ChurnEvent::RelayFail { node: None });
+    }
+    let mut svc = ClusterService::new(
+        generators::grid(rows, cols),
+        DIM,
+        cfg(if smoke { 180 } else { 480 }),
+        1e12, // never rebuild on drift: every failure must fail over
+        42,
+    )
+    .with_schedule(schedule);
+    if let Some(t) = &tracer {
+        svc = svc.with_tracer(t.clone());
+    }
+    let mut feed = Pcg64::seed_from(7);
+    let mut slo_table = Table::new(&[
+        "epoch",
+        "live",
+        "rebuilt",
+        "comm",
+        "recovery",
+        "reflood bill",
+        "saving",
+        "rounds",
+        "failed",
+    ]);
+    let mut json_slo: Vec<Value> = Vec::new();
+    let mut recoveries = 0usize;
+    for epoch in 1..=epochs {
+        feed_epoch(&mut svc, &mut feed, if smoke { 60 } else { 120 });
+        let r = svc.epoch(&RustBackend);
+        if r.recovery_comm_points > 0 {
+            assert!(
+                r.recovery_comm_points < r.rebuild_bill,
+                "epoch {epoch}: recovery {} must bill strictly below reflood {}",
+                r.recovery_comm_points,
+                r.rebuild_bill
+            );
+            recoveries += 1;
+        }
+        slo_table.row(vec![
+            epoch.to_string(),
+            svc.n_live().to_string(),
+            r.report.rebuilt.to_string(),
+            r.report.comm_points.to_string(),
+            r.recovery_comm_points.to_string(),
+            r.rebuild_bill.to_string(),
+            if r.recovery_comm_points > 0 {
+                format!(
+                    "{:.1}%",
+                    100.0 * (1.0 - r.recovery_comm_points as f64 / r.rebuild_bill as f64)
+                )
+            } else {
+                "-".into()
+            },
+            r.recovery_rounds.to_string(),
+            r.relay_failures
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        ]);
+        json_slo.push(build::obj(vec![
+            ("epoch", build::num(epoch as f64)),
+            ("live", build::num(svc.n_live() as f64)),
+            ("recovery_points", build::num(r.recovery_comm_points as f64)),
+            ("reflood_bill", build::num(r.rebuild_bill as f64)),
+            ("recovery_rounds", build::num(r.recovery_rounds as f64)),
+        ]));
+    }
+    assert!(recoveries >= 2, "relay failures must trigger subtree re-merges, got {recoveries}");
+    println!("# failover SLO ({rows}x{cols} grid, one relay failure per epoch, skip regime)\n");
+    println!("{}", slo_table.render());
+    println!("\nrecoveries: {recoveries}, every one strictly below the reflood bill");
+    let slo_totals = svc.network_totals();
+
+    // ---- panel 2: churn mix + meters + checkpoint drill ----
+    let (rows, cols, epochs) = if smoke { (3, 3, 8) } else { (4, 4, 14) };
+    let n_sites = rows * cols;
+    let mut schedule = ChurnSchedule::synth(epochs, n_sites, &mut Pcg64::seed_from(99));
+    // Always close with a restart so the checkpoint meter is exercised
+    // even if the synth draws scripted none.
+    schedule.push(epochs - 1, ChurnEvent::Restart);
+    let mut svc = ClusterService::new(
+        generators::grid(rows, cols),
+        DIM,
+        cfg(if smoke { 180 } else { 480 }),
+        0.4,
+        43,
+    )
+    .with_schedule(schedule);
+    if let Some(t) = &tracer {
+        svc = svc.with_tracer(t.clone());
+    }
+    let mut feed = Pcg64::seed_from(8);
+    let mut mix_table = Table::new(&[
+        "epoch", "live", "rebuilt", "comm", "recovery", "stale", "events",
+    ]);
+    for epoch in 1..=epochs {
+        feed_epoch(&mut svc, &mut feed, if smoke { 60 } else { 120 });
+        let r = svc.epoch(&RustBackend);
+        let mut events = String::new();
+        for v in &r.joined {
+            events.push_str(&format!(" +{v}"));
+        }
+        for v in &r.left {
+            events.push_str(&format!(" -{v}"));
+        }
+        for v in &r.relay_failures {
+            events.push_str(&format!(" !{v}"));
+        }
+        if r.restarted {
+            events.push_str(" restart");
+        }
+        mix_table.row(vec![
+            epoch.to_string(),
+            svc.n_live().to_string(),
+            r.report.rebuilt.to_string(),
+            r.report.comm_points.to_string(),
+            r.recovery_comm_points.to_string(),
+            r.report.staleness_epochs.to_string(),
+            events,
+        ]);
+    }
+    println!("\n# churn mix ({rows}x{cols} grid, seed-derived schedule)\n");
+    println!("{}", mix_table.render());
+
+    // Kill/restore drill: the restored collector must continue
+    // bit-identically to the uninterrupted one.
+    let text = svc.checkpoint().to_string();
+    let mut twin = ClusterService::restore(&distclus::json::parse(&text)?)?;
+    let mut feed_a = Pcg64::seed_from(9);
+    let mut feed_b = Pcg64::seed_from(9);
+    for _ in 0..2 {
+        feed_epoch(&mut svc, &mut feed_a, 40);
+        feed_epoch(&mut twin, &mut feed_b, 40);
+        let ra = svc.epoch(&RustBackend);
+        let rb = twin.epoch(&RustBackend);
+        assert_eq!(ra, rb, "restored collector diverged from the original");
+    }
+    assert_eq!(
+        svc.checkpoint().to_string(),
+        twin.checkpoint().to_string(),
+        "post-drill state diverged"
+    );
+    println!(
+        "\ncheckpoint drill: {} bytes, restored collector bit-identical over 2 epochs",
+        text.len()
+    );
+
+    let meters = svc.meters();
+    let mut meter_table = Table::new(&["meter", "value"]);
+    for (key, value) in &meters {
+        meter_table.row(vec![key.clone(), value.to_string()]);
+    }
+    println!("\n# service meters (trace::keys registry)\n");
+    println!("{}", meter_table.render());
+
+    let mix_totals = svc.network_totals();
+    if let (Some(path), Some(t)) = (&trace_out, &tracer) {
+        // The summary closes the whole log: both panels' recovery
+        // networks fed the same tracer, so conservation must hold over
+        // their combined totals.
+        t.summary(
+            slo_totals.0 + mix_totals.0,
+            slo_totals.1 + mix_totals.1,
+            slo_totals.2 + mix_totals.2,
+        );
+        let log = t.snapshot();
+        std::fs::write(path, log.to_jsonl())?;
+        eprintln!("wrote {path} ({} trace events)", log.events.len());
+    }
+    if let Some(path) = json_out {
+        let snapshot = build::obj(vec![
+            ("bench", build::s("service_slo")),
+            ("smoke", build::num(if smoke { 1.0 } else { 0.0 })),
+            ("slo", build::arr(json_slo)),
+            (
+                "meters",
+                build::obj(
+                    meters
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), build::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            ("checkpoint_bytes", build::num(text.len() as f64)),
+        ]);
+        std::fs::write(&path, snapshot.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    println!("\nall service SLO assertions passed");
+    Ok(())
+}

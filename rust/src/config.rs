@@ -338,6 +338,15 @@ pub struct ExperimentSpec {
     /// `None` (the default) records nothing and costs nothing. Tracing
     /// is counts-only and never changes results (see [`crate::trace`]).
     pub trace: Option<String>,
+    /// Churn schedule for the always-on service (`serve` subcommand):
+    /// either the `<epoch>:<event>;...` grammar of
+    /// [`crate::service::ChurnSchedule`] or the literal `synth` for a
+    /// seed-derived script. Ignored by `run`.
+    pub churn: Option<String>,
+    /// Where `serve` writes the final service checkpoint (JSON text;
+    /// resume a run from it with `serve --resume <path>`). Ignored by
+    /// `run`.
+    pub checkpoint: Option<String>,
 }
 
 impl Default for ExperimentSpec {
@@ -365,6 +374,8 @@ impl Default for ExperimentSpec {
             sketch: SketchMode::Exact,
             bucket_points: 0,
             trace: None,
+            churn: None,
+            checkpoint: None,
         }
     }
 }
@@ -465,6 +476,15 @@ impl ExperimentSpec {
                 }
                 "bucket_points" => spec.bucket_points = v.parse()?,
                 "trace" => spec.trace = Some(v.clone()),
+                "churn" => {
+                    // Validate the grammar at parse time — a typo'd
+                    // schedule must not silently run quiet epochs.
+                    if v != "synth" {
+                        crate::service::ChurnSchedule::parse(v)?;
+                    }
+                    spec.churn = Some(v.clone());
+                }
+                "checkpoint" => spec.checkpoint = Some(v.clone()),
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -813,6 +833,26 @@ mod tests {
         assert_eq!(ExperimentSpec::default().trace, None);
         let spec = ExperimentSpec::from_config("trace = \"run.jsonl\"\n").unwrap();
         assert_eq!(spec.trace.as_deref(), Some("run.jsonl"));
+    }
+
+    #[test]
+    fn service_keys_parse_and_default_off() {
+        let spec = ExperimentSpec::default();
+        assert_eq!(spec.churn, None);
+        assert_eq!(spec.checkpoint, None);
+
+        let spec = ExperimentSpec::from_config(
+            "churn = \"2:relay-fail;3:restart\"\ncheckpoint = \"svc.json\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.churn.as_deref(), Some("2:relay-fail;3:restart"));
+        assert_eq!(spec.checkpoint.as_deref(), Some("svc.json"));
+
+        // The synth keyword passes through; malformed grammars are loud.
+        let spec = ExperimentSpec::from_config("churn = synth\n").unwrap();
+        assert_eq!(spec.churn.as_deref(), Some("synth"));
+        assert!(ExperimentSpec::from_config("churn = \"2:jump\"\n").is_err());
+        assert!(ExperimentSpec::from_config("churn = \"0:join\"\n").is_err());
     }
 
     #[test]

@@ -10,31 +10,161 @@
 //! solution `B_i` is one kernel assignment. The maintenance rule is:
 //!
 //! - per epoch, every site appends its new points and extends its local
-//!   cost incrementally (no re-solve);
+//!   cost incrementally (no re-solve); drift checks assign only the
+//!   points ingested since the last freeze (a per-site watermark);
 //! - when `Σ_i |cost_now_i − cost_built_i| > θ · Σ_i cost_built_i`, all
-//!   sites re-run Rounds 1–2 and reflood portions; otherwise only the n
-//!   scalar costs circulate.
+//!   live sites re-run Rounds 1–2 and reflood portions; otherwise only
+//!   the `n_live` scalar costs circulate.
 //!
 //! Communication is metered in the paper's unit, so the tests can pin
 //! the savings vs rebuild-every-epoch.
+//!
+//! The always-on service layer ([`crate::service`]) builds on three
+//! extensions that are all no-ops for plain use: site indices are
+//! *stable* across membership churn (dead sites keep their slot but
+//! cost nothing), rebuilds can retain each live site's portion for
+//! failover re-merges, and the whole coordinator state serializes
+//! through [`crate::json`] bit-identically ([`checkpoint`] /
+//! [`restore`]).
+//!
+//! [`checkpoint`]: StreamingCoordinator::checkpoint
+//! [`restore`]: StreamingCoordinator::restore
 
 use crate::clustering::backend::Backend;
-use crate::coreset::distributed::{self, DistributedConfig, LocalSummary};
+use crate::clustering::Objective;
+use crate::coreset::distributed::{self, DistributedConfig};
 use crate::coreset::Coreset;
+use crate::exec::{map_sites, ExecPolicy, SiteAffinity};
+use crate::json::{build, Value};
 use crate::points::{Dataset, WeightedSet};
 use crate::rng::Pcg64;
 use crate::sketch::{SketchMode, SketchPlan};
 use crate::trace::Tracer;
+use anyhow::{bail, Context, Result};
 
 /// One site's streaming state.
 struct SiteState {
     data: WeightedSet,
-    /// Frozen Round-1 summary backing the current coreset.
-    summary: Option<LocalSummary>,
+    /// Frozen Round-1 centers backing the current coreset — only the
+    /// centers are needed for drift checks, and (unlike the full
+    /// summary with its per-point assignment) they serialize.
+    frozen_centers: Option<Dataset>,
     /// Local cost at the time the current coreset was built.
     cost_built: f64,
     /// Current local cost (incrementally extended).
     cost_now: f64,
+    /// Rows of `data` already folded into `cost_now`: drift checks
+    /// assign only `data[watermark..]`, so a quiet epoch performs no
+    /// kernel work at all.
+    watermark: usize,
+    /// Dead sites keep their index (stable ids for the service
+    /// overlay) but hold no data and are skipped by every pass.
+    alive: bool,
+    /// This site's portion from the last rebuild, retained under
+    /// [`StreamingCoordinator::with_retained_portions`] — the failover
+    /// re-merge needs surviving sites' portions without a fresh
+    /// Round 1–2.
+    portion: Option<Coreset>,
+}
+
+impl SiteState {
+    fn fresh(d: usize) -> SiteState {
+        SiteState {
+            data: WeightedSet::empty(d),
+            frozen_centers: None,
+            cost_built: 0.0,
+            cost_now: 0.0,
+            watermark: 0,
+            alive: true,
+            portion: None,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        build::obj(vec![
+            ("data", self.data.to_json()),
+            (
+                "frozen_centers",
+                self.frozen_centers
+                    .as_ref()
+                    .map(Dataset::to_json)
+                    .unwrap_or(Value::Null),
+            ),
+            ("cost_built", build::num(self.cost_built)),
+            (
+                // Null encodes the one non-finite value the coordinator
+                // produces (∞ on never-frozen sites) — "inf" is not JSON.
+                "cost_now",
+                if self.cost_now.is_finite() {
+                    build::num(self.cost_now)
+                } else {
+                    Value::Null
+                },
+            ),
+            ("watermark", build::num(self.watermark as f64)),
+            ("alive", Value::Bool(self.alive)),
+            (
+                "portion",
+                self.portion.as_ref().map(coreset_to_json).unwrap_or(Value::Null),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<SiteState> {
+        let data = WeightedSet::from_json(req(v, "data")?).context("site: data")?;
+        let frozen_centers = match req(v, "frozen_centers")? {
+            Value::Null => None,
+            fc => Some(Dataset::from_json(fc).context("site: frozen_centers")?),
+        };
+        let cost_now = match req(v, "cost_now")? {
+            Value::Null => f64::INFINITY,
+            x => x.as_f64().context("site: cost_now must be a number or null")?,
+        };
+        let watermark = req(v, "watermark")?
+            .as_usize()
+            .context("site: bad watermark")?;
+        if watermark > data.n() {
+            bail!("site: watermark {} beyond {} points", watermark, data.n());
+        }
+        let Value::Bool(alive) = req(v, "alive")? else {
+            bail!("site: 'alive' must be a bool");
+        };
+        let portion = match req(v, "portion")? {
+            Value::Null => None,
+            p => Some(coreset_from_json(p).context("site: portion")?),
+        };
+        Ok(SiteState {
+            cost_built: req(v, "cost_built")?
+                .as_f64()
+                .context("site: bad cost_built")?,
+            data,
+            frozen_centers,
+            cost_now,
+            watermark,
+            alive: *alive,
+            portion,
+        })
+    }
+}
+
+fn coreset_to_json(c: &Coreset) -> Value {
+    build::obj(vec![
+        ("set", c.set.to_json()),
+        ("sampled", build::num(c.sampled as f64)),
+    ])
+}
+
+fn coreset_from_json(v: &Value) -> Result<Coreset> {
+    Ok(Coreset {
+        set: WeightedSet::from_json(req(v, "set")?)?,
+        sampled: req(v, "sampled")?.as_usize().context("coreset: bad 'sampled'")?,
+    })
+}
+
+/// Fetch a required checkpoint field.
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key)
+        .with_context(|| format!("checkpoint: missing '{key}'"))
 }
 
 /// Report of one epoch.
@@ -67,6 +197,7 @@ pub struct EpochReport {
 /// the coordinator/star case).
 pub struct StreamingCoordinator {
     sites: Vec<SiteState>,
+    d: usize,
     cfg: DistributedConfig,
     /// Relative drift threshold θ.
     pub threshold: f64,
@@ -76,6 +207,14 @@ pub struct StreamingCoordinator {
     /// merge-and-reduce plan keeps the coordinator's resident set
     /// bounded instead of materializing the full coreset).
     sketch: SketchPlan,
+    /// How the per-site Round 1–2 work of a rebuild is scheduled.
+    /// Sequential (the default) threads one RNG through sites in index
+    /// order — bit-compatible with the historical implementation.
+    exec: ExecPolicy,
+    /// Keep each live site's portion after a rebuild (for the service
+    /// layer's failover re-merge). Off by default: plain streaming use
+    /// never pays the memory.
+    retain_portions: bool,
     coreset: Option<Coreset>,
     epochs: usize,
     rebuilds: usize,
@@ -89,18 +228,14 @@ impl StreamingCoordinator {
     /// New coordinator over `n_sites` empty sites of dimension `d`.
     pub fn new(n_sites: usize, d: usize, cfg: DistributedConfig, threshold: f64) -> Self {
         StreamingCoordinator {
-            sites: (0..n_sites)
-                .map(|_| SiteState {
-                    data: WeightedSet::empty(d),
-                    summary: None,
-                    cost_built: 0.0,
-                    cost_now: 0.0,
-                })
-                .collect(),
+            sites: (0..n_sites).map(|_| SiteState::fresh(d)).collect(),
+            d,
             cfg,
             threshold,
             hops: 1,
             sketch: SketchPlan::exact(),
+            exec: ExecPolicy::Sequential,
+            retain_portions: false,
             coreset: None,
             epochs: 0,
             rebuilds: 0,
@@ -123,12 +258,29 @@ impl StreamingCoordinator {
         self
     }
 
-    /// Append new points to a site (weight 1 each).
+    /// Schedule rebuild work under `exec` (builder-style). Parallel
+    /// policies draw per-site RNG streams split up front, so results
+    /// are identical for any thread count — but differ from the
+    /// sequential default, which is the historical draw order.
+    pub fn with_exec(mut self, exec: ExecPolicy) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Retain each live site's portion across rebuilds (builder-style)
+    /// — the service layer's failover re-merge reuses them instead of
+    /// re-running Rounds 1–2 on unaffected sites.
+    pub fn with_retained_portions(mut self) -> Self {
+        self.retain_portions = true;
+        self
+    }
+
+    /// Append new points to a live site (weight 1 each) in one bulk
+    /// buffer copy.
     pub fn ingest(&mut self, site: usize, points: &Dataset) {
         let s = &mut self.sites[site];
-        for i in 0..points.n() {
-            s.data.push(points.row(i), 1.0);
-        }
+        assert!(s.alive, "ingest into dead site {site}");
+        s.data.extend_unit(points);
     }
 
     /// The current global coreset, if one has been built.
@@ -136,27 +288,114 @@ impl StreamingCoordinator {
         self.coreset.as_ref()
     }
 
+    /// Replace the global coreset in place — the service layer installs
+    /// the failover re-merge product here (staleness accounting is the
+    /// caller's concern; a re-merge is not a rebuild).
+    pub(crate) fn install_coreset(&mut self, coreset: Coreset) {
+        self.coreset = Some(coreset);
+    }
+
     /// Epochs processed and rebuilds performed (for the savings metric).
     pub fn stats(&self) -> (usize, usize) {
         (self.epochs, self.rebuilds)
     }
 
-    /// Extend `cost_now` of every site by assigning *new* points to its
+    /// Point dimension of every site.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Total site slots, dead ones included (indices are stable).
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// Sites currently alive.
+    pub fn n_live(&self) -> usize {
+        self.sites.iter().filter(|s| s.alive).count()
+    }
+
+    /// Whether a site slot is currently alive.
+    pub fn is_live(&self, site: usize) -> bool {
+        self.sites[site].alive
+    }
+
+    /// The site's retained portion from the last rebuild (requires
+    /// [`with_retained_portions`](Self::with_retained_portions)).
+    pub fn portion(&self, site: usize) -> Option<&Coreset> {
+        self.sites[site].portion.as_ref()
+    }
+
+    /// Re-attach (or detach) the epoch-event tracer in place — restore
+    /// paths cannot use the consuming builder.
+    pub(crate) fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    /// The distributed-coreset configuration rebuilds run under.
+    pub(crate) fn config(&self) -> &DistributedConfig {
+        &self.cfg
+    }
+
+    /// The sketch plan rebuilds fold through.
+    pub(crate) fn sketch_plan(&self) -> SketchPlan {
+        self.sketch
+    }
+
+    /// Append a fresh empty live site; returns its (stable) index.
+    pub fn add_site(&mut self) -> usize {
+        self.sites.push(SiteState::fresh(self.d));
+        self.sites.len() - 1
+    }
+
+    /// Drop a site: its data, frozen solution and portion are
+    /// discarded, the slot stays (indices never shift). The global
+    /// coreset keeps the departed site's stale contribution until the
+    /// next rebuild — callers that need the final points folded in run
+    /// [`epoch_forced`](Self::epoch_forced) first (a graceful drain).
+    pub fn remove_site(&mut self, site: usize) {
+        let d = self.d;
+        let s = &mut self.sites[site];
+        *s = SiteState::fresh(d);
+        s.alive = false;
+    }
+
+    /// Re-activate a dead slot as a fresh empty site. A revived site
+    /// has no frozen solution, so the next epoch's drift is infinite
+    /// and forces a rebuild — exactly what a join requires.
+    pub fn revive_site(&mut self, site: usize) {
+        let d = self.d;
+        self.sites[site] = SiteState::fresh(d);
+    }
+
+    /// Extend `cost_now` of every live site by assigning only the
+    /// points ingested since the last freeze (the watermark) to its
     /// frozen local solution. Returns the global relative drift.
     fn measure_drift(&mut self, backend: &dyn Backend) -> f64 {
         let mut drift_abs = 0.0;
         let mut base = 0.0;
         for s in &mut self.sites {
-            if let Some(summary) = &s.summary {
-                // Cost of the full current data against the frozen B_i.
-                let asg = backend.assign(
-                    &s.data.points,
-                    &s.data.weights,
-                    &summary.solution.centers,
-                );
-                s.cost_now = asg.total(self.cfg.objective);
-            } else {
+            if !s.alive {
+                continue;
+            }
+            if let Some(centers) = &s.frozen_centers {
+                let n = s.data.n();
+                if s.watermark < n {
+                    // Cost of the fresh tail against the frozen B_i —
+                    // points measured in earlier epochs are already in
+                    // `cost_now` and are never re-assigned.
+                    let fresh = s.data.slice(s.watermark, n);
+                    let asg =
+                        backend.assign(&fresh.points, &fresh.weights, centers);
+                    s.cost_now += asg.total(self.cfg.objective);
+                    s.watermark = n;
+                }
+            } else if s.data.n() > 0 {
                 s.cost_now = f64::INFINITY; // never built: force rebuild
+            } else {
+                // Joined but not yet ingested: nothing to measure, and
+                // an empty site must not force (or join) a rebuild.
+                continue;
             }
             base += s.cost_built;
             drift_abs += (s.cost_now - s.cost_built).abs();
@@ -170,19 +409,52 @@ impl StreamingCoordinator {
 
     /// Process one epoch: measure drift, rebuild if above threshold.
     pub fn epoch(&mut self, backend: &dyn Backend, rng: &mut Pcg64) -> EpochReport {
+        self.epoch_inner(backend, rng, false)
+    }
+
+    /// Epoch with the rebuild forced regardless of drift — the service
+    /// layer drains a gracefully-leaving site by folding its final
+    /// points into the coreset before dropping the slot.
+    pub fn epoch_forced(
+        &mut self,
+        backend: &dyn Backend,
+        rng: &mut Pcg64,
+    ) -> EpochReport {
+        self.epoch_inner(backend, rng, true)
+    }
+
+    fn epoch_inner(
+        &mut self,
+        backend: &dyn Backend,
+        rng: &mut Pcg64,
+        force: bool,
+    ) -> EpochReport {
         self.epochs += 1;
         let drift = self.measure_drift(backend);
-        // The n scalar costs always circulate (drift detection is itself
-        // distributed: each site contributes one number).
-        let mut comm = self.sites.len() * self.hops;
-        let rebuilt = drift > self.threshold;
+        // Live sites with data: they circulate scalars and join
+        // rebuilds. Freshly-joined empty sites are silent until they
+        // ingest (Round 1 on zero points is undefined).
+        let live_idx: Vec<usize> = self
+            .sites
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive && s.data.n() > 0)
+            .map(|(i, _)| i)
+            .collect();
+        // The live scalar costs always circulate (drift detection is
+        // itself distributed: each live site contributes one number).
+        let mut comm = live_idx.len() * self.hops;
+        let rebuilt = (force || drift > self.threshold) && !live_idx.is_empty();
         let mut sketch_peak = 0;
         if rebuilt {
             self.rebuilds += 1;
-            let locals: Vec<WeightedSet> =
-                self.sites.iter().map(|s| s.data.clone()).collect();
+            let obj = self.cfg.objective;
+            // Borrow the live site data in place — no per-site clone of
+            // the full buffers just to build a contiguous slice.
+            let locals: Vec<&WeightedSet> =
+                live_idx.iter().map(|&i| &self.sites[i].data).collect();
             let portions =
-                distributed::build_portions(&locals, &self.cfg, backend, rng);
+                distributed::build_portions_by(&locals, &self.cfg, backend, rng, self.exec);
             comm += portions.iter().map(|p| p.size()).sum::<usize>() * self.hops;
             // Fold arriving portions through the sketch plan. Exact mode
             // reproduces `distributed::union` byte for byte and draws
@@ -195,22 +467,27 @@ impl StreamingCoordinator {
             };
             let (coreset, peak) = self
                 .sketch
-                .fold_portions(
-                    &portions,
-                    self.cfg.k,
-                    self.cfg.objective,
-                    backend,
-                    sketch_rng,
-                )
+                .fold_portions(&portions, self.cfg.k, obj, backend, sketch_rng)
                 .expect("single-page portions cannot tear");
             sketch_peak = peak;
             self.coreset = Some(coreset);
-            for s in self.sites.iter_mut() {
-                // Freeze: recompute the summary for future drift checks.
-                let summary = distributed::round1(&s.data, &self.cfg, backend, rng);
-                s.cost_built = summary.assignment.total(self.cfg.objective);
+            // Freeze: recompute each live site's local solution for
+            // future drift checks. Under the sequential default this is
+            // the historical per-site loop with the shared RNG.
+            let summaries = map_sites(locals.len(), rng, self.exec, |i, r| {
+                distributed::round1(locals[i], &self.cfg, backend, r)
+            });
+            drop(locals);
+            let retain = self.retain_portions;
+            for ((&i, summary), portion) in
+                live_idx.iter().zip(summaries).zip(portions)
+            {
+                let s = &mut self.sites[i];
+                s.cost_built = summary.assignment.total(obj);
                 s.cost_now = s.cost_built;
-                s.summary = Some(summary);
+                s.frozen_centers = Some(summary.solution.centers);
+                s.watermark = s.data.n();
+                s.portion = if retain { Some(portion) } else { None };
             }
         }
         self.epochs_since_rebuild = if rebuilt {
@@ -229,6 +506,155 @@ impl StreamingCoordinator {
             staleness_epochs: self.epochs_since_rebuild,
             rebuild_rate_ppm: (self.rebuilds as u64 * 1_000_000) / self.epochs as u64,
         }
+    }
+
+    /// Serialize the coordinator's complete state through
+    /// [`crate::json`]. Point buffers round-trip bit-identically (`f32`
+    /// widens to `f64` exactly), so a [`restore`](Self::restore)d
+    /// coordinator resumes the epoch sequence with identical reports.
+    /// The tracer is not captured — reattach with
+    /// [`with_tracer`](Self::with_tracer) after restoring.
+    pub fn checkpoint(&self) -> Value {
+        let exec = match self.exec {
+            ExecPolicy::Sequential => {
+                build::obj(vec![("mode", build::s("sequential"))])
+            }
+            ExecPolicy::Parallel { threads, affinity } => build::obj(vec![
+                ("mode", build::s("parallel")),
+                ("threads", build::num(threads as f64)),
+                ("affinity", build::s(affinity.name())),
+            ]),
+        };
+        build::obj(vec![
+            ("d", build::num(self.d as f64)),
+            (
+                "cfg",
+                build::obj(vec![
+                    ("t", build::num(self.cfg.t as f64)),
+                    ("k", build::num(self.cfg.k as f64)),
+                    ("objective", build::s(self.cfg.objective.name())),
+                    ("solver_iters", build::num(self.cfg.solver_iters as f64)),
+                    (
+                        "clamp_center_weights",
+                        Value::Bool(self.cfg.clamp_center_weights),
+                    ),
+                ]),
+            ),
+            ("threshold", build::num(self.threshold)),
+            ("hops", build::num(self.hops as f64)),
+            (
+                "sketch",
+                build::obj(vec![
+                    ("mode", build::s(self.sketch.mode.name())),
+                    ("bucket_points", build::num(self.sketch.bucket_points as f64)),
+                ]),
+            ),
+            ("exec", exec),
+            ("retain_portions", Value::Bool(self.retain_portions)),
+            (
+                "sites",
+                build::arr(self.sites.iter().map(SiteState::to_json).collect()),
+            ),
+            (
+                "coreset",
+                self.coreset.as_ref().map(coreset_to_json).unwrap_or(Value::Null),
+            ),
+            ("epochs", build::num(self.epochs as f64)),
+            ("rebuilds", build::num(self.rebuilds as f64)),
+            (
+                "epochs_since_rebuild",
+                build::num(self.epochs_since_rebuild as f64),
+            ),
+        ])
+    }
+
+    /// Rebuild a coordinator from a [`checkpoint`](Self::checkpoint)
+    /// value, validating every field. The restored instance has no
+    /// tracer attached.
+    pub fn restore(v: &Value) -> Result<StreamingCoordinator> {
+        let int = |val: &Value, what: &str| -> Result<usize> {
+            val.as_usize()
+                .with_context(|| format!("checkpoint: bad '{what}'"))
+        };
+        let d = int(req(v, "d")?, "d")?;
+        if d == 0 {
+            bail!("checkpoint: d must be positive");
+        }
+        let cfg_v = req(v, "cfg")?;
+        let obj_name = req(cfg_v, "objective")?
+            .as_str()
+            .context("checkpoint: cfg.objective must be a string")?;
+        let cfg = DistributedConfig {
+            t: int(req(cfg_v, "t")?, "cfg.t")?,
+            k: int(req(cfg_v, "k")?, "cfg.k")?,
+            objective: Objective::parse(obj_name)
+                .with_context(|| format!("checkpoint: unknown objective '{obj_name}'"))?,
+            solver_iters: int(req(cfg_v, "solver_iters")?, "cfg.solver_iters")?,
+            clamp_center_weights: matches!(
+                req(cfg_v, "clamp_center_weights")?,
+                Value::Bool(true)
+            ),
+        };
+        let sketch_v = req(v, "sketch")?;
+        let mode_name = req(sketch_v, "mode")?
+            .as_str()
+            .context("checkpoint: sketch.mode must be a string")?;
+        let sketch = SketchPlan {
+            mode: SketchMode::parse(mode_name)
+                .with_context(|| format!("checkpoint: unknown sketch mode '{mode_name}'"))?,
+            bucket_points: int(req(sketch_v, "bucket_points")?, "sketch.bucket_points")?,
+        };
+        let exec_v = req(v, "exec")?;
+        let exec = match req(exec_v, "mode")?.as_str() {
+            Some("sequential") => ExecPolicy::Sequential,
+            Some("parallel") => {
+                let aff = req(exec_v, "affinity")?
+                    .as_str()
+                    .context("checkpoint: exec.affinity must be a string")?;
+                ExecPolicy::Parallel {
+                    threads: int(req(exec_v, "threads")?, "exec.threads")?,
+                    affinity: SiteAffinity::parse(aff).with_context(|| {
+                        format!("checkpoint: unknown affinity '{aff}'")
+                    })?,
+                }
+            }
+            _ => bail!("checkpoint: exec.mode must be 'sequential' or 'parallel'"),
+        };
+        let sites_v = req(v, "sites")?
+            .as_arr()
+            .context("checkpoint: 'sites' must be an array")?;
+        let mut sites = Vec::with_capacity(sites_v.len());
+        for (i, sv) in sites_v.iter().enumerate() {
+            let s = SiteState::from_json(sv).with_context(|| format!("site {i}"))?;
+            if s.data.d() != d {
+                bail!("checkpoint: site {i} dimension {} != {d}", s.data.d());
+            }
+            sites.push(s);
+        }
+        let coreset = match req(v, "coreset")? {
+            Value::Null => None,
+            c => Some(coreset_from_json(c).context("checkpoint: coreset")?),
+        };
+        Ok(StreamingCoordinator {
+            sites,
+            d,
+            cfg,
+            threshold: req(v, "threshold")?
+                .as_f64()
+                .context("checkpoint: bad 'threshold'")?,
+            hops: int(req(v, "hops")?, "hops")?,
+            sketch,
+            exec,
+            retain_portions: matches!(req(v, "retain_portions")?, Value::Bool(true)),
+            coreset,
+            epochs: int(req(v, "epochs")?, "epochs")?,
+            rebuilds: int(req(v, "rebuilds")?, "rebuilds")?,
+            epochs_since_rebuild: int(
+                req(v, "epochs_since_rebuild")?,
+                "epochs_since_rebuild",
+            )?,
+            tracer: None,
+        })
     }
 }
 
@@ -423,5 +849,140 @@ mod tests {
         feed(&mut coord, &mut rng, 200, 0.0);
         let r = coord.epoch(&RustBackend, &mut rng);
         assert_eq!(r.comm_points % 7, 0);
+    }
+
+    #[test]
+    fn drift_checks_assign_only_fresh_points() {
+        // The freeze advances the watermark past every held point, so a
+        // quiet epoch performs no kernel work and reports exactly zero
+        // drift — the incremental path, not a full re-assign.
+        let mut rng = Pcg64::seed_from(13);
+        let mut coord = StreamingCoordinator::new(2, 5, cfg(), 0.25);
+        feed(&mut coord, &mut rng, 400, 0.0);
+        coord.epoch(&RustBackend, &mut rng);
+        for s in &coord.sites {
+            assert_eq!(s.watermark, s.data.n(), "freeze advances the watermark");
+        }
+        let r = coord.epoch(&RustBackend, &mut rng); // no new points
+        assert!(!r.rebuilt);
+        assert_eq!(r.drift, 0.0, "no fresh points, no drift");
+        // Far-away fresh points: their tail cost alone must trigger.
+        feed(&mut coord, &mut rng, 50, 30.0);
+        let r = coord.epoch(&RustBackend, &mut rng);
+        assert!(r.rebuilt, "fresh-point drift {} must trigger", r.drift);
+        for s in &coord.sites {
+            assert_eq!(s.watermark, s.data.n());
+        }
+    }
+
+    #[test]
+    fn membership_churn_keeps_indices_stable() {
+        let mut rng = Pcg64::seed_from(12);
+        let mut coord = StreamingCoordinator::new(3, 5, cfg(), 0.4);
+        feed(&mut coord, &mut rng, 300, 0.0);
+        coord.epoch(&RustBackend, &mut rng);
+        assert_eq!(coord.n_live(), 3);
+        coord.remove_site(1);
+        assert_eq!((coord.n_sites(), coord.n_live()), (3, 2));
+        assert!(!coord.is_live(1));
+        // Dead slots cost nothing: a skip epoch bills n_live scalars.
+        let r = coord.epoch(&RustBackend, &mut rng);
+        assert!(!r.rebuilt);
+        assert_eq!(r.comm_points, 2);
+        // A revived site has no frozen solution → next epoch rebuilds.
+        coord.revive_site(1);
+        let batch = gaussian_mixture(&mut rng, 100, 5, 4);
+        coord.ingest(1, &batch);
+        let r = coord.epoch(&RustBackend, &mut rng);
+        assert!(r.rebuilt, "a joining site forces a rebuild");
+        assert_eq!(coord.n_live(), 3);
+        assert_eq!(coord.add_site(), 3);
+        assert_eq!(coord.n_sites(), 4);
+    }
+
+    #[test]
+    fn retained_portions_mirror_the_rebuild() {
+        let mut rng = Pcg64::seed_from(14);
+        let mut coord =
+            StreamingCoordinator::new(3, 5, cfg(), 0.2).with_retained_portions();
+        feed(&mut coord, &mut rng, 300, 0.0);
+        let r = coord.epoch(&RustBackend, &mut rng);
+        assert!(r.rebuilt);
+        // Exact plan: the union is the concatenation of the portions.
+        let sum: usize = (0..3).map(|i| coord.portion(i).unwrap().size()).sum();
+        assert_eq!(sum, coord.coreset().unwrap().size());
+        coord.remove_site(2);
+        assert!(coord.portion(2).is_none(), "dead slots drop their portion");
+    }
+
+    #[test]
+    fn parallel_exec_is_thread_count_invariant() {
+        let runs: Vec<(EpochReport, WeightedSet)> = [1usize, 2, 8]
+            .iter()
+            .map(|&t| {
+                let mut rng = Pcg64::seed_from(15);
+                let mut coord = StreamingCoordinator::new(3, 5, cfg(), 0.3)
+                    .with_exec(ExecPolicy::parallel(t));
+                feed(&mut coord, &mut rng, 400, 0.0);
+                let r = coord.epoch(&RustBackend, &mut rng);
+                (r, coord.coreset().unwrap().set.clone())
+            })
+            .collect();
+        for (r, set) in &runs[1..] {
+            assert_eq!(r, &runs[0].0);
+            assert_eq!(set, &runs[0].1);
+        }
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_identical_reports() {
+        let mut rng = Pcg64::seed_from(11);
+        let mut coord =
+            StreamingCoordinator::new(3, 5, cfg(), 0.3).with_retained_portions();
+        feed(&mut coord, &mut rng, 300, 0.0);
+        coord.epoch(&RustBackend, &mut rng);
+        feed(&mut coord, &mut rng, 30, 0.0);
+        coord.epoch(&RustBackend, &mut rng);
+        // Serialize through the text wire format, not just the tree.
+        let text = coord.checkpoint().to_string();
+        let mut twin =
+            StreamingCoordinator::restore(&crate::json::parse(&text).unwrap()).unwrap();
+        let (st, inc) = rng.state();
+        let mut twin_rng = Pcg64::from_state(st, inc);
+        for round in 0..3 {
+            let shift = if round == 1 { 20.0 } else { 0.0 };
+            feed(&mut coord, &mut rng, 40, shift);
+            feed(&mut twin, &mut twin_rng, 40, shift);
+            let a = coord.epoch(&RustBackend, &mut rng);
+            let b = twin.epoch(&RustBackend, &mut twin_rng);
+            assert_eq!(a, b, "diverged at post-restore epoch {round}");
+        }
+        assert_eq!(coord.coreset().unwrap().set, twin.coreset().unwrap().set);
+        assert_eq!(
+            coord.checkpoint().to_string(),
+            twin.checkpoint().to_string(),
+            "checkpoints of twins must be byte-identical"
+        );
+    }
+
+    #[test]
+    fn restore_rejects_malformed_checkpoints() {
+        let coord = StreamingCoordinator::new(2, 3, cfg(), 0.2);
+        let good = coord.checkpoint();
+        assert!(StreamingCoordinator::restore(&good).is_ok());
+        for (key, bad) in [
+            ("d", Value::Num(0.0)),
+            ("sites", Value::Num(1.0)),
+            ("threshold", Value::Str("x".into())),
+        ] {
+            let mut v = good.clone();
+            if let Value::Obj(m) = &mut v {
+                m.insert(key.to_string(), bad);
+            }
+            assert!(
+                StreamingCoordinator::restore(&v).is_err(),
+                "mangled '{key}' must be rejected"
+            );
+        }
     }
 }

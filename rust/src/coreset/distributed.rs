@@ -179,9 +179,25 @@ pub fn build_portions_exec(
     rng: &mut Pcg64,
     exec: ExecPolicy,
 ) -> Vec<Coreset> {
+    let refs: Vec<&WeightedSet> = locals.iter().collect();
+    build_portions_by(&refs, cfg, backend, rng, exec)
+}
+
+/// [`build_portions_exec`] over *borrowed* locals: callers that already
+/// hold the site data elsewhere (the streaming coordinator, the service
+/// layer) pass references instead of cloning every site's full
+/// `WeightedSet` into a contiguous vector. Draw order is identical to
+/// the owned path — the slice of references is just a view.
+pub fn build_portions_by(
+    locals: &[&WeightedSet],
+    cfg: &DistributedConfig,
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    exec: ExecPolicy,
+) -> Vec<Coreset> {
     assert!(!locals.is_empty());
     let summaries: Vec<LocalSummary> =
-        map_sites(locals.len(), rng, exec, |i, r| round1(&locals[i], cfg, backend, r));
+        map_sites(locals.len(), rng, exec, |i, r| round1(locals[i], cfg, backend, r));
     let costs: Vec<f64> = summaries
         .iter()
         .map(|s| local_cost(s, cfg.objective))
@@ -189,7 +205,7 @@ pub fn build_portions_exec(
     let total: f64 = costs.iter().sum();
     let budgets = allocate_budget(cfg.t, &costs);
     map_sites(locals.len(), rng, exec, |i, r| {
-        round2(&locals[i], &summaries[i], cfg, budgets[i], total, r)
+        round2(locals[i], &summaries[i], cfg, budgets[i], total, r)
     })
 }
 
@@ -284,6 +300,40 @@ mod tests {
         // And the parallel construction is a valid coreset build.
         let coreset = union(&runs[0]);
         assert_eq!(coreset.sampled, 600);
+    }
+
+    #[test]
+    fn borrowed_locals_build_identical_portions() {
+        // The by-reference path must be a pure view: same draws, same
+        // portions as the owned slice, at 1 and several threads.
+        let parts = locals(23, 3_000, 5, Scheme::Uniform);
+        let cfg = DistributedConfig {
+            t: 400,
+            k: 4,
+            ..Default::default()
+        };
+        for exec in [ExecPolicy::Sequential, ExecPolicy::parallel(4)] {
+            let owned = build_portions_exec(
+                &parts,
+                &cfg,
+                &RustBackend,
+                &mut Pcg64::seed_from(24),
+                exec,
+            );
+            let refs: Vec<&WeightedSet> = parts.iter().collect();
+            let borrowed = build_portions_by(
+                &refs,
+                &cfg,
+                &RustBackend,
+                &mut Pcg64::seed_from(24),
+                exec,
+            );
+            assert_eq!(owned.len(), borrowed.len());
+            for (a, b) in owned.iter().zip(&borrowed) {
+                assert_eq!(a.sampled, b.sampled);
+                assert_eq!(a.set, b.set);
+            }
+        }
     }
 
     #[test]

@@ -65,6 +65,7 @@ pub mod protocol;
 pub mod rng;
 pub mod runtime;
 pub mod scenario;
+pub mod service;
 pub mod sketch;
 pub mod testutil;
 pub mod topology;

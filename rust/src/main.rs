@@ -3,6 +3,8 @@
 //! Subcommands:
 //! - `run`   — run one distributed clustering experiment (paper metric:
 //!   k-means/k-median cost ratio vs measured communication);
+//! - `serve` — drive the always-on clustering service through scripted
+//!   membership churn, relay failover and checkpoint/restore;
 //! - `info`  — show datasets, algorithms, topologies and artifact status;
 //! - `selftest` — cross-validate the XLA artifact backend against the
 //!   pure-Rust backend on random instances.
@@ -29,7 +31,7 @@ use std::path::Path;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: distclus <run|info|selftest|coreset> [flags]\n\
+        "usage: distclus <run|serve|info|selftest|coreset> [flags]\n\
          run flags: --dataset NAME|csv:PATH --scale F --topology random|grid|preferential|star\n\
          \x20          --sites N --p P --rows R --cols C --m-attach M\n\
          \x20          --partition uniform|similarity|weighted|degree\n\
@@ -51,7 +53,16 @@ fn usage() -> ! {
          \x20          --trace OUT.jsonl (record the first repetition's run trace — phase spans,\n\
          \x20          per-round edge flows, fold events — as JSONL; render with `trace_view`;\n\
          \x20          never changes results)\n\
-         \x20          --artifacts DIR --config FILE --json OUT.json"
+         \x20          --artifacts DIR --config FILE --json OUT.json\n\
+         serve flags: topology/t/k/objective/seed/backend/sketch/exec flags as for run, plus\n\
+         \x20          --epochs N (service epochs to drive) --dim D (stream dimensionality)\n\
+         \x20          --drift F (rebuild threshold) --points-per-epoch N (per live site)\n\
+         \x20          --churn \"E:EVENT;...\"|synth (scripted membership/fault schedule —\n\
+         \x20          events: join, leave:S, drop:S, relay-fail[:N], restart; synth derives\n\
+         \x20          a script from the seed) --checkpoint OUT.json (write the final service\n\
+         \x20          checkpoint) --resume IN.json (restore a checkpoint and keep going;\n\
+         \x20          overrides topology/churn, which travel inside the checkpoint)\n\
+         \x20          --trace OUT.jsonl (service trace: epochs, churn, recoveries)"
     );
     std::process::exit(2)
 }
@@ -164,6 +175,15 @@ fn spec_from_args(args: &Args) -> Result<ExperimentSpec> {
     if let Some(path) = args.get("trace") {
         spec.trace = Some(path.to_string());
     }
+    if let Some(churn) = args.get("churn") {
+        if churn != "synth" {
+            distclus::service::ChurnSchedule::parse(churn)?;
+        }
+        spec.churn = Some(churn.to_string());
+    }
+    if let Some(path) = args.get("checkpoint") {
+        spec.checkpoint = Some(path.to_string());
+    }
     Ok(spec)
 }
 
@@ -187,6 +207,127 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("{}", render_report(std::slice::from_ref(&result)));
     if let Some(path) = json_out {
         std::fs::write(&path, series_json(std::slice::from_ref(&result)).to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Drive the always-on clustering service: scripted churn against a
+/// synthetic stream, failover re-merges on skip epochs, and a final
+/// checkpoint the next invocation can resume from.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use distclus::coreset::DistributedConfig;
+    use distclus::service::{ChurnSchedule, ClusterService};
+
+    let spec = spec_from_args(args)?;
+    let backend = build_backend(&spec, args)?;
+    let epochs = args.get_parse("epochs", 8usize)?;
+    let dim = args.get_parse("dim", 8usize)?;
+    let drift = args.get_parse("drift", 0.25f64)?;
+    let per_epoch = args.get_parse("points-per-epoch", 200usize)?;
+    let resume = args.get("resume").map(str::to_string);
+    args.reject_unknown()?;
+
+    let mut svc = match &resume {
+        // A resumed service carries its own topology, schedule, sketch
+        // and page size inside the checkpoint.
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            ClusterService::restore(&distclus::json::parse(&text)?)?
+        }
+        None => {
+            let mut topo_rng = Pcg64::seed_from(spec.seed);
+            let graph = spec.topology.build(&mut topo_rng);
+            let n_sites = graph.n();
+            let schedule = match spec.churn.as_deref() {
+                None | Some("") => ChurnSchedule::empty(),
+                Some("synth") => {
+                    // Its own stream: the master service RNG must not
+                    // depend on how the script was produced.
+                    let mut script_rng = Pcg64::seed_from(spec.seed ^ 0xC4A0_5EED);
+                    ChurnSchedule::synth(epochs, n_sites, &mut script_rng)
+                }
+                Some(s) => ChurnSchedule::parse(s)?,
+            };
+            let cfg = DistributedConfig {
+                t: spec.t,
+                k: spec.k,
+                objective: spec.objective,
+                ..Default::default()
+            };
+            let mut svc = ClusterService::new(graph, dim, cfg, drift, spec.seed)
+                .with_schedule(schedule)
+                .with_sketch(spec.sketch_plan())
+                .with_exec(spec.exec_policy());
+            if spec.page_points > 0 {
+                svc = svc.with_page_points(spec.page_points);
+            }
+            svc
+        }
+    };
+    let tracer = spec.trace.as_ref().map(|_| distclus::trace::Tracer::new());
+    if let Some(t) = &tracer {
+        svc = svc.with_tracer(t.clone());
+    }
+
+    let dim = svc.dim();
+    let k = spec.k.max(2);
+    let n_sites = svc.overlay().n();
+    // The synthetic feed draws from its own stream so ingest volume
+    // never perturbs the service's seed-derived behaviour.
+    let mut feed = Pcg64::seed_from(spec.seed.wrapping_add(0xFEED));
+    println!(
+        "{:>5} {:>5} {:>7} {:>9} {:>10} {:>10} {:>6} {:>5}  events",
+        "epoch", "live", "rebuilt", "comm", "recov", "bill", "stale", "ckpt"
+    );
+    for _ in 0..epochs {
+        for site in 0..n_sites {
+            if svc.overlay().is_live(site) {
+                let pts =
+                    distclus::data::synthetic::gaussian_mixture(&mut feed, per_epoch, dim, k);
+                svc.ingest(site, &pts);
+            }
+        }
+        let r = svc.epoch(backend.as_ref());
+        let mut events = String::new();
+        for &v in &r.joined {
+            events.push_str(&format!(" +{v}"));
+        }
+        for &v in &r.left {
+            events.push_str(&format!(" -{v}"));
+        }
+        for &v in &r.relay_failures {
+            events.push_str(&format!(" !{v}"));
+        }
+        if r.restarted {
+            events.push_str(" restart");
+        }
+        println!(
+            "{:>5} {:>5} {:>7} {:>9} {:>10} {:>10} {:>6} {:>5} {}",
+            svc.epochs(),
+            svc.n_live(),
+            r.report.rebuilt,
+            r.report.comm_points,
+            r.recovery_comm_points,
+            r.rebuild_bill,
+            r.report.staleness_epochs,
+            r.restarted,
+            events,
+        );
+    }
+    println!("meters:");
+    for (key, value) in svc.meters() {
+        println!("  {key:<20} {value}");
+    }
+    let (comm, rounds, dropped) = svc.network_totals();
+    println!("recovery network: comm_points={comm} rounds={rounds} dropped={dropped}");
+    if let (Some(path), Some(t)) = (&spec.trace, &tracer) {
+        t.summary(comm, rounds, dropped);
+        std::fs::write(path, t.snapshot().to_jsonl())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = &spec.checkpoint {
+        std::fs::write(path, svc.checkpoint().to_string())?;
         eprintln!("wrote {path}");
     }
     Ok(())
@@ -301,6 +442,7 @@ fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("coreset") => cmd_coreset(&args),

@@ -6,6 +6,9 @@
 //! (costs, weights, sums) are accumulated in `f64` to keep the
 //! coreset-quality guarantees from drowning in rounding error.
 
+use crate::json::{build, Value};
+use anyhow::{bail, Context, Result};
+
 /// A dense set of `n` points in `R^d`, row-major `f32`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Dataset {
@@ -67,6 +70,37 @@ impl Dataset {
     #[inline]
     pub fn dist2_to(&self, i: usize, q: &[f32]) -> f64 {
         dist2(self.row(i), q)
+    }
+
+    /// Serialize for checkpoints. `f32` coordinates widen *exactly*
+    /// into JSON's `f64` number domain and the writer prints shortest
+    /// round-trip decimals, so [`Dataset::from_json`] rebuilds the
+    /// buffer bit for bit.
+    pub fn to_json(&self) -> Value {
+        build::obj(vec![
+            ("d", build::num(self.d as f64)),
+            (
+                "data",
+                build::arr(self.data.iter().map(|&x| build::num(x as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild from [`Dataset::to_json`] output.
+    pub fn from_json(v: &Value) -> Result<Dataset> {
+        let d = v.get("d").and_then(Value::as_usize).context("dataset: d")?;
+        let data: Vec<f32> = v
+            .get("data")
+            .and_then(Value::as_arr)
+            .context("dataset: data")?
+            .iter()
+            .map(|x| x.as_f64().map(|f| f as f32))
+            .collect::<Option<_>>()
+            .context("dataset: non-numeric coordinate")?;
+        if d == 0 || data.len() % d != 0 {
+            bail!("dataset: flat len {} % d {}", data.len(), d);
+        }
+        Ok(Dataset { data, d })
     }
 
     /// Coordinate-wise mean of the whole set (f64 accumulation).
@@ -168,6 +202,15 @@ impl WeightedSet {
         self.weights.extend_from_slice(&other.weights);
     }
 
+    /// Append a whole dataset with unit weights — one bulk copy of the
+    /// coordinate buffer plus one `resize` of the weight vector, instead
+    /// of a per-row `push` loop (the streaming ingest hot path).
+    pub fn extend_unit(&mut self, points: &Dataset) {
+        assert_eq!(self.d(), points.d);
+        self.points.data.extend_from_slice(&points.data);
+        self.weights.resize(self.weights.len() + points.n(), 1.0);
+    }
+
     /// Copy of the contiguous point range `[a, b)` (used by the paged
     /// message plane to cut a coreset portion into fixed-size pages).
     pub fn slice(&self, a: usize, b: usize) -> WeightedSet {
@@ -177,6 +220,44 @@ impl WeightedSet {
             points: Dataset::from_flat(self.points.data[a * d..b * d].to_vec(), d),
             weights: self.weights[a..b].to_vec(),
         }
+    }
+
+    /// Serialize for checkpoints: the points via [`Dataset::to_json`]
+    /// plus the `f64` weights verbatim (shortest round-trip printing —
+    /// bit-identical restore).
+    pub fn to_json(&self) -> Value {
+        build::obj(vec![
+            ("points", self.points.to_json()),
+            (
+                "weights",
+                build::arr(self.weights.iter().map(|&w| build::num(w)).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild from [`WeightedSet::to_json`] output.
+    pub fn from_json(v: &Value) -> Result<WeightedSet> {
+        let points =
+            Dataset::from_json(v.get("points").context("weighted set: points")?)?;
+        let weights: Vec<f64> = v
+            .get("weights")
+            .and_then(Value::as_arr)
+            .context("weighted set: weights")?
+            .iter()
+            .map(Value::as_f64)
+            .collect::<Option<_>>()
+            .context("weighted set: non-numeric weight")?;
+        if points.n() != weights.len() {
+            bail!(
+                "weighted set: {} points vs {} weights",
+                points.n(),
+                weights.len()
+            );
+        }
+        if !weights.iter().all(|w| w.is_finite()) {
+            bail!("weighted set: non-finite weight");
+        }
+        Ok(WeightedSet { points, weights })
     }
 
     /// Union of many weighted sets.
@@ -263,8 +344,54 @@ mod tests {
     }
 
     #[test]
+    fn extend_unit_matches_per_row_push() {
+        let batch = ds(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let mut bulk = WeightedSet::new(ds(&[&[0.0, 0.0]]), vec![2.5]);
+        let mut looped = bulk.clone();
+        bulk.extend_unit(&batch);
+        for i in 0..batch.n() {
+            looped.push(batch.row(i), 1.0);
+        }
+        assert_eq!(bulk, looped);
+        // Empty batch is a no-op.
+        bulk.extend_unit(&Dataset::with_capacity(0, 2));
+        assert_eq!(bulk, looped);
+    }
+
+    #[test]
     #[should_panic]
     fn from_flat_rejects_ragged() {
         Dataset::from_flat(vec![1.0, 2.0, 3.0], 2);
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_identical() {
+        // Awkward values on purpose: non-dyadic f32 coordinates and
+        // weights with long decimal expansions must survive the textual
+        // round trip bit for bit.
+        let w = WeightedSet::new(
+            ds(&[&[0.1, -2.5e-7], &[3.0, f32::MIN_POSITIVE]]),
+            vec![1.0, 0.123456789123456789],
+        );
+        let text = w.to_json().to_string();
+        let back = WeightedSet::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, w);
+        // Empty sets keep their dimensionality.
+        let e = WeightedSet::empty(7);
+        let back = WeightedSet::from_json(
+            &crate::json::parse(&e.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn json_rejects_malformed_sets() {
+        let v = crate::json::parse(r#"{"points":{"d":2,"data":[1,2]},"weights":[1,2]}"#)
+            .unwrap();
+        assert!(WeightedSet::from_json(&v).is_err(), "length mismatch");
+        let v = crate::json::parse(r#"{"points":{"d":2,"data":[1,2,3]},"weights":[1]}"#)
+            .unwrap();
+        assert!(WeightedSet::from_json(&v).is_err(), "ragged flat buffer");
     }
 }

@@ -16,7 +16,7 @@
 mod distributed_clustering;
 mod flooding;
 mod reliable;
-mod session;
+pub(crate) mod session;
 mod tree;
 
 pub use distributed_clustering::{

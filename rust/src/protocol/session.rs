@@ -512,6 +512,9 @@ pub(crate) struct PipeMachine<'a> {
     /// Overlay: total pages of the root's reduced-set flood (learned
     /// from the page headers; authoritative at the root).
     pub(crate) bcast_pages_total: usize,
+    /// Service failover: a failed node never ticks, sends nothing, and
+    /// silently drops whatever is still in flight toward it.
+    failed: bool,
     /// Phase-span observer (counts only; never alters behavior or RNG).
     tracer: Option<Tracer>,
 }
@@ -564,6 +567,7 @@ impl<'a> PipeMachine<'a> {
             centers_got: false,
             bcast_pages_got: 0,
             bcast_pages_total: 0,
+            failed: false,
             tracer: None,
         }
     }
@@ -623,6 +627,7 @@ impl<'a> PipeMachine<'a> {
             centers_got: false,
             bcast_pages_got: 0,
             bcast_pages_total: 0,
+            failed: false,
             tracer: None,
         }
     }
@@ -680,6 +685,7 @@ impl<'a> PipeMachine<'a> {
             centers_got: false,
             bcast_pages_got: 0,
             bcast_pages_total: 0,
+            failed: false,
             tracer: None,
         }
     }
@@ -688,6 +694,70 @@ impl<'a> PipeMachine<'a> {
     /// whole flooded stream; the driver checks everyone saw everything).
     pub(crate) fn pages_collected(&self) -> usize {
         self.pages_folded
+    }
+
+    // -----------------------------------------------------------------
+    // Service failover: the re-parent path. The service layer detects a
+    // relay failure at an epoch boundary, surgically rewires the
+    // machines *before* the drive (fail the dead node, move each orphan
+    // under a surviving neighbor, fix the completion targets), and the
+    // re-merge of the affected subtree then runs inside the ordinary
+    // session drive loop — no special-cased recovery protocol.
+    // -----------------------------------------------------------------
+
+    /// Mark this node failed: it never ticks, sends nothing, and
+    /// silently drops anything still in flight toward it.
+    pub(crate) fn fail(&mut self) {
+        self.failed = true;
+    }
+
+    /// Re-target this node's tree parent (an orphan adopted by a
+    /// surviving neighbor). Tree role only — graph machines have no
+    /// parent to move.
+    pub(crate) fn reparent(&mut self, new_parent: Option<usize>) {
+        match &mut self.role {
+            PipeRole::Tree { parent, .. } | PipeRole::Overlay { parent, .. } => {
+                *parent = new_parent;
+            }
+            PipeRole::Graph { .. } => panic!("reparent on a graph-mode machine"),
+        }
+    }
+
+    /// Adopt an orphan as a child (tree role). Under site-based
+    /// completion the fold now also waits for the orphan's reduced
+    /// stream, so `sites_expected` grows with the child list.
+    pub(crate) fn adopt_child(&mut self, child: usize) {
+        let PipeRole::Tree { children, .. } = &mut self.role else {
+            panic!("adopt_child on a non-tree machine");
+        };
+        if !children.contains(&child) {
+            children.push(child);
+            children.sort_unstable();
+            if self.sites_expected > 0 {
+                self.sites_expected += 1;
+            }
+        }
+    }
+
+    /// Forget a (failed) child: its reduced stream will never arrive,
+    /// so under site-based completion the fold stops waiting for it.
+    pub(crate) fn drop_child(&mut self, child: usize) {
+        let PipeRole::Tree { children, .. } = &mut self.role else {
+            panic!("drop_child on a non-tree machine");
+        };
+        let before = children.len();
+        children.retain(|&c| c != child);
+        if children.len() < before && self.sites_expected > 0 {
+            self.sites_expected -= 1;
+        }
+    }
+
+    /// Extract this node's fold after the drive. Recovery sessions run
+    /// the root with neither a solver nor `reduce_relay`, so its
+    /// completed fold stays in place for the service to finish
+    /// host-side.
+    pub(crate) fn take_fold(&mut self) -> Option<Sketch<'a>> {
+        self.fold.take()
     }
 
     /// Attach a [`Tracer`]: the machine emits per-node phase enter/exit
@@ -896,6 +966,9 @@ fn fold_page(fold: &mut Option<Sketch<'_>>, pages_folded: &mut usize, p: &Payloa
 
 impl NodeMachine for PipeMachine<'_> {
     fn tick(&mut self, out: &mut Outbox) {
+        if self.failed {
+            return;
+        }
         // First tick: emit the own cost scalar.
         if let Some(c) = self.cost.take() {
             match &self.role {
@@ -950,6 +1023,9 @@ impl NodeMachine for PipeMachine<'_> {
     }
 
     fn on_msg(&mut self, _from: usize, msg: Payload, out: &mut Outbox) {
+        if self.failed {
+            return;
+        }
         match (&self.role, msg) {
             (PipeRole::Graph { graph }, msg @ Payload::LocalCost { .. }) => {
                 let key = msg.flood_key().expect("cost key");
@@ -1047,13 +1123,15 @@ impl NodeMachine for PipeMachine<'_> {
         // cost emission, cost-phase completion, page launch, collection
         // completion, relay drain. Anything else only becomes actionable
         // through `on_msg`, after which the node is scheduled anyway.
-        self.cost.is_some()
-            || !self.relay_up.is_empty()
-            || (!self.ready
-                && self.costs_expected > 0
-                && self.costs_seen.len() == self.costs_expected)
-            || (self.ready && !self.launched)
-            || (self.launched && !self.done && self.collection_complete())
+        // Failed nodes act on nothing.
+        !self.failed
+            && (self.cost.is_some()
+                || !self.relay_up.is_empty()
+                || (!self.ready
+                    && self.costs_expected > 0
+                    && self.costs_seen.len() == self.costs_expected)
+                || (self.ready && !self.launched)
+                || (self.launched && !self.done && self.collection_complete()))
     }
 }
 
@@ -1103,6 +1181,56 @@ mod tests {
         // The active-set loop never schedules more work than dense
         // (n × rounds) would.
         assert!(stats.node_ticks <= (n as u64) * stats.rounds);
+    }
+
+    #[test]
+    fn reparent_path_re_merges_only_the_surviving_subtree() {
+        // Diamond graph 0-1, 0-2, 1-3, 2-3; tree 0 → {1, 2}, 1 → {3}.
+        // Relay 1 fails before the drive; its orphan 3 is re-parented to
+        // the surviving neighbor 2 (a graph edge), the root stops
+        // waiting for 1, and the re-merge completes with 1's own portion
+        // lost — all through the ordinary session drive loop.
+        use crate::points::{Dataset, WeightedSet};
+        use crate::sketch::ExactSketch;
+
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let old_children: [&[usize]; 4] = [&[1, 2], &[3], &[], &[]];
+        let old_parent = [None, Some(0), Some(0), Some(1)];
+        let mut net = Network::new(g);
+        let mut nodes: Vec<PipeMachine> = (0..4)
+            .map(|v| {
+                let portion =
+                    WeightedSet::unit(Dataset::from_flat(vec![v as f32], 1));
+                PipeMachine::tree(
+                    v,
+                    old_parent[v],
+                    old_children[v].to_vec(),
+                    None,
+                    None,
+                    paginate(v, Arc::new(portion), 4),
+                    4,
+                    Some(Sketch::Exact(ExactSketch::new())),
+                    usize::MAX,
+                    1 + old_children[v].len(),
+                    old_parent[v].is_some(),
+                    4,
+                    None,
+                )
+            })
+            .collect();
+        nodes[1].fail();
+        nodes[3].reparent(Some(2));
+        nodes[2].adopt_child(3);
+        nodes[0].drop_child(1);
+        drive(&mut net, &mut nodes);
+        let merged = nodes[0].take_fold().expect("root keeps its fold").finish().unwrap();
+        // Exact folds reproduce site order: root's own portion (site 0),
+        // then node 2's reduced stream (site 2 = its portion + orphan 3).
+        assert_eq!(merged.points.data, vec![0.0, 2.0, 3.0]);
+        // Wire bill: orphan 3's one point to its new parent, plus the
+        // two-point reduced stream 2 → 0. The failed relay's portion
+        // never moves.
+        assert_eq!(net.cost_points(), 3);
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Service-level checkpoint/restore — the whole always-on state
+//! (coordinator, overlay, master RNG, schedule, meters) as one
+//! [`crate::json`] value.
+//!
+//! The contract is *bit-identical resumption*: a service restored from
+//! its checkpoint produces the same reports, coresets and meters as
+//! the original from that point onward, because every piece of state
+//! the epoch loop reads round-trips exactly — point buffers widen
+//! `f32 → f64` losslessly, the RNG serializes its raw `(state, inc)`
+//! pair in hex, and the churn schedule travels through its own
+//! grammar. Tracers are deliberately not captured; reattach with
+//! [`ClusterService::with_tracer`] after restoring.
+
+use crate::coordinator::streaming::StreamingCoordinator;
+use crate::json::{build, Value};
+use crate::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+
+use super::{churn::ChurnSchedule, overlay::LiveOverlay, ClusterService};
+
+/// Fetch a required checkpoint field.
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key)
+        .with_context(|| format!("service checkpoint: missing '{key}'"))
+}
+
+fn u128_hex(v: &Value, what: &str) -> Result<u128> {
+    let s = v
+        .as_str()
+        .with_context(|| format!("service checkpoint: '{what}' must be a hex string"))?;
+    u128::from_str_radix(s, 16)
+        .with_context(|| format!("service checkpoint: bad hex in '{what}'"))
+}
+
+fn u64_of(v: &Value, what: &str) -> Result<u64> {
+    Ok(v.as_usize()
+        .with_context(|| format!("service checkpoint: bad '{what}'"))? as u64)
+}
+
+impl ClusterService {
+    /// Serialize the complete service state. The text form
+    /// (`checkpoint().to_string()`) is what `--checkpoint <path>`
+    /// writes and what [`restore`](Self::restore) accepts back.
+    pub fn checkpoint(&self) -> Value {
+        let (state, inc) = self.rng.state();
+        build::obj(vec![
+            ("coordinator", self.coord.checkpoint()),
+            (
+                "rng",
+                build::obj(vec![
+                    ("state", build::s(format!("{state:032x}"))),
+                    ("inc", build::s(format!("{inc:032x}"))),
+                ]),
+            ),
+            ("overlay", self.overlay.to_json()),
+            ("schedule", build::s(self.schedule.to_string())),
+            ("page_points", build::num(self.page_points as f64)),
+            ("epoch", build::num(self.epoch_no as f64)),
+            (
+                "meters",
+                build::obj(vec![
+                    ("joins", build::num(self.joins as f64)),
+                    ("leaves", build::num(self.leaves as f64)),
+                    ("relay_failures", build::num(self.relay_failures as f64)),
+                    ("checkpoints", build::num(self.checkpoints as f64)),
+                    (
+                        "recovery_rounds",
+                        build::num(self.recovery_rounds_total as f64),
+                    ),
+                ]),
+            ),
+            (
+                "epoch_rounds",
+                build::arr(
+                    self.epoch_rounds
+                        .iter()
+                        .map(|&r| build::num(r as f64))
+                        .collect(),
+                ),
+            ),
+            ("last_staleness", build::num(self.last_staleness as f64)),
+            ("last_rebuild_ppm", build::num(self.last_rebuild_ppm as f64)),
+            (
+                "net",
+                build::obj(vec![
+                    ("comm", build::num(self.net_comm as f64)),
+                    ("rounds", build::num(self.net_rounds as f64)),
+                    ("dropped", build::num(self.net_dropped as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Rebuild a service from a [`checkpoint`](Self::checkpoint) value,
+    /// validating every field (including cross-checks the parts cannot
+    /// see alone: the overlay and the coordinator must agree on site
+    /// capacity and liveness). The restored instance has no tracer.
+    pub fn restore(v: &Value) -> Result<ClusterService> {
+        let coord = StreamingCoordinator::restore(req(v, "coordinator")?)
+            .context("service checkpoint: coordinator")?;
+        let rng_v = req(v, "rng")?;
+        let state = u128_hex(req(rng_v, "state")?, "rng.state")?;
+        let inc = u128_hex(req(rng_v, "inc")?, "rng.inc")?;
+        if inc % 2 == 0 {
+            bail!("service checkpoint: rng.inc must be odd");
+        }
+        let overlay = LiveOverlay::from_json(req(v, "overlay")?)
+            .context("service checkpoint: overlay")?;
+        if overlay.n() != coord.n_sites() {
+            bail!(
+                "service checkpoint: overlay capacity {} != coordinator sites {}",
+                overlay.n(),
+                coord.n_sites()
+            );
+        }
+        for site in 0..overlay.n() {
+            if overlay.is_live(site) != coord.is_live(site) {
+                bail!("service checkpoint: site {site} liveness disagrees");
+            }
+        }
+        let schedule = ChurnSchedule::parse(
+            req(v, "schedule")?
+                .as_str()
+                .context("service checkpoint: 'schedule' must be a string")?,
+        )
+        .context("service checkpoint: schedule")?;
+        let meters = req(v, "meters")?;
+        let mut epoch_rounds = Vec::new();
+        for (i, r) in req(v, "epoch_rounds")?
+            .as_arr()
+            .context("service checkpoint: 'epoch_rounds' must be an array")?
+            .iter()
+            .enumerate()
+        {
+            epoch_rounds.push(u64_of(r, &format!("epoch_rounds[{i}]"))?);
+        }
+        let net = req(v, "net")?;
+        Ok(ClusterService {
+            coord,
+            overlay,
+            schedule,
+            rng: Pcg64::from_state(state, inc),
+            page_points: req(v, "page_points")?
+                .as_usize()
+                .context("service checkpoint: bad 'page_points'")?,
+            epoch_no: req(v, "epoch")?
+                .as_usize()
+                .context("service checkpoint: bad 'epoch'")?,
+            joins: u64_of(req(meters, "joins")?, "meters.joins")?,
+            leaves: u64_of(req(meters, "leaves")?, "meters.leaves")?,
+            relay_failures: u64_of(
+                req(meters, "relay_failures")?,
+                "meters.relay_failures",
+            )?,
+            checkpoints: u64_of(req(meters, "checkpoints")?, "meters.checkpoints")?,
+            recovery_rounds_total: u64_of(
+                req(meters, "recovery_rounds")?,
+                "meters.recovery_rounds",
+            )?,
+            epoch_rounds,
+            last_staleness: u64_of(req(v, "last_staleness")?, "last_staleness")?,
+            last_rebuild_ppm: u64_of(req(v, "last_rebuild_ppm")?, "last_rebuild_ppm")?,
+            net_comm: req(net, "comm")?
+                .as_usize()
+                .context("service checkpoint: bad 'net.comm'")?,
+            net_rounds: req(net, "rounds")?
+                .as_usize()
+                .context("service checkpoint: bad 'net.rounds'")?,
+            net_dropped: req(net, "dropped")?
+                .as_usize()
+                .context("service checkpoint: bad 'net.dropped'")?,
+            tracer: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::backend::RustBackend;
+    use crate::coreset::DistributedConfig;
+    use crate::data::synthetic::gaussian_mixture;
+    use crate::topology::generators;
+
+    fn tiny_service() -> ClusterService {
+        let cfg = DistributedConfig {
+            t: 120,
+            k: 3,
+            ..Default::default()
+        };
+        ClusterService::new(generators::grid(2, 3), 4, cfg, 0.3, 99)
+            .with_schedule(ChurnSchedule::parse("2:relay-fail;3:restart").unwrap())
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_identically() {
+        let mut svc = tiny_service();
+        let mut feed_rng = Pcg64::seed_from(5);
+        for site in 0..6 {
+            svc.ingest(site, &gaussian_mixture(&mut feed_rng, 120, 4, 3));
+        }
+        svc.epoch(&RustBackend);
+        let text = svc.checkpoint().to_string();
+        let twin = ClusterService::restore(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            twin.checkpoint().to_string(),
+            text,
+            "restore(checkpoint(s)) must re-serialize byte-identically"
+        );
+        assert_eq!(twin.epochs(), svc.epochs());
+        assert_eq!(twin.meters(), svc.meters());
+        assert_eq!(twin.rng.state(), svc.rng.state());
+    }
+
+    #[test]
+    fn restore_rejects_inconsistent_state() {
+        let svc = tiny_service();
+        let good = svc.checkpoint();
+        assert!(ClusterService::restore(&good).is_ok());
+        // An even RNG increment can never come from a real Pcg64.
+        let mut bad = good.clone();
+        if let Value::Obj(m) = &mut bad {
+            m.insert(
+                "rng".into(),
+                build::obj(vec![
+                    ("state", build::s("00")),
+                    ("inc", build::s("02")),
+                ]),
+            );
+        }
+        assert!(ClusterService::restore(&bad).is_err());
+        // Overlay liveness must agree with the coordinator's.
+        let mut bad = good.clone();
+        if let Value::Obj(m) = &mut bad {
+            let mut overlay = svc.overlay.clone();
+            overlay.fail(0);
+            m.insert("overlay".into(), overlay.to_json());
+        }
+        assert!(ClusterService::restore(&bad).is_err());
+        // Missing top-level fields are named in the error.
+        let mut bad = good;
+        if let Value::Obj(m) = &mut bad {
+            m.remove("schedule");
+        }
+        let err = ClusterService::restore(&bad).unwrap_err().to_string();
+        assert!(err.contains("schedule"), "unhelpful error: {err}");
+    }
+}

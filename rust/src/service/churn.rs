@@ -1,0 +1,248 @@
+//! Deterministic churn schedules — the fault/membership script a
+//! service run replays.
+//!
+//! A schedule maps epoch numbers to membership and fault events. It is
+//! *data*, not randomness at apply time: the same schedule against the
+//! same seed produces bit-identical runs at any thread count, which is
+//! what lets the churn suite pin failover and checkpoint behaviour
+//! exactly. Schedules round-trip through a one-line grammar
+//! (`<epoch>:<event>[;...]`) so they travel through the CLI and the
+//! service checkpoint as plain strings.
+
+use crate::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One scripted membership or fault event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// A site joins: the lowest-indexed dead slot re-activates and
+    /// attaches to the overlay at its nearest surviving relay. A no-op
+    /// when every slot is live.
+    Join,
+    /// Graceful leave: the epoch is forced to rebuild first (draining
+    /// the site's final points into the coreset), then the slot drops
+    /// and its children re-parent.
+    Leave {
+        /// The departing site.
+        site: usize,
+    },
+    /// Abrupt loss: the site vanishes before the epoch runs; its
+    /// contribution to the live coreset is excised by a failover
+    /// re-merge if the epoch does not rebuild anyway.
+    Drop {
+        /// The lost site.
+        site: usize,
+    },
+    /// An overlay relay fails; orphaned children re-parent to surviving
+    /// graph neighbors and only the affected subtree re-merges.
+    RelayFail {
+        /// Which relay. `None` picks the live non-root node with the
+        /// most children (smallest id on ties).
+        node: Option<usize>,
+    },
+    /// Kill the collector at the end of the epoch and restore it from
+    /// its own checkpoint — the mid-stream restart drill.
+    Restart,
+}
+
+impl fmt::Display for ChurnEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ChurnEvent::Join => write!(f, "join"),
+            ChurnEvent::Leave { site } => write!(f, "leave:{site}"),
+            ChurnEvent::Drop { site } => write!(f, "drop:{site}"),
+            ChurnEvent::RelayFail { node: None } => write!(f, "relay-fail"),
+            ChurnEvent::RelayFail { node: Some(n) } => write!(f, "relay-fail:{n}"),
+            ChurnEvent::Restart => write!(f, "restart"),
+        }
+    }
+}
+
+impl ChurnEvent {
+    /// Parse one event in the grammar [`ChurnSchedule::parse`] documents.
+    pub fn parse(s: &str) -> Result<ChurnEvent> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        let site = |what: &str| -> Result<usize> {
+            arg.with_context(|| format!("churn: '{what}' needs a site, e.g. '{what}:3'"))?
+                .parse::<usize>()
+                .with_context(|| format!("churn: bad site in '{s}'"))
+        };
+        Ok(match head {
+            "join" if arg.is_none() => ChurnEvent::Join,
+            "leave" => ChurnEvent::Leave { site: site("leave")? },
+            "drop" => ChurnEvent::Drop { site: site("drop")? },
+            "relay-fail" => ChurnEvent::RelayFail {
+                node: match arg {
+                    None => None,
+                    Some(a) => Some(
+                        a.parse::<usize>()
+                            .with_context(|| format!("churn: bad node in '{s}'"))?,
+                    ),
+                },
+            },
+            "restart" if arg.is_none() => ChurnEvent::Restart,
+            _ => bail!(
+                "churn: unknown event '{s}' (want join | leave:<site> | \
+                 drop:<site> | relay-fail[:<node>] | restart)"
+            ),
+        })
+    }
+}
+
+/// A deterministic script of [`ChurnEvent`]s keyed by epoch number
+/// (1-based, matching [`super::ClusterService::epoch`] counting).
+///
+/// The empty schedule is the identity: a service driven with it is
+/// bit-identical to a plain
+/// [`StreamingCoordinator`](crate::coordinator::streaming::StreamingCoordinator).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChurnSchedule {
+    events: BTreeMap<usize, Vec<ChurnEvent>>,
+}
+
+impl ChurnSchedule {
+    /// The empty (identity) schedule.
+    pub fn empty() -> ChurnSchedule {
+        ChurnSchedule::default()
+    }
+
+    /// Whether the schedule carries no events at all.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total scripted events across all epochs.
+    pub fn len(&self) -> usize {
+        self.events.values().map(Vec::len).sum()
+    }
+
+    /// Append one event at the given (1-based) epoch.
+    pub fn push(&mut self, epoch: usize, event: ChurnEvent) {
+        self.events.entry(epoch).or_default().push(event);
+    }
+
+    /// The events scripted for one epoch, in push order.
+    pub fn at(&self, epoch: usize) -> &[ChurnEvent] {
+        self.events.get(&epoch).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Parse the one-line grammar: `;`-separated `<epoch>:<event>`
+    /// entries, where `<event>` is `join`, `leave:<site>`,
+    /// `drop:<site>`, `relay-fail[:<node>]` or `restart`. The empty
+    /// string parses to the empty schedule.
+    pub fn parse(s: &str) -> Result<ChurnSchedule> {
+        let mut schedule = ChurnSchedule::empty();
+        for entry in s.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (epoch, event) = entry
+                .split_once(':')
+                .with_context(|| format!("churn: '{entry}' is not '<epoch>:<event>'"))?;
+            let epoch: usize = epoch
+                .parse()
+                .with_context(|| format!("churn: bad epoch in '{entry}'"))?;
+            if epoch == 0 {
+                bail!("churn: epochs are 1-based ('{entry}')");
+            }
+            schedule.push(epoch, ChurnEvent::parse(event)?);
+        }
+        Ok(schedule)
+    }
+
+    /// Synthesize a pseudo-random schedule over `epochs` epochs of a
+    /// service with `n_sites` site slots, drawn from `rng` — the bench
+    /// workload. Purely a function of the draws: the same seed yields
+    /// the same script. Epoch 1 is always quiet (the first build), and
+    /// targeted events avoid site 0 so the generated script never aims
+    /// at a typical root.
+    pub fn synth(epochs: usize, n_sites: usize, rng: &mut Pcg64) -> ChurnSchedule {
+        let mut schedule = ChurnSchedule::empty();
+        for epoch in 2..=epochs {
+            // Exactly two draws per epoch regardless of which arm fires,
+            // so the script is a pure function of (epochs, n_sites, seed).
+            let roll = rng.next_u64() % 100;
+            let target = 1 + (rng.next_u64() as usize) % n_sites.saturating_sub(1).max(1);
+            let event = match roll {
+                0..=14 => Some(ChurnEvent::Join),
+                15..=26 => Some(ChurnEvent::Leave { site: target }),
+                27..=36 => Some(ChurnEvent::Drop { site: target }),
+                37..=51 => Some(ChurnEvent::RelayFail { node: None }),
+                52..=57 => Some(ChurnEvent::Restart),
+                _ => None,
+            };
+            if let Some(e) = event {
+                schedule.push(epoch, e);
+            }
+        }
+        schedule
+    }
+}
+
+impl fmt::Display for ChurnSchedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (&epoch, events) in &self.events {
+            for e in events {
+                if !first {
+                    write!(f, ";")?;
+                }
+                write!(f, "{epoch}:{e}")?;
+                first = false;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips() {
+        let text = "2:join;3:leave:1;3:relay-fail;5:drop:4;6:relay-fail:2;7:restart";
+        let s = ChurnSchedule::parse(text).unwrap();
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.at(3), &[
+            ChurnEvent::Leave { site: 1 },
+            ChurnEvent::RelayFail { node: None },
+        ]);
+        assert_eq!(s.at(4), &[] as &[ChurnEvent]);
+        assert_eq!(s.to_string(), text);
+        assert_eq!(ChurnSchedule::parse(&s.to_string()).unwrap(), s);
+        // The empty string is the empty schedule, both directions.
+        let empty = ChurnSchedule::parse("").unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(empty.to_string(), "");
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_entries() {
+        for bad in [
+            "join",          // missing epoch
+            "0:join",        // epochs are 1-based
+            "2:jump",        // unknown event
+            "2:leave",       // missing site
+            "2:leave:x",     // bad site
+            "2:join:3",      // join takes no site
+            "2:restart:1",   // restart takes no argument
+            "2:relay-fail:x",
+        ] {
+            assert!(ChurnSchedule::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn synth_is_seed_deterministic() {
+        let a = ChurnSchedule::synth(20, 9, &mut Pcg64::seed_from(7));
+        let b = ChurnSchedule::synth(20, 9, &mut Pcg64::seed_from(7));
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "20 epochs should script something");
+        assert!(a.at(1).is_empty(), "the first build is never perturbed");
+        // The grammar carries everything synth produces.
+        assert_eq!(ChurnSchedule::parse(&a.to_string()).unwrap(), a);
+    }
+}

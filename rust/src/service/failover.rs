@@ -1,0 +1,135 @@
+//! Failover recovery — re-merging only the affected subtree after a
+//! relay failure, inside the ordinary session drive loop.
+//!
+//! When a relay dies between rebuilds, the live coreset still contains
+//! the dead node's portion and the overlay has just re-homed its
+//! orphans. A full rebuild would re-run Rounds 1–2 everywhere and
+//! reflood every portion; the recovery session instead replays only the
+//! *retained* portions of the re-parented subtrees up the repaired
+//! tree: every live node participates as a tree-role
+//! [`PipeMachine`](crate::protocol::session), but unaffected sites
+//! carry empty portions — one zero-cost page each, nothing on the wire
+//! — so the bill is exactly the affected subtree's traffic. The failed
+//! node's machine is constructed failed (it never ticks), and the root
+//! runs with neither solver nor relay duty, leaving its completed fold
+//! in place for the service to finish host-side.
+
+use crate::clustering::backend::Backend;
+use crate::coordinator::streaming::StreamingCoordinator;
+use crate::coreset::{distributed, Coreset};
+use crate::network::{paginate, Network};
+use crate::points::WeightedSet;
+use crate::protocol::session::{drive, PipeMachine};
+use crate::rng::Pcg64;
+use crate::trace::Tracer;
+use std::sync::Arc;
+
+use super::overlay::LiveOverlay;
+
+/// What a recovery session produced and billed.
+pub(crate) struct Recovery {
+    /// The refreshed global coreset: unaffected live portions (site
+    /// order) plus the re-merged affected stream, the lost portions
+    /// excised.
+    pub coreset: Coreset,
+    /// Points the re-merge moved on the wire.
+    pub comm_points: usize,
+    /// Network rounds the session ran.
+    pub rounds: usize,
+    /// Points dropped by the network (0 on a loss-free deployment).
+    pub dropped: usize,
+}
+
+/// Run one recovery session over the repaired overlay. `affected`
+/// lists the live sites whose retained portions must re-merge (the
+/// members of every re-parented subtree); all other live sites
+/// contribute empty portions. Draws exactly `3·n` values from `rng`
+/// (the per-node stream split), independent of liveness or thread
+/// count.
+pub(crate) fn recover(
+    coord: &StreamingCoordinator,
+    overlay: &LiveOverlay,
+    affected: &[usize],
+    backend: &dyn Backend,
+    rng: &mut Pcg64,
+    page_points: usize,
+    tracer: Option<Tracer>,
+) -> Recovery {
+    let n = overlay.n();
+    let d = coord.dim();
+    let root = overlay.root();
+    let plan = coord.sketch_plan();
+    let cfg = coord.config();
+    // One dedicated stream per node id, split up front: merge-and-reduce
+    // relay re-solves draw from their own stream, so the session is a
+    // pure function of (state, seed) — the exact plan ignores them.
+    let streams = rng.split_n(n);
+    let mut net = Network::new(overlay.graph().clone())
+        .with_tracer(tracer)
+        .without_transcript();
+    let mut nodes: Vec<PipeMachine> = Vec::with_capacity(n);
+    for (v, stream) in streams.into_iter().enumerate() {
+        let live = overlay.is_live(v);
+        let portion = if live && affected.contains(&v) {
+            coord
+                .portion(v)
+                .map(|p| p.set.clone())
+                .unwrap_or_else(|| WeightedSet::empty(d))
+        } else {
+            WeightedSet::empty(d)
+        };
+        let children = overlay.children(v).to_vec();
+        let sites_expected = if live { 1 + children.len() } else { 0 };
+        let mut m = PipeMachine::tree(
+            v,
+            overlay.parent(v),
+            children,
+            None, // no cost exchange: the portions already exist
+            None,
+            if live {
+                paginate(v, Arc::new(portion), page_points)
+            } else {
+                Vec::new()
+            },
+            n,
+            live.then(|| plan.build(cfg.k, cfg.objective, backend, stream)),
+            usize::MAX, // completion is site-based
+            sites_expected,
+            live && v != root, // relays forward their reduced stream
+            page_points,
+            None, // the service finishes host-side
+        );
+        if !live {
+            m.fail();
+        }
+        nodes.push(m);
+    }
+    drive(&mut net, &mut nodes);
+    let merged = nodes[root]
+        .take_fold()
+        .expect("recovery root keeps its fold")
+        .finish()
+        .expect("single-portion pages cannot tear");
+    // New global coreset: unaffected live portions in site order, then
+    // the re-merged affected stream — deterministic, and the lost
+    // portions simply never appear.
+    let mut parts: Vec<Coreset> = Vec::new();
+    for v in 0..n {
+        if overlay.is_live(v) && !affected.contains(&v) {
+            if let Some(p) = coord.portion(v) {
+                parts.push(p.clone());
+            }
+        }
+    }
+    let sampled = merged.n();
+    parts.push(Coreset {
+        set: merged,
+        sampled,
+    });
+    Recovery {
+        coreset: distributed::union(&parts),
+        comm_points: net.cost_points(),
+        rounds: net.round(),
+        dropped: net.dropped(),
+    }
+}

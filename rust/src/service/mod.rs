@@ -1,0 +1,435 @@
+//! The always-on clustering service: membership churn, relay failover
+//! and checkpoint/restore over the lazy streaming coordinator.
+//!
+//! [`ClusterService`] owns three things and one scripted adversary:
+//!
+//! - a [`StreamingCoordinator`] (retained portions on) doing the
+//!   paper's lazy coreset maintenance,
+//! - a [`LiveOverlay`] — the spanning tree portions climb, evolving in
+//!   place as sites come and go,
+//! - a master [`Pcg64`] whose draw order is part of the service API,
+//! - a [`ChurnSchedule`] replayed one epoch at a time.
+//!
+//! Per [`epoch`](ClusterService::epoch): scripted joins attach at the
+//! nearest surviving relay and force a natural rebuild (a fresh site
+//! has no frozen solution, so its drift is infinite once it holds
+//! data); graceful leaves drain — the epoch is forced to rebuild with
+//! the leaver still in, then the slot drops; abrupt drops and relay
+//! failures repair the overlay first, and if the epoch then *skips*,
+//! a failover recovery session re-merges only the re-parented
+//! subtrees' retained portions inside the ordinary session drive loop
+//! — strictly cheaper than reflooding every portion. A scripted
+//! restart serializes the whole service through [`crate::json`], tears
+//! it down, and resumes from its own checkpoint; the round trip is
+//! bit-identical, which the churn test suite pins.
+//!
+//! Everything is deterministic: the same graph, seed and schedule
+//! produce bit-identical coresets, reports and meters at any thread
+//! count, and the empty schedule reproduces a plain
+//! [`StreamingCoordinator`] exactly.
+
+mod checkpoint;
+mod churn;
+mod failover;
+mod overlay;
+
+pub use churn::{ChurnEvent, ChurnSchedule};
+pub use overlay::{FailoverReport, LiveOverlay};
+
+use crate::clustering::backend::Backend;
+use crate::coordinator::streaming::{EpochReport, StreamingCoordinator};
+use crate::coreset::{Coreset, DistributedConfig};
+use crate::exec::ExecPolicy;
+use crate::points::Dataset;
+use crate::rng::Pcg64;
+use crate::sketch::SketchPlan;
+use crate::topology::{Graph, SpanningTree};
+use crate::trace::{keys, Tracer};
+use std::collections::BTreeMap;
+
+/// What one service epoch did, on top of the coordinator's own
+/// [`EpochReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceEpochReport {
+    /// The underlying coordinator epoch (drift, rebuild, comm).
+    pub report: EpochReport,
+    /// Sites that joined this epoch (ascending).
+    pub joined: Vec<usize>,
+    /// Sites that left this epoch — graceful leavers, abrupt drops and
+    /// subtree members lost with a failed relay (ascending).
+    pub left: Vec<usize>,
+    /// Overlay relays that failed this epoch.
+    pub relay_failures: Vec<usize>,
+    /// Points the failover re-merge moved (0 when none ran).
+    pub recovery_comm_points: usize,
+    /// Session rounds the failover re-merge took (0 when none ran).
+    pub recovery_rounds: usize,
+    /// What a full portion reflood would have billed over the current
+    /// overlay tree — the yardstick recovery must beat.
+    pub rebuild_bill: usize,
+    /// Whether the collector checkpoint-restarted at the end of this
+    /// epoch.
+    pub restarted: bool,
+}
+
+/// A long-lived clustering service over a fixed deployment graph.
+pub struct ClusterService {
+    pub(crate) coord: StreamingCoordinator,
+    pub(crate) overlay: LiveOverlay,
+    pub(crate) schedule: ChurnSchedule,
+    pub(crate) rng: Pcg64,
+    /// Page size of recovery-session portion streams.
+    pub(crate) page_points: usize,
+    /// Epochs processed (1-based; the schedule keys against this).
+    pub(crate) epoch_no: usize,
+    // --- meters (all counts; serialized with the checkpoint) ---
+    pub(crate) joins: u64,
+    pub(crate) leaves: u64,
+    pub(crate) relay_failures: u64,
+    pub(crate) checkpoints: u64,
+    pub(crate) recovery_rounds_total: u64,
+    /// Per-epoch recovery-session rounds (0 on quiet epochs) — the
+    /// p99 source.
+    pub(crate) epoch_rounds: Vec<u64>,
+    pub(crate) last_staleness: u64,
+    pub(crate) last_rebuild_ppm: u64,
+    // --- accumulated recovery-network totals (for trace summaries) ---
+    pub(crate) net_comm: usize,
+    pub(crate) net_rounds: usize,
+    pub(crate) net_dropped: usize,
+    pub(crate) tracer: Option<Tracer>,
+}
+
+impl ClusterService {
+    /// New service over `graph` with every site live, rooted at the
+    /// graph center (minimal eccentricity). `seed` keys the master RNG;
+    /// its draw order — coordinator epochs in sequence, plus `3·n`
+    /// splits per recovery session — is part of the API.
+    pub fn new(
+        graph: Graph,
+        d: usize,
+        cfg: DistributedConfig,
+        threshold: f64,
+        seed: u64,
+    ) -> ClusterService {
+        let root = SpanningTree::center_root(&graph).root;
+        ClusterService {
+            coord: StreamingCoordinator::new(graph.n(), d, cfg, threshold)
+                .with_retained_portions(),
+            overlay: LiveOverlay::new(graph, root),
+            schedule: ChurnSchedule::empty(),
+            rng: Pcg64::seed_from(seed),
+            page_points: 256,
+            epoch_no: 0,
+            joins: 0,
+            leaves: 0,
+            relay_failures: 0,
+            checkpoints: 0,
+            recovery_rounds_total: 0,
+            epoch_rounds: Vec::new(),
+            last_staleness: 0,
+            last_rebuild_ppm: 0,
+            net_comm: 0,
+            net_rounds: 0,
+            net_dropped: 0,
+            tracer: None,
+        }
+    }
+
+    /// Replay this churn schedule (builder-style).
+    pub fn with_schedule(mut self, schedule: ChurnSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Fold rebuilds and recovery relays through this sketch plan
+    /// (builder-style).
+    pub fn with_sketch(mut self, sketch: SketchPlan) -> Self {
+        self.coord = self.coord.with_sketch(sketch);
+        self
+    }
+
+    /// Schedule per-site rebuild work under `exec` (builder-style).
+    pub fn with_exec(mut self, exec: ExecPolicy) -> Self {
+        self.coord = self.coord.with_exec(exec);
+        self
+    }
+
+    /// Page size for recovery-session portion streams (builder-style).
+    pub fn with_page_points(mut self, page_points: usize) -> Self {
+        self.page_points = page_points;
+        self
+    }
+
+    /// Observe epochs, churn events, recoveries and checkpoints through
+    /// `tracer` (builder-style). Counts only — traced runs stay
+    /// bit-identical to untraced ones.
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.coord = self.coord.with_tracer(tracer.clone());
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// Append points to a live site (weight 1 each).
+    pub fn ingest(&mut self, site: usize, points: &Dataset) {
+        assert!(self.overlay.is_live(site), "ingest into detached site {site}");
+        self.coord.ingest(site, points);
+    }
+
+    /// The current global coreset, if one has been built.
+    pub fn coreset(&self) -> Option<&Coreset> {
+        self.coord.coreset()
+    }
+
+    /// The live overlay (read-only).
+    pub fn overlay(&self) -> &LiveOverlay {
+        &self.overlay
+    }
+
+    /// Sites currently attached.
+    pub fn n_live(&self) -> usize {
+        self.overlay.live_count()
+    }
+
+    /// Point dimensionality of the service's streams.
+    pub fn dim(&self) -> usize {
+        self.coord.dim()
+    }
+
+    /// Epochs processed so far.
+    pub fn epochs(&self) -> usize {
+        self.epoch_no
+    }
+
+    /// Accumulated `(comm_points, rounds, dropped)` across every
+    /// recovery session's network — what a trace summary should close
+    /// the log with.
+    pub fn network_totals(&self) -> (usize, usize, usize) {
+        (self.net_comm, self.net_rounds, self.net_dropped)
+    }
+
+    /// Service meters, keyed by the [`crate::trace::keys`] registry.
+    pub fn meters(&self) -> BTreeMap<String, u64> {
+        let mut m = BTreeMap::new();
+        m.insert(keys::CORESET_STALENESS.to_string(), self.last_staleness);
+        m.insert(keys::REBUILD_RATE_PPM.to_string(), self.last_rebuild_ppm);
+        m.insert(keys::RECOVERY_ROUNDS.to_string(), self.recovery_rounds_total);
+        m.insert(keys::EPOCH_ROUNDS_P99.to_string(), p99(&self.epoch_rounds));
+        m.insert(keys::SERVICE_JOINS.to_string(), self.joins);
+        m.insert(keys::SERVICE_LEAVES.to_string(), self.leaves);
+        m.insert(keys::RELAY_FAILURES.to_string(), self.relay_failures);
+        m.insert(keys::CHECKPOINTS.to_string(), self.checkpoints);
+        m
+    }
+
+    /// The live non-root relay with the most children (smallest id on
+    /// ties) — the default `relay-fail` target.
+    fn pick_relay(&self) -> Option<usize> {
+        let root = self.overlay.root();
+        (0..self.overlay.n())
+            .filter(|&v| {
+                v != root && self.overlay.is_live(v) && !self.overlay.children(v).is_empty()
+            })
+            .max_by_key(|&v| (self.overlay.children(v).len(), std::cmp::Reverse(v)))
+    }
+
+    /// Kill a node, repair the overlay, and detach every lost site from
+    /// the coordinator. Members of re-parented subtrees accumulate into
+    /// `affected` (they re-merge if the epoch skips); `lost_portion`
+    /// flips when a lost site's contribution is baked into the live
+    /// coreset.
+    fn apply_failure(
+        &mut self,
+        site: usize,
+        epoch: usize,
+        left: &mut Vec<usize>,
+        affected: &mut Vec<usize>,
+        lost_portion: &mut bool,
+    ) {
+        let fr = self.overlay.fail(site);
+        for &(orphan, _) in &fr.reparented {
+            affected.extend(self.overlay.subtree(orphan));
+        }
+        for &u in &fr.lost {
+            *lost_portion |= self.coord.portion(u).is_some();
+            self.coord.remove_site(u);
+            left.push(u);
+            self.leaves += 1;
+            if let Some(t) = &self.tracer {
+                t.leave(epoch, u, false);
+            }
+        }
+    }
+
+    /// Process one epoch: apply this epoch's scripted churn, run the
+    /// coordinator (forced if a graceful drain is due), fail over if a
+    /// skip epoch left lost contributions in the coreset, and restart
+    /// from checkpoint if scripted.
+    pub fn epoch(&mut self, backend: &dyn Backend) -> ServiceEpochReport {
+        self.epoch_no += 1;
+        let epoch = self.epoch_no;
+        let events = self.schedule.at(epoch).to_vec();
+        let mut joined = Vec::new();
+        let mut left = Vec::new();
+        let mut relay_failures = Vec::new();
+        let mut graceful: Vec<usize> = Vec::new();
+        let mut affected: Vec<usize> = Vec::new();
+        let mut lost_portion = false;
+        let mut restart = false;
+        for ev in &events {
+            match *ev {
+                ChurnEvent::Join => {
+                    let slot = (0..self.overlay.n()).find(|&v| !self.overlay.is_live(v));
+                    if let Some(v) = slot {
+                        if self.overlay.attach(v).is_some() {
+                            self.coord.revive_site(v);
+                            joined.push(v);
+                            self.joins += 1;
+                            if let Some(t) = &self.tracer {
+                                t.join(epoch, v);
+                            }
+                        }
+                    }
+                }
+                ChurnEvent::Leave { site } => {
+                    if self.overlay.is_live(site)
+                        && site != self.overlay.root()
+                        && !graceful.contains(&site)
+                    {
+                        graceful.push(site);
+                    }
+                }
+                ChurnEvent::Drop { site } => {
+                    if self.overlay.is_live(site) && site != self.overlay.root() {
+                        self.apply_failure(
+                            site,
+                            epoch,
+                            &mut left,
+                            &mut affected,
+                            &mut lost_portion,
+                        );
+                    }
+                }
+                ChurnEvent::RelayFail { node } => {
+                    let target = node.or_else(|| self.pick_relay()).filter(|&f| {
+                        self.overlay.is_live(f) && f != self.overlay.root()
+                    });
+                    if let Some(f) = target {
+                        relay_failures.push(f);
+                        self.relay_failures += 1;
+                        if let Some(t) = &self.tracer {
+                            t.relay_fail(epoch, f, self.overlay.children(f).len());
+                        }
+                        self.apply_failure(
+                            f,
+                            epoch,
+                            &mut left,
+                            &mut affected,
+                            &mut lost_portion,
+                        );
+                    }
+                }
+                ChurnEvent::Restart => restart = true,
+            }
+        }
+        // The coordinator epoch: scalars from survivors; a graceful
+        // drain forces the rebuild that folds the leavers' final points.
+        let report = if graceful.is_empty() {
+            self.coord.epoch(backend, &mut self.rng)
+        } else {
+            self.coord.epoch_forced(backend, &mut self.rng)
+        };
+        // Drained leavers detach now — their final portions stay in the
+        // fresh coreset, their children re-parent like any failover.
+        for &site in &graceful {
+            if !self.overlay.is_live(site) {
+                continue; // also scripted as a drop/failure this epoch
+            }
+            let fr = self.overlay.fail(site);
+            for &u in &fr.lost {
+                self.coord.remove_site(u);
+                left.push(u);
+                self.leaves += 1;
+                if let Some(t) = &self.tracer {
+                    t.leave(epoch, u, u == site);
+                }
+            }
+        }
+        // Failover: a skip epoch that lost baked-in contributions gets
+        // a subtree re-merge instead of a full rebuild.
+        let mut recovery_comm = 0;
+        let mut recovery_rounds = 0;
+        if !report.rebuilt && lost_portion && self.coord.coreset().is_some() {
+            affected.retain(|&v| self.overlay.is_live(v));
+            affected.sort_unstable();
+            affected.dedup();
+            let rec = failover::recover(
+                &self.coord,
+                &self.overlay,
+                &affected,
+                backend,
+                &mut self.rng,
+                self.page_points,
+                self.tracer.clone(),
+            );
+            recovery_comm = rec.comm_points;
+            recovery_rounds = rec.rounds;
+            self.net_comm += rec.comm_points;
+            self.net_rounds += rec.rounds;
+            self.net_dropped += rec.dropped;
+            self.recovery_rounds_total += rec.rounds as u64;
+            self.coord.install_coreset(rec.coreset);
+            if let Some(t) = &self.tracer {
+                t.recover(epoch, recovery_comm, recovery_rounds);
+            }
+        }
+        self.epoch_rounds.push(recovery_rounds as u64);
+        self.last_staleness = report.staleness_epochs as u64;
+        self.last_rebuild_ppm = report.rebuild_rate_ppm;
+        let rebuild_bill = self
+            .overlay
+            .rebuild_bill(|v| self.coord.portion(v).map_or(0, Coreset::size));
+        // Scripted collector restart: checkpoint, tear down, resume
+        // from the serialized bytes — the mid-stream restore drill.
+        let mut restarted = false;
+        if restart {
+            self.checkpoints += 1;
+            let text = self.checkpoint().to_string();
+            if let Some(t) = &self.tracer {
+                t.checkpoint(epoch, text.len());
+            }
+            let v = crate::json::parse(&text).expect("own checkpoint must parse");
+            let mut twin =
+                ClusterService::restore(&v).expect("own checkpoint must restore");
+            twin.tracer = self.tracer.take();
+            twin.coord.set_tracer(twin.tracer.clone());
+            if let Some(t) = &twin.tracer {
+                t.checkpoint(epoch, 0); // bytes == 0 marks the restore
+            }
+            *self = twin;
+            restarted = true;
+        }
+        joined.sort_unstable();
+        left.sort_unstable();
+        ServiceEpochReport {
+            report,
+            joined,
+            left,
+            relay_failures,
+            recovery_comm_points: recovery_comm,
+            recovery_rounds,
+            rebuild_bill,
+            restarted,
+        }
+    }
+}
+
+/// Nearest-rank p99 over per-epoch session rounds.
+fn p99(xs: &[u64]) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    v[(v.len() - 1) * 99 / 100]
+}

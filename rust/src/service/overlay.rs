@@ -1,0 +1,423 @@
+//! The live aggregation overlay — a spanning tree over the deployment
+//! graph that survives membership churn.
+//!
+//! The overlay is the service's answer to "which tree do portions climb
+//! right now". It starts as a BFS spanning tree and then evolves in
+//! place: joins attach at the nearest surviving relay, failures
+//! re-parent orphaned children to surviving *graph* neighbors (every
+//! overlay edge is always a real deployment edge, so the recovery
+//! session can run on the unmodified [`Network`](crate::network::Network)),
+//! and subtrees with no surviving neighbor are dropped as abrupt
+//! losses. All choices are deterministic functions of the overlay state
+//! — minimal depth, smallest id on ties — never of an RNG.
+
+use crate::json::{build, Value};
+use crate::topology::{Graph, SpanningTree};
+use anyhow::{bail, Context, Result};
+
+/// What one node failure did to the overlay.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FailoverReport {
+    /// Orphaned children successfully re-homed, as
+    /// `(orphan, new_parent)` in ascending orphan order.
+    pub reparented: Vec<(usize, usize)>,
+    /// Sites lost: the failed node itself plus every subtree member no
+    /// surviving neighbor could adopt (ascending).
+    pub lost: Vec<usize>,
+}
+
+/// A churn-tolerant spanning tree over a fixed deployment graph.
+#[derive(Clone, Debug)]
+pub struct LiveOverlay {
+    graph: Graph,
+    root: usize,
+    /// `None` at the root and on dead nodes.
+    parent: Vec<Option<usize>>,
+    children: Vec<Vec<usize>>,
+    /// Hops to the root (0 at the root; stale-free: re-parenting
+    /// recomputes the moved subtree).
+    depth: Vec<usize>,
+    alive: Vec<bool>,
+}
+
+impl LiveOverlay {
+    /// BFS spanning tree of `graph` rooted at `root`, everyone alive.
+    pub fn new(graph: Graph, root: usize) -> LiveOverlay {
+        let tree = SpanningTree::bfs(&graph, root);
+        let n = graph.n();
+        LiveOverlay {
+            parent: (0..n)
+                .map(|v| (v != root).then(|| tree.parent[v]))
+                .collect(),
+            children: tree.children,
+            depth: tree.depth,
+            alive: vec![true; n],
+            graph,
+            root,
+        }
+    }
+
+    /// Capacity of the deployment graph (live and dead slots).
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    /// The collector node. The root never leaves or fails — collector
+    /// loss is modelled as checkpoint/restore, not failover.
+    pub fn root(&self) -> usize {
+        self.root
+    }
+
+    /// The fixed deployment graph underneath the overlay.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Current tree parent (`None` at the root and on dead nodes).
+    pub fn parent(&self, v: usize) -> Option<usize> {
+        self.parent[v]
+    }
+
+    /// Current tree children, ascending.
+    pub fn children(&self, v: usize) -> &[usize] {
+        &self.children[v]
+    }
+
+    /// Hops from `v` to the root along the current tree.
+    pub fn depth(&self, v: usize) -> usize {
+        self.depth[v]
+    }
+
+    /// Whether the slot is attached right now.
+    pub fn is_live(&self, v: usize) -> bool {
+        self.alive[v]
+    }
+
+    /// Live slots.
+    pub fn live_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// The subtree rooted at a live node (itself included), in
+    /// deterministic DFS order.
+    pub fn subtree(&self, v: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut stack = vec![v];
+        while let Some(u) = stack.pop() {
+            out.push(u);
+            stack.extend(self.children[u].iter().rev());
+        }
+        out
+    }
+
+    /// What a full portion reflood would bill over the current tree:
+    /// one scalar per live site plus each live site's portion size
+    /// times its hop count to the root. `portion_size` maps a site to
+    /// its current portion's point count.
+    pub fn rebuild_bill(&self, portion_size: impl Fn(usize) -> usize) -> usize {
+        let mut bill = self.live_count();
+        for v in 0..self.n() {
+            if self.alive[v] {
+                bill += portion_size(v) * self.depth[v];
+            }
+        }
+        bill
+    }
+
+    /// Re-attach a dead slot at its best surviving graph neighbor
+    /// (minimal depth, smallest id on ties). Returns the chosen parent,
+    /// or `None` — slot still live, no live neighbor, or the root —
+    /// in which case nothing changes.
+    pub fn attach(&mut self, v: usize) -> Option<usize> {
+        if self.alive[v] || v == self.root {
+            return None;
+        }
+        let p = self
+            .graph
+            .neighbors(v)
+            .iter()
+            .copied()
+            .filter(|&u| self.alive[u])
+            .min_by_key(|&u| (self.depth[u], u))?;
+        self.alive[v] = true;
+        self.parent[v] = Some(p);
+        self.depth[v] = self.depth[p] + 1;
+        self.children[v].clear();
+        self.children[p].push(v);
+        self.children[p].sort_unstable();
+        Some(p)
+    }
+
+    /// Kill a live non-root node and repair the tree around it: each
+    /// orphaned child re-parents to its best surviving graph neighbor
+    /// outside its own subtree (minimal depth, smallest id on ties;
+    /// the no-cycle constraint), and orphan subtrees with no such
+    /// neighbor are dropped whole.
+    pub fn fail(&mut self, v: usize) -> FailoverReport {
+        assert!(self.alive[v], "fail on dead node {v}");
+        assert_ne!(v, self.root, "the root restarts from checkpoint, never fails over");
+        let orphans = std::mem::take(&mut self.children[v]);
+        self.alive[v] = false;
+        if let Some(p) = self.parent[v].take() {
+            self.children[p].retain(|&c| c != v);
+        }
+        let mut report = FailoverReport {
+            lost: vec![v],
+            ..FailoverReport::default()
+        };
+        for o in orphans {
+            let members = self.subtree(o);
+            let new_parent = self
+                .graph
+                .neighbors(o)
+                .iter()
+                .copied()
+                .filter(|&u| self.alive[u] && !members.contains(&u))
+                .min_by_key(|&u| (self.depth[u], u));
+            match new_parent {
+                Some(p) => {
+                    self.parent[o] = Some(p);
+                    self.children[p].push(o);
+                    self.children[p].sort_unstable();
+                    self.redepth(o, self.depth[p] + 1);
+                    report.reparented.push((o, p));
+                }
+                None => {
+                    for u in members {
+                        self.alive[u] = false;
+                        self.parent[u] = None;
+                        self.children[u].clear();
+                        report.lost.push(u);
+                    }
+                }
+            }
+        }
+        report.lost.sort_unstable();
+        report
+    }
+
+    /// Recompute depths of the subtree at `v` after a re-parent.
+    fn redepth(&mut self, v: usize, depth: usize) {
+        let mut stack = vec![(v, depth)];
+        while let Some((u, d)) = stack.pop() {
+            self.depth[u] = d;
+            stack.extend(self.children[u].iter().map(|&c| (c, d + 1)));
+        }
+    }
+
+    /// Serialize through [`crate::json`]: the graph's edge list plus
+    /// root, liveness and parent pointers (children and depths are
+    /// derived state and are recomputed on restore).
+    pub fn to_json(&self) -> Value {
+        build::obj(vec![
+            ("n", build::num(self.n() as f64)),
+            (
+                "edges",
+                build::arr(
+                    self.graph
+                        .edges_iter()
+                        .map(|(u, v)| {
+                            build::arr(vec![build::num(u as f64), build::num(v as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("root", build::num(self.root as f64)),
+            (
+                "alive",
+                build::arr(self.alive.iter().map(|&a| Value::Bool(a)).collect()),
+            ),
+            (
+                "parent",
+                build::arr(
+                    self.parent
+                        .iter()
+                        .map(|p| p.map(|u| build::num(u as f64)).unwrap_or(Value::Null))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild from [`to_json`](Self::to_json), validating that every
+    /// live non-root node hangs off a live parent across a real graph
+    /// edge and that the live component is acyclic (depths resolve).
+    pub fn from_json(v: &Value) -> Result<LiveOverlay> {
+        let req = |key: &str| -> Result<&Value> {
+            v.get(key)
+                .with_context(|| format!("overlay: missing '{key}'"))
+        };
+        let n = req("n")?.as_usize().context("overlay: bad 'n'")?;
+        let mut edges = Vec::new();
+        for e in req("edges")?.as_arr().context("overlay: 'edges' must be an array")? {
+            let pair = e.as_arr().context("overlay: edge must be a pair")?;
+            if pair.len() != 2 {
+                bail!("overlay: edge must be a pair");
+            }
+            edges.push((
+                pair[0].as_usize().context("overlay: bad edge endpoint")?,
+                pair[1].as_usize().context("overlay: bad edge endpoint")?,
+            ));
+        }
+        let graph = Graph::from_edges(n, &edges);
+        let root = req("root")?.as_usize().context("overlay: bad 'root'")?;
+        if root >= n {
+            bail!("overlay: root {root} out of range");
+        }
+        let alive_v = req("alive")?.as_arr().context("overlay: 'alive' must be an array")?;
+        let parent_v = req("parent")?.as_arr().context("overlay: 'parent' must be an array")?;
+        if alive_v.len() != n || parent_v.len() != n {
+            bail!("overlay: alive/parent must have {n} entries");
+        }
+        let mut alive = Vec::with_capacity(n);
+        for a in alive_v {
+            let Value::Bool(b) = a else {
+                bail!("overlay: 'alive' entries must be bools");
+            };
+            alive.push(*b);
+        }
+        if !alive[root] {
+            bail!("overlay: the root must be alive");
+        }
+        let mut parent = Vec::with_capacity(n);
+        let mut children = vec![Vec::new(); n];
+        for (u, p) in parent_v.iter().enumerate() {
+            let p = match p {
+                Value::Null => None,
+                p => Some(p.as_usize().context("overlay: bad parent pointer")?),
+            };
+            match p {
+                Some(q) => {
+                    if u == root || !alive[u] {
+                        bail!("overlay: node {u} must not have a parent");
+                    }
+                    if q >= n || !alive[q] || !graph.has_edge(u, q) {
+                        bail!("overlay: node {u} hangs off invalid parent {q}");
+                    }
+                    children[q].push(u);
+                }
+                None => {
+                    if alive[u] && u != root {
+                        bail!("overlay: live node {u} is detached");
+                    }
+                }
+            }
+            parent.push(p);
+        }
+        // Depths via BFS from the root; a live node left unreached means
+        // the parent pointers cycle somewhere.
+        let mut depth = vec![0usize; n];
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::from([root]);
+        seen[root] = true;
+        while let Some(u) = queue.pop_front() {
+            for &c in &children[u] {
+                depth[c] = depth[u] + 1;
+                seen[c] = true;
+                queue.push_back(c);
+            }
+        }
+        if (0..n).any(|u| alive[u] && !seen[u]) {
+            bail!("overlay: parent pointers contain a cycle");
+        }
+        Ok(LiveOverlay {
+            graph,
+            root,
+            parent,
+            children,
+            depth,
+            alive,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators;
+
+    /// Path 0-1-2-3-4 rooted at 0: a failure mid-path exercises both
+    /// re-parenting and whole-subtree loss.
+    fn path_overlay() -> LiveOverlay {
+        LiveOverlay::new(generators::path(5), 0)
+    }
+
+    #[test]
+    fn bfs_start_state_covers_everyone() {
+        let o = LiveOverlay::new(generators::grid(3, 3), 0);
+        assert_eq!(o.live_count(), 9);
+        assert_eq!(o.depth(0), 0);
+        assert_eq!(o.subtree(0).len(), 9);
+        let bill = o.rebuild_bill(|_| 2);
+        // 9 scalars + 2 points x Σdepth (grid BFS from a corner: depths
+        // 0,1,1,2,2,2,3,3,4 sum to 18).
+        assert_eq!(bill, 9 + 2 * 18);
+    }
+
+    #[test]
+    fn relay_failure_reparents_across_a_graph_edge() {
+        // Grid 3x3 from corner 0: node 3 relays node 6, whose only
+        // surviving neighbor is 7 — a real grid edge at depth 3, so the
+        // orphan survives but sinks deeper.
+        let mut o = LiveOverlay::new(generators::grid(3, 3), 0);
+        assert_eq!(o.children(3), &[6]);
+        let r = o.fail(3);
+        assert_eq!(r.lost, vec![3]);
+        assert_eq!(r.reparented, vec![(6, 7)]);
+        assert!(o.graph().has_edge(6, 7), "overlay edge must be real");
+        assert_eq!(o.depth(6), o.depth(7) + 1);
+        assert_eq!(o.children(7), &[6]);
+        assert_eq!(o.live_count(), 8);
+    }
+
+    #[test]
+    fn unreachable_subtree_is_dropped_whole() {
+        // Path rooted at 0: failing node 2 strands {3, 4} — their only
+        // route to the root ran through 2.
+        let mut o = path_overlay();
+        let r = o.fail(2);
+        assert_eq!(r.lost, vec![2, 3, 4]);
+        assert!(r.reparented.is_empty());
+        assert_eq!(o.live_count(), 2);
+        assert!(!o.is_live(3) && !o.is_live(4));
+    }
+
+    #[test]
+    fn attach_rejoins_at_the_nearest_surviving_relay() {
+        let mut o = path_overlay();
+        o.fail(2); // strands 3 and 4
+        assert_eq!(o.attach(4), None, "4's only neighbor 3 is dead");
+        assert_eq!(o.attach(3), None, "3's neighbors 2 and 4 are dead");
+        assert_eq!(o.attach(2), Some(1), "2 rejoins under 1");
+        assert_eq!(o.attach(3), Some(2), "now 3 can chain back in");
+        assert_eq!(o.depth(3), 3);
+        assert_eq!(o.attach(3), None, "attach on a live slot is a no-op");
+    }
+
+    #[test]
+    fn json_round_trips_evolved_overlays() {
+        let mut o = LiveOverlay::new(generators::grid(3, 3), 4);
+        o.fail(1);
+        o.fail(5);
+        o.attach(1);
+        let v = o.to_json();
+        let back = LiveOverlay::from_json(&v).unwrap();
+        for u in 0..o.n() {
+            assert_eq!(o.parent(u), back.parent(u), "parent of {u}");
+            assert_eq!(o.children(u), back.children(u), "children of {u}");
+            assert_eq!(o.depth(u), back.depth(u), "depth of {u}");
+            assert_eq!(o.is_live(u), back.is_live(u), "alive of {u}");
+        }
+        assert_eq!(v.to_string(), back.to_json().to_string());
+        // Validation: a live node pointing at a dead parent is rejected.
+        let mut bad = v.clone();
+        if let Value::Obj(m) = &mut bad {
+            m.insert("alive".into(), {
+                let mut flags: Vec<Value> = (0..9).map(|_| Value::Bool(true)).collect();
+                flags[4] = Value::Bool(false); // kill the root
+                build::arr(flags)
+            });
+        }
+        assert!(LiveOverlay::from_json(&bad).is_err());
+    }
+}

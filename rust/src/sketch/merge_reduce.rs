@@ -30,10 +30,11 @@ use super::{MergeableSketch, PageTracker};
 use crate::clustering::backend::Backend;
 use crate::clustering::{approx_solution, Objective};
 use crate::coreset::sensitivity::{sample_portion, SampleParams};
+use crate::json::{build, Value};
 use crate::points::WeightedSet;
 use crate::rng::Pcg64;
 use crate::trace::Tracer;
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 /// Lloyd/k-median refinement iterations per bucket re-solve — buckets
@@ -164,6 +165,127 @@ impl<'a> MergeReduceSketch<'a> {
     /// than one bucket.
     pub fn insert_set(&mut self, set: &WeightedSet) {
         self.insert_weighted(set, 1.0);
+    }
+
+    /// Serialize the complete fold state — RNG position, bucket tower,
+    /// meters — through the repo's own [`crate::json`] module. The
+    /// round trip is bit-identical: coordinates widen exactly into the
+    /// `f64` number domain, the RNG snapshot resumes the exact draw
+    /// sequence, and a restored sketch folds the rest of a stream to
+    /// the same bytes an uninterrupted one would.
+    ///
+    /// Caveat: the page tracker (wire-side `(site, page)` dedup) is
+    /// *not* serialized, so checkpoints are only valid at portion
+    /// boundaries — exactly what the host-side `insert_set` path (the
+    /// streaming coordinator and the service layer) guarantees. A
+    /// sketch restored mid-`insert_page` stream would lose its
+    /// duplicate-delivery and torn-portion protection.
+    pub fn checkpoint(&self) -> Value {
+        let (state, inc) = self.rng.state();
+        let bucket = |b: &Option<(WeightedSet, f64)>| match b {
+            None => Value::Null,
+            Some((set, factor)) => build::obj(vec![
+                ("set", set.to_json()),
+                ("factor", build::num(*factor)),
+            ]),
+        };
+        build::obj(vec![
+            // u128s exceed the f64-lossless integer range: hex strings.
+            ("rng_state", build::s(format!("{state:032x}"))),
+            ("rng_inc", build::s(format!("{inc:032x}"))),
+            ("k", build::num(self.k as f64)),
+            ("objective", build::s(self.objective.name())),
+            ("bucket_points", build::num(self.bucket_points as f64)),
+            (
+                "dim",
+                self.dim.map_or(Value::Null, |d| build::num(d as f64)),
+            ),
+            (
+                "level0",
+                self.level0
+                    .as_ref()
+                    .map_or(Value::Null, WeightedSet::to_json),
+            ),
+            ("level0_factor", build::num(self.level0_factor)),
+            ("levels", build::arr(self.levels.iter().map(bucket).collect())),
+            ("points", build::num(self.points as f64)),
+            ("peak", build::num(self.peak as f64)),
+            ("reductions", build::num(self.reductions as f64)),
+            ("worst_factor", build::num(self.worst_factor)),
+            ("node", build::num(self.node as f64)),
+        ])
+    }
+
+    /// Rebuild a sketch from a [`Self::checkpoint`] value. The backend
+    /// is re-attached by the caller (trait objects don't serialize);
+    /// a tracer, if any, must be re-attached via [`Self::set_tracer`].
+    pub fn restore(v: &Value, backend: &'a dyn Backend) -> Result<MergeReduceSketch<'a>> {
+        let hex = |key: &str| -> Result<u128> {
+            let s = v.get(key).and_then(Value::as_str).context(key.to_string())?;
+            u128::from_str_radix(s, 16).with_context(|| format!("{key}: bad hex"))
+        };
+        let int = |key: &str| -> Result<usize> {
+            v.get(key).and_then(Value::as_usize).context(key.to_string())
+        };
+        let float = |key: &str| -> Result<f64> {
+            v.get(key).and_then(Value::as_f64).context(key.to_string())
+        };
+        let objective = v
+            .get("objective")
+            .and_then(Value::as_str)
+            .and_then(Objective::parse)
+            .context("objective")?;
+        let bucket = |b: &Value| -> Result<Option<(WeightedSet, f64)>> {
+            match b {
+                Value::Null => Ok(None),
+                _ => Ok(Some((
+                    WeightedSet::from_json(b.get("set").context("level: set")?)?,
+                    b.get("factor")
+                        .and_then(Value::as_f64)
+                        .context("level: factor")?,
+                ))),
+            }
+        };
+        let levels = v
+            .get("levels")
+            .and_then(Value::as_arr)
+            .context("levels")?
+            .iter()
+            .map(bucket)
+            .collect::<Result<Vec<_>>>()?;
+        let level0 = match v.get("level0").context("level0")? {
+            Value::Null => None,
+            set => Some(WeightedSet::from_json(set)?),
+        };
+        let dim = match v.get("dim").context("dim")? {
+            Value::Null => None,
+            d => Some(d.as_usize().context("dim")?),
+        };
+        let bucket_points = int("bucket_points")?;
+        if bucket_points < 2 {
+            bail!("bucket_points {bucket_points} too small for a checkpoint");
+        }
+        Ok(MergeReduceSketch {
+            backend,
+            rng: Pcg64::from_state(hex("rng_state")?, hex("rng_inc")?),
+            k: int("k")?,
+            objective,
+            bucket_points,
+            // `new()` already clamped the stored capacity; re-derive the
+            // target from it verbatim.
+            reduce_target: bucket_points / 2,
+            tracker: PageTracker::default(),
+            dim,
+            level0,
+            level0_factor: float("level0_factor")?,
+            levels,
+            points: int("points")?,
+            peak: int("peak")?,
+            reductions: int("reductions")?,
+            worst_factor: float("worst_factor")?,
+            tracer: None,
+            node: int("node")?,
+        })
     }
 
     /// Fold a set whose content already carries a composed error factor
@@ -554,6 +676,40 @@ mod tests {
         let f1 = longer.error_factor();
         longer.insert_set(&set);
         assert!(longer.error_factor() >= f1, "factor is monotone");
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_bit_identically() {
+        let mut rng = Pcg64::seed_from(21);
+        let data = gaussian_mixture(&mut rng, 4_000, 4, 3);
+        let set = WeightedSet::unit(data);
+        // Twin A folds the whole stream uninterrupted.
+        let mut whole = sketch(128, 3);
+        whole.insert_set(&set.slice(0, 1_700));
+        whole.insert_set(&set.slice(1_700, 4_000));
+        // Twin B is killed after the first insert, serialized through
+        // the textual JSON round trip, restored, and folds the rest.
+        let mut first = sketch(128, 3);
+        first.insert_set(&set.slice(0, 1_700));
+        let text = first.checkpoint().to_string();
+        drop(first);
+        let v = crate::json::parse(&text).unwrap();
+        let mut resumed = MergeReduceSketch::restore(&v, &RustBackend).unwrap();
+        resumed.insert_set(&set.slice(1_700, 4_000));
+        assert_eq!(resumed.reductions(), whole.reductions());
+        assert_eq!(resumed.peak_points(), whole.peak_points());
+        assert_eq!(resumed.error_factor().to_bits(), whole.error_factor().to_bits());
+        assert_eq!(
+            resumed.finish().unwrap(),
+            whole.finish().unwrap(),
+            "restored fold must be bit-identical to the uninterrupted one"
+        );
+    }
+
+    #[test]
+    fn restore_rejects_garbage() {
+        let v = crate::json::parse(r#"{"rng_state":"zz"}"#).unwrap();
+        assert!(MergeReduceSketch::restore(&v, &RustBackend).is_err());
     }
 
     #[test]

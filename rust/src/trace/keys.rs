@@ -66,6 +66,31 @@ pub const STALENESS_EPOCHS: &str = "staleness_epochs";
 /// counter, not a `RunResult` meter).
 pub const REBUILD_RATE_PPM: &str = "rebuild_rate_ppm";
 
+/// Current epochs-since-rebuild of the service's live coreset — how
+/// stale the answer a client reads right now is (a `ClusterService`
+/// meter).
+pub const CORESET_STALENESS: &str = "coreset_staleness";
+
+/// Total network rounds spent in failover recovery sessions (subtree
+/// re-merges) across the service run.
+pub const RECOVERY_ROUNDS: &str = "recovery_rounds";
+
+/// p99 (nearest-rank) of per-epoch session rounds under churn —
+/// recovery re-merges included, quiet epochs count 0.
+pub const EPOCH_ROUNDS_P99: &str = "epoch_rounds_p99";
+
+/// Sites that joined the service over the run.
+pub const SERVICE_JOINS: &str = "service_joins";
+
+/// Sites that left the service (graceful and abrupt combined).
+pub const SERVICE_LEAVES: &str = "service_leaves";
+
+/// Overlay relay failures the service failed over from.
+pub const RELAY_FAILURES: &str = "relay_failures";
+
+/// Collector checkpoints written over the run.
+pub const CHECKPOINTS: &str = "checkpoints";
+
 /// Every registered key with its one-line doc, in report order:
 /// scheduling, sketch, phase spans, trace aggregates, streaming.
 /// Report and JSON emitters iterate this slice so meter order is a
@@ -124,6 +149,25 @@ pub const ALL: &[(&str, &str)] = &[
         REBUILD_RATE_PPM,
         "streaming rebuilds per epoch, parts per million",
     ),
+    (
+        CORESET_STALENESS,
+        "service: current staleness of the live coreset, in epochs",
+    ),
+    (
+        RECOVERY_ROUNDS,
+        "service: total rounds spent in failover re-merges",
+    ),
+    (
+        EPOCH_ROUNDS_P99,
+        "service: p99 of per-epoch session rounds under churn",
+    ),
+    (SERVICE_JOINS, "service: sites that joined over the run"),
+    (SERVICE_LEAVES, "service: sites that left over the run"),
+    (
+        RELAY_FAILURES,
+        "service: overlay relay failures failed over from",
+    ),
+    (CHECKPOINTS, "service: collector checkpoints written"),
 ];
 
 #[cfg(test)]

@@ -164,6 +164,50 @@ pub enum TraceEvent {
         /// Points transmitted this epoch.
         comm_points: usize,
     },
+    /// A site joining the long-lived service (membership churn).
+    Join {
+        /// Service epoch the join took effect in.
+        epoch: usize,
+        /// The joining site/node id.
+        site: usize,
+    },
+    /// A site leaving the service: gracefully (its final portion folds
+    /// into a forced rebuild first) or abruptly (its contribution is
+    /// simply lost).
+    Leave {
+        /// Service epoch the departure took effect in.
+        epoch: usize,
+        /// The departing site/node id.
+        site: usize,
+        /// Graceful drain (`true`) vs abrupt loss (`false`).
+        graceful: bool,
+    },
+    /// An overlay relay failing, orphaning its children.
+    RelayFail {
+        /// Service epoch the failure was detected in.
+        epoch: usize,
+        /// The failed relay node.
+        node: usize,
+        /// Children re-parented to surviving neighbors.
+        orphans: usize,
+    },
+    /// One failover recovery: the re-merge of the affected subtree.
+    Recover {
+        /// Service epoch the recovery ran in.
+        epoch: usize,
+        /// Points the recovery session moved (strictly below a full
+        /// rebuild's portion bill — that is the point of failover).
+        comm_points: usize,
+        /// Network rounds the recovery session took.
+        rounds: usize,
+    },
+    /// A collector checkpoint written (or restored, `bytes == 0`).
+    Checkpoint {
+        /// Service epoch the checkpoint was cut at.
+        epoch: usize,
+        /// Serialized size in bytes (0 marks a restore).
+        bytes: usize,
+    },
     /// End-of-run totals, appended once so a trace file is
     /// self-checking: per-edge flow totals must reconcile against
     /// `comm_points` (delivered + dropped = charged).
@@ -261,6 +305,46 @@ impl TraceEvent {
                 ("staleness", n(*staleness_epochs)),
                 ("comm_points", n(*comm_points)),
             ]),
+            TraceEvent::Join { epoch, site } => build::obj(vec![
+                ("ev", build::s("join")),
+                ("epoch", n(*epoch)),
+                ("site", n(*site)),
+            ]),
+            TraceEvent::Leave {
+                epoch,
+                site,
+                graceful,
+            } => build::obj(vec![
+                ("ev", build::s("leave")),
+                ("epoch", n(*epoch)),
+                ("site", n(*site)),
+                ("graceful", Value::Bool(*graceful)),
+            ]),
+            TraceEvent::RelayFail {
+                epoch,
+                node,
+                orphans,
+            } => build::obj(vec![
+                ("ev", build::s("relay-fail")),
+                ("epoch", n(*epoch)),
+                ("node", n(*node)),
+                ("orphans", n(*orphans)),
+            ]),
+            TraceEvent::Recover {
+                epoch,
+                comm_points,
+                rounds,
+            } => build::obj(vec![
+                ("ev", build::s("recover")),
+                ("epoch", n(*epoch)),
+                ("comm_points", n(*comm_points)),
+                ("rounds", n(*rounds)),
+            ]),
+            TraceEvent::Checkpoint { epoch, bytes } => build::obj(vec![
+                ("ev", build::s("checkpoint")),
+                ("epoch", n(*epoch)),
+                ("bytes", n(*bytes)),
+            ]),
             TraceEvent::Summary {
                 comm_points,
                 rounds,
@@ -320,6 +404,29 @@ impl TraceEvent {
                 rebuilt: field_bool(v, "rebuilt")?,
                 staleness_epochs: field(v, "staleness")?,
                 comm_points: field(v, "comm_points")?,
+            },
+            "join" => TraceEvent::Join {
+                epoch: field(v, "epoch")?,
+                site: field(v, "site")?,
+            },
+            "leave" => TraceEvent::Leave {
+                epoch: field(v, "epoch")?,
+                site: field(v, "site")?,
+                graceful: field_bool(v, "graceful")?,
+            },
+            "relay-fail" => TraceEvent::RelayFail {
+                epoch: field(v, "epoch")?,
+                node: field(v, "node")?,
+                orphans: field(v, "orphans")?,
+            },
+            "recover" => TraceEvent::Recover {
+                epoch: field(v, "epoch")?,
+                comm_points: field(v, "comm_points")?,
+                rounds: field(v, "rounds")?,
+            },
+            "checkpoint" => TraceEvent::Checkpoint {
+                epoch: field(v, "epoch")?,
+                bytes: field(v, "bytes")?,
             },
             "summary" => TraceEvent::Summary {
                 comm_points: field(v, "comm_points")?,
@@ -446,6 +553,43 @@ impl Tracer {
             staleness_epochs,
             comm_points,
         });
+    }
+
+    /// Record a site joining the service.
+    pub fn join(&self, epoch: usize, site: usize) {
+        self.push(TraceEvent::Join { epoch, site });
+    }
+
+    /// Record a site leaving the service (graceful drain or abrupt loss).
+    pub fn leave(&self, epoch: usize, site: usize, graceful: bool) {
+        self.push(TraceEvent::Leave {
+            epoch,
+            site,
+            graceful,
+        });
+    }
+
+    /// Record an overlay relay failure and how many children it orphaned.
+    pub fn relay_fail(&self, epoch: usize, node: usize, orphans: usize) {
+        self.push(TraceEvent::RelayFail {
+            epoch,
+            node,
+            orphans,
+        });
+    }
+
+    /// Record one failover recovery (subtree re-merge) with its cost.
+    pub fn recover(&self, epoch: usize, comm_points: usize, rounds: usize) {
+        self.push(TraceEvent::Recover {
+            epoch,
+            comm_points,
+            rounds,
+        });
+    }
+
+    /// Record a collector checkpoint (`bytes == 0` marks a restore).
+    pub fn checkpoint(&self, epoch: usize, bytes: usize) {
+        self.push(TraceEvent::Checkpoint { epoch, bytes });
     }
 
     /// Append the end-of-run totals that make the trace self-checking.
@@ -657,6 +801,11 @@ mod tests {
         t.phase(1, Phase::Solve, false);
         t.phase(1, Phase::Broadcast, true);
         t.epoch(1, true, 0, 40);
+        t.join(2, 5);
+        t.leave(3, 5, true);
+        t.relay_fail(4, 2, 2);
+        t.recover(4, 17, 5);
+        t.checkpoint(5, 2048);
         t.summary(11, 3, 1);
         t.snapshot()
     }

@@ -1,0 +1,214 @@
+//! Churn-determinism suite for the always-on clustering service: the
+//! same graph, seed and churn schedule must produce bit-identical
+//! coresets, reports and meters at any thread count; the empty schedule
+//! must reproduce a plain `StreamingCoordinator` exactly; a collector
+//! killed mid-stream and restored from its checkpoint must continue
+//! bit-identically; and a failover re-merge must bill strictly below a
+//! full portion reflood.
+
+use distclus::clustering::backend::RustBackend;
+use distclus::coordinator::streaming::StreamingCoordinator;
+use distclus::coreset::DistributedConfig;
+use distclus::data::synthetic::gaussian_mixture;
+use distclus::exec::ExecPolicy;
+use distclus::rng::Pcg64;
+use distclus::service::{ChurnSchedule, ClusterService, ServiceEpochReport};
+use distclus::topology::generators;
+use distclus::trace::{keys, TraceEvent, Tracer};
+
+fn cfg() -> DistributedConfig {
+    DistributedConfig {
+        t: 120,
+        k: 3,
+        ..Default::default()
+    }
+}
+
+/// One scripted event of every kind. With the huge drift threshold the
+/// coordinator skips every epoch after the forced ones, so the
+/// relay-fail at epoch 3 exercises the failover re-merge and the drop
+/// at epoch 4 the portion excision.
+const SCHEDULE: &str = "2:leave:2;3:relay-fail;4:drop:8;5:restart;6:join";
+
+fn drive_churny(
+    threads: usize,
+    tracer: Option<Tracer>,
+) -> (Vec<ServiceEpochReport>, ClusterService) {
+    let mut svc = ClusterService::new(generators::grid(3, 3), 4, cfg(), 1e9, 42)
+        .with_schedule(ChurnSchedule::parse(SCHEDULE).unwrap())
+        .with_exec(ExecPolicy::parallel(threads));
+    if let Some(t) = tracer {
+        svc = svc.with_tracer(t);
+    }
+    let mut feed = Pcg64::seed_from(1234);
+    let mut reports = Vec::new();
+    for _ in 0..7 {
+        for site in 0..9 {
+            if svc.overlay().is_live(site) {
+                svc.ingest(site, &gaussian_mixture(&mut feed, 60, 4, 3));
+            }
+        }
+        reports.push(svc.epoch(&RustBackend));
+    }
+    (reports, svc)
+}
+
+#[test]
+fn same_seed_and_schedule_is_bit_identical_across_thread_counts() {
+    let (base, base_svc) = drive_churny(1, None);
+    let base_set = base_svc.coreset().unwrap().set.clone();
+    for threads in [2, 8] {
+        let (reports, svc) = drive_churny(threads, None);
+        assert_eq!(reports, base, "{threads} worker threads diverged");
+        assert_eq!(
+            svc.coreset().unwrap().set,
+            base_set,
+            "{threads}-thread coreset differs bitwise"
+        );
+        assert_eq!(svc.meters(), base_svc.meters());
+    }
+    // The scripted epochs did what the schedule says.
+    assert!(base[0].report.rebuilt, "first epoch builds");
+    assert_eq!(base[1].left, vec![2], "graceful leave drains site 2");
+    assert!(base[1].report.rebuilt, "a drain forces the rebuild");
+    assert!(!base[2].report.rebuilt, "relay failure hits a skip epoch");
+    assert!(base[2].recovery_comm_points > 0, "subtree re-merge ran");
+    assert_eq!(base[3].left, vec![8], "abrupt drop detaches site 8");
+    assert!(base[4].restarted, "scripted checkpoint restart");
+    assert_eq!(base[5].joined.len(), 1, "join revives a dead slot");
+    // A skip epoch bills exactly one scalar per live ingested site.
+    assert_eq!(base[4].report.comm_points, 6);
+}
+
+#[test]
+fn tracing_never_changes_results_and_records_churn() {
+    let (plain, plain_svc) = drive_churny(1, None);
+    let tracer = Tracer::new();
+    let (traced, traced_svc) = drive_churny(1, Some(tracer.clone()));
+    assert_eq!(traced, plain, "tracing changed the run");
+    assert_eq!(traced_svc.coreset().unwrap().set, plain_svc.coreset().unwrap().set);
+    let log = tracer.snapshot();
+    let count = |pred: &dyn Fn(&TraceEvent) -> bool| log.events.iter().filter(|e| pred(e)).count();
+    assert_eq!(count(&|e| matches!(e, TraceEvent::Join { .. })), 1);
+    assert!(count(&|e| matches!(e, TraceEvent::Leave { graceful: true, .. })) >= 1);
+    assert!(count(&|e| matches!(e, TraceEvent::Leave { graceful: false, .. })) >= 2);
+    assert_eq!(count(&|e| matches!(e, TraceEvent::RelayFail { .. })), 1);
+    assert!(count(&|e| matches!(e, TraceEvent::Recover { .. })) >= 1);
+    // The restart drill logs the serialized byte count, then a
+    // zero-byte marker from the restored twin.
+    let ckpt: Vec<usize> = log
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Checkpoint { bytes, .. } => Some(*bytes),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(ckpt.len(), 2);
+    assert!(ckpt[0] > 0 && ckpt[1] == 0);
+}
+
+#[test]
+fn empty_schedule_reproduces_the_plain_coordinator() {
+    let mut svc = ClusterService::new(generators::grid(3, 3), 4, cfg(), 0.3, 7);
+    let mut coord = StreamingCoordinator::new(9, 4, cfg(), 0.3).with_retained_portions();
+    let mut rng = Pcg64::seed_from(7);
+    let mut feed_a = Pcg64::seed_from(55);
+    let mut feed_b = Pcg64::seed_from(55);
+    for _ in 0..4 {
+        for site in 0..9 {
+            svc.ingest(site, &gaussian_mixture(&mut feed_a, 50, 4, 3));
+            coord.ingest(site, &gaussian_mixture(&mut feed_b, 50, 4, 3));
+        }
+        let rs = svc.epoch(&RustBackend);
+        let rc = coord.epoch(&RustBackend, &mut rng);
+        assert_eq!(rs.report, rc, "service epoch drifted from the coordinator");
+        assert!(rs.joined.is_empty() && rs.left.is_empty() && !rs.restarted);
+        assert_eq!(rs.recovery_comm_points, 0);
+    }
+    assert_eq!(svc.coreset().unwrap().set, coord.coreset().unwrap().set);
+    assert_eq!(svc.coreset().unwrap().sampled, coord.coreset().unwrap().sampled);
+}
+
+#[test]
+fn failover_re_merge_bills_strictly_below_a_full_rebuild() {
+    // One relay failure per epoch on a 3x3 grid; the huge threshold
+    // keeps every post-build epoch a skip, so each failure must recover
+    // through the subtree re-merge, never a reflood.
+    let mut svc = ClusterService::new(generators::grid(3, 3), 4, cfg(), 1e9, 11)
+        .with_schedule(ChurnSchedule::parse("2:relay-fail;3:relay-fail;4:relay-fail").unwrap());
+    let mut feed = Pcg64::seed_from(21);
+    let mut recoveries = 0;
+    for epoch in 1..=5usize {
+        for site in 0..9 {
+            if svc.overlay().is_live(site) {
+                svc.ingest(site, &gaussian_mixture(&mut feed, 60, 4, 3));
+            }
+        }
+        let r = svc.epoch(&RustBackend);
+        match epoch {
+            1 => assert!(r.report.rebuilt, "first epoch builds"),
+            2..=4 => {
+                assert!(!r.report.rebuilt, "epoch {epoch} must skip");
+                assert_eq!(r.relay_failures.len(), 1);
+                if r.recovery_comm_points > 0 {
+                    assert!(
+                        r.recovery_comm_points < r.rebuild_bill,
+                        "epoch {epoch}: recovery {} must undercut reflood {}",
+                        r.recovery_comm_points,
+                        r.rebuild_bill
+                    );
+                    assert!(r.recovery_rounds > 0, "recovery rounds are metered");
+                    recoveries += 1;
+                }
+            }
+            _ => {
+                // Quiet skip epoch: exactly one scalar per live site.
+                assert_eq!(r.report.comm_points, svc.n_live());
+            }
+        }
+    }
+    assert!(recoveries >= 2, "expected re-merges, got {recoveries}");
+    let meters = svc.meters();
+    assert_eq!(meters[keys::RELAY_FAILURES], 3);
+    assert!(meters[keys::RECOVERY_ROUNDS] > 0);
+    assert!(meters[keys::EPOCH_ROUNDS_P99] > 0);
+}
+
+#[test]
+fn checkpoint_restore_mid_stream_is_bit_identical() {
+    let schedule = "2:relay-fail;4:drop:2;5:restart;6:join";
+    let mut svc = ClusterService::new(generators::grid(3, 3), 4, cfg(), 0.3, 17)
+        .with_schedule(ChurnSchedule::parse(schedule).unwrap());
+    let mut feed = Pcg64::seed_from(9);
+    for _ in 0..3 {
+        for site in 0..9 {
+            if svc.overlay().is_live(site) {
+                svc.ingest(site, &gaussian_mixture(&mut feed, 50, 4, 3));
+            }
+        }
+        svc.epoch(&RustBackend);
+    }
+    // Kill the collector: all that survives is the serialized text.
+    let text = svc.checkpoint().to_string();
+    let mut twin = ClusterService::restore(&distclus::json::parse(&text).unwrap()).unwrap();
+    // Both continue on identical feeds through more scripted churn.
+    let mut feed_a = Pcg64::seed_from(99);
+    let mut feed_b = Pcg64::seed_from(99);
+    for _ in 0..3 {
+        for site in 0..9 {
+            if svc.overlay().is_live(site) {
+                svc.ingest(site, &gaussian_mixture(&mut feed_a, 50, 4, 3));
+            }
+            if twin.overlay().is_live(site) {
+                twin.ingest(site, &gaussian_mixture(&mut feed_b, 50, 4, 3));
+            }
+        }
+        let ra = svc.epoch(&RustBackend);
+        let rb = twin.epoch(&RustBackend);
+        assert_eq!(ra, rb, "restored collector diverged");
+    }
+    assert_eq!(svc.coreset().unwrap().set, twin.coreset().unwrap().set);
+    assert_eq!(svc.meters(), twin.meters());
+    assert_eq!(svc.checkpoint().to_string(), twin.checkpoint().to_string());
+}
