@@ -34,6 +34,7 @@ use distclus::scenario::{BuildCtx, CoresetAlgorithm, Distributed, Exchange, Scen
 use distclus::sketch::SketchPlan;
 use distclus::testutil::{mixture_sites, overlay_acceptance_with, unit_portion};
 use distclus::topology::{diameter, generators, SpanningTree};
+use distclus::trace::keys;
 use std::sync::Arc;
 
 /// A wire-phase-only construction for the large-topology panel: fixed
@@ -359,7 +360,7 @@ fn main() -> anyhow::Result<()> {
         "comm (points)",
         "wire peak",
         "collector peak",
-        "sched_ticks",
+        keys::SCHED_TICKS,
         "dense n*rounds",
         "ratio",
     ]);
@@ -386,12 +387,12 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(run.centers.n(), 2, "large run must complete with k centers");
         assert!(run.coreset.size() > 0, "large run must carry a coreset");
         let dense_bill = (n as u64) * run.rounds as u64;
-        let ratio = run.meters["sched_ticks"] as f64 / dense_bill as f64;
+        let ratio = run.meters[keys::SCHED_TICKS] as f64 / dense_bill as f64;
         assert!(
             ratio < 0.7,
             "scheduled work must track the active frontier: \
              {} ticks vs dense {} at n={n}",
-            run.meters["sched_ticks"],
+            run.meters[keys::SCHED_TICKS],
             dense_bill
         );
         scale_table.row(vec![
@@ -401,7 +402,7 @@ fn main() -> anyhow::Result<()> {
             run.comm_points.to_string(),
             run.peak_points.to_string(),
             run.collector_peak.to_string(),
-            run.meters["sched_ticks"].to_string(),
+            run.meters[keys::SCHED_TICKS].to_string(),
             dense_bill.to_string(),
             format!("{ratio:.3}"),
         ]);
@@ -410,7 +411,10 @@ fn main() -> anyhow::Result<()> {
             ("m", build::num(m as f64)),
             ("rounds", build::num(run.rounds as f64)),
             ("comm_points", build::num(run.comm_points as f64)),
-            ("sched_ticks", build::num(run.meters["sched_ticks"] as f64)),
+            (
+                keys::SCHED_TICKS,
+                build::num(run.meters[keys::SCHED_TICKS] as f64),
+            ),
             ("sched_ratio", build::num(ratio)),
         ]));
     }

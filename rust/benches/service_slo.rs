@@ -29,7 +29,7 @@ use distclus::metrics::Table;
 use distclus::rng::Pcg64;
 use distclus::service::{ChurnEvent, ChurnSchedule, ClusterService};
 use distclus::topology::generators;
-use distclus::trace::Tracer;
+use distclus::trace::{keys, Tracer};
 
 const DIM: usize = 4;
 
@@ -134,7 +134,7 @@ fn main() -> anyhow::Result<()> {
             ("live", build::num(svc.n_live() as f64)),
             ("recovery_points", build::num(r.recovery_comm_points as f64)),
             ("reflood_bill", build::num(r.rebuild_bill as f64)),
-            ("recovery_rounds", build::num(r.recovery_rounds as f64)),
+            (keys::RECOVERY_ROUNDS, build::num(r.recovery_rounds as f64)),
         ]));
     }
     assert!(recoveries >= 2, "relay failures must trigger subtree re-merges, got {recoveries}");

@@ -90,45 +90,48 @@ pub struct RustBackend;
 /// loop of the whole stack (see EXPERIMENTS.md §Perf).
 #[inline]
 fn dist2_early(p: &[f32], c: &[f32], best: f32) -> f32 {
-    let d = p.len();
+    debug_assert_eq!(p.len(), c.len());
     let mut acc = 0.0f32;
-    let mut j = 0;
     // 32-wide blocks in 4 independent lanes: wide enough for the
     // auto-vectorizer, and the abandonment check amortizes to 1/32 ops.
-    while j + 32 <= d {
+    // `chunks_exact` pins the block length at compile time, so the
+    // constant-index loads below are bounds-check-free without unsafe.
+    let p32 = p.chunks_exact(32);
+    let c32 = c.chunks_exact(32);
+    let (p_rem, c_rem) = (p32.remainder(), c32.remainder());
+    for (pb, cb) in p32.zip(c32) {
         let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
         for l in (0..32).step_by(4) {
-            unsafe {
-                let d0 = p.get_unchecked(j + l) - c.get_unchecked(j + l);
-                let d1 = p.get_unchecked(j + l + 1) - c.get_unchecked(j + l + 1);
-                let d2 = p.get_unchecked(j + l + 2) - c.get_unchecked(j + l + 2);
-                let d3 = p.get_unchecked(j + l + 3) - c.get_unchecked(j + l + 3);
-                s0 += d0 * d0;
-                s1 += d1 * d1;
-                s2 += d2 * d2;
-                s3 += d3 * d3;
-            }
+            let d0 = pb[l] - cb[l];
+            let d1 = pb[l + 1] - cb[l + 1];
+            let d2 = pb[l + 2] - cb[l + 2];
+            let d3 = pb[l + 3] - cb[l + 3];
+            s0 += d0 * d0;
+            s1 += d1 * d1;
+            s2 += d2 * d2;
+            s3 += d3 * d3;
         }
         acc += (s0 + s1) + (s2 + s3);
         if acc >= best {
             return f32::INFINITY;
         }
-        j += 32;
     }
-    while j + 8 <= d {
+    let p8 = p_rem.chunks_exact(8);
+    let c8 = c_rem.chunks_exact(8);
+    let (p_tail, c_tail) = (p8.remainder(), c8.remainder());
+    for (pb, cb) in p8.zip(c8) {
         let mut block = 0.0f32;
         for l in 0..8 {
-            let df = unsafe { p.get_unchecked(j + l) - c.get_unchecked(j + l) };
+            let df = pb[l] - cb[l];
             block += df * df;
         }
         acc += block;
         if acc >= best {
             return f32::INFINITY;
         }
-        j += 8;
     }
-    for l in j..d {
-        let df = p[l] - c[l];
+    for (a, b) in p_tail.iter().zip(c_tail) {
+        let df = a - b;
         acc += df * df;
     }
     acc

@@ -142,12 +142,14 @@ pub struct Session {
     pub data: Dataset,
     /// The same data as a unit-weight set.
     pub global: WeightedSet,
+    // pallas-lint: allow(no-unordered-iteration) — per-rep cost cache, get/insert by key only
     baselines: std::collections::HashMap<(u64, &'static str, usize), f64>,
 }
 
 impl Session {
     /// Generate (or load) the dataset for `(dataset, scale, seed)`.
     pub fn new(spec: &ExperimentSpec) -> Result<Session> {
+        // pallas-lint: allow(rng-discipline) — dataset stream rooted at the spec's seed axis
         let mut data_rng = Pcg64::seed_from(spec.seed);
         let data = load_dataset(spec, &mut data_rng)?;
         let global = WeightedSet::unit(data.clone());
@@ -173,6 +175,7 @@ impl Session {
         if let Some(&c) = self.baselines.get(&key) {
             return c;
         }
+        // pallas-lint: allow(rng-discipline) — baseline stream re-derived from the rep seed so the cache is transparent
         let mut rng = Pcg64::seed_from(rep_seed);
         let sol = approx_solution(&self.global, k, objective, backend, &mut rng, 40);
         self.baselines.insert(key, sol.cost);
@@ -199,6 +202,7 @@ impl Session {
         for rep in 0..spec.reps {
             let rep_seed = spec.seed.wrapping_add(1_000_003 * (rep as u64 + 1));
             let baseline = self.baseline_cost(rep_seed, spec.k, spec.objective, backend);
+            // pallas-lint: allow(rng-discipline) — one run stream per rep, derived from the spec seed
             let mut rng = Pcg64::seed_from(rep_seed);
             // Keep RNG streams aligned with the pre-Session behaviour:
             // the baseline solve used to consume from this stream first.

@@ -139,7 +139,7 @@ mod tests {
             "the per-edge link profile must survive into the JSON series"
         );
         let meters = arr[0].get("meters").unwrap();
-        assert_eq!(meters.get("sched_ticks").unwrap().as_usize(), Some(42));
-        assert_eq!(meters.get("recv_drains").unwrap().as_usize(), Some(7));
+        assert_eq!(meters.get(keys::SCHED_TICKS).unwrap().as_usize(), Some(42));
+        assert_eq!(meters.get(keys::RECV_DRAINS).unwrap().as_usize(), Some(7));
     }
 }

@@ -105,7 +105,7 @@ impl SiteState {
             ("alive", Value::Bool(self.alive)),
             (
                 "portion",
-                self.portion.as_ref().map(coreset_to_json).unwrap_or(Value::Null),
+                self.portion.as_ref().map_or(Value::Null, coreset_to_json),
             ),
         ])
     }
@@ -181,8 +181,8 @@ pub struct EpochReport {
     /// exact plan, `O(levels · bucket_points)` under merge-and-reduce.
     pub sketch_peak: usize,
     /// Epochs since the global coreset was last rebuilt — 0 on a
-    /// rebuild epoch, growing by one per skip (the coreset staleness
-    /// the `staleness_epochs` registry key documents).
+    /// rebuild epoch, growing by one per skip. An `EpochReport`-only
+    /// counter; the registered service meter is `coreset_staleness`.
     pub staleness_epochs: usize,
     /// Rebuilds per epoch so far, in parts per million (1_000_000 =
     /// rebuilt every epoch) — the lazy-maintenance savings at a glance.
@@ -463,6 +463,7 @@ impl StreamingCoordinator {
             let sketch_rng = if self.sketch.mode == SketchMode::MergeReduce {
                 rng.split()
             } else {
+                // pallas-lint: allow(rng-discipline) — dummy stream: exact folds draw nothing
                 Pcg64::seed_from(0)
             };
             let (coreset, peak) = self
@@ -557,7 +558,7 @@ impl StreamingCoordinator {
             ),
             (
                 "coreset",
-                self.coreset.as_ref().map(coreset_to_json).unwrap_or(Value::Null),
+                self.coreset.as_ref().map_or(Value::Null, coreset_to_json),
             ),
             ("epochs", build::num(self.epochs as f64)),
             ("rebuilds", build::num(self.rebuilds as f64)),

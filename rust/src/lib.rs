@@ -48,6 +48,7 @@
 //! println!("centers: {}, comm: {} points", run.centers.n(), run.comm_points);
 //! ```
 #![warn(missing_docs)]
+#![forbid(unsafe_code)]
 
 pub mod cli;
 pub mod clustering;

@@ -1,5 +1,8 @@
 //! Message payloads, paging, and their communication-cost accounting.
 
+// pallas-lint: allow(panic-free-protocol, file) — reassembly panics are post-validation
+// invariants: every `by_site` entry was inserted with a checked page count and only
+// `PortionPage` values ever enter the map; malformed input bails before this point.
 use crate::points::{Dataset, WeightedSet};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;

@@ -9,6 +9,12 @@
 //! that received something is available sparsely via
 //! [`Network::delivered_nodes`].
 
+// pallas-lint: allow(no-unordered-iteration, file) — queues are keyed lookups
+// (entry/get_mut/remove by edge id); round order is driven by the sorted
+// active-edge list, never by map iteration.
+// pallas-lint: allow(panic-free-protocol, file) — the simulator is the harness plane:
+// send() panics on non-neighbor sends (a documented caller bug) and the queue/seq
+// expects restate invariants the adjacent debug asserts enforce.
 use super::{Payload, TranscriptEntry};
 use crate::topology::Graph;
 use crate::trace::Tracer;
@@ -253,6 +259,7 @@ impl Network {
     pub fn with_loss(mut self, p: f64, seed: u64) -> Self {
         assert!((0.0..=1.0).contains(&p));
         self.loss = p;
+        // pallas-lint: allow(rng-discipline) — loss stream rooted at the caller's explicit seed
         self.loss_rng = Some(crate::rng::Pcg64::seed_from(seed));
         self
     }
@@ -418,6 +425,14 @@ impl Network {
         let loss = self.loss;
         for eid in active {
             let (from, to) = self.graph.edge_endpoints(eid);
+            // The per-edge capacity (and any per-edge override inside
+            // `link`) is keyed by endpoints; the CSR roundtrip must be
+            // exact or an override would silently bind to another edge.
+            debug_assert_eq!(
+                self.graph.edge_id(from, to),
+                Some(eid),
+                "edge {eid} endpoints ({from},{to}) do not round-trip through the CSR"
+            );
             let cap = self.link.capacity(from, to);
             let q = self.queues.get_mut(&eid).expect("active edge has a queue");
             let mut spent = 0usize;
@@ -432,8 +447,22 @@ impl Network {
                 // budget. FIFO per edge: once the head defers, everything
                 // behind it on the same edge defers too.
                 if cap > 0 && spent > 0 && spent + size > cap {
+                    // The deferred head must still be newer than every
+                    // message delivered this round — deferral keeps FIFO.
+                    #[cfg(debug_assertions)]
+                    assert!(
+                        last_seq.map_or(true, |s| s < *_seq),
+                        "per-edge FIFO reordered at deferral on edge {eid}"
+                    );
                     break;
                 }
+                // Admission invariant: either the edge is uncapped, the
+                // message fits the remaining budget, or it is an
+                // oversized head shipping alone on an idle edge.
+                debug_assert!(
+                    cap == 0 || spent + size <= cap || spent == 0,
+                    "edge {eid}: admitted {size} points with {spent}/{cap} spent"
+                );
                 #[cfg(debug_assertions)]
                 {
                     assert!(

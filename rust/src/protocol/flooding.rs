@@ -14,6 +14,8 @@
 //! Implemented as [`FloodMachine`]s under the unified
 //! [`session`](super::session) round loop.
 
+// pallas-lint: allow(panic-free-protocol, file) — payloads are asserted floodable at
+// entry; the sort-key unwrap re-reads keys that entry check proved present.
 use super::session::{drive_with_mode, DriveMode, FloodMachine};
 use crate::network::{Network, Payload};
 use std::sync::Arc;

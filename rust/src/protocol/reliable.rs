@@ -14,6 +14,12 @@
 //! the whole portion — the loss-recovery unit shrinks with the page
 //! size.
 
+// pallas-lint: allow(no-unordered-iteration, file) — `seen`/`pending` are membership
+// structures; every order-sensitive traversal (the send loop, the final held list)
+// collects and sorts by FloodKey before any side effect.
+// pallas-lint: allow(panic-free-protocol, file) — `seen[&key]` follows the pending
+// invariant (an unacked pair implies the payload was recorded) and the flood_key
+// expects are checked at origin intake; violations are protocol bugs.
 use crate::network::{FloodKey, Network, Payload};
 use std::collections::{HashMap, HashSet};
 
@@ -63,9 +69,14 @@ pub fn flood_reliable_multi(
     }
 
     for round in 0..max_rounds {
-        // Send every unacked (payload, neighbor) pair.
+        // Send every unacked (payload, neighbor) pair. Sorted: HashSet
+        // order is per-process random, and under a lossy LinkModel the
+        // send order decides which transmissions the loss draws hit —
+        // iterating the set directly would leak hash order into results.
         for v in 0..n {
-            for &(key, nb) in pending[v].clone().iter() {
+            let mut to_send: Vec<(FloodKey, usize)> = pending[v].iter().copied().collect();
+            to_send.sort_unstable();
+            for (key, nb) in to_send {
                 let payload = seen[v][&key].clone();
                 net.send(v, nb, payload);
             }

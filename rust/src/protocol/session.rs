@@ -28,6 +28,12 @@
 //! the message history, so `rounds`, `cost_points` and `peak_points` are
 //! bit-identical for any worker-thread count of the compute layer.
 
+// pallas-lint: allow(no-unordered-iteration, file) — the HashSets here are dedup
+// membership sets (seen flood keys, acked pages): insert/contains/len only, never
+// iterated, so hash order cannot reach any observable result.
+// pallas-lint: allow(panic-free-protocol, file) — role panics (reparent/adopt on the
+// wrong machine kind) are documented caller bugs; the expects decode machine-built
+// messages whose shape the sending state machine just constructed.
 use crate::clustering::backend::Backend;
 use crate::clustering::{approx_solution, Objective, Solution};
 use crate::coreset::Coreset;

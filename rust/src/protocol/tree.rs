@@ -6,6 +6,8 @@
 //! Implemented as [`ConvergeMachine`]/[`BroadcastMachine`] state
 //! machines under the unified [`session`](super::session) round loop.
 
+// pallas-lint: allow(panic-free-protocol[index], file) — node ids come from the
+// spanning tree over the same graph, so every index is < n by construction.
 use super::session::{drive, BroadcastMachine, ConvergeMachine};
 use crate::network::{Network, Payload};
 use crate::topology::SpanningTree;
@@ -47,7 +49,7 @@ pub fn converge_cast_multi(
         .collect();
     drive(net, &mut nodes);
     let mut at_root = std::mem::take(&mut nodes[tree.root].collected);
-    at_root.sort_by_key(|p| p.flood_key().map(|k| k.1).unwrap_or(usize::MAX));
+    at_root.sort_by_key(|p| p.flood_key().map_or(usize::MAX, |k| k.1));
     at_root
 }
 

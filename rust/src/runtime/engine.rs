@@ -1,6 +1,8 @@
 //! The PJRT engine: compiles HLO-text artifacts once (cached) and
 //! executes them with shape padding/unpadding.
 
+// pallas-lint: allow(no-unordered-iteration, file) — the compile cache is get/insert
+// by shape key only; nothing ever iterates it.
 use super::manifest::{ArtifactMeta, Manifest};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;

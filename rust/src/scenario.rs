@@ -478,6 +478,7 @@ impl Scenario {
         locals: &[WeightedSet],
         backend: &dyn Backend,
     ) -> Result<RunResult> {
+        // pallas-lint: allow(rng-discipline) — the run stream is rooted at the scenario's seed axis
         let mut rng = Pcg64::seed_from(self.seed);
         self.run_with_rng(algo, locals, backend, &mut rng)
     }

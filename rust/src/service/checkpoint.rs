@@ -14,6 +14,7 @@
 use crate::coordinator::streaming::StreamingCoordinator;
 use crate::json::{build, Value};
 use crate::rng::Pcg64;
+use crate::trace::keys;
 use anyhow::{bail, Context, Result};
 
 use super::{churn::ChurnSchedule, overlay::LiveOverlay, ClusterService};
@@ -61,10 +62,13 @@ impl ClusterService {
                 build::obj(vec![
                     ("joins", build::num(self.joins as f64)),
                     ("leaves", build::num(self.leaves as f64)),
-                    ("relay_failures", build::num(self.relay_failures as f64)),
-                    ("checkpoints", build::num(self.checkpoints as f64)),
                     (
-                        "recovery_rounds",
+                        keys::RELAY_FAILURES,
+                        build::num(self.relay_failures as f64),
+                    ),
+                    (keys::CHECKPOINTS, build::num(self.checkpoints as f64)),
+                    (
+                        keys::RECOVERY_ROUNDS,
                         build::num(self.recovery_rounds_total as f64),
                     ),
                 ]),
@@ -149,12 +153,12 @@ impl ClusterService {
             joins: u64_of(req(meters, "joins")?, "meters.joins")?,
             leaves: u64_of(req(meters, "leaves")?, "meters.leaves")?,
             relay_failures: u64_of(
-                req(meters, "relay_failures")?,
+                req(meters, keys::RELAY_FAILURES)?,
                 "meters.relay_failures",
             )?,
-            checkpoints: u64_of(req(meters, "checkpoints")?, "meters.checkpoints")?,
+            checkpoints: u64_of(req(meters, keys::CHECKPOINTS)?, "meters.checkpoints")?,
             recovery_rounds_total: u64_of(
-                req(meters, "recovery_rounds")?,
+                req(meters, keys::RECOVERY_ROUNDS)?,
                 "meters.recovery_rounds",
             )?,
             epoch_rounds,

@@ -14,6 +14,9 @@
 //! runs with neither solver nor relay duty, leaving its completed fold
 //! in place for the service to finish host-side.
 
+// pallas-lint: allow(panic-free-protocol, file) — the recovery root is a live node the
+// caller just picked, its fold exists because it drove the session to completion, and
+// single-portion pages cannot tear; these expects restate that construction.
 use crate::clustering::backend::Backend;
 use crate::coordinator::streaming::StreamingCoordinator;
 use crate::coreset::{distributed, Coreset};

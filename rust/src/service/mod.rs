@@ -36,6 +36,9 @@ mod overlay;
 pub use churn::{ChurnEvent, ChurnSchedule};
 pub use overlay::{FailoverReport, LiveOverlay};
 
+// pallas-lint: allow(panic-free-protocol, file) — the restart drill round-trips the
+// service's own checkpoint (it must parse and restore or the writer is broken), and
+// the p99 index is bounded by the nonempty-slice guard above it.
 use crate::clustering::backend::Backend;
 use crate::coordinator::streaming::{EpochReport, StreamingCoordinator};
 use crate::coreset::{Coreset, DistributedConfig};
@@ -118,6 +121,7 @@ impl ClusterService {
                 .with_retained_portions(),
             overlay: LiveOverlay::new(graph, root),
             schedule: ChurnSchedule::empty(),
+            // pallas-lint: allow(rng-discipline) — the service master stream; draw order is API
             rng: Pcg64::seed_from(seed),
             page_points: 256,
             epoch_no: 0,

@@ -11,6 +11,9 @@
 //! losses. All choices are deterministic functions of the overlay state
 //! — minimal depth, smallest id on ties — never of an RNG.
 
+// pallas-lint: allow(panic-free-protocol[index], file) — parent/children/depth/alive
+// are same-length per-node vectors built together; every index is a node id bounded
+// by the overlay's n (from_json validates ids before they ever index).
 use crate::json::{build, Value};
 use crate::topology::{Graph, SpanningTree};
 use anyhow::{bail, Context, Result};
@@ -232,7 +235,7 @@ impl LiveOverlay {
                 build::arr(
                     self.parent
                         .iter()
-                        .map(|p| p.map(|u| build::num(u as f64)).unwrap_or(Value::Null))
+                        .map(|p| p.map_or(Value::Null, |u| build::num(u as f64)))
                         .collect(),
                 ),
             ),

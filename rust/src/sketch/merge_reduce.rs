@@ -26,6 +26,9 @@
 //! `Π(1 + ε_r)` — the empirical counterpart of the theoretical
 //! `(1 + ε)^levels` bound — over the worst reduction chain.
 
+// pallas-lint: allow(panic-free-protocol, file) — tower bookkeeping invariants: carry()
+// is only called with a full level 0, and the level slot is pushed one line above the
+// access; a panic here is a broken tower, not recoverable input.
 use super::{MergeableSketch, PageTracker};
 use crate::clustering::backend::Backend;
 use crate::clustering::{approx_solution, Objective};

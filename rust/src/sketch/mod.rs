@@ -44,6 +44,8 @@ mod merge_reduce;
 pub use exact::ExactSketch;
 pub use merge_reduce::MergeReduceSketch;
 
+// pallas-lint: allow(panic-free-protocol[index], file) — `got[page]` follows the
+// `page < pages` assert and the page-count equality check directly above it.
 use crate::clustering::backend::Backend;
 use crate::clustering::Objective;
 use crate::coreset::Coreset;

@@ -58,12 +58,8 @@ pub const INFLIGHT_P99: &str = "inflight_p99";
 /// Events the tracer captured over the run (traced runs only).
 pub const TRACE_EVENTS: &str = "trace_events";
 
-/// Streaming epochs since the global coreset was last rebuilt — 0 on a
-/// rebuild epoch (an `EpochReport` counter, not a `RunResult` meter).
-pub const STALENESS_EPOCHS: &str = "staleness_epochs";
-
 /// Rebuilds per epoch so far, in parts per million (an `EpochReport`
-/// counter, not a `RunResult` meter).
+/// counter; the service layer also reports it as a run meter).
 pub const REBUILD_RATE_PPM: &str = "rebuild_rate_ppm";
 
 /// Current epochs-since-rebuild of the service's live coreset — how
@@ -141,10 +137,6 @@ pub const ALL: &[(&str, &str)] = &[
         "p99 of per-round inbox-resident points (traced)",
     ),
     (TRACE_EVENTS, "events captured by the tracer (traced)"),
-    (
-        STALENESS_EPOCHS,
-        "streaming epochs since the last coreset rebuild",
-    ),
     (
         REBUILD_RATE_PPM,
         "streaming rebuilds per epoch, parts per million",

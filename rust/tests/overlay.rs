@@ -30,6 +30,7 @@ use distclus::scenario::{BuildCtx, CoresetAlgorithm, Distributed, Exchange, Scen
 use distclus::sketch::SketchPlan;
 use distclus::testutil::{mixture_sites, overlay_acceptance};
 use distclus::topology::{generators, SpanningTree};
+use distclus::trace::keys;
 
 #[test]
 fn overlay_wire_total_beats_flooded_2m_bound_on_er16() {
@@ -63,7 +64,7 @@ fn overlay_wire_total_beats_flooded_2m_bound_on_er16() {
     );
     // Error accounting composes along the overlay chains into the
     // run-level meter.
-    assert!(a.overlay.meters.contains_key("mr_reductions"));
+    assert!(a.overlay.meters.contains_key(keys::MR_REDUCTIONS));
     assert!(a.overlay.error_factor() >= 1.0);
 }
 

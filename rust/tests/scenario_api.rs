@@ -33,6 +33,7 @@ use distclus::scenario::{Combine, Distributed, Scenario, Zhang};
 use distclus::sketch::SketchPlan;
 use distclus::testutil::{for_all, mixture_sites};
 use distclus::topology::{generators, Graph, SpanningTree};
+use distclus::trace::keys;
 
 fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
     assert_eq!(a.centers, b.centers, "{what}: centers");
@@ -254,7 +255,10 @@ fn merge_reduce_meters_surface_error_accounting() {
         .sketch(SketchPlan::merge_reduce(256))
         .run(&Distributed(cfg), &locals, &RustBackend)
         .unwrap();
-    assert!(mr.meters["mr_reductions"] > 0, "reductions must be counted");
+    assert!(
+        mr.meters[keys::MR_REDUCTIONS] > 0,
+        "reductions must be counted"
+    );
     assert!(
         mr.error_factor() > 1.0,
         "composed factor {} must register measured distortion",

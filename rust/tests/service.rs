@@ -212,3 +212,20 @@ fn checkpoint_restore_mid_stream_is_bit_identical() {
     assert_eq!(svc.meters(), twin.meters());
     assert_eq!(svc.checkpoint().to_string(), twin.checkpoint().to_string());
 }
+
+#[test]
+fn every_service_meter_is_registered() {
+    // Registry drift guard: `meters()` may only emit keys that
+    // `trace::keys::ALL` documents, so report emitters that iterate the
+    // registry never silently drop a service meter (and pallas-lint's
+    // static meter-registry-sync check stays in sync with runtime).
+    let (_, svc) = drive_churny(1, None);
+    let meters = svc.meters();
+    assert!(!meters.is_empty(), "the driven service must report meters");
+    for key in meters.keys() {
+        assert!(
+            keys::ALL.iter().any(|(k, _)| k == key),
+            "service meter `{key}` is not in the trace::keys registry"
+        );
+    }
+}

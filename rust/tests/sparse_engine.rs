@@ -27,6 +27,7 @@ use distclus::scenario::{CoresetAlgorithm, Distributed, Scenario, Zhang};
 use distclus::sketch::SketchPlan;
 use distclus::testutil::{for_all, mixture_sites, unit_portion};
 use distclus::topology::{generators, Graph, GraphBuilder};
+use distclus::trace::keys;
 
 #[test]
 fn csr_construction_parity_across_entry_points() {
@@ -219,7 +220,7 @@ fn scenario_drive_modes_are_bit_identical_for_every_topology_and_thread_count() 
             assert_eq!(active.peak_points, dense.peak_points, "{label}");
             assert_eq!(active.node_peaks, dense.node_peaks, "{label}");
             // Error accounting must not depend on the scheduler.
-            for key in ["mr_error_ppm", "mr_reductions"] {
+            for key in [keys::MR_ERROR_PPM, keys::MR_REDUCTIONS] {
                 assert_eq!(
                     active.meters.get(key),
                     dense.meters.get(key),
@@ -227,7 +228,10 @@ fn scenario_drive_modes_are_bit_identical_for_every_topology_and_thread_count() 
                 );
             }
             // The one sanctioned difference: scheduled work.
-            let (a, d) = (active.meters["sched_ticks"], dense.meters["sched_ticks"]);
+            let (a, d) = (
+                active.meters[keys::SCHED_TICKS],
+                dense.meters[keys::SCHED_TICKS],
+            );
             assert!(a <= d, "{label}: active scheduled {a} > dense {d}");
             some_case_scheduled_strictly_less |= a < d;
         }

@@ -1,0 +1,469 @@
+//! A minimal Rust lexer: good enough to walk this repository's sources
+//! token by token without pulling in `syn` (the workspace builds with
+//! zero external dependencies, like the vendored `anyhow` shim).
+//!
+//! The lexer understands line/nested-block comments, plain and raw
+//! string literals (with `#` fences), byte strings, char literals vs.
+//! lifetimes, numbers, identifiers (including `r#raw` identifiers), and
+//! single-char punctuation. Every token carries its 1-based line, which
+//! is all the rules need — findings are line-anchored, not span-anchored.
+
+/// Token classes the rules discriminate on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword.
+    Ident,
+    /// String literal; `text` holds the (escape-decoded) contents.
+    Str,
+    /// Char literal.
+    Char,
+    /// Numeric literal (loosely lexed; never inspected by rules).
+    Num,
+    /// Single punctuation character.
+    Punct,
+    /// Lifetime (`'a`), without the quote.
+    Life,
+}
+
+/// One lexed token.
+#[derive(Clone, Debug)]
+pub struct Token {
+    /// Token class.
+    pub kind: Kind,
+    /// Identifier text, decoded string contents, or the punct char.
+    pub text: String,
+    /// 1-based source line the token starts on.
+    pub line: u32,
+}
+
+impl Token {
+    /// True for an identifier with exactly this text.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+
+    /// True for a punct with exactly this char.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+}
+
+/// Lexer output: tokens plus the `//` comments (line, text-after-`//`)
+/// the waiver scanner reads, plus the total line count.
+pub struct Lexed {
+    /// Token stream in source order.
+    pub tokens: Vec<Token>,
+    /// Line comments as `(line, contents after the slashes)`.
+    pub comments: Vec<(u32, String)>,
+    /// Number of lines in the file.
+    pub n_lines: u32,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex a source file. Never fails: unrecognized bytes become puncts,
+/// unterminated literals run to end of file. Rules degrade gracefully
+/// on malformed input — the compiler, not the linter, rejects it.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut tokens = Vec::new();
+    let mut comments = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    let n = chars.len();
+
+    macro_rules! bump_lines {
+        ($c:expr) => {
+            if $c == '\n' {
+                line += 1;
+            }
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n {
+            if chars[i + 1] == '/' {
+                let start_line = line;
+                let mut j = i + 2;
+                let mut text = String::new();
+                while j < n && chars[j] != '\n' {
+                    text.push(chars[j]);
+                    j += 1;
+                }
+                comments.push((start_line, text));
+                i = j;
+                continue;
+            }
+            if chars[i + 1] == '*' {
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        bump_lines!(chars[j]);
+                        j += 1;
+                    }
+                }
+                i = j;
+                continue;
+            }
+        }
+        // String literal.
+        if c == '"' {
+            let start_line = line;
+            let (value, next) = scan_string(&chars, i + 1, &mut line);
+            tokens.push(Token {
+                kind: Kind::Str,
+                text: value,
+                line: start_line,
+            });
+            i = next;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let start_line = line;
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: '\x41', '\n', '\'', ...
+                let mut j = i + 2;
+                while j < n && chars[j] != '\'' {
+                    bump_lines!(chars[j]);
+                    j += 1;
+                }
+                tokens.push(Token {
+                    kind: Kind::Char,
+                    text: String::new(),
+                    line: start_line,
+                });
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                // Plain char literal 'x'.
+                tokens.push(Token {
+                    kind: Kind::Char,
+                    text: chars[i + 1].to_string(),
+                    line: start_line,
+                });
+                i += 3;
+                continue;
+            }
+            if i + 1 < n && is_ident_start(chars[i + 1]) {
+                // Lifetime.
+                let mut j = i + 1;
+                let mut name = String::new();
+                while j < n && is_ident_continue(chars[j]) {
+                    name.push(chars[j]);
+                    j += 1;
+                }
+                tokens.push(Token {
+                    kind: Kind::Life,
+                    text: name,
+                    line: start_line,
+                });
+                i = j;
+                continue;
+            }
+            tokens.push(Token {
+                kind: Kind::Punct,
+                text: "'".to_string(),
+                line: start_line,
+            });
+            i += 1;
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            let start_line = line;
+            let mut j = i;
+            let mut text = String::new();
+            while j < n && (is_ident_continue(chars[j])) {
+                text.push(chars[j]);
+                j += 1;
+            }
+            // Fractional part: only if a digit follows the dot ("1..n"
+            // must stay three tokens).
+            if j + 1 < n && chars[j] == '.' && chars[j + 1].is_ascii_digit() {
+                text.push('.');
+                j += 1;
+                while j < n && is_ident_continue(chars[j]) {
+                    text.push(chars[j]);
+                    j += 1;
+                }
+            }
+            tokens.push(Token {
+                kind: Kind::Num,
+                text,
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // Identifier (with raw-string / raw-ident lookahead on r/b).
+        if is_ident_start(c) {
+            let start_line = line;
+            let mut j = i;
+            let mut text = String::new();
+            while j < n && is_ident_continue(chars[j]) {
+                text.push(chars[j]);
+                j += 1;
+            }
+            let is_str_prefix = matches!(text.as_str(), "r" | "b" | "br" | "rb");
+            if is_str_prefix && j < n && chars[j] == '"' {
+                let raw = text.contains('r');
+                let (value, next) = if raw {
+                    scan_raw_string(&chars, j + 1, 0, &mut line)
+                } else {
+                    scan_string(&chars, j + 1, &mut line)
+                };
+                tokens.push(Token {
+                    kind: Kind::Str,
+                    text: value,
+                    line: start_line,
+                });
+                i = next;
+                continue;
+            }
+            if is_str_prefix && text.contains('r') && j < n && chars[j] == '#' {
+                let mut hashes = 0usize;
+                let mut k = j;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    let (value, next) = scan_raw_string(&chars, k + 1, hashes, &mut line);
+                    tokens.push(Token {
+                        kind: Kind::Str,
+                        text: value,
+                        line: start_line,
+                    });
+                    i = next;
+                    continue;
+                }
+                if text == "r" && hashes == 1 && k < n && is_ident_start(chars[k]) {
+                    // Raw identifier r#type.
+                    let mut name = String::new();
+                    let mut m = k;
+                    while m < n && is_ident_continue(chars[m]) {
+                        name.push(chars[m]);
+                        m += 1;
+                    }
+                    tokens.push(Token {
+                        kind: Kind::Ident,
+                        text: name,
+                        line: start_line,
+                    });
+                    i = m;
+                    continue;
+                }
+            }
+            tokens.push(Token {
+                kind: Kind::Ident,
+                text,
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // Anything else: single punct.
+        tokens.push(Token {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+
+    let n_lines = line;
+    Lexed {
+        tokens,
+        comments,
+        n_lines,
+    }
+}
+
+/// Scan a quoted string body starting just after the opening quote.
+/// Returns the escape-decoded value and the index past the closing quote.
+fn scan_string(chars: &[char], mut i: usize, line: &mut u32) -> (String, usize) {
+    let n = chars.len();
+    let mut value = String::new();
+    while i < n {
+        let c = chars[i];
+        if c == '"' {
+            return (value, i + 1);
+        }
+        if c == '\\' && i + 1 < n {
+            let e = chars[i + 1];
+            match e {
+                'n' => value.push('\n'),
+                't' => value.push('\t'),
+                'r' => value.push('\r'),
+                '0' => value.push('\0'),
+                '\\' | '"' | '\'' => value.push(e),
+                '\n' => {
+                    // Line-continuation escape: skip following indent.
+                    *line += 1;
+                    i += 2;
+                    while i < n && (chars[i] == ' ' || chars[i] == '\t') {
+                        i += 1;
+                    }
+                    continue;
+                }
+                _ => {
+                    // \xNN, \u{..}: keep raw — rules only compare exact
+                    // ASCII key names, which never use these escapes.
+                    value.push('\\');
+                    value.push(e);
+                }
+            }
+            i += 2;
+            continue;
+        }
+        if c == '\n' {
+            *line += 1;
+        }
+        value.push(c);
+        i += 1;
+    }
+    (value, n)
+}
+
+/// Scan a raw string body (no escapes) until `"` followed by `hashes`
+/// `#` characters.
+fn scan_raw_string(chars: &[char], mut i: usize, hashes: usize, line: &mut u32) -> (String, usize) {
+    let n = chars.len();
+    let mut value = String::new();
+    while i < n {
+        if chars[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return (value, i + 1 + hashes);
+            }
+        }
+        if chars[i] == '\n' {
+            *line += 1;
+        }
+        value.push(chars[i]);
+        i += 1;
+    }
+    (value, n)
+}
+
+/// Per-line test-code mask: lines covered by a `#[test]` / `#[cfg(test)]`
+/// item (attribute through the item's closing brace) are `true`.
+///
+/// An attribute counts as a test marker when its token stream contains
+/// the identifier `test` and does not contain `not` — so `#[test]`,
+/// `#[cfg(test)]`, and `#[cfg_attr(test, ...)]` all mark, while
+/// `#[cfg(not(test))]` does not.
+pub fn test_line_mask(tokens: &[Token], n_lines: u32) -> Vec<bool> {
+    let mut mask = vec![false; n_lines as usize + 2];
+    let n = tokens.len();
+    let mut i = 0usize;
+    while i < n {
+        if tokens[i].is_punct('#') && i + 1 < n && tokens[i + 1].is_punct('[') {
+            let attr_line = tokens[i].line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut has_test = false;
+            let mut has_not = false;
+            while j < n && depth > 0 {
+                if tokens[j].is_punct('[') {
+                    depth += 1;
+                } else if tokens[j].is_punct(']') {
+                    depth -= 1;
+                } else if tokens[j].is_ident("test") {
+                    has_test = true;
+                } else if tokens[j].is_ident("not") {
+                    has_not = true;
+                }
+                j += 1;
+            }
+            if has_test && !has_not {
+                // Skip any further attributes on the same item.
+                let mut k = j;
+                while k < n && tokens[k].is_punct('#') && k + 1 < n && tokens[k + 1].is_punct('[')
+                {
+                    let mut d = 1usize;
+                    k += 2;
+                    while k < n && d > 0 {
+                        if tokens[k].is_punct('[') {
+                            d += 1;
+                        } else if tokens[k].is_punct(']') {
+                            d -= 1;
+                        }
+                        k += 1;
+                    }
+                }
+                // Find the item body: first `{` at bracket depth 0
+                // (brace-match it), or a `;` at depth 0 (no body).
+                let mut d = 0isize;
+                let mut end_line = attr_line;
+                while k < n {
+                    let t = &tokens[k];
+                    if d == 0 && t.is_punct(';') {
+                        end_line = t.line;
+                        break;
+                    }
+                    if t.is_punct('(') || t.is_punct('[') {
+                        d += 1;
+                    } else if t.is_punct(')') || t.is_punct(']') {
+                        d -= 1;
+                    } else if t.is_punct('{') {
+                        if d == 0 {
+                            // Brace-match the body.
+                            let mut b = 1usize;
+                            let mut m = k + 1;
+                            while m < n && b > 0 {
+                                if tokens[m].is_punct('{') {
+                                    b += 1;
+                                } else if tokens[m].is_punct('}') {
+                                    b -= 1;
+                                }
+                                m += 1;
+                            }
+                            end_line = if m > 0 { tokens[m - 1].line } else { t.line };
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                for l in attr_line..=end_line {
+                    if (l as usize) < mask.len() {
+                        mask[l as usize] = true;
+                    }
+                }
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}

@@ -1,0 +1,311 @@
+//! `pallas-lint`: in-repo static analysis for the contracts the
+//! distclus test suite can only check after the fact.
+//!
+//! The repo-wide determinism contract (fixed chunk grids, split RNG
+//! streams, counts-only tracing, registry-backed meters) is enforced at
+//! runtime by bit-identity tests — but those only catch a violation
+//! when a pinned run happens to cover the offending path. This tool
+//! checks the *source* for the patterns that break the contract:
+//! unordered hash iteration, wall clocks, ad-hoc RNG streams, panics in
+//! the protocol planes, meter-registry drift, and undocumented config
+//! keys. See `rules` for the catalog and README §Static analysis for
+//! the waiver syntax.
+//!
+//! Zero dependencies by design: like the vendored `anyhow` shim, it
+//! must build in the offline workspace. The "parser" is a line-aware
+//! token lexer (`lexer`), which is as much syntax as the rules need.
+
+#![warn(missing_docs)]
+
+pub mod lexer;
+pub mod rules;
+pub mod waiver;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Where a scanned file came from; decides test-code handling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// `rust/src/**` — `#[cfg(test)]`/`#[test]` regions are detected.
+    Src,
+    /// `rust/tests/**` — every line counts as test code.
+    Test,
+    /// `rust/benches/**` — every line counts as test code.
+    Bench,
+}
+
+/// One lexed source file.
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    /// Scan role.
+    pub role: Role,
+    /// Token stream and comments.
+    pub lexed: lexer::Lexed,
+    test_mask: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Build from path + contents (used by both the loader and tests).
+    pub fn new(path: String, role: Role, src: &str) -> SourceFile {
+        let lexed = lexer::lex(src);
+        let test_mask = match role {
+            Role::Src => lexer::test_line_mask(&lexed.tokens, lexed.n_lines),
+            Role::Test | Role::Bench => vec![true; lexed.n_lines as usize + 2],
+        };
+        SourceFile {
+            path,
+            role,
+            lexed,
+            test_mask,
+        }
+    }
+
+    /// Is this 1-based line inside test code?
+    pub fn is_test_line(&self, line: u32) -> bool {
+        self.test_mask.get(line as usize).copied().unwrap_or(false)
+    }
+}
+
+/// The scanned repository: sources plus README text.
+pub struct Repo {
+    /// All scanned files, sorted by path.
+    pub files: Vec<SourceFile>,
+    /// `README.md` contents, if present.
+    pub readme: Option<String>,
+}
+
+impl Repo {
+    /// Load from a repo root on disk (`rust/src`, `rust/tests`,
+    /// `rust/benches`, `README.md`).
+    pub fn load(root: &Path) -> io::Result<Repo> {
+        let mut files = Vec::new();
+        for (dir, role) in [
+            ("rust/src", Role::Src),
+            ("rust/tests", Role::Test),
+            ("rust/benches", Role::Bench),
+        ] {
+            let abs = root.join(dir);
+            if !abs.is_dir() {
+                if role == Role::Src {
+                    return Err(io::Error::new(
+                        io::ErrorKind::NotFound,
+                        format!("{} not found under {}", dir, root.display()),
+                    ));
+                }
+                continue;
+            }
+            let mut paths = Vec::new();
+            collect_rs(&abs, &mut paths)?;
+            paths.sort();
+            for p in paths {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                let src = fs::read_to_string(&p)?;
+                files.push(SourceFile::new(rel, role, &src));
+            }
+        }
+        let readme = fs::read_to_string(root.join("README.md")).ok();
+        Ok(Repo { files, readme })
+    }
+
+    /// Build in memory (fixture tests). `files` are `(path, contents)`;
+    /// a `README.md` entry becomes the readme, `.rs` paths are routed
+    /// to roles by prefix (`rust/tests/` → Test, `rust/benches/` →
+    /// Bench, anything else → Src).
+    pub fn from_memory(files: &[(&str, &str)]) -> Repo {
+        let mut out = Vec::new();
+        let mut readme = None;
+        for (path, src) in files {
+            if *path == "README.md" {
+                readme = Some((*src).to_string());
+                continue;
+            }
+            let role = if path.starts_with("rust/tests/") {
+                Role::Test
+            } else if path.starts_with("rust/benches/") {
+                Role::Bench
+            } else {
+                Role::Src
+            };
+            out.push(SourceFile::new((*path).to_string(), role, src));
+        }
+        Repo {
+            files: out,
+            readme,
+        }
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// One finding. `waived == true` keeps it in the report (so waivers
+/// stay visible) but out of the exit code.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule that fired.
+    pub rule: &'static str,
+    /// Optional subcheck (e.g. `index` under `panic-free-protocol`).
+    pub subcheck: Option<&'static str>,
+    /// Repo-relative file.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// Human message.
+    pub message: String,
+    /// Suppressed by a reasoned waiver comment.
+    pub waived: bool,
+}
+
+/// Run every rule over the repo, apply waivers, and append the
+/// framework findings (reasonless waivers, unknown rule names in
+/// waivers, waivers that suppressed nothing). Sorted by (file, line).
+pub fn run(repo: &Repo) -> Vec<Finding> {
+    let rules = rules::all_rules();
+    let names: Vec<&'static str> = rules.iter().map(|r| r.name()).collect();
+    let mut findings = Vec::new();
+    for r in &rules {
+        r.check(repo, &mut findings);
+    }
+    let mut waivers: BTreeMap<String, waiver::Waivers> = repo
+        .files
+        .iter()
+        .map(|f| (f.path.clone(), waiver::parse(&f.lexed.comments)))
+        .collect();
+    for f in &mut findings {
+        if let Some(w) = waivers.get_mut(&f.file) {
+            if waiver::try_waive(w, &names, f.rule, f.subcheck, f.line) {
+                f.waived = true;
+            }
+        }
+    }
+    for (path, w) in &waivers {
+        for line in &w.missing_reason {
+            findings.push(Finding {
+                rule: "waiver-missing-reason",
+                subcheck: None,
+                file: path.clone(),
+                line: *line,
+                message: "waiver without a `— reason`; every waiver must say why".to_string(),
+                waived: false,
+            });
+        }
+        for e in &w.entries {
+            if !names.contains(&e.rule.as_str()) {
+                findings.push(Finding {
+                    rule: "unknown-rule-waiver",
+                    subcheck: None,
+                    file: path.clone(),
+                    line: e.line,
+                    message: format!("waiver names unknown rule `{}`", e.rule),
+                    waived: false,
+                });
+            } else if !e.used {
+                findings.push(Finding {
+                    rule: "unused-waiver",
+                    subcheck: None,
+                    file: path.clone(),
+                    line: e.line,
+                    message: format!(
+                        "waiver for `{}` suppressed nothing — remove it",
+                        e.rule
+                    ),
+                    waived: false,
+                });
+            }
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    findings
+}
+
+/// Render findings for terminals.
+pub fn render_human(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        let sub = f.subcheck.map(|s| format!("[{s}]")).unwrap_or_default();
+        let waived = if f.waived { " (waived)" } else { "" };
+        let _ = writeln!(
+            out,
+            "{}:{} [{}{}]{} {}",
+            f.file, f.line, f.rule, sub, waived, f.message
+        );
+    }
+    let active = findings.iter().filter(|f| !f.waived).count();
+    let waived = findings.len() - active;
+    let _ = writeln!(
+        out,
+        "pallas-lint: {active} finding(s), {waived} waived"
+    );
+    out
+}
+
+/// Render findings as JSON (for the CI job's machine-readable gate).
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"rule\":");
+        json_str(&mut out, f.rule);
+        out.push_str(",\"subcheck\":");
+        match f.subcheck {
+            Some(s) => json_str(&mut out, s),
+            None => out.push_str("null"),
+        }
+        out.push_str(",\"file\":");
+        json_str(&mut out, &f.file);
+        let _ = write!(out, ",\"line\":{}", f.line);
+        out.push_str(",\"message\":");
+        json_str(&mut out, &f.message);
+        let _ = write!(out, ",\"waived\":{}", f.waived);
+        out.push('}');
+    }
+    let active = findings.iter().filter(|f| !f.waived).count();
+    let waived = findings.len() - active;
+    let _ = write!(
+        out,
+        "],\"counts\":{{\"total\":{},\"waived\":{waived},\"active\":{active}}}}}",
+        findings.len()
+    );
+    out
+}
+
+fn json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}

@@ -1,0 +1,62 @@
+//! CLI for the in-repo contract linter.
+//!
+//! ```text
+//! cargo run -p pallas-lint -- [--root PATH] [--format human|json]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 unwaived findings, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut format = "human".to_string();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => return usage("--root needs a path"),
+            },
+            "--format" => match args.next().as_deref() {
+                Some("human") => format = "human".into(),
+                Some("json") => format = "json".into(),
+                _ => return usage("--format must be human or json"),
+            },
+            "-h" | "--help" => {
+                eprintln!(
+                    "pallas-lint: static checks for the distclus determinism, metering, \
+                     and panic-safety contracts\n\
+                     usage: pallas-lint [--root PATH] [--format human|json]"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument '{other}'")),
+        }
+    }
+    let repo = match pallas_lint::Repo::load(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let findings = pallas_lint::run(&repo);
+    let rendered = if format == "json" {
+        pallas_lint::render_json(&findings)
+    } else {
+        pallas_lint::render_human(&findings)
+    };
+    println!("{rendered}");
+    if findings.iter().any(|f| !f.waived) {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("pallas-lint: {msg} (see --help)");
+    ExitCode::from(2)
+}

@@ -1,0 +1,558 @@
+//! The rule set: each rule encodes one repo-wide contract that the
+//! after-the-fact bit-identity tests can only catch when a pinned run
+//! happens to cover the offending path. See README §Static analysis
+//! for the catalog and the rationale behind each rule.
+
+use crate::lexer::Kind;
+use crate::{Finding, Repo, SourceFile};
+
+/// A single named check over the whole repository.
+pub trait Rule {
+    /// Stable rule name (used in findings and waiver comments).
+    fn name(&self) -> &'static str;
+    /// Append findings (unwaived at this stage) to `out`.
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>);
+}
+
+/// All rules, in reporting order.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(NoUnorderedIteration),
+        Box::new(NoWallClock),
+        Box::new(RngDiscipline),
+        Box::new(PanicFreeProtocol),
+        Box::new(MeterRegistrySync),
+        Box::new(ConfigKeyDocs),
+    ]
+}
+
+fn finding(
+    rule: &'static str,
+    subcheck: Option<&'static str>,
+    file: &SourceFile,
+    line: u32,
+    message: String,
+) -> Finding {
+    Finding {
+        rule,
+        subcheck,
+        file: file.path.clone(),
+        line,
+        message,
+        waived: false,
+    }
+}
+
+/// `HashMap`/`HashSet` carry a per-instance random hash seed, so their
+/// iteration order differs run to run; anything whose order can reach
+/// meters, messages, or results must be `BTreeMap`/sorted-vec instead.
+pub struct NoUnorderedIteration;
+
+impl Rule for NoUnorderedIteration {
+    fn name(&self) -> &'static str {
+        "no-unordered-iteration"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        for f in repo.files_under("rust/src/") {
+            for t in &f.lexed.tokens {
+                if t.kind == Kind::Ident
+                    && (t.text == "HashMap" || t.text == "HashSet")
+                    && !f.is_test_line(t.line)
+                {
+                    out.push(finding(
+                        self.name(),
+                        None,
+                        f,
+                        t.line,
+                        format!(
+                            "{} iterates in per-process-random order; use BTreeMap/sorted \
+                             Vec, or waive stating why the order never escapes",
+                            t.text
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Tracing and metering are counts-only by design: a wall-clock read
+/// anywhere in the crate makes a run irreproducible.
+pub struct NoWallClock;
+
+impl Rule for NoWallClock {
+    fn name(&self) -> &'static str {
+        "no-wall-clock"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        for f in &repo.files {
+            for t in &f.lexed.tokens {
+                if t.kind == Kind::Ident && (t.text == "Instant" || t.text == "SystemTime") {
+                    out.push(finding(
+                        self.name(),
+                        None,
+                        f,
+                        t.line,
+                        format!("wall-clock source `{}` in a counts-only codebase", t.text),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Every random draw must descend from the run seed through the blessed
+/// `Pcg64` plumbing (`split`/`split_n` off a seeded root, or
+/// `from_state` when resuming a checkpointed stream). Ad-hoc
+/// constructions and raw `next_*` draws in library code fork streams
+/// the determinism tests cannot see.
+pub struct RngDiscipline;
+
+/// Modules allowed to construct and draw freely: the RNG itself, the
+/// test-data helpers, and the binary entry points that turn a
+/// user-supplied seed into the root stream.
+const RNG_BLESSED: &[&str] = &["rust/src/rng.rs", "rust/src/testutil.rs", "rust/src/main.rs"];
+
+impl Rule for RngDiscipline {
+    fn name(&self) -> &'static str {
+        "rng-discipline"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        for f in repo.files_under("rust/src/") {
+            if RNG_BLESSED.contains(&f.path.as_str()) || f.path.starts_with("rust/src/bin/") {
+                continue;
+            }
+            let ts = &f.lexed.tokens;
+            for i in 0..ts.len() {
+                let t = &ts[i];
+                if f.is_test_line(t.line) {
+                    continue;
+                }
+                if t.kind == Kind::Ident {
+                    let entropy = matches!(
+                        t.text.as_str(),
+                        "thread_rng" | "from_entropy" | "OsRng" | "getrandom" | "StdRng" | "SmallRng"
+                    ) || (t.text == "rand"
+                        && i + 2 < ts.len()
+                        && ts[i + 1].is_punct(':')
+                        && ts[i + 2].is_punct(':'));
+                    if entropy {
+                        out.push(finding(
+                            self.name(),
+                            Some("entropy"),
+                            f,
+                            t.line,
+                            format!("external entropy source `{}`", t.text),
+                        ));
+                        continue;
+                    }
+                    if t.text == "Pcg64"
+                        && i + 3 < ts.len()
+                        && ts[i + 1].is_punct(':')
+                        && ts[i + 2].is_punct(':')
+                        && ts[i + 3].kind == Kind::Ident
+                        && matches!(ts[i + 3].text.as_str(), "seed_from" | "new")
+                    {
+                        out.push(finding(
+                            self.name(),
+                            Some("construct"),
+                            f,
+                            t.line,
+                            format!(
+                                "ad-hoc `Pcg64::{}` outside the blessed seed plumbing; \
+                                 derive the stream via `split`/`split_n` or waive with the \
+                                 seed's provenance",
+                                ts[i + 3].text
+                            ),
+                        ));
+                        continue;
+                    }
+                }
+                if t.is_punct('.')
+                    && i + 2 < ts.len()
+                    && ts[i + 1].kind == Kind::Ident
+                    && ts[i + 1].text.starts_with("next_u")
+                    && ts[i + 2].is_punct('(')
+                {
+                    out.push(finding(
+                        self.name(),
+                        Some("draw"),
+                        f,
+                        ts[i + 1].line,
+                        format!(
+                            "raw `.{}()` draw in library code; prefer the typed helpers \
+                             or waive with the stream's provenance",
+                            ts[i + 1].text
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// The protocol planes must not panic on remote input: a malformed or
+/// reordered message should surface as an error or a dropped message,
+/// never a crashed node.
+pub struct PanicFreeProtocol;
+
+/// Directories covered by the panic-free contract.
+const PANIC_FREE_DIRS: &[&str] = &[
+    "rust/src/protocol/",
+    "rust/src/network/",
+    "rust/src/service/",
+    "rust/src/sketch/",
+];
+
+/// Identifiers that make a leading `[` *not* an index expression
+/// (array-literal and type positions).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "macro", "match", "mod", "move",
+    "mut", "pub", "ref", "return", "static", "struct", "super", "trait", "type", "unsafe", "use",
+    "where", "while", "yield",
+];
+
+impl Rule for PanicFreeProtocol {
+    fn name(&self) -> &'static str {
+        "panic-free-protocol"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        for f in &repo.files {
+            if !PANIC_FREE_DIRS.iter().any(|d| f.path.starts_with(d)) {
+                continue;
+            }
+            let ts = &f.lexed.tokens;
+            for i in 0..ts.len() {
+                let t = &ts[i];
+                if f.is_test_line(t.line) {
+                    continue;
+                }
+                if t.is_punct('.')
+                    && i + 2 < ts.len()
+                    && ts[i + 1].kind == Kind::Ident
+                    && (ts[i + 1].text == "unwrap" || ts[i + 1].text == "expect")
+                    && ts[i + 2].is_punct('(')
+                {
+                    let which: &'static str = if ts[i + 1].text == "unwrap" {
+                        "unwrap"
+                    } else {
+                        "expect"
+                    };
+                    out.push(finding(
+                        self.name(),
+                        Some(which),
+                        f,
+                        ts[i + 1].line,
+                        format!(
+                            "`.{}()` in protocol code can crash a node on bad input",
+                            ts[i + 1].text
+                        ),
+                    ));
+                    continue;
+                }
+                if t.kind == Kind::Ident
+                    && (t.text == "panic" || t.text == "unreachable")
+                    && i + 1 < ts.len()
+                    && ts[i + 1].is_punct('!')
+                {
+                    out.push(finding(
+                        self.name(),
+                        Some("panic"),
+                        f,
+                        t.line,
+                        format!("`{}!` in protocol code", t.text),
+                    ));
+                    continue;
+                }
+                if t.is_punct('[') && i > 0 {
+                    let prev = &ts[i - 1];
+                    let indexes = prev.is_punct(')')
+                        || prev.is_punct(']')
+                        || (prev.kind == Kind::Ident
+                            && !NON_INDEX_KEYWORDS.contains(&prev.text.as_str()));
+                    if indexes {
+                        out.push(finding(
+                            self.name(),
+                            Some("index"),
+                            f,
+                            t.line,
+                            "slice/map indexing in protocol code panics out of bounds"
+                                .to_string(),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The meter-key registry (`trace/keys.rs::ALL`) is the single source
+/// of truth for every meter a run can report. Three drifts are caught:
+/// a key const that is not registered, a registered key nothing ever
+/// references (retire it or wire its emit site), and a literal key
+/// string at a call site (use the const so renames stay atomic).
+pub struct MeterRegistrySync;
+
+const KEYS_FILE: &str = "rust/src/trace/keys.rs";
+
+impl Rule for MeterRegistrySync {
+    fn name(&self) -> &'static str {
+        "meter-registry-sync"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        let Some(keys) = repo.files.iter().find(|f| f.path == KEYS_FILE) else {
+            return;
+        };
+        let ts = &keys.lexed.tokens;
+        // `pub const NAME: &str = "value";` — collect (NAME, value, line).
+        let mut consts: Vec<(String, String, u32)> = Vec::new();
+        let mut i = 0usize;
+        while i < ts.len() {
+            if ts[i].is_ident("const")
+                && i + 1 < ts.len()
+                && ts[i + 1].kind == Kind::Ident
+                && !keys.is_test_line(ts[i].line)
+            {
+                let name = ts[i + 1].text.clone();
+                let line = ts[i + 1].line;
+                let mut j = i + 2;
+                while j < ts.len() && !ts[j].is_punct('=') && !ts[j].is_punct(';') {
+                    j += 1;
+                }
+                if j + 1 < ts.len() && ts[j].is_punct('=') && ts[j + 1].kind == Kind::Str {
+                    consts.push((name, ts[j + 1].text.clone(), line));
+                }
+                i = j;
+                continue;
+            }
+            i += 1;
+        }
+        // Names listed in `ALL`.
+        let mut registered: Vec<String> = Vec::new();
+        let mut i = 0usize;
+        while i < ts.len() {
+            if ts[i].is_ident("ALL") && !keys.is_test_line(ts[i].line) {
+                // Skip the type annotation: the slice literal starts
+                // after the `=`.
+                let mut j = i + 1;
+                while j < ts.len() && !ts[j].is_punct('=') {
+                    j += 1;
+                }
+                while j < ts.len() && !ts[j].is_punct('[') {
+                    j += 1;
+                }
+                let mut depth = 1usize;
+                j += 1;
+                while j < ts.len() && depth > 0 {
+                    if ts[j].is_punct('[') {
+                        depth += 1;
+                    } else if ts[j].is_punct(']') {
+                        depth -= 1;
+                    } else if ts[j].kind == Kind::Ident {
+                        registered.push(ts[j].text.clone());
+                    }
+                    j += 1;
+                }
+                break;
+            }
+            i += 1;
+        }
+        // (a) defined but unregistered.
+        for (name, _, line) in &consts {
+            if !registered.contains(name) {
+                out.push(finding(
+                    self.name(),
+                    Some("unregistered"),
+                    keys,
+                    *line,
+                    format!("meter key const `{name}` is not registered in `ALL`"),
+                ));
+            }
+        }
+        // (b) registered but never referenced outside the registry.
+        for (name, _, line) in &consts {
+            if !registered.contains(name) {
+                continue;
+            }
+            let referenced = repo.files.iter().any(|f| {
+                f.path != KEYS_FILE
+                    && f.lexed
+                        .tokens
+                        .iter()
+                        .any(|t| t.kind == Kind::Ident && t.text == *name)
+            });
+            if !referenced {
+                out.push(finding(
+                    self.name(),
+                    Some("orphaned"),
+                    keys,
+                    *line,
+                    format!(
+                        "registered meter key `{name}` is never referenced — retire it \
+                         or wire its emit site"
+                    ),
+                ));
+            }
+        }
+        // (c) literal key strings at call sites (tests and benches
+        // included — that is where they historically crept in).
+        for f in &repo.files {
+            if f.path == KEYS_FILE {
+                continue;
+            }
+            for t in &f.lexed.tokens {
+                if t.kind != Kind::Str {
+                    continue;
+                }
+                if let Some((name, _, _)) = consts.iter().find(|(_, v, _)| *v == t.text) {
+                    out.push(finding(
+                        self.name(),
+                        Some("literal"),
+                        f,
+                        t.line,
+                        format!(
+                            "literal meter key \"{}\"; use `trace::keys::{name}`",
+                            t.text
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Every config key `config.rs::from_kv` accepts must be documented in
+/// README's key tables — undocumented knobs rot.
+pub struct ConfigKeyDocs;
+
+const CONFIG_FILE: &str = "rust/src/config.rs";
+
+impl Rule for ConfigKeyDocs {
+    fn name(&self) -> &'static str {
+        "config-key-docs"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        let Some(cfg) = repo.files.iter().find(|f| f.path == CONFIG_FILE) else {
+            return;
+        };
+        let ts = &cfg.lexed.tokens;
+        // Keys: string match-arm heads of `match k.as_str()` (scrutinee
+        // `k`/`key` — value matches like `topo_kind.as_str()` are other
+        // people's enums), plus `k.starts_with("prefix")` prefixes.
+        let mut keys: Vec<(String, u32, bool)> = Vec::new(); // (key, line, is_prefix)
+        let mut i = 0usize;
+        while i < ts.len() {
+            if ts[i].is_ident("match")
+                && i + 6 < ts.len()
+                && ts[i + 1].kind == Kind::Ident
+                && (ts[i + 1].text == "k" || ts[i + 1].text == "key")
+                && ts[i + 2].is_punct('.')
+                && ts[i + 3].is_ident("as_str")
+                && !cfg.is_test_line(ts[i].line)
+            {
+                // Find the match body and walk its depth-1 arms.
+                let mut j = i + 4;
+                while j < ts.len() && !ts[j].is_punct('{') {
+                    j += 1;
+                }
+                let mut depth = 1usize;
+                j += 1;
+                while j < ts.len() && depth > 0 {
+                    if ts[j].is_punct('{') {
+                        depth += 1;
+                    } else if ts[j].is_punct('}') {
+                        depth -= 1;
+                    } else if depth == 1 && ts[j].kind == Kind::Str {
+                        // Arm head iff `("lit" ("|" "lit")*) =>`.
+                        let mut m = j + 1;
+                        while m + 1 < ts.len()
+                            && ts[m].is_punct('|')
+                            && ts[m + 1].kind == Kind::Str
+                        {
+                            m += 2;
+                        }
+                        if m + 1 < ts.len() && ts[m].is_punct('=') && ts[m + 1].is_punct('>') {
+                            keys.push((ts[j].text.clone(), ts[j].line, false));
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            if ts[i].kind == Kind::Ident
+                && (ts[i].text == "k" || ts[i].text == "key")
+                && i + 4 < ts.len()
+                && ts[i + 1].is_punct('.')
+                && ts[i + 2].is_ident("starts_with")
+                && ts[i + 3].is_punct('(')
+                && ts[i + 4].kind == Kind::Str
+                && !cfg.is_test_line(ts[i].line)
+            {
+                keys.push((ts[i + 4].text.clone(), ts[i + 4].line, true));
+            }
+            i += 1;
+        }
+        // README code spans, split into documented names.
+        let mut documented: Vec<String> = Vec::new();
+        if let Some(readme) = &repo.readme {
+            for (idx, span) in readme.split('`').enumerate() {
+                if idx % 2 == 0 {
+                    continue;
+                }
+                documented.push(span.trim().to_string());
+                for piece in span.split(|c: char| {
+                    c == '|' || c == '/' || c == '=' || c.is_whitespace()
+                }) {
+                    let piece = piece.trim();
+                    if !piece.is_empty() {
+                        documented.push(piece.to_string());
+                    }
+                }
+            }
+        }
+        for (key, line, is_prefix) in keys {
+            let ok = if is_prefix {
+                documented
+                    .iter()
+                    .any(|d| d == &key || d.starts_with(&key))
+            } else {
+                documented.iter().any(|d| d == &key)
+            };
+            if !ok {
+                out.push(finding(
+                    self.name(),
+                    None,
+                    cfg,
+                    line,
+                    format!(
+                        "config key \"{key}\" is parsed here but not documented in a \
+                         README key table"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Convenience used by tests: the registered rule names.
+pub fn rule_names() -> Vec<&'static str> {
+    all_rules().iter().map(|r| r.name()).collect()
+}
+
+impl Repo {
+    /// Files whose repo-relative path starts with `prefix`.
+    pub fn files_under<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = &'a SourceFile> + 'a {
+        self.files.iter().filter(move |f| f.path.starts_with(prefix))
+    }
+}

@@ -1,0 +1,138 @@
+//! Waiver comments: the one sanctioned way to silence a finding.
+//!
+//! Grammar (inside a `//` line comment):
+//!
+//! ```text
+//! pallas-lint: allow(rule-a, rule-b[subcheck], ...) — reason
+//! pallas-lint: allow(rule-a, file) — reason
+//! ```
+//!
+//! * Every waiver MUST carry a non-empty reason after a separator
+//!   (`—`, `--`, `-`, or `:`); a reasonless waiver is itself a finding.
+//! * A plain waiver covers findings of the named rule(s) on its own
+//!   line and the line directly below — put it above the offending
+//!   line or trailing on it.
+//! * Adding `file` to the list widens the scope to the whole file (for
+//!   e.g. a module whose every `HashSet` is a membership-only dedup set).
+//! * `rule[subcheck]` narrows to one subcheck (e.g.
+//!   `panic-free-protocol[index]` keeps `unwrap` findings live).
+//! * A waiver that suppresses nothing is reported as `unused-waiver`,
+//!   so stale waivers cannot linger after the code they excused is gone.
+
+/// One `(rule, subcheck?)` entry of a waiver comment.
+#[derive(Debug)]
+pub struct WaiverEntry {
+    /// Rule name the entry names.
+    pub rule: String,
+    /// Optional subcheck qualifier (`rule[sub]`).
+    pub subcheck: Option<String>,
+    /// Whether the waiver covers the whole file.
+    pub file_scope: bool,
+    /// Line of the waiver comment.
+    pub line: u32,
+    /// Whether this entry suppressed at least one finding.
+    pub used: bool,
+}
+
+/// Parse results for one file's comments.
+#[derive(Default)]
+pub struct Waivers {
+    /// Valid entries (have a reason; rule names checked by the caller).
+    pub entries: Vec<WaiverEntry>,
+    /// Lines of waivers missing a separator or reason.
+    pub missing_reason: Vec<u32>,
+}
+
+/// Scan a file's line comments for waivers.
+pub fn parse(comments: &[(u32, String)]) -> Waivers {
+    let mut out = Waivers::default();
+    for (line, text) in comments {
+        let Some(pos) = text.find("pallas-lint:") else {
+            continue;
+        };
+        let rest = text[pos + "pallas-lint:".len()..].trim_start();
+        let Some(rest) = rest.strip_prefix("allow") else {
+            out.missing_reason.push(*line);
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix('(') else {
+            out.missing_reason.push(*line);
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            out.missing_reason.push(*line);
+            continue;
+        };
+        let list = &rest[..close];
+        let tail = rest[close + 1..].trim_start();
+        // Separator then a non-empty reason.
+        let reason = ["—", "--", "-", ":"]
+            .iter()
+            .find_map(|sep| tail.strip_prefix(sep))
+            .map_or("", str::trim);
+        if reason.is_empty() {
+            out.missing_reason.push(*line);
+            continue;
+        }
+        let mut file_scope = false;
+        let mut specs: Vec<(String, Option<String>)> = Vec::new();
+        for item in list.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if item == "file" {
+                file_scope = true;
+                continue;
+            }
+            if let Some(open) = item.find('[') {
+                let rule = item[..open].trim().to_string();
+                let sub = item[open + 1..]
+                    .trim_end_matches(']')
+                    .trim()
+                    .to_string();
+                specs.push((rule, Some(sub)));
+            } else {
+                specs.push((item.to_string(), None));
+            }
+        }
+        for (rule, subcheck) in specs {
+            out.entries.push(WaiverEntry {
+                rule,
+                subcheck,
+                file_scope,
+                line: *line,
+                used: false,
+            });
+        }
+    }
+    out
+}
+
+/// Try to waive a finding of `rule`/`subcheck` at `line`; marks the
+/// matching entry used. Entries with an unknown rule name never match
+/// (they are reported as `unknown-rule-waiver` by the driver).
+pub fn try_waive(
+    waivers: &mut Waivers,
+    known_rules: &[&str],
+    rule: &str,
+    subcheck: Option<&str>,
+    line: u32,
+) -> bool {
+    for e in &mut waivers.entries {
+        if e.rule != rule || !known_rules.contains(&e.rule.as_str()) {
+            continue;
+        }
+        if let Some(want) = &e.subcheck {
+            if subcheck != Some(want.as_str()) {
+                continue;
+            }
+        }
+        if e.file_scope || line == e.line || line == e.line + 1 {
+            e.used = true;
+            return true;
+        }
+    }
+    false
+}

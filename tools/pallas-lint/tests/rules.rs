@@ -1,0 +1,265 @@
+//! Self-tests over in-memory fixtures: every rule fires on a minimal
+//! bad snippet, stays quiet on the fixed (or reasonably waived)
+//! variant, and the waiver framework polices itself.
+
+use pallas_lint::{run, Finding, Repo};
+
+fn lint(files: &[(&str, &str)]) -> Vec<Finding> {
+    run(&Repo::from_memory(files))
+}
+
+fn active(files: &[(&str, &str)]) -> Vec<Finding> {
+    lint(files).into_iter().filter(|f| !f.waived).collect()
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---- no-unordered-iteration ------------------------------------------------
+
+#[test]
+fn unordered_iteration_fires_in_src() {
+    let hits = active(&[(
+        "rust/src/a.rs",
+        "use std::collections::HashMap;\npub fn f() { let m = HashMap::new(); m.len(); }\n",
+    )]);
+    assert!(
+        rules_of(&hits).contains(&"no-unordered-iteration"),
+        "HashMap in rust/src must fire: {hits:?}"
+    );
+}
+
+#[test]
+fn unordered_iteration_ignores_tests_and_accepts_file_waivers() {
+    // Integration tests are all test code: no finding.
+    assert!(active(&[("rust/tests/t.rs", "use std::collections::HashSet;\n")]).is_empty());
+    // A `#[cfg(test)]` region inside rust/src is masked too.
+    assert!(active(&[(
+        "rust/src/a.rs",
+        "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n",
+    )])
+    .is_empty());
+    // A reasoned file-scope waiver silences the real use.
+    let all = lint(&[(
+        "rust/src/a.rs",
+        "// pallas-lint: allow(no-unordered-iteration, file) — membership set, never iterated\n\
+         use std::collections::HashSet;\npub fn f() { let s = HashSet::new(); s.len(); }\n",
+    )]);
+    assert!(all.iter().all(|f| f.waived), "{all:?}");
+    assert!(!all.is_empty(), "the waived findings must stay visible");
+}
+
+// ---- no-wall-clock ---------------------------------------------------------
+
+#[test]
+fn wall_clock_fires_everywhere_and_waives() {
+    let hits = active(&[("rust/src/b.rs", "use std::time::Instant;\n")]);
+    assert_eq!(rules_of(&hits), vec!["no-wall-clock"]);
+    // Even bench code fires — timing there needs an explicit waiver.
+    let bench = active(&[("rust/benches/b.rs", "use std::time::SystemTime;\n")]);
+    assert_eq!(rules_of(&bench), vec!["no-wall-clock"]);
+    let waived = active(&[(
+        "rust/src/b.rs",
+        "// pallas-lint: allow(no-wall-clock, file) — stopwatch prints only, never feeds meters\n\
+         use std::time::Instant;\n",
+    )]);
+    assert!(waived.is_empty());
+}
+
+// ---- rng-discipline --------------------------------------------------------
+
+#[test]
+fn rng_discipline_fires_on_construct_draw_and_entropy() {
+    let hits = active(&[(
+        "rust/src/c.rs",
+        "pub fn f() {\n    let mut r = Pcg64::seed_from(7);\n    let x = r.next_u64();\n    \
+         let t = thread_rng();\n}\n",
+    )]);
+    let subs: Vec<_> = hits
+        .iter()
+        .filter(|f| f.rule == "rng-discipline")
+        .map(|f| f.subcheck.unwrap())
+        .collect();
+    assert!(subs.contains(&"construct"), "{subs:?}");
+    assert!(subs.contains(&"draw"), "{subs:?}");
+    assert!(subs.contains(&"entropy"), "{subs:?}");
+}
+
+#[test]
+fn rng_discipline_blesses_the_seed_plumbing() {
+    // The RNG module, test helpers, and binaries may construct freely.
+    for path in ["rust/src/rng.rs", "rust/src/testutil.rs", "rust/src/main.rs", "rust/src/bin/x.rs"] {
+        let hits = active(&[(path, "pub fn f() { let r = Pcg64::seed_from(7); }\n")]);
+        assert!(hits.is_empty(), "{path} is blessed: {hits:?}");
+    }
+    // `from_state` (checkpoint resume) is not an ad-hoc construction.
+    let hits = active(&[(
+        "rust/src/c.rs",
+        "pub fn f() { let r = Pcg64::from_state(1, 3); }\n",
+    )]);
+    assert!(hits.is_empty(), "{hits:?}");
+}
+
+// ---- panic-free-protocol ---------------------------------------------------
+
+#[test]
+fn panic_free_fires_only_in_protocol_planes() {
+    let bad = "pub fn f(v: &[u32], o: Option<u32>) -> u32 {\n    let a = v[0];\n    \
+               let b = o.unwrap();\n    let c = o.expect(\"set\");\n    \
+               if a > b { panic!(\"boom\") }\n    a + b + c\n}\n";
+    let hits = active(&[("rust/src/protocol/p.rs", bad)]);
+    let subs: Vec<_> = hits.iter().map(|f| f.subcheck.unwrap()).collect();
+    assert!(subs.contains(&"index"), "{subs:?}");
+    assert!(subs.contains(&"unwrap"), "{subs:?}");
+    assert!(subs.contains(&"expect"), "{subs:?}");
+    assert!(subs.contains(&"panic"), "{subs:?}");
+    // The same code outside the covered planes is not this rule's business.
+    assert!(active(&[("rust/src/clustering/p.rs", bad)]).is_empty());
+    // Test regions inside a covered plane are exempt.
+    let tests_only = format!("pub fn ok() {{}}\n#[cfg(test)]\nmod tests {{\n{bad}}}\n");
+    assert!(active(&[("rust/src/network/q.rs", &tests_only)]).is_empty());
+}
+
+#[test]
+fn panic_free_index_heuristic_skips_types_and_macros() {
+    // Slice types, slice patterns, and attribute/vec! brackets are not
+    // index expressions.
+    let fine = "#[derive(Clone)]\npub struct S;\npub fn g(x: &mut [f32], y: &[u8]) -> Vec<u32> \
+                {\n    let v = vec![1, 2];\n    v\n}\n";
+    assert!(active(&[("rust/src/protocol/t.rs", fine)]).is_empty());
+}
+
+#[test]
+fn panic_free_subcheck_waiver_narrows() {
+    let src = "// pallas-lint: allow(panic-free-protocol[index], file) — ids bounded by n\n\
+               pub fn f(v: &[u32], o: Option<u32>) -> u32 { v[0] + o.unwrap() }\n";
+    let hits = active(&[("rust/src/protocol/p.rs", src)]);
+    // The index finding is waived; the unwrap finding survives.
+    assert_eq!(rules_of(&hits), vec!["panic-free-protocol"]);
+    assert_eq!(hits[0].subcheck, Some("unwrap"));
+}
+
+// ---- meter-registry-sync ---------------------------------------------------
+
+const KEYS_OK: &str = "pub const A: &str = \"a_ticks\";\n\
+                       pub const ALL: &[(&str, &str)] = &[(A, \"ticks\")];\n";
+
+#[test]
+fn meter_registry_catches_unregistered_and_literal() {
+    let keys = "pub const A: &str = \"a_ticks\";\npub const B: &str = \"b_ticks\";\n\
+                pub const ALL: &[(&str, &str)] = &[(A, \"ticks\")];\n";
+    let emit = "pub fn emit() { record(A, 1); record(\"a_ticks\", 2); }\n";
+    let hits = active(&[
+        ("rust/src/trace/keys.rs", keys),
+        ("rust/src/emit.rs", emit),
+    ]);
+    let subs: Vec<_> = hits
+        .iter()
+        .map(|f| (f.subcheck.unwrap(), f.file.as_str(), f.line))
+        .collect();
+    assert!(
+        subs.contains(&("unregistered", "rust/src/trace/keys.rs", 2)),
+        "{subs:?}"
+    );
+    assert!(subs.contains(&("literal", "rust/src/emit.rs", 1)), "{subs:?}");
+    assert!(
+        !subs.iter().any(|(s, _, _)| *s == "orphaned"),
+        "A is referenced by emit.rs: {subs:?}"
+    );
+}
+
+#[test]
+fn meter_registry_catches_orphans_and_passes_when_synced() {
+    // Registered but referenced nowhere: retire it or wire the emitter.
+    let hits = active(&[("rust/src/trace/keys.rs", KEYS_OK)]);
+    assert_eq!(
+        hits.iter().map(|f| f.subcheck.unwrap()).collect::<Vec<_>>(),
+        vec!["orphaned"]
+    );
+    // Const-based emit site: fully in sync, no findings.
+    let hits = active(&[
+        ("rust/src/trace/keys.rs", KEYS_OK),
+        ("rust/src/emit.rs", "pub fn emit() { record(A, 1); }\n"),
+    ]);
+    assert!(hits.is_empty(), "{hits:?}");
+}
+
+// ---- config-key-docs -------------------------------------------------------
+
+const CONFIG: &str = "pub fn from_kv(k: String) {\n    match k.as_str() {\n        \
+                      \"alpha\" | \"beta\" => {}\n        \
+                      key if key.starts_with(\"link.\") => {}\n        _ => {}\n    }\n    \
+                      match topo.as_str() { \"grid\" => {} _ => {} }\n}\n";
+
+#[test]
+fn config_key_docs_requires_readme_rows() {
+    // `beta` is parsed but undocumented; `grid` belongs to another
+    // match's enum and is not a config key.
+    let hits = active(&[
+        ("rust/src/config.rs", CONFIG),
+        ("README.md", "Keys: `alpha`, `link.capacity`.\n"),
+    ]);
+    assert_eq!(rules_of(&hits), vec!["config-key-docs"]);
+    assert!(hits[0].message.contains("\"beta\""), "{}", hits[0].message);
+    // Documenting beta (inside a compound code span) clears it.
+    let hits = active(&[
+        ("rust/src/config.rs", CONFIG),
+        ("README.md", "Keys: `alpha`, `link.capacity`, `beta=3 | beta`.\n"),
+    ]);
+    assert!(hits.is_empty(), "{hits:?}");
+}
+
+// ---- waiver framework ------------------------------------------------------
+
+#[test]
+fn waiver_without_reason_is_a_finding_and_waives_nothing() {
+    let hits = active(&[(
+        "rust/src/b.rs",
+        "// pallas-lint: allow(no-wall-clock)\nuse std::time::Instant;\n",
+    )]);
+    let rules = rules_of(&hits);
+    assert!(rules.contains(&"waiver-missing-reason"), "{rules:?}");
+    assert!(rules.contains(&"no-wall-clock"), "{rules:?}");
+}
+
+#[test]
+fn unknown_rule_and_unused_waivers_are_findings() {
+    let hits = active(&[(
+        "rust/src/b.rs",
+        "// pallas-lint: allow(no-such-rule) — misspelled\npub fn f() {}\n",
+    )]);
+    assert_eq!(rules_of(&hits), vec!["unknown-rule-waiver"]);
+    let hits = active(&[(
+        "rust/src/b.rs",
+        "// pallas-lint: allow(no-wall-clock) — nothing here uses clocks\npub fn f() {}\n",
+    )]);
+    assert_eq!(rules_of(&hits), vec!["unused-waiver"]);
+}
+
+#[test]
+fn line_waivers_cover_exactly_the_next_line() {
+    // Covered: the waiver sits directly above the offending line.
+    let hits = active(&[(
+        "rust/src/b.rs",
+        "// pallas-lint: allow(no-wall-clock) — print-only timing\nuse std::time::Instant;\n",
+    )]);
+    assert!(hits.is_empty(), "{hits:?}");
+    // Not covered: one blank line in between, and the waiver is unused.
+    let hits = active(&[(
+        "rust/src/b.rs",
+        "// pallas-lint: allow(no-wall-clock) — print-only timing\n\nuse std::time::Instant;\n",
+    )]);
+    let rules = rules_of(&hits);
+    assert!(rules.contains(&"no-wall-clock"), "{rules:?}");
+    assert!(rules.contains(&"unused-waiver"), "{rules:?}");
+}
+
+#[test]
+fn json_rendering_escapes_and_counts() {
+    let findings = lint(&[("rust/src/b.rs", "use std::time::Instant;\n")]);
+    let json = pallas_lint::render_json(&findings);
+    assert!(json.contains("\"rule\":\"no-wall-clock\""), "{json}");
+    assert!(json.contains("\"counts\":{\"total\":1,\"waived\":0,\"active\":1}"), "{json}");
+    assert!(json.contains("\\u0060") || json.contains('`'), "{json}");
+}
